@@ -1,0 +1,22 @@
+//! Reproduce a slice of the paper's Fig 6 comparison (batch mode, large
+//! scale): all batch baselines vs Lachesis over several seeds, printing
+//! the same four panels (makespan / speedup / SLR / decision time).
+//!
+//!     cargo run --release --example compare_baselines [-- --seeds 5]
+
+use lachesis::exp::{self, PolicySource};
+
+fn main() -> anyhow::Result<()> {
+    let args = lachesis::util::cli::Args::from_env()?;
+    let seeds = args.usize_opt("seeds", 3)?;
+    let quick = !args.flag("full");
+    let src = PolicySource {
+        // Uses checkpoints/lachesis.bin if present, else the AOT init,
+        // else random weights; PJRT backend if artifacts exist.
+        ..Default::default()
+    };
+    let out = exp::fig6(&src, quick, seeds)?;
+    println!("{out}");
+    println!("CSV written to results/fig6.csv");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Continuous-mode study (paper §5.3.3): Poisson arrivals with mean 45 s,
+//! comparing the online selectors the paper uses in Fig 7, plus a
+//! sensitivity sweep over the arrival rate (an extension experiment the
+//! paper motivates but does not plot).
+//!
+//!     cargo run --release --example continuous_arrivals
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{Arrival, ClusterConfig, WorkloadConfig};
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{
+    HighRankUpScheduler, HrrnScheduler, LachesisScheduler, Scheduler, SjfScheduler,
+};
+use lachesis::sim::Simulator;
+use lachesis::util::stats::mean;
+use lachesis::workload::WorkloadGenerator;
+
+fn make_scheds() -> Vec<Box<dyn Scheduler>> {
+    let params = lachesis::policy::params::load_expected(
+        "checkpoints/lachesis.bin",
+        lachesis::policy::net::param_len(),
+    )
+    .unwrap_or_else(|_| RustPolicy::random(3).params);
+    vec![
+        Box::new(SjfScheduler::new()),
+        Box::new(HrrnScheduler::new()),
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::new(params)))),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ClusterConfig::default();
+    let seeds: Vec<u64> = (0..4).collect();
+
+    println!("== Fig 7a slice: makespan at mean inter-arrival 45 s ==");
+    println!("{:<18} {:>12} {:>10}", "algorithm", "avg makespan", "avg JCT");
+    for mut sched in make_scheds() {
+        let mut ms = Vec::new();
+        let mut jct = Vec::new();
+        for &seed in &seeds {
+            let w = WorkloadGenerator::new(WorkloadConfig::continuous(20), 7000 + seed)
+                .generate();
+            let cluster = Cluster::heterogeneous(&cfg, seed);
+            let r = Simulator::new(cluster, w).run(sched.as_mut())?;
+            ms.push(r.makespan);
+            jct.push(r.avg_jct);
+        }
+        println!(
+            "{:<18} {:>11.1}s {:>9.1}s",
+            sched.name(),
+            mean(&ms),
+            mean(&jct)
+        );
+    }
+
+    println!("\n== extension: sensitivity to arrival rate (HighRankUp-DEFT vs Lachesis) ==");
+    println!("{:<14} {:>16} {:>16}", "mean interval", "HighRankUp-DEFT", "Lachesis");
+    for &interval in &[15.0, 30.0, 45.0, 90.0] {
+        let mut cols = Vec::new();
+        for mut sched in [
+            Box::new(HighRankUpScheduler::new()) as Box<dyn Scheduler>,
+            make_scheds().pop().unwrap(),
+        ] {
+            let mut ms = Vec::new();
+            for &seed in &seeds {
+                let mut wc = WorkloadConfig::continuous(16);
+                wc.arrival = Arrival::Poisson {
+                    mean_interval: interval,
+                };
+                let w = WorkloadGenerator::new(wc, 8000 + seed).generate();
+                let cluster = Cluster::heterogeneous(&cfg, seed);
+                let r = Simulator::new(cluster, w).run(sched.as_mut())?;
+                ms.push(r.avg_jct);
+            }
+            cols.push(mean(&ms));
+        }
+        println!(
+            "{:>11.0} s {:>15.1}s {:>15.1}s",
+            interval, cols[0], cols[1]
+        );
+    }
+    println!("\n(avg JCT reported for the sensitivity sweep; lower is better)");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: generate a TPC-H workload, schedule it on a heterogeneous
+//! 50-executor cluster with several algorithms, and print the paper's
+//! metrics for each.
+//!
+//!     cargo run --release --example quickstart
+
+use lachesis::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let seed = 42;
+    let cluster_cfg = ClusterConfig::default(); // 50 executors, 2.1–3.6 GHz
+    let workload = WorkloadGenerator::new(WorkloadConfig::small_batch(10), seed).generate();
+    println!(
+        "workload: {} jobs, {} tasks, {} edges, {:.0} GHz·s total work\n",
+        workload.n_jobs(),
+        workload.n_tasks(),
+        workload.n_edges(),
+        workload.total_work()
+    );
+
+    let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(FifoScheduler::new()),
+        Box::new(SjfScheduler::new()),
+        Box::new(HeftScheduler::new()),
+        Box::new(CpopScheduler::new()),
+        Box::new(TdcaScheduler::new()),
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::random(7)))),
+    ];
+
+    println!(
+        "{:<18} {:>10} {:>9} {:>7} {:>6} {:>12}",
+        "algorithm", "makespan", "speedup", "SLR", "dups", "p98 decision"
+    );
+    for sched in schedulers.iter_mut() {
+        let cluster = Cluster::heterogeneous(&cluster_cfg, seed);
+        let mut sim = Simulator::new(cluster, workload.clone());
+        let r = sim.run(sched.as_mut())?;
+        sim.state.validate()?;
+        println!(
+            "{:<18} {:>9.1}s {:>8.2}x {:>7.3} {:>6} {:>10.3}ms",
+            r.algo,
+            r.makespan,
+            r.speedup,
+            r.avg_slr,
+            r.n_duplicates,
+            r.decision_ms.percentile(98.0)
+        );
+    }
+    println!("\n(Lachesis here runs with untrained weights — see examples/train_lachesis.rs)");
+    Ok(())
+}

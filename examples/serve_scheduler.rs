@@ -1,0 +1,95 @@
+//! Plug-and-play service demo (paper Fig 3): starts the Lachesis agent on
+//! an ephemeral TCP port, then plays the resource manager — submitting a
+//! streaming TPC-H workload, asking for assignments at each arrival, and
+//! reporting end-to-end request latency.
+//!
+//!     cargo run --release --example serve_scheduler
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::RustPolicy;
+use lachesis::sched::LachesisScheduler;
+use lachesis::service::{AgentServer, Request, Response, ServiceClient};
+use lachesis::util::stats::Recorder;
+use lachesis::workload::WorkloadGenerator;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // Agent side: Lachesis policy (trained weights if present) + DEFT.
+    let params = lachesis::policy::params::load_expected(
+        "checkpoints/lachesis.bin",
+        lachesis::policy::net::param_len(),
+    )
+    .or_else(|_| {
+        lachesis::policy::params::load_expected(
+            "artifacts/params_init.bin",
+            lachesis::policy::net::param_len(),
+        )
+    })
+    .unwrap_or_else(|_| RustPolicy::random(1).params);
+    let sched = LachesisScheduler::greedy(Box::new(RustPolicy::new(params)));
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(20), 5);
+    let agent = AgentServer::new(cluster, Box::new(sched));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        agent
+            .serve("127.0.0.1:0", move |a| tx.send(a).unwrap())
+            .unwrap()
+    });
+    let addr = rx.recv()?;
+    println!("agent listening on {addr}");
+
+    // Resource-manager side: stream jobs in arrival order.
+    let mut client = ServiceClient::connect(&addr.to_string())?;
+    let workload = WorkloadGenerator::new(WorkloadConfig::continuous(12), 5).generate();
+    let mut latency = Recorder::new();
+    let mut total_assignments = 0;
+    for job in &workload.jobs {
+        let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
+        let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
+            .flat_map(|u| {
+                job.children[u]
+                    .iter()
+                    .map(move |e| (u, e.other, e.data))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let t0 = Instant::now();
+        client.call(&Request::SubmitJob {
+            name: job.name.clone(),
+            arrival: job.arrival,
+            computes,
+            edges,
+        })?;
+        let resp = client.call(&Request::Schedule { time: job.arrival })?;
+        latency.push(t0.elapsed().as_secs_f64() * 1e3);
+        if let Response::Assignments(a) = resp {
+            println!(
+                "t={:>7.1}s  {}  → {} assignments",
+                job.arrival,
+                job.name,
+                a.len()
+            );
+            total_assignments += a.len();
+        }
+    }
+    match client.call(&Request::Status)? {
+        Response::Status {
+            jobs,
+            assigned,
+            horizon,
+            ..
+        } => println!(
+            "\nfinal: {jobs} jobs, {assigned} tasks assigned, schedule horizon {horizon:.1}s"
+        ),
+        other => println!("unexpected status: {other:?}"),
+    }
+    println!(
+        "assignments: {total_assignments}; request latency p50 {:.2}ms p98 {:.2}ms",
+        latency.percentile(50.0),
+        latency.percentile(98.0)
+    );
+    client.call(&Request::Shutdown)?;
+    server.join().unwrap();
+    Ok(())
+}

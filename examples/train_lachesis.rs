@@ -1,0 +1,106 @@
+//! END-TO-END DRIVER (DESIGN.md §End-to-end validation): trains the
+//! Lachesis policy with the full three-layer stack —
+//!
+//!   rust simulator rollouts → encoded transitions → AOT `train_step`
+//!   (JAX fwd/bwd through the Pallas GCN kernel + Adam, executed via
+//!   PJRT from rust) → updated flat parameters → next rollouts —
+//!
+//! then evaluates the trained policy against HEFT/FIFO/Decima-DEFT on
+//! held-out workloads and prints the learning curve (the paper's Fig 4).
+//!
+//!     make artifacts && cargo run --release --example train_lachesis
+//!     (options: -- --episodes 200 --agents 4 --seed 1)
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, TrainConfig, WorkloadConfig};
+use lachesis::policy::features::FeatureMode;
+use lachesis::policy::{params, RustPolicy};
+use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+use lachesis::sched::{
+    DecimaScheduler, FifoScheduler, HeftScheduler, LachesisScheduler, Scheduler,
+};
+use lachesis::sim::Simulator;
+use lachesis::workload::WorkloadGenerator;
+
+fn main() -> anyhow::Result<()> {
+    let args = lachesis::util::cli::Args::from_env()?;
+    let mut cfg = TrainConfig::default();
+    cfg.episodes = args.usize_opt("episodes", 120)?;
+    cfg.agents = args.usize_opt("agents", 4)?;
+    cfg.seed = args.u64_opt("seed", 20210001)?;
+    cfg.jobs_per_episode = args.usize_opt("jobs-per-episode", 4)?;
+    cfg.executors = args.usize_opt("executors", 10)?;
+
+    // ---- Train --------------------------------------------------------
+    let init = params::load_expected(
+        "artifacts/params_init.bin",
+        lachesis::policy::net::param_len(),
+    )?;
+    let backend = PjrtTrainBackend::new("artifacts", init)?;
+    let batch = backend.batch_size();
+    let mut trainer = Trainer::new(cfg.clone(), backend, FeatureMode::Full);
+    println!(
+        "training Lachesis: {} episodes × {} agents (imitation warm start: {} epochs)",
+        cfg.episodes, cfg.agents, cfg.imitation_epochs
+    );
+    let t0 = std::time::Instant::now();
+    let stats = trainer.train(batch)?;
+    println!("training took {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    // Learning curve (Fig 4).
+    println!("episode  jobs  avg-makespan     loss  entropy");
+    let stride = (stats.len() / 15).max(1);
+    for s in stats.iter().step_by(stride).chain(stats.last()) {
+        println!(
+            "{:>7} {:>5} {:>12.1}s {:>8.4} {:>8.3}",
+            s.episode, s.n_jobs, s.makespan, s.loss, s.entropy
+        );
+    }
+    std::fs::create_dir_all("results").ok();
+    let mut csv = String::from(lachesis::rl::trainer::EpisodeStat::csv_header());
+    csv.push('\n');
+    for s in &stats {
+        csv.push_str(&s.csv_row());
+        csv.push('\n');
+    }
+    std::fs::write("results/fig4_learning_curve.csv", csv)?;
+    std::fs::create_dir_all("checkpoints").ok();
+    params::save_f32("checkpoints/lachesis.bin", trainer.backend.params())?;
+    println!("\nlearning curve → results/fig4_learning_curve.csv");
+    println!("trained weights → checkpoints/lachesis.bin");
+
+    // ---- Evaluate on held-out workloads --------------------------------
+    println!("\nheld-out evaluation ({} executors, 6-job batches):", cfg.executors);
+    println!("{:<16} {:>12} {:>9}", "algorithm", "avg makespan", "speedup");
+    let trained = trainer.backend.params().to_vec();
+    let eval = |mut s: Box<dyn Scheduler>| -> anyhow::Result<(String, f64, f64)> {
+        let mut ms = Vec::new();
+        let mut sp = Vec::new();
+        for seed in 9000..9006u64 {
+            let cluster =
+                Cluster::heterogeneous(&ClusterConfig::with_executors(cfg.executors), seed);
+            let w = WorkloadGenerator::new(WorkloadConfig::small_batch(6), seed).generate();
+            let r = Simulator::new(cluster, w).run(s.as_mut())?;
+            ms.push(r.makespan);
+            sp.push(r.speedup);
+        }
+        Ok((
+            s.name(),
+            lachesis::util::stats::mean(&ms),
+            lachesis::util::stats::mean(&sp),
+        ))
+    };
+    let contenders: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(FifoScheduler::new()),
+        Box::new(HeftScheduler::new()),
+        Box::new(DecimaScheduler::greedy_decima(Box::new(RustPolicy::random(1)))),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::new(
+            trained,
+        )))),
+    ];
+    for c in contenders {
+        let (name, m, s) = eval(c)?;
+        println!("{name:<16} {m:>11.1}s {s:>8.2}x");
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT exporter: lowers the policy forward (per shape variant) and the
+actor-critic train_step to HLO **text** and writes the artifact bundle:
+
+    artifacts/
+      policy_n64.hlo.txt    # inference, N=64 / J=8
+      policy_n256.hlo.txt   # inference, N=256 / J=32
+      train_step.hlo.txt    # fwd+bwd+Adam, B=16 / N=64 / J=8
+      params_init.bin       # Glorot init, flat f32 LE
+      meta.json             # shapes + param_len (the model contract)
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 rust crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def lower_policy(n: int, j: int) -> str:
+    p = shapes.param_len()
+    lowered = jax.jit(model.policy_forward).lower(
+        f32(p),            # flat params
+        f32(n, shapes.F),  # x
+        f32(n, n),         # adj
+        f32(j, n),         # jobmat
+        f32(n),            # node_mask
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_train(b: int, n: int, j: int) -> str:
+    p = shapes.param_len()
+    lowered = jax.jit(model.train_step).lower(
+        f32(p), f32(p), f32(p), f32(1),          # params, m, v, step
+        f32(b, n, shapes.F),                     # x
+        f32(b, n, n),                            # adj
+        f32(b, j, n),                            # jobmat
+        f32(b, n),                               # node_mask
+        f32(b, n),                               # exec_mask
+        i32(b),                                  # action
+        f32(b), f32(b), f32(b),                  # adv, ret, sample_w
+        f32(1), f32(1), f32(1),                  # lr, entropy_w, value_w
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    variants_meta = []
+    for name, n, j in shapes.VARIANTS:
+        text = lower_policy(n, j)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        variants_meta.append({"name": name, "n": n, "j": j})
+
+    tname, b, tn, tj = shapes.TRAIN
+    text = lower_train(b, tn, tj)
+    tpath = os.path.join(args.out, f"{tname}.hlo.txt")
+    with open(tpath, "w") as f:
+        f.write(text)
+    print(f"wrote {tpath} ({len(text)} chars)")
+
+    params = model.init_params(args.seed)
+    ppath = os.path.join(args.out, "params_init.bin")
+    params.astype("<f4").tofile(ppath)
+    print(f"wrote {ppath} ({params.size} params)")
+
+    meta = {
+        "format": "lachesis-artifacts-v1",
+        "param_len": shapes.param_len(),
+        "f": shapes.F,
+        "e": shapes.E,
+        "k": shapes.K,
+        "variants": variants_meta,
+        "train": {"name": tname, "b": b, "n": tn, "j": tj},
+    }
+    mpath = os.path.join(args.out, "meta.json")
+    with open(mpath, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+    # Smoke check: numerics of the lowered fn match the python fn.
+    n, j = shapes.VARIANTS[0][1], shapes.VARIANTS[0][2]
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, (n, shapes.F)).astype(np.float32)
+    adj = (rng.uniform(0, 1, (n, n)) < 0.05).astype(np.float32)
+    jobmat = np.zeros((j, n), dtype=np.float32)
+    jobmat[0, : n // 2] = 1.0
+    jobmat[1, n // 2 :] = 1.0
+    mask = np.ones(n, dtype=np.float32)
+    logits, value = model.policy_forward(jnp.asarray(params), x, adj, jobmat, mask)
+    assert np.isfinite(np.asarray(logits)).all() and np.isfinite(np.asarray(value)).all()
+    print("smoke check OK")
+
+
+if __name__ == "__main__":
+    main()

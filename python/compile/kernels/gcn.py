@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernels: the GCN message-passing hot spot.
+
+Two kernels, both tiled over the node axis with the full embedding matrix
+resident (the paper's DAGs are ≤256 nodes; N·E floats ≤ 16 KiB — far under
+VMEM):
+
+* ``mgnet_layer`` — one forward message-passing iteration
+  (Eq 5: ``out = g(A·e) + e0``, masked), fused aggregate + 2-layer MLP.
+* ``agg_transpose`` — the backward aggregation ``Aᵀ·d_agg`` used by the
+  custom VJP.
+
+``mgnet_layer`` carries a ``jax.custom_vjp``: the forward *and* the heavy
+part of the backward run as Pallas kernels; the small MLP parameter
+gradients are plain jnp (they are O(E·H), negligible).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a real TPU the
+BlockSpec below maps node tiles to the MXU's 128-lane systolic array; here
+``interpret=True`` lowers to plain HLO so the CPU PJRT client (and the
+rust runtime) can execute it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Node-axis tile. 32 divides both compiled variants (N=64, N=256).
+BLOCK_N = 32
+
+
+def _fwd_kernel(e_ref, e0_ref, adj_ref, mask_ref, g1_ref, bg1_ref, g2_ref, bg2_ref, out_ref):
+    """One node-tile of: out = (tanh(tanh(A·e @ g1 + bg1) @ g2 + bg2) + e0) · mask."""
+    agg = adj_ref[...] @ e_ref[...]  # [BN, E]  (adj tile row-block × full e)
+    h = jnp.tanh(agg @ g1_ref[...] + bg1_ref[...])
+    m = jnp.tanh(h @ g2_ref[...] + bg2_ref[...])
+    out_ref[...] = (m + e0_ref[...]) * mask_ref[...][:, None]
+
+
+def _fwd_pallas(e, e0, adj, mask, g1, bg1, g2, bg2):
+    n, emb = e.shape
+    h = g1.shape[1]
+    block = min(BLOCK_N, n)
+    assert n % block == 0, f"N={n} must be a multiple of {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, emb), lambda i: (0, 0)),        # e: full
+            pl.BlockSpec((block, emb), lambda i: (i, 0)),    # e0: row tile
+            pl.BlockSpec((block, n), lambda i: (i, 0)),      # adj: row tile
+            pl.BlockSpec((block,), lambda i: (i,)),          # mask: row tile
+            pl.BlockSpec((emb, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, emb), lambda i: (0, 0)),
+            pl.BlockSpec((emb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, emb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, emb), e.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(e, e0, adj, mask, g1, bg1, g2, bg2)
+
+
+def _agg_t_kernel(adj_ref, d_ref, out_ref):
+    """One node-tile of Aᵀ·d: out[tile] = (A[:, tile])ᵀ @ d = A_colsᵀ d."""
+    # adj tile is the column block [N, BN]; transpose inside the tile.
+    out_ref[...] = adj_ref[...].T @ d_ref[...]
+
+
+def agg_transpose(adj, d_agg):
+    """Pallas backward aggregation: returns adjᵀ @ d_agg, tiled over the
+    output rows (= adj columns)."""
+    n, emb = d_agg.shape
+    block = min(BLOCK_N, n)
+    assert n % block == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _agg_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block), lambda i: (0, i)),   # adj column block
+            pl.BlockSpec((n, emb), lambda i: (0, 0)),     # d_agg: full
+        ],
+        out_specs=pl.BlockSpec((block, emb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, emb), d_agg.dtype),
+        interpret=True,
+    )(adj, d_agg)
+
+
+@jax.custom_vjp
+def mgnet_layer(e, e0, adj, mask, g1, bg1, g2, bg2):
+    """One MGNet iteration (Eq 5) as a Pallas kernel with a custom VJP."""
+    return _fwd_pallas(e, e0, adj, mask, g1, bg1, g2, bg2)
+
+
+def _mgnet_fwd(e, e0, adj, mask, g1, bg1, g2, bg2):
+    # Recompute the intermediates needed by the backward pass (agg, h, m).
+    agg = adj @ e
+    h = jnp.tanh(agg @ g1 + bg1)
+    m = jnp.tanh(h @ g2 + bg2)
+    out = _fwd_pallas(e, e0, adj, mask, g1, bg1, g2, bg2)
+    return out, (adj, mask, g1, g2, agg, h, m)
+
+
+def _mgnet_bwd(res, ct):
+    adj, mask, g1, g2, agg, h, m = res
+    # out = (m + e0) * mask[:, None]
+    d_me0 = ct * mask[:, None]
+    d_e0 = d_me0
+    # m = tanh(pre2), pre2 = h @ g2 + bg2
+    d_pre2 = d_me0 * (1.0 - m * m)
+    d_h = d_pre2 @ g2.T
+    d_g2 = h.T @ d_pre2
+    d_bg2 = jnp.sum(d_pre2, axis=0)
+    # h = tanh(pre1), pre1 = agg @ g1 + bg1
+    d_pre1 = d_h * (1.0 - h * h)
+    d_agg = d_pre1 @ g1.T
+    d_g1 = agg.T @ d_pre1
+    d_bg1 = jnp.sum(d_pre1, axis=0)
+    # agg = adj @ e  →  d_e = adjᵀ @ d_agg (the heavy term — Pallas kernel)
+    d_e = agg_transpose(adj, d_agg)
+    # adjacency and masks are structural constants — zero cotangents.
+    d_adj = jnp.zeros_like(adj)
+    d_mask = jnp.zeros_like(mask)
+    return (d_e, d_e0, d_adj, d_mask, d_g1, d_bg1, d_g2, d_bg2)
+
+
+mgnet_layer.defvjp(_mgnet_fwd, _mgnet_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mgnet_layer_jit(e, e0, adj, mask, g1, bg1, g2, bg2):
+    """Jitted wrapper for tests/benchmarks."""
+    return mgnet_layer(e, e0, adj, mask, g1, bg1, g2, bg2)
+
+
+__all__ = ["mgnet_layer", "agg_transpose", "mgnet_layer_jit", "ref", "BLOCK_N"]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal:
+pytest asserts kernel == ref across shapes/dtypes, and the kernels'
+backward pass is validated against jax.grad of these references)."""
+
+import jax.numpy as jnp
+
+
+def mgnet_layer_ref(e, e0, adj, mask, g1, bg1, g2, bg2):
+    """One MGNet message-passing iteration (paper Eq 5):
+
+        out = ( g(Σ_children e) + e0 ) · mask
+
+    with g a two-layer tanh MLP. `adj[i, j] = 1` iff j is a child of i.
+
+    Shapes: e,e0:[N,E]  adj:[N,N]  mask:[N]  g1:[E,H] bg1:[H] g2:[H,E] bg2:[E]
+    """
+    agg = adj @ e
+    h = jnp.tanh(agg @ g1 + bg1)
+    m = jnp.tanh(h @ g2 + bg2)
+    return (m + e0) * mask[:, None]
+
+
+def agg_transpose_ref(adj, d_agg):
+    """Backward of the aggregation: cotangent flowing to `e` is adjᵀ·d_agg."""
+    return adj.T @ d_agg
+
+
+def masked_log_softmax_ref(logits, exec_mask):
+    """Log-softmax over the executable set only (paper Eq 8).
+
+    Non-executable slots get -inf logits; returns per-slot log-probs with
+    zeros on masked slots (callers gather only executable actions).
+    """
+    neg = jnp.asarray(-1e9, logits.dtype)
+    masked = jnp.where(exec_mask > 0, logits, neg)
+    z = jnp.max(masked, axis=-1, keepdims=True)
+    logsumexp = z + jnp.log(jnp.sum(jnp.exp(masked - z), axis=-1, keepdims=True))
+    logp = masked - logsumexp
+    return jnp.where(exec_mask > 0, logp, 0.0)

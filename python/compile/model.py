@@ -1,0 +1,144 @@
+"""Layer-2: the MGNet + policy/value network in JAX (paper §4.1–4.3),
+operating on a single flat parameter vector whose layout is the shared
+model contract with `rust/src/policy/net.rs`.
+
+The forward pass calls the Layer-1 Pallas kernel (`kernels.gcn.mgnet_layer`)
+for the K message-passing iterations, so the kernel lowers into the same
+HLO module the rust runtime executes. `train_step` is the complete
+actor–critic update — forward, backward (through the kernel's custom VJP)
+and Adam — as one jittable function, AOT-exported by `aot.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import shapes
+from .kernels import gcn
+from .kernels import ref as kref
+
+S = shapes.param_slices()
+
+
+def unpack(flat, name):
+    """View one named tensor inside the flat parameter vector."""
+    off, r, c = S[name]
+    t = jax.lax.dynamic_slice(flat, (off,), (r * c,)).reshape(r, c)
+    return t[0] if r == 1 else t  # biases as 1-D
+
+
+def init_params(seed: int = 0) -> np.ndarray:
+    """Glorot-uniform initialization of the flat vector (biases zero)."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros(shapes.param_len(), dtype=np.float32)
+    for name, r, c in shapes.LAYOUT:
+        off, _, _ = S[name]
+        if not name.startswith("b"):
+            lim = np.sqrt(6.0 / (r + c))
+            out[off : off + r * c] = rng.uniform(-lim, lim, r * c).astype(np.float32)
+    return out
+
+
+def _forward(flat, x, adj, jobmat, node_mask, use_kernel=True):
+    """Shared forward: returns (logits [N], value scalar)."""
+    layer = gcn.mgnet_layer if use_kernel else kref.mgnet_layer_ref
+    e0 = jnp.tanh(x @ unpack(flat, "w_in") + unpack(flat, "b_in"))
+    e0 = e0 * node_mask[:, None]
+    e = e0
+    g1, bg1 = unpack(flat, "g1"), unpack(flat, "bg1")
+    g2, bg2 = unpack(flat, "g2"), unpack(flat, "bg2")
+    for _ in range(shapes.K):
+        e = layer(e, e0, adj, node_mask, g1, bg1, g2, bg2)
+
+    # Per-job summaries.
+    jobsum = jobmat @ e  # [J, E]
+    jh = jnp.tanh(jobsum @ unpack(flat, "fj1") + unpack(flat, "bfj1"))
+    y = jnp.tanh(jh @ unpack(flat, "fj2") + unpack(flat, "bfj2"))
+    occupied = (jnp.sum(jobmat, axis=1) > 0).astype(y.dtype)  # [J]
+    y = y * occupied[:, None]
+
+    # Global summary.
+    gsum = jnp.sum(y, axis=0)  # [E]
+    gh = jnp.tanh(gsum @ unpack(flat, "fg1") + unpack(flat, "bfg1"))
+    z = jnp.tanh(gh @ unpack(flat, "fg2") + unpack(flat, "bfg2"))  # [E]
+
+    # Per-node scores over [e_n ; y_job(n) ; z] (Eq 8's q(·)).
+    ybc = jobmat.T @ y  # [N, E] — each node's job summary (0 for padding)
+    n = x.shape[0]
+    cat = jnp.concatenate([e, ybc, jnp.broadcast_to(z, (n, shapes.E))], axis=1)
+    q = jnp.tanh(cat @ unpack(flat, "q1") + unpack(flat, "bq1"))
+    q = jnp.tanh(q @ unpack(flat, "q2") + unpack(flat, "bq2"))
+    q = jnp.tanh(q @ unpack(flat, "q3") + unpack(flat, "bq3"))
+    logits = (q @ unpack(flat, "q4") + unpack(flat, "bq4"))[:, 0]  # [N]
+
+    # Value head on the global summary.
+    v = jnp.tanh(z @ unpack(flat, "v1") + unpack(flat, "bv1"))
+    v = jnp.tanh(v @ unpack(flat, "v2") + unpack(flat, "bv2"))
+    value = (v @ unpack(flat, "v3") + unpack(flat, "bv3"))[0]
+    return logits, value
+
+
+def policy_forward(flat, x, adj, jobmat, node_mask):
+    """Inference entrypoint (AOT-exported per shape variant).
+
+    Returns (logits [N], value [1])."""
+    logits, value = _forward(flat, x, adj, jobmat, node_mask, use_kernel=True)
+    return logits, value.reshape(1)
+
+
+def policy_forward_ref(flat, x, adj, jobmat, node_mask):
+    """Oracle path (pure jnp, no Pallas) for correctness tests."""
+    logits, value = _forward(flat, x, adj, jobmat, node_mask, use_kernel=False)
+    return logits, value.reshape(1)
+
+
+def _loss(flat, x, adj, jobmat, node_mask, exec_mask, action, adv, ret, sample_w, ew, vw):
+    """Batched actor-critic loss (paper Eq 12 direction, with entropy
+    regularization and a weighted value-regression term)."""
+
+    def single(xi, ai, ji, mi, emi):
+        return _forward(flat, xi, ai, ji, mi, use_kernel=True)
+
+    logits, values = jax.vmap(single)(x, adj, jobmat, node_mask, exec_mask)
+    logp = kref.masked_log_softmax_ref(logits, exec_mask)  # [B, N]
+    b = logits.shape[0]
+    logp_a = logp[jnp.arange(b), action]  # [B]
+    wsum = jnp.sum(sample_w) + 1e-8
+    pg = -jnp.sum(sample_w * adv * logp_a) / wsum
+    # Entropy over the executable distribution.
+    p = jnp.where(exec_mask > 0, jnp.exp(logp), 0.0)
+    ent = -jnp.sum(jnp.where(exec_mask > 0, p * logp, 0.0), axis=-1)  # [B]
+    entropy = jnp.sum(sample_w * ent) / wsum
+    vloss = jnp.sum(sample_w * (values - ret) ** 2) / wsum
+    total = pg + vw[0] * vloss - ew[0] * entropy
+    return total, (pg, vloss, entropy)
+
+
+def train_step(
+    flat, m, v, step, x, adj, jobmat, node_mask, exec_mask, action, adv, ret, sample_w, lr, ew, vw
+):
+    """One synchronous actor-critic + Adam update (Algorithm 2 lines 9–13).
+
+    All inputs/outputs are f32 except `action` (i32). Scalars arrive as
+    shape-[1] tensors. Returns
+    (new_flat, new_m, new_v, loss, pg_loss, value_loss, entropy) — each
+    loss as shape [1].
+    """
+    (total, (pg, vloss, ent)), grads = jax.value_and_grad(_loss, has_aux=True)(
+        flat, x, adj, jobmat, node_mask, exec_mask, action, adv, ret, sample_w, ew, vw
+    )
+    # Global-norm clipping keeps early high-variance episodes stable.
+    gnorm = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+    clip = jnp.minimum(1.0, 5.0 / gnorm)
+    grads = grads * clip
+    # Adam (paper Appendix C; lr arrives as an input so imitation and RL
+    # phases can differ without recompiling).
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step[0]
+    new_m = b1 * m + (1.0 - b1) * grads
+    new_v = b2 * v + (1.0 - b2) * grads * grads
+    mhat = new_m / (1.0 - jnp.power(b1, t))
+    vhat = new_v / (1.0 - jnp.power(b2, t))
+    new_flat = flat - lr[0] * mhat / (jnp.sqrt(vhat) + eps)
+    one = lambda s: jnp.reshape(s, (1,))
+    return new_flat, new_m, new_v, one(total), one(pg), one(vloss), one(ent)

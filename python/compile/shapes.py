@@ -1,0 +1,74 @@
+"""Model-contract constants, shared between the JAX model and the AOT
+exporter. These MUST match `rust/src/policy/{mod,net,encode}.rs` — the
+rust runtime validates them against `artifacts/meta.json` at load time.
+"""
+
+# Raw node feature count (rust: policy::features::NODE_FEATURES).
+F = 12
+# Embedding width.
+E = 16
+# Hidden width of the g/f MLPs.
+H = 32
+# Message-passing iterations (the paper's three-layer MGNet).
+K = 3
+# Policy head hidden sizes (paper §5.1: 32/16/8).
+Q1, Q2, Q3 = 32, 16, 8
+# Value head hidden sizes.
+V1, V2 = 32, 16
+
+# Policy-forward shape variants: (artifact stem, N nodes, J jobs).
+VARIANTS = [
+    ("policy_n64", 64, 8),
+    ("policy_n256", 256, 32),
+]
+
+# Train-step shapes: (stem, batch B, N, J) — matches the small variant.
+TRAIN = ("train_step", 16, 64, 8)
+
+# Flat parameter layout: (name, rows, cols); biases are 1 x cols.
+# Mirrors rust/src/policy/net.rs::LAYOUT exactly.
+LAYOUT = [
+    ("w_in", F, E),
+    ("b_in", 1, E),
+    ("g1", E, H),
+    ("bg1", 1, H),
+    ("g2", H, E),
+    ("bg2", 1, E),
+    ("fj1", E, H),
+    ("bfj1", 1, H),
+    ("fj2", H, E),
+    ("bfj2", 1, E),
+    ("fg1", E, H),
+    ("bfg1", 1, H),
+    ("fg2", H, E),
+    ("bfg2", 1, E),
+    ("q1", 3 * E, Q1),
+    ("bq1", 1, Q1),
+    ("q2", Q1, Q2),
+    ("bq2", 1, Q2),
+    ("q3", Q2, Q3),
+    ("bq3", 1, Q3),
+    ("q4", Q3, 1),
+    ("bq4", 1, 1),
+    ("v1", E, V1),
+    ("bv1", 1, V1),
+    ("v2", V1, V2),
+    ("bv2", 1, V2),
+    ("v3", V2, 1),
+    ("bv3", 1, 1),
+]
+
+
+def param_len() -> int:
+    """Total flat parameter count P."""
+    return sum(r * c for _, r, c in LAYOUT)
+
+
+def param_slices():
+    """name -> (offset, rows, cols) mapping over the flat vector."""
+    out = {}
+    off = 0
+    for name, r, c in LAYOUT:
+        out[name] = (off, r, c)
+        off += r * c
+    return out

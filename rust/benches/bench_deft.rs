@@ -1,0 +1,50 @@
+//! Hot-path microbenchmarks of the phase-2 allocators: EFT vs CPEFT vs
+//! full DEFT across executor counts (the O(P·M) loop of §5.1).
+
+use lachesis::bench_util::{black_box, Bench};
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::sched::deft::{cpeft, deft};
+use lachesis::sched::eft::best_eft;
+use lachesis::sim::{Allocation, SimState};
+use lachesis::workload::WorkloadGenerator;
+
+fn mid_schedule_state(executors: usize, jobs: usize) -> SimState {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), 1);
+    let w = WorkloadGenerator::new(WorkloadConfig::large_batch(jobs), 1).generate();
+    let mut st = SimState::new(cluster, w);
+    for j in 0..jobs {
+        st.mark_arrived(j);
+    }
+    // Assign half the tasks so allocators see realistic placements.
+    let half = st.n_tasks_total() / 2;
+    for i in 0..half {
+        if st.executable().is_empty() {
+            break;
+        }
+        let t = st.executable()[0];
+        st.apply(t, Allocation::Direct { exec: i % executors });
+    }
+    st
+}
+
+fn main() {
+    let mut b = Bench::new();
+    for &execs in &[10, 50, 200] {
+        let st = mid_schedule_state(execs, 8);
+        let t = st.executable()[st.executable().len() / 2];
+        b.case(&format!("best_eft/{execs}exec"), || {
+            black_box(best_eft(&st, black_box(t)));
+        });
+        if let Some(edge) = st.jobs[t.job].parents[t.node].first() {
+            let parent = edge.other;
+            b.case(&format!("cpeft_single/{execs}exec"), || {
+                black_box(cpeft(&st, black_box(t), parent, 0));
+            });
+        }
+        b.case(&format!("deft_full/{execs}exec"), || {
+            black_box(deft(&st, black_box(t)));
+        });
+    }
+    b.finish("bench_deft");
+}

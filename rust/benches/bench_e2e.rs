@@ -1,0 +1,64 @@
+//! End-to-end decision latency with the production (PJRT) policy: a full
+//! Lachesis schedule at each paper scale, reporting per-decision p50/p98
+//! — directly comparable to Figs 5d/6d/7b.
+
+use lachesis::bench_util::Bench;
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::RustPolicy;
+use lachesis::runtime::PjrtPolicy;
+use lachesis::sched::LachesisScheduler;
+use lachesis::sim::Simulator;
+use lachesis::workload::WorkloadGenerator;
+
+fn run_once(jobs: usize, large: bool, pjrt: bool, seed: u64) -> (f64, f64) {
+    let cfg = ClusterConfig::default();
+    let wcfg = if large {
+        WorkloadConfig::large_batch(jobs)
+    } else {
+        WorkloadConfig::small_batch(jobs)
+    };
+    let w = WorkloadGenerator::new(wcfg, seed).generate();
+    let cluster = Cluster::heterogeneous(&cfg, seed);
+    let mut sched = if pjrt {
+        LachesisScheduler::greedy(Box::new(PjrtPolicy::new("artifacts", None).unwrap()))
+    } else {
+        LachesisScheduler::greedy(Box::new(RustPolicy::random(seed)))
+    };
+    let mut sim = Simulator::new(cluster, w);
+    let r = sim.run(&mut sched).unwrap();
+    (
+        r.decision_ms.percentile(50.0),
+        r.decision_ms.percentile(98.0),
+    )
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let have_artifacts = std::path::Path::new("artifacts/meta.json").exists();
+    println!("== per-decision latency (paper targets: p98 ≤ 14 ms small, ≤ 30 ms large) ==");
+    for &(jobs, large, tag) in &[(5usize, false, "small5"), (20, false, "small20"), (40, true, "large40")]
+    {
+        for &(pjrt, backend) in &[(false, "rust"), (true, "pjrt")] {
+            if pjrt && !have_artifacts {
+                continue;
+            }
+            // Warm once (XLA compile), then measure a fresh run.
+            let _ = run_once(jobs, large, pjrt, 1);
+            let (p50, p98) = run_once(jobs, large, pjrt, 2);
+            println!("decision/{tag}/{backend}: p50 {p50:.3} ms   p98 {p98:.3} ms");
+        }
+    }
+    // Wall time of whole end-to-end schedules via the bench harness.
+    for &(jobs, large, tag) in &[(10usize, false, "small10"), (40, true, "large40")] {
+        b.case(&format!("e2e_schedule_rust/{tag}"), || {
+            let _ = run_once(jobs, large, false, 3);
+        });
+        if have_artifacts {
+            b.case(&format!("e2e_schedule_pjrt/{tag}"), || {
+                let _ = run_once(jobs, large, true, 3);
+            });
+        }
+    }
+    b.finish("bench_e2e");
+}

@@ -1,0 +1,27 @@
+//! Figure-regeneration benchmark: runs the quick variants of every figure
+//! sweep end-to-end (the same code path as `lachesis repro ...`) and
+//! reports their wall time. Keeping the full experiment harness inside
+//! `cargo bench` guarantees the reproduction pipeline never bit-rots.
+
+use lachesis::bench_util::Bench;
+use lachesis::exp::{self, PolicySource};
+
+fn main() {
+    let mut b = Bench::new();
+    // Quick sweeps use the rust policy backend (no artifact dependency) so
+    // `cargo bench` works on a bare checkout; the `repro` CLI uses PJRT.
+    let src = PolicySource {
+        backend: "rust".into(),
+        ..Default::default()
+    };
+    b.case("fig5_quick_sweep", || {
+        exp::fig5(&src, true, 1).unwrap();
+    });
+    b.case("fig6_quick_sweep", || {
+        exp::fig6(&src, true, 1).unwrap();
+    });
+    b.case("fig7_quick_sweep", || {
+        exp::fig7(&src, true, 1).unwrap();
+    });
+    b.finish("bench_figures");
+}

@@ -1,0 +1,69 @@
+//! Policy inference latency — the paper's decision-time metric (Figs
+//! 5d/6d/7b target: ≤14 ms small / ≤30 ms large / ≤38 ms continuous at
+//! p98). Measures feature extraction, encoding, the pure-rust forward and
+//! the PJRT artifact, per shape variant.
+
+use lachesis::bench_util::{black_box, Bench};
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::encode::encode;
+use lachesis::policy::features::{node_features, FeatureMode, NODE_FEATURES};
+use lachesis::policy::{PolicyEval, RustPolicy};
+use lachesis::runtime::PjrtPolicy;
+use lachesis::sim::SimState;
+use lachesis::workload::WorkloadGenerator;
+
+fn state(jobs: usize) -> SimState {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::default(), 1);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(jobs), 1).generate();
+    let mut st = SimState::new(cluster, w);
+    for j in 0..jobs {
+        st.mark_arrived(j);
+    }
+    st
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let small = state(3); // → N=64 variant
+    let large = state(14); // → N=256 variant
+
+    let t = small.executable()[0];
+    let mut feat = [0.0f32; NODE_FEATURES];
+    b.case("features/one_node", || {
+        node_features(&small, black_box(t), FeatureMode::Full, &mut feat);
+        black_box(&feat);
+    });
+    b.case("encode/n64", || {
+        black_box(encode(&small, FeatureMode::Full));
+    });
+    b.case("encode/n256", || {
+        black_box(encode(&large, FeatureMode::Full));
+    });
+
+    let enc64 = encode(&small, FeatureMode::Full);
+    let enc256 = encode(&large, FeatureMode::Full);
+    let mut rust = RustPolicy::random(1);
+    b.case("forward_rust/n64", || {
+        black_box(rust.logits_value(&enc64).unwrap());
+    });
+    b.case("forward_rust/n256", || {
+        black_box(rust.logits_value(&enc256).unwrap());
+    });
+
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        let mut pjrt = PjrtPolicy::new("artifacts", None).unwrap();
+        // Warm both executables (compile happens once, off the hot path).
+        pjrt.logits_value(&enc64).unwrap();
+        pjrt.logits_value(&enc256).unwrap();
+        b.case("forward_pjrt/n64", || {
+            black_box(pjrt.logits_value(&enc64).unwrap());
+        });
+        b.case("forward_pjrt/n256", || {
+            black_box(pjrt.logits_value(&enc256).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts missing — skipping PJRT cases)");
+    }
+    b.finish("bench_policy");
+}

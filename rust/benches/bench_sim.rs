@@ -1,0 +1,47 @@
+//! Whole-simulation throughput: events/second and full-schedule wall time
+//! for each scheduler family at paper scales.
+
+use lachesis::bench_util::{black_box, Bench};
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{
+    FifoScheduler, HeftScheduler, HighRankUpScheduler, LachesisScheduler, TdcaScheduler,
+};
+use lachesis::sim::Simulator;
+use lachesis::workload::WorkloadGenerator;
+
+fn main() {
+    let mut b = Bench::new();
+    let cfg = ClusterConfig::default();
+
+    for &(jobs, tag) in &[(5usize, "small5"), (20, "batch20"), (50, "batch50")] {
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(jobs), 2).generate();
+        let cluster = Cluster::heterogeneous(&cfg, 2);
+        b.case(&format!("sim_heft/{tag}"), || {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+        });
+        b.case(&format!("sim_rankup_deft/{tag}"), || {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut HighRankUpScheduler::new()).unwrap());
+        });
+        b.case(&format!("sim_fifo_deft/{tag}"), || {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut FifoScheduler::new()).unwrap());
+        });
+        b.case(&format!("sim_tdca/{tag}"), || {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut TdcaScheduler::new()).unwrap());
+        });
+    }
+    // Learned policy (rust backend) at moderate scale.
+    let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 3).generate();
+    let cluster = Cluster::heterogeneous(&cfg, 3);
+    b.case("sim_lachesis_rust/batch20", || {
+        let mut sched = LachesisScheduler::greedy(Box::new(RustPolicy::random(1)));
+        let mut sim = Simulator::new(cluster.clone(), w.clone());
+        black_box(sim.run(&mut sched).unwrap());
+    });
+    b.finish("bench_sim");
+}

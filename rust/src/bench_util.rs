@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (criterion is unavailable offline; this
+//! reimplements its core loop: warmup, calibrated iteration counts,
+//! percentile reporting). Bench binaries under `rust/benches/` use
+//! `harness = false` and drive this directly.
+
+use crate::util::stats::{mean, percentile, std_dev};
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p95 {:>12}   ±{:.1}%",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            100.0 * self.std_ns / self.mean_ns.max(1e-9)
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// The harness: collects results for a final summary table.
+#[derive(Default)]
+pub struct Bench {
+    pub results: Vec<BenchResult>,
+    /// Target total measurement time per case, seconds.
+    pub budget_secs: f64,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        let budget_secs = std::env::var("BENCH_BUDGET_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.0);
+        Bench {
+            results: Vec::new(),
+            budget_secs,
+        }
+    }
+
+    /// Run `f` repeatedly: warm up, calibrate an iteration count to fill
+    /// the budget, measure per-iteration latency in batches.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let target_iters = ((self.budget_secs / once) as usize).clamp(5, 100_000);
+        let batch = (target_iters / 20).max(1);
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut done = 0;
+        while done < target_iters {
+            let n = batch.min(target_iters - done);
+            let t = Instant::now();
+            for _ in 0..n {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / n as f64);
+            done += n;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: done,
+            mean_ns: mean(&samples_ns),
+            std_ns: std_dev(&samples_ns),
+            p50_ns: percentile(&samples_ns, 50.0),
+            p95_ns: percentile(&samples_ns, 95.0),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a closing summary and optionally write CSV next to the bench.
+    pub fn finish(&self, label: &str) {
+        println!("\n== {label}: {} cases ==", self.results.len());
+        if let Ok(path) = std::env::var("BENCH_CSV") {
+            let mut csv = String::from("name,iters,mean_ns,std_ns,p50_ns,p95_ns\n");
+            for r in &self.results {
+                csv.push_str(&format!(
+                    "{},{},{:.1},{:.1},{:.1},{:.1}\n",
+                    r.name, r.iters, r.mean_ns, r.std_ns, r.p50_ns, r.p95_ns
+                ));
+            }
+            let _ = std::fs::write(path, csv);
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench {
+            budget_secs: 0.02,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b
+            .case("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        b.finish("test");
+    }
+}

@@ -1,0 +1,167 @@
+//! Heterogeneous executor cluster model (paper §3, constraints 2–3).
+//!
+//! Executors differ in processing speed `v_k` (sampled from an Intel CPU
+//! frequency table, 2.1–3.6 GHz, per §5.2). Data transmission between
+//! *distinct* executors runs at a uniform speed `c` (paper simplification);
+//! transfers within one executor are free.
+
+use crate::config::ClusterConfig;
+use crate::util::rng::Rng;
+
+/// One computing executor.
+#[derive(Debug, Clone)]
+pub struct Executor {
+    pub id: usize,
+    /// Processing speed `v_k` in GHz; task `n_i` takes `w_i / v_k` seconds.
+    pub speed: f64,
+}
+
+/// The cluster: executor set + communication model.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub executors: Vec<Executor>,
+    /// Uniform inter-executor transmission speed in MB/s.
+    pub comm_mbps: f64,
+}
+
+impl Cluster {
+    /// Sample a heterogeneous cluster per the paper: speeds drawn uniformly
+    /// from the config's frequency table.
+    pub fn heterogeneous(cfg: &ClusterConfig, seed: u64) -> Cluster {
+        cfg.validate().expect("invalid cluster config");
+        let mut rng = Rng::new(seed ^ 0xC1A5_7E85);
+        let executors = (0..cfg.n_executors)
+            .map(|id| Executor {
+                id,
+                speed: *rng.choice(&cfg.freq_table),
+            })
+            .collect();
+        Cluster {
+            executors,
+            comm_mbps: cfg.comm_mbps,
+        }
+    }
+
+    /// A homogeneous cluster (Decima's setting; used in ablations/tests).
+    pub fn homogeneous(n: usize, speed: f64, comm_mbps: f64) -> Cluster {
+        assert!(n > 0 && speed > 0.0 && comm_mbps > 0.0);
+        Cluster {
+            executors: (0..n).map(|id| Executor { id, speed }).collect(),
+            comm_mbps,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.executors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.executors.is_empty()
+    }
+
+    pub fn speed(&self, k: usize) -> f64 {
+        self.executors[k].speed
+    }
+
+    /// Mean executor speed `v̄` (used by rank_up/rank_down, Eq 6–7).
+    pub fn v_avg(&self) -> f64 {
+        self.executors.iter().map(|e| e.speed).sum::<f64>() / self.len() as f64
+    }
+
+    /// Fastest executor speed (speedup numerator and SLR denominator use
+    /// the fastest executor, Eq 13–14).
+    pub fn v_max(&self) -> f64 {
+        self.executors
+            .iter()
+            .map(|e| e.speed)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Index of the fastest executor.
+    pub fn fastest(&self) -> usize {
+        (0..self.len())
+            .max_by(|&a, &b| self.speed(a).partial_cmp(&self.speed(b)).unwrap())
+            .unwrap()
+    }
+
+    /// Transmission speed `c_ij` between executors (MB/s); infinite within
+    /// a single executor (data already local, paper constraint 3).
+    pub fn comm_speed(&self, from: usize, to: usize) -> f64 {
+        if from == to {
+            f64::INFINITY
+        } else {
+            self.comm_mbps
+        }
+    }
+
+    /// Average inter-executor transmission speed `c̄` (for the rank
+    /// features). With the paper's uniform model this is just `comm_mbps`.
+    pub fn c_avg(&self) -> f64 {
+        self.comm_mbps
+    }
+
+    /// Transfer time of `data` MB from executor `from` to `to` (Eq 2's
+    /// `e_pi / c_pj` term): zero when co-located.
+    pub fn transfer_time(&self, data: f64, from: usize, to: usize) -> f64 {
+        if from == to || data == 0.0 {
+            0.0
+        } else {
+            data / self.comm_mbps
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn heterogeneous_speeds_from_table() {
+        let cfg = ClusterConfig::default();
+        let c = Cluster::heterogeneous(&cfg, 7);
+        assert_eq!(c.len(), 50);
+        for e in &c.executors {
+            assert!(
+                cfg.freq_table.iter().any(|&f| (f - e.speed).abs() < 1e-9),
+                "speed {} not in table",
+                e.speed
+            );
+        }
+        // With 50 draws from 16 values we should see heterogeneity.
+        let distinct: std::collections::BTreeSet<u64> = c
+            .executors
+            .iter()
+            .map(|e| (e.speed * 10.0).round() as u64)
+            .collect();
+        assert!(distinct.len() > 3);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = ClusterConfig::with_executors(10);
+        let a = Cluster::heterogeneous(&cfg, 42);
+        let b = Cluster::heterogeneous(&cfg, 42);
+        for (x, y) in a.executors.iter().zip(&b.executors) {
+            assert_eq!(x.speed, y.speed);
+        }
+    }
+
+    #[test]
+    fn comm_model() {
+        let c = Cluster::homogeneous(3, 2.0, 100.0);
+        assert_eq!(c.transfer_time(500.0, 0, 1), 5.0);
+        assert_eq!(c.transfer_time(500.0, 1, 1), 0.0);
+        assert_eq!(c.transfer_time(0.0, 0, 1), 0.0);
+        assert!(c.comm_speed(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut c = Cluster::homogeneous(2, 2.0, 10.0);
+        c.executors[1].speed = 4.0;
+        assert!((c.v_avg() - 3.0).abs() < 1e-12);
+        assert_eq!(c.v_max(), 4.0);
+        assert_eq!(c.fastest(), 1);
+    }
+}

@@ -1,0 +1,421 @@
+//! Typed configuration system with JSON load/save.
+//!
+//! Every experiment in the harness is fully described by a config +
+//! seed, so runs are reproducible from the command line or from a JSON
+//! file (`lachesis ... --config exp.json`). Defaults mirror the paper's
+//! settings (50 executors, Intel 2.1–3.6 GHz frequency table, TPC-H
+//! workloads at 2/5/10/50/80/100 GB, Poisson arrivals with 45 s mean).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// How jobs arrive at the system (paper §5.3.2 vs §5.3.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// All jobs present at t = 0 ("batch mode").
+    Batch,
+    /// First job at t = 0, subsequent inter-arrival times are exponential
+    /// with the given mean in seconds ("continuous mode", paper uses 45 s).
+    Poisson { mean_interval: f64 },
+}
+
+/// Heterogeneous cluster description (paper §5.2).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of executors (paper: 50).
+    pub n_executors: usize,
+    /// Executor speed table in GHz; speeds are sampled uniformly from this
+    /// grid (paper: Intel CPU frequencies 2.1–3.6 GHz).
+    pub freq_table: Vec<f64>,
+    /// Uniform data transmission speed between distinct executors, MB/s
+    /// (paper assumes identical transfer speed between executors).
+    pub comm_mbps: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        // 2.1, 2.2, ..., 3.6 GHz
+        let freq_table = (0..=15).map(|i| 2.1 + 0.1 * i as f64).collect();
+        ClusterConfig {
+            n_executors: 50,
+            freq_table,
+            comm_mbps: 100.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_executors(n: usize) -> Self {
+        ClusterConfig {
+            n_executors: n,
+            ..Default::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_executors == 0 {
+            bail!("cluster must have at least one executor");
+        }
+        if self.freq_table.is_empty() {
+            bail!("frequency table is empty");
+        }
+        if self.freq_table.iter().any(|&f| f <= 0.0) {
+            bail!("executor frequencies must be positive");
+        }
+        if self.comm_mbps <= 0.0 {
+            bail!("communication speed must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("n_executors", Json::from(self.n_executors)),
+            ("freq_table", Json::from(self.freq_table.clone())),
+            ("comm_mbps", Json::from(self.comm_mbps)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let freq_table = v
+            .req("freq_table")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("freq_table must be an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad frequency")))
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = ClusterConfig {
+            n_executors: v.req_usize("n_executors")?,
+            freq_table,
+            comm_mbps: v.req_f64("comm_mbps")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Workload description (paper §5.2: TPC-H, 22 shapes × 6 sizes).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Number of jobs to generate.
+    pub n_jobs: usize,
+    /// TPC-H scale factors in GB to sample from (paper: 2,5,10,50,80,100).
+    pub sizes_gb: Vec<f64>,
+    /// Arrival process.
+    pub arrival: Arrival,
+    /// Restrict to a subset of the 22 query shapes (1-based ids); empty
+    /// means all 22.
+    pub query_ids: Vec<usize>,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_jobs: 10,
+            sizes_gb: vec![2.0, 5.0, 10.0, 50.0, 80.0, 100.0],
+            arrival: Arrival::Batch,
+            query_ids: Vec::new(),
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Paper's small-scale batch experiments (Fig 5): 1–20 jobs at t=0.
+    pub fn small_batch(n_jobs: usize) -> Self {
+        WorkloadConfig {
+            n_jobs,
+            sizes_gb: vec![2.0, 5.0, 10.0],
+            ..Default::default()
+        }
+    }
+
+    /// Paper's large-scale batch experiments (Fig 6): bigger jobs.
+    pub fn large_batch(n_jobs: usize) -> Self {
+        WorkloadConfig {
+            n_jobs,
+            sizes_gb: vec![50.0, 80.0, 100.0],
+            ..Default::default()
+        }
+    }
+
+    /// Paper's continuous mode (Fig 7): Poisson arrivals, mean 45 s.
+    pub fn continuous(n_jobs: usize) -> Self {
+        WorkloadConfig {
+            n_jobs,
+            arrival: Arrival::Poisson {
+                mean_interval: 45.0,
+            },
+            ..Default::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_jobs == 0 {
+            bail!("workload must contain at least one job");
+        }
+        if self.sizes_gb.is_empty() || self.sizes_gb.iter().any(|&s| s <= 0.0) {
+            bail!("sizes_gb must be non-empty and positive");
+        }
+        if let Arrival::Poisson { mean_interval } = self.arrival {
+            if mean_interval <= 0.0 {
+                bail!("mean_interval must be positive");
+            }
+        }
+        for &q in &self.query_ids {
+            if q == 0 || q > 22 {
+                bail!("query_ids must be in 1..=22, got {q}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arrival = match self.arrival {
+            Arrival::Batch => Json::from_pairs(vec![("mode", Json::from("batch"))]),
+            Arrival::Poisson { mean_interval } => Json::from_pairs(vec![
+                ("mode", Json::from("poisson")),
+                ("mean_interval", Json::from(mean_interval)),
+            ]),
+        };
+        Json::from_pairs(vec![
+            ("n_jobs", Json::from(self.n_jobs)),
+            ("sizes_gb", Json::from(self.sizes_gb.clone())),
+            ("arrival", arrival),
+            ("query_ids", Json::from(self.query_ids.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let arr = v.req("arrival")?;
+        let arrival = match arr.req_str("mode")? {
+            "batch" => Arrival::Batch,
+            "poisson" => Arrival::Poisson {
+                mean_interval: arr.req_f64("mean_interval")?,
+            },
+            other => bail!("unknown arrival mode '{other}'"),
+        };
+        let sizes_gb = v
+            .req("sizes_gb")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("sizes_gb must be an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad size")))
+            .collect::<Result<Vec<_>>>()?;
+        let query_ids = match v.get("query_ids") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad query id")))
+                .collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        let cfg = WorkloadConfig {
+            n_jobs: v.req_usize("n_jobs")?,
+            sizes_gb,
+            arrival,
+            query_ids,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// RL training configuration (paper §4.3 / Appendix C).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of training episodes (paper converges by ~800).
+    pub episodes: usize,
+    /// Parallel reward-collection agents (paper: 8).
+    pub agents: usize,
+    /// Discount factor for returns.
+    pub gamma: f64,
+    /// Initial curriculum episode-length mean τ_mean (Algorithm 2 line 4).
+    pub tau_mean0: f64,
+    /// Curriculum growth ε per iteration (Algorithm 2 line 14).
+    pub tau_eps: f64,
+    /// Softmax sampling temperature during exploration.
+    pub temperature: f64,
+    /// Jobs per training episode.
+    pub jobs_per_episode: usize,
+    /// Executors in the training cluster.
+    pub executors: usize,
+    /// Imitation warm-start epochs toward HEFT's choices before RL
+    /// fine-tuning (0 disables; our addition — see DESIGN.md).
+    pub imitation_epochs: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            episodes: 400,
+            agents: 8,
+            gamma: 0.99,
+            tau_mean0: 50.0,
+            tau_eps: 2.0,
+            temperature: 1.0,
+            jobs_per_episode: 4,
+            executors: 10,
+            imitation_epochs: 2,
+            seed: 20210001,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("episodes", Json::from(self.episodes)),
+            ("agents", Json::from(self.agents)),
+            ("gamma", Json::from(self.gamma)),
+            ("tau_mean0", Json::from(self.tau_mean0)),
+            ("tau_eps", Json::from(self.tau_eps)),
+            ("temperature", Json::from(self.temperature)),
+            ("jobs_per_episode", Json::from(self.jobs_per_episode)),
+            ("executors", Json::from(self.executors)),
+            ("imitation_epochs", Json::from(self.imitation_epochs)),
+            ("seed", Json::from(self.seed)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(TrainConfig {
+            episodes: v.req_usize("episodes")?,
+            agents: v.req_usize("agents")?,
+            gamma: v.req_f64("gamma")?,
+            tau_mean0: v.req_f64("tau_mean0")?,
+            tau_eps: v.req_f64("tau_eps")?,
+            temperature: v.req_f64("temperature")?,
+            jobs_per_episode: v.req_usize("jobs_per_episode")?,
+            executors: v.req_usize("executors")?,
+            imitation_epochs: v.req_usize("imitation_epochs")?,
+            seed: v.req("seed")?.as_u64().context("seed")?,
+        })
+    }
+}
+
+/// One experiment sweep (a figure panel): job counts × seeds × algorithms.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub workload_base: WorkloadConfig,
+    /// Sweep over these job counts (x-axis of Figs 5–7).
+    pub job_counts: Vec<usize>,
+    /// Independent workload seeds per point (paper: 10).
+    pub seeds: Vec<u64>,
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("cluster", self.cluster.to_json()),
+            ("workload_base", self.workload_base.to_json()),
+            ("job_counts", Json::from(self.job_counts.clone())),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let job_counts = v
+            .req("job_counts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("job_counts must be an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad job count")))
+            .collect::<Result<Vec<_>>>()?;
+        let seeds = v
+            .req("seeds")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("seeds must be an array"))?
+            .iter()
+            .map(|x| x.as_u64().ok_or_else(|| anyhow!("bad seed")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExperimentConfig {
+            cluster: ClusterConfig::from_json(v.req("cluster")?)?,
+            workload_base: WorkloadConfig::from_json(v.req("workload_base")?)?,
+            job_counts,
+            seeds,
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Save to a JSON file (pretty).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_roundtrip() {
+        let c = ClusterConfig::default();
+        let j = c.to_json();
+        let c2 = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(c2.n_executors, 50);
+        assert_eq!(c2.freq_table.len(), 16);
+        assert!((c2.freq_table[0] - 2.1).abs() < 1e-9);
+        assert!((c2.freq_table[15] - 3.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_roundtrip_poisson() {
+        let w = WorkloadConfig::continuous(30);
+        let w2 = WorkloadConfig::from_json(&w.to_json()).unwrap();
+        assert_eq!(w2.n_jobs, 30);
+        assert_eq!(
+            w2.arrival,
+            Arrival::Poisson {
+                mean_interval: 45.0
+            }
+        );
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ClusterConfig::default();
+        c.n_executors = 0;
+        assert!(c.validate().is_err());
+        let mut w = WorkloadConfig::default();
+        w.sizes_gb = vec![-1.0];
+        assert!(w.validate().is_err());
+        let mut w = WorkloadConfig::default();
+        w.query_ids = vec![23];
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn experiment_roundtrip() {
+        let e = ExperimentConfig {
+            cluster: ClusterConfig::with_executors(10),
+            workload_base: WorkloadConfig::small_batch(5),
+            job_counts: vec![1, 5, 10],
+            seeds: vec![1, 2, 3],
+        };
+        let e2 = ExperimentConfig::from_json(&e.to_json()).unwrap();
+        assert_eq!(e2.job_counts, vec![1, 5, 10]);
+        assert_eq!(e2.seeds, vec![1, 2, 3]);
+        assert_eq!(e2.cluster.n_executors, 10);
+    }
+
+    #[test]
+    fn train_roundtrip() {
+        let t = TrainConfig::default();
+        let t2 = TrainConfig::from_json(&t.to_json()).unwrap();
+        assert_eq!(t2.episodes, t.episodes);
+        assert_eq!(t2.agents, 8);
+        assert!((t2.gamma - 0.99).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Graph algorithms over job DAGs: topological order, cycle detection,
+//! critical path (the SLR lower bound, Eq 14), reachability.
+
+use super::{Job, NodeId};
+
+/// Kahn's algorithm. Returns `None` if the graph has a cycle.
+pub fn try_topo_order(job: &Job) -> Option<Vec<NodeId>> {
+    let n = job.n_tasks();
+    let mut indeg: Vec<usize> = (0..n).map(|i| job.parents[i].len()).collect();
+    let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        order.push(u);
+        for e in &job.children[u] {
+            indeg[e.other] -= 1;
+            if indeg[e.other] == 0 {
+                queue.push(e.other);
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+/// Topological order; panics on cycles (jobs are validated at build time).
+pub fn topo_order(job: &Job) -> Vec<NodeId> {
+    try_topo_order(job).expect("cyclic job DAG")
+}
+
+/// The minimum-computation critical path of a job (paper Eq 14): the path
+/// from an entry to an exit node that maximizes the sum of per-node
+/// *minimum* execution times (`w_i / v_max`). Returns `(path, length_secs)`.
+///
+/// The denominator of SLR is the length of this path — a lower bound on any
+/// schedule's makespan, since those tasks must run sequentially even on the
+/// fastest executor with free communication.
+pub fn critical_path_min(job: &Job, v_max: f64) -> (Vec<NodeId>, f64) {
+    assert!(v_max > 0.0);
+    let n = job.n_tasks();
+    // dist[i] = best path length ending at i (inclusive of i).
+    let mut dist = vec![0.0f64; n];
+    let mut pred: Vec<Option<NodeId>> = vec![None; n];
+    for &u in job.topo() {
+        let w = job.tasks[u].compute / v_max;
+        let mut best = 0.0;
+        let mut best_p = None;
+        for e in &job.parents[u] {
+            if dist[e.other] > best {
+                best = dist[e.other];
+                best_p = Some(e.other);
+            }
+        }
+        dist[u] = best + w;
+        pred[u] = best_p;
+    }
+    let end = (0..n)
+        .max_by(|&a, &b| dist[a].partial_cmp(&dist[b]).unwrap())
+        .expect("non-empty job");
+    let mut path = vec![end];
+    let mut cur = end;
+    while let Some(p) = pred[cur] {
+        path.push(p);
+        cur = p;
+    }
+    path.reverse();
+    (path, dist[end])
+}
+
+/// Set of nodes reachable from `start` (descendants, exclusive).
+pub fn descendants(job: &Job, start: NodeId) -> Vec<NodeId> {
+    let n = job.n_tasks();
+    let mut seen = vec![false; n];
+    let mut stack = vec![start];
+    let mut out = Vec::new();
+    while let Some(u) = stack.pop() {
+        for e in &job.children[u] {
+            if !seen[e.other] {
+                seen[e.other] = true;
+                out.push(e.other);
+                stack.push(e.other);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Set of ancestors of `start` (exclusive).
+pub fn ancestors(job: &Job, start: NodeId) -> Vec<NodeId> {
+    let n = job.n_tasks();
+    let mut seen = vec![false; n];
+    let mut stack = vec![start];
+    let mut out = Vec::new();
+    while let Some(u) = stack.pop() {
+        for e in &job.parents[u] {
+            if !seen[e.other] {
+                seen[e.other] = true;
+                out.push(e.other);
+                stack.push(e.other);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Job;
+
+    fn chain() -> Job {
+        Job::new(
+            0,
+            "chain",
+            0.0,
+            vec![2.0, 4.0, 6.0],
+            &[(0, 1, 1.0), (1, 2, 1.0)],
+        )
+    }
+
+    fn diamond() -> Job {
+        Job::new(
+            0,
+            "diamond",
+            0.0,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[(0, 1, 10.0), (0, 2, 20.0), (1, 3, 30.0), (2, 3, 40.0)],
+        )
+    }
+
+    #[test]
+    fn critical_path_of_chain_is_whole_chain() {
+        let j = chain();
+        let (path, len) = critical_path_min(&j, 2.0);
+        assert_eq!(path, vec![0, 1, 2]);
+        assert!((len - (2.0 + 4.0 + 6.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_of_diamond_takes_heavier_branch() {
+        let j = diamond();
+        let (path, len) = critical_path_min(&j, 1.0);
+        assert_eq!(path, vec![0, 2, 3]); // 1+3+4 > 1+2+4
+        assert!((len - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_node_path() {
+        let j = Job::new(0, "one", 0.0, vec![5.0], &[]);
+        let (path, len) = critical_path_min(&j, 2.5);
+        assert_eq!(path, vec![0]);
+        assert!((len - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reachability() {
+        let j = diamond();
+        assert_eq!(descendants(&j, 0), vec![1, 2, 3]);
+        assert_eq!(descendants(&j, 3), Vec::<usize>::new());
+        assert_eq!(ancestors(&j, 3), vec![0, 1, 2]);
+        assert_eq!(ancestors(&j, 0), Vec::<usize>::new());
+    }
+}

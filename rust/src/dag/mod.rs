@@ -1,0 +1,242 @@
+//! DAG job model: tasks (`w_i`), data edges (`e_ij`), jobs, and the graph
+//! algorithms the schedulers need (topological order, critical path,
+//! `rank_up`/`rank_down`).
+
+pub mod graph;
+pub mod ranks;
+
+pub use graph::{critical_path_min, topo_order};
+pub use ranks::{rank_down, rank_up};
+
+/// Node index within a job.
+pub type NodeId = usize;
+/// Job index within a workload.
+pub type JobId = usize;
+/// Global task identity: (job, node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskRef {
+    pub job: JobId,
+    pub node: NodeId,
+}
+
+impl TaskRef {
+    pub fn new(job: JobId, node: NodeId) -> Self {
+        TaskRef { job, node }
+    }
+}
+
+/// Legacy alias used by some call sites.
+pub type TaskId = TaskRef;
+
+/// A single task: the minimum scheduling unit.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Computation size `w_i` in GHz·seconds: execution time on executor
+    /// `r_k` is `w_i / v_k` (paper Eq 1).
+    pub compute: f64,
+}
+
+/// A directed data edge within a job's DAG.
+#[derive(Debug, Clone, Copy)]
+pub struct Edge {
+    /// The other endpoint (child for `children[]`, parent for `parents[]`).
+    pub other: NodeId,
+    /// Data size `e_ij` in MB transferred along the edge.
+    pub data: f64,
+}
+
+/// A job: a DAG of tasks with an arrival time (continuous mode) and a
+/// human-readable name (`tpch-q05-50g`).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub name: String,
+    /// Time the job arrives at the system (0 in batch mode).
+    pub arrival: f64,
+    pub tasks: Vec<Task>,
+    /// `children[i]` — outgoing edges of node `i`.
+    pub children: Vec<Vec<Edge>>,
+    /// `parents[i]` — incoming edges of node `i` (edge.other = parent id).
+    pub parents: Vec<Vec<Edge>>,
+    /// Cached topological order (parents before children).
+    topo: Vec<NodeId>,
+}
+
+impl Job {
+    /// Build a job from an edge list. Panics on cyclic or out-of-range
+    /// input — job construction is programmer/generator controlled; use
+    /// [`Job::try_new`] for untrusted traces.
+    pub fn new(
+        id: JobId,
+        name: impl Into<String>,
+        arrival: f64,
+        computes: Vec<f64>,
+        edges: &[(NodeId, NodeId, f64)],
+    ) -> Job {
+        Job::try_new(id, name, arrival, computes, edges).expect("invalid job DAG")
+    }
+
+    /// Fallible construction with full validation (acyclicity, ranges,
+    /// positive sizes).
+    pub fn try_new(
+        id: JobId,
+        name: impl Into<String>,
+        arrival: f64,
+        computes: Vec<f64>,
+        edges: &[(NodeId, NodeId, f64)],
+    ) -> anyhow::Result<Job> {
+        use anyhow::bail;
+        let n = computes.len();
+        if n == 0 {
+            bail!("job must have at least one task");
+        }
+        if computes.iter().any(|&w| !(w > 0.0)) {
+            bail!("task compute sizes must be positive");
+        }
+        let mut children: Vec<Vec<Edge>> = vec![Vec::new(); n];
+        let mut parents: Vec<Vec<Edge>> = vec![Vec::new(); n];
+        for &(u, v, data) in edges {
+            if u >= n || v >= n {
+                bail!("edge ({u},{v}) out of range for {n} tasks");
+            }
+            if u == v {
+                bail!("self-loop at node {u}");
+            }
+            if data < 0.0 {
+                bail!("negative edge data size");
+            }
+            children[u].push(Edge { other: v, data });
+            parents[v].push(Edge { other: u, data });
+        }
+        let tasks = computes.into_iter().map(|compute| Task { compute }).collect();
+        let mut job = Job {
+            id,
+            name: name.into(),
+            arrival,
+            tasks,
+            children,
+            parents,
+            topo: Vec::new(),
+        };
+        match graph::try_topo_order(&job) {
+            Some(order) => job.topo = order,
+            None => bail!("job '{}' contains a cycle", job.name),
+        }
+        Ok(job)
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.children.iter().map(|c| c.len()).sum()
+    }
+
+    /// Total computation size of the job (sum of `w_i`).
+    pub fn total_work(&self) -> f64 {
+        self.tasks.iter().map(|t| t.compute).sum()
+    }
+
+    /// Total data volume on edges.
+    pub fn total_data(&self) -> f64 {
+        self.children
+            .iter()
+            .flat_map(|es| es.iter().map(|e| e.data))
+            .sum()
+    }
+
+    /// Cached topological order (parents precede children).
+    pub fn topo(&self) -> &[NodeId] {
+        &self.topo
+    }
+
+    /// Entry nodes (no parents).
+    pub fn entries(&self) -> Vec<NodeId> {
+        (0..self.n_tasks())
+            .filter(|&i| self.parents[i].is_empty())
+            .collect()
+    }
+
+    /// Exit nodes (no children).
+    pub fn exits(&self) -> Vec<NodeId> {
+        (0..self.n_tasks())
+            .filter(|&i| self.children[i].is_empty())
+            .collect()
+    }
+
+    /// Data size on edge `u -> v`, or 0 if absent.
+    pub fn edge_data(&self, u: NodeId, v: NodeId) -> f64 {
+        self.children[u]
+            .iter()
+            .find(|e| e.other == v)
+            .map(|e| e.data)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn diamond() -> Job {
+        // 0 -> {1, 2} -> 3
+        Job::new(
+            0,
+            "diamond",
+            0.0,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[(0, 1, 10.0), (0, 2, 20.0), (1, 3, 30.0), (2, 3, 40.0)],
+        )
+    }
+
+    #[test]
+    fn builds_adjacency() {
+        let j = diamond();
+        assert_eq!(j.n_tasks(), 4);
+        assert_eq!(j.n_edges(), 4);
+        assert_eq!(j.entries(), vec![0]);
+        assert_eq!(j.exits(), vec![3]);
+        assert_eq!(j.children[0].len(), 2);
+        assert_eq!(j.parents[3].len(), 2);
+        assert_eq!(j.edge_data(0, 2), 20.0);
+        assert_eq!(j.edge_data(2, 0), 0.0);
+        assert_eq!(j.total_work(), 10.0);
+        assert_eq!(j.total_data(), 100.0);
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let r = Job::try_new(
+            0,
+            "cycle",
+            0.0,
+            vec![1.0, 1.0, 1.0],
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0)],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Job::try_new(0, "e", 0.0, vec![], &[]).is_err());
+        assert!(Job::try_new(0, "w", 0.0, vec![0.0], &[]).is_err());
+        assert!(Job::try_new(0, "r", 0.0, vec![1.0], &[(0, 1, 1.0)]).is_err());
+        assert!(Job::try_new(0, "s", 0.0, vec![1.0, 1.0], &[(0, 0, 1.0)]).is_err());
+        assert!(Job::try_new(0, "d", 0.0, vec![1.0, 1.0], &[(0, 1, -1.0)]).is_err());
+    }
+
+    #[test]
+    fn topo_respects_dependencies() {
+        let j = diamond();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (idx, &n) in j.topo().iter().enumerate() {
+                p[n] = idx;
+            }
+            p
+        };
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Upward/downward ranks (paper Eq 6–7, following HEFT).
+//!
+//! `rank_up(n_i)` — average execution time of `n_i` plus the maximum over
+//! children of (average communication time + child's rank_up): the longest
+//! remaining path to an exit node. HEFT's task priority; also a node
+//! feature for MGNet.
+//!
+//! `rank_down(n_i)` — the longest path from an entry node down to (but not
+//! including) `n_i`, using average execution and communication times.
+
+use super::Job;
+
+/// `rank_up` for every node of a job. `v_avg` is the average executor
+/// speed, `c_avg` the average transmission speed (paper Eq 6 uses mean
+/// costs so the rank is executor-independent).
+pub fn rank_up(job: &Job, v_avg: f64, c_avg: f64) -> Vec<f64> {
+    assert!(v_avg > 0.0 && c_avg > 0.0);
+    let n = job.n_tasks();
+    let mut rank = vec![0.0f64; n];
+    // Reverse topological order: children before parents.
+    for &u in job.topo().iter().rev() {
+        let mut best = 0.0f64;
+        for e in &job.children[u] {
+            let cand = e.data / c_avg + rank[e.other];
+            if cand > best {
+                best = cand;
+            }
+        }
+        rank[u] = job.tasks[u].compute / v_avg + best;
+    }
+    rank
+}
+
+/// `rank_down` for every node (Eq 7): 0 for entry nodes; otherwise the
+/// maximum over parents of (parent's rank_down + parent's average execution
+/// time + edge communication time).
+pub fn rank_down(job: &Job, v_avg: f64, c_avg: f64) -> Vec<f64> {
+    assert!(v_avg > 0.0 && c_avg > 0.0);
+    let n = job.n_tasks();
+    let mut rank = vec![0.0f64; n];
+    for &u in job.topo() {
+        let mut best = 0.0f64;
+        for e in &job.parents[u] {
+            let p = e.other;
+            let cand = rank[p] + job.tasks[p].compute / v_avg + e.data / c_avg;
+            if cand > best {
+                best = cand;
+            }
+        }
+        rank[u] = best;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Job;
+
+    fn diamond() -> Job {
+        // 0 -> {1, 2} -> 3, w = [1,2,3,4], e = 0->1:10, 0->2:20, 1->3:30, 2->3:40
+        Job::new(
+            0,
+            "diamond",
+            0.0,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[(0, 1, 10.0), (0, 2, 20.0), (1, 3, 30.0), (2, 3, 40.0)],
+        )
+    }
+
+    #[test]
+    fn rank_up_hand_computed() {
+        let j = diamond();
+        let r = rank_up(&j, 1.0, 10.0);
+        // exit: rank[3] = 4
+        assert!((r[3] - 4.0).abs() < 1e-12);
+        // rank[1] = 2 + (30/10 + 4) = 9 ; rank[2] = 3 + (40/10 + 4) = 11
+        assert!((r[1] - 9.0).abs() < 1e-12);
+        assert!((r[2] - 11.0).abs() < 1e-12);
+        // rank[0] = 1 + max(10/10 + 9, 20/10 + 11) = 1 + 13 = 14
+        assert!((r[0] - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_down_hand_computed() {
+        let j = diamond();
+        let r = rank_down(&j, 1.0, 10.0);
+        assert!((r[0] - 0.0).abs() < 1e-12);
+        // rank_down[1] = 0 + 1 + 1 = 2 ; rank_down[2] = 0 + 1 + 2 = 3
+        assert!((r[1] - 2.0).abs() < 1e-12);
+        assert!((r[2] - 3.0).abs() < 1e-12);
+        // rank_down[3] = max(2 + 2 + 3, 3 + 3 + 4) = 10
+        assert!((r[3] - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_up_decreases_along_edges() {
+        let j = diamond();
+        let r = rank_up(&j, 2.3, 55.0);
+        for u in 0..j.n_tasks() {
+            for e in &j.children[u] {
+                assert!(
+                    r[u] > r[e.other],
+                    "rank_up must strictly decrease along edges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn entry_rank_up_bounds_critical_path() {
+        // rank_up at the entry with c -> inf equals the computation-only
+        // critical path length.
+        let j = diamond();
+        let r = rank_up(&j, 1.0, 1e18);
+        let (_, cp) = crate::dag::graph::critical_path_min(&j, 1.0);
+        assert!((r[0] - cp).abs() < 1e-6);
+    }
+}

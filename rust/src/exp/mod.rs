@@ -1,0 +1,453 @@
+//! Experiment harness: regenerates every figure of the paper's evaluation
+//! (§5.3) as printed series + CSV files under `results/`.
+//!
+//! * Fig 4 — learning curve (loss/return vs episode): [`fig4`]
+//! * Fig 5a–d — batch mode, small scale (1–20 jobs): [`fig5`]
+//! * Fig 6a–d — batch mode, large scale (20–100 jobs): [`fig6`]
+//! * Fig 7a–b — continuous mode (Poisson 45 s arrivals): [`fig7`]
+//! * Ablations (DESIGN.md §Per-experiment index): [`ablate`]
+
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, ExperimentConfig, TrainConfig, WorkloadConfig};
+use crate::metrics::SuiteReport;
+use crate::policy::features::FeatureMode;
+use crate::policy::{params, PolicyEval, RustPolicy};
+use crate::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+use crate::runtime::PjrtPolicy;
+use crate::sched::{
+    CpopScheduler, DecimaScheduler, DlsScheduler, FifoScheduler, HeftScheduler,
+    HighRankUpScheduler, HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler,
+    SjfScheduler, TdcaScheduler,
+};
+use crate::sim::Simulator;
+use crate::workload::WorkloadGenerator;
+use anyhow::{bail, Context, Result};
+
+/// Where learned-policy weights come from for the evaluation runs.
+#[derive(Debug, Clone)]
+pub struct PolicySource {
+    pub artifact_dir: String,
+    /// Trained Lachesis weights; falls back to `params_init.bin`, then to
+    /// a random rust-side init (with a warning) so sweeps never block.
+    pub lachesis_params: Option<String>,
+    pub decima_params: Option<String>,
+    /// `pjrt` (the AOT artifact — production path) or `rust` (reference
+    /// forward; used when artifacts are unavailable).
+    pub backend: String,
+}
+
+impl Default for PolicySource {
+    fn default() -> Self {
+        PolicySource {
+            artifact_dir: "artifacts".to_string(),
+            lachesis_params: None,
+            decima_params: None,
+            backend: "pjrt".to_string(),
+        }
+    }
+}
+
+impl PolicySource {
+    fn eval_for(&self, which: FeatureMode) -> Box<dyn PolicyEval> {
+        let explicit = match which {
+            FeatureMode::Full => self.lachesis_params.as_deref(),
+            FeatureMode::HomogeneousBlind => self.decima_params.as_deref(),
+        };
+        // Preference order: explicit checkpoint → trained default location
+        // → params_init.bin → random.
+        let default_ckpt = match which {
+            FeatureMode::Full => "checkpoints/lachesis.bin",
+            FeatureMode::HomogeneousBlind => "checkpoints/decima.bin",
+        };
+        let init = format!("{}/params_init.bin", self.artifact_dir);
+        let candidates: Vec<&str> = match explicit {
+            Some(p) => vec![p],
+            None => vec![default_ckpt, &init],
+        };
+        let params = candidates.iter().find_map(|p| {
+            params::load_expected(p, crate::policy::net::param_len()).ok()
+        });
+        let params = match params {
+            Some(p) => p,
+            None => {
+                crate::log_warn!(
+                    "no parameter file found (tried {:?}); using random init",
+                    candidates
+                );
+                RustPolicy::random(12345).params
+            }
+        };
+        if self.backend == "pjrt" {
+            match PjrtPolicy::with_params(&self.artifact_dir, params.clone()) {
+                Ok(p) => return Box::new(p),
+                Err(e) => {
+                    crate::log_warn!("PJRT backend unavailable ({e}); using rust forward");
+                }
+            }
+        }
+        Box::new(RustPolicy::new(params))
+    }
+}
+
+/// Build a scheduler by name. Names match the paper's figure legends.
+pub fn build_scheduler(name: &str, src: &PolicySource, seed: u64) -> Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "FIFO-DEFT" => Box::new(FifoScheduler::new()),
+        "SJF-DEFT" => Box::new(SjfScheduler::new()),
+        "HRRN-DEFT" => Box::new(HrrnScheduler::new()),
+        "HighRankUp-DEFT" => Box::new(HighRankUpScheduler::new()),
+        "HEFT" => Box::new(HeftScheduler::new()),
+        "CPOP" => Box::new(CpopScheduler::new()),
+        "DLS" => Box::new(DlsScheduler::new()),
+        "TDCA" => Box::new(TdcaScheduler::new()),
+        "Random-DEFT" => Box::new(RandomScheduler::new(seed)),
+        "Decima-DEFT" => Box::new(DecimaScheduler::greedy_decima(
+            src.eval_for(FeatureMode::HomogeneousBlind),
+        )),
+        "Lachesis" => Box::new(LachesisScheduler::greedy(src.eval_for(FeatureMode::Full))),
+        other => bail!("unknown scheduler '{other}'"),
+    })
+}
+
+/// Run one figure sweep: job_counts × seeds × algorithms.
+pub fn sweep(cfg: &ExperimentConfig, algos: &[&str], src: &PolicySource) -> Result<SuiteReport> {
+    let mut suite = SuiteReport::new();
+    for &x in &cfg.job_counts {
+        for &seed in &cfg.seeds {
+            let mut wcfg = cfg.workload_base.clone();
+            wcfg.n_jobs = x;
+            let workload = WorkloadGenerator::new(wcfg, seed).generate();
+            for &algo in algos {
+                let cluster = Cluster::heterogeneous(&cfg.cluster, seed);
+                let mut sched = build_scheduler(algo, src, seed)?;
+                let mut sim = Simulator::new(cluster, workload.clone());
+                let report = sim
+                    .run(sched.as_mut())
+                    .with_context(|| format!("{algo} on {x} jobs, seed {seed}"))?;
+                suite.push(x, report);
+            }
+            crate::log_debug!("x={x} seed={seed} done");
+        }
+        crate::log_info!("sweep point x={x} complete");
+    }
+    Ok(suite)
+}
+
+fn write_results(name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all("results").context("mkdir results")?;
+    let path = format!("results/{name}");
+    std::fs::write(&path, content).with_context(|| format!("writing {path}"))?;
+    crate::log_info!("wrote {path}");
+    Ok(())
+}
+
+/// The batch-mode algorithm set of Figs 5–6.
+pub const BATCH_ALGOS: [&str; 5] = ["FIFO-DEFT", "TDCA", "HEFT", "Decima-DEFT", "Lachesis"];
+/// The continuous-mode algorithm set of Fig 7.
+pub const CONT_ALGOS: [&str; 5] = [
+    "SJF-DEFT",
+    "HRRN-DEFT",
+    "HighRankUp-DEFT",
+    "Decima-DEFT",
+    "Lachesis",
+];
+
+/// Fig 5: batch mode, small scale. `quick` shrinks the sweep for CI.
+pub fn fig5(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
+    let cfg = ExperimentConfig {
+        cluster: ClusterConfig::default(),
+        workload_base: WorkloadConfig::small_batch(1),
+        job_counts: if quick {
+            vec![2, 6]
+        } else {
+            vec![1, 2, 4, 6, 8, 10, 12, 14, 16, 18, 20]
+        },
+        seeds: (0..seeds as u64).map(|s| 1000 + s).collect(),
+    };
+    let suite = sweep(&cfg, &BATCH_ALGOS, src)?;
+    let mut out = String::from("# Fig 5 — batch mode, small scale\n\n");
+    out.push_str(&suite.table("makespan", "Fig 5a: average makespan (s)"));
+    out.push_str(&suite.table("speedup", "Fig 5b: speedup (Eq 13)"));
+    out.push_str(&suite.table("slr", "Fig 5c: SLR (Eq 14)"));
+    out.push_str(&suite.table("p98", "Fig 5d: p98 decision time (ms)"));
+    out.push_str(&decision_cdf_section(&suite, &BATCH_ALGOS));
+    write_results("fig5.md", &out)?;
+    write_results("fig5.csv", &suite.to_csv())?;
+    Ok(out)
+}
+
+/// Fig 6: batch mode, large scale (the −26.7% makespan / +35.2% speedup
+/// headline setting).
+pub fn fig6(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
+    let cfg = ExperimentConfig {
+        cluster: ClusterConfig::default(),
+        workload_base: WorkloadConfig::large_batch(1),
+        job_counts: if quick {
+            vec![20, 40]
+        } else {
+            vec![20, 30, 40, 50, 60, 70, 80, 90, 100]
+        },
+        seeds: (0..seeds as u64).map(|s| 2000 + s).collect(),
+    };
+    let suite = sweep(&cfg, &BATCH_ALGOS, src)?;
+    let mut out = String::from("# Fig 6 — batch mode, large scale\n\n");
+    out.push_str(&suite.table("makespan", "Fig 6a: average makespan (s)"));
+    out.push_str(&suite.table("speedup", "Fig 6b: speedup (Eq 13)"));
+    out.push_str(&suite.table("slr", "Fig 6c: SLR (Eq 14)"));
+    out.push_str(&suite.table("p98", "Fig 6d: p98 decision time (ms)"));
+    out.push_str(&decision_cdf_section(&suite, &BATCH_ALGOS));
+    out.push_str(&headline_section(&suite));
+    write_results("fig6.md", &out)?;
+    write_results("fig6.csv", &suite.to_csv())?;
+    Ok(out)
+}
+
+/// Fig 7: continuous mode (Poisson arrivals, mean 45 s).
+pub fn fig7(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
+    let cfg = ExperimentConfig {
+        cluster: ClusterConfig::default(),
+        workload_base: WorkloadConfig::continuous(1),
+        job_counts: if quick {
+            vec![5, 15]
+        } else {
+            vec![10, 20, 30, 40, 50, 60, 70, 80]
+        },
+        seeds: (0..seeds as u64).map(|s| 3000 + s).collect(),
+    };
+    let suite = sweep(&cfg, &CONT_ALGOS, src)?;
+    let mut out = String::from("# Fig 7 — continuous mode (Poisson, mean 45 s)\n\n");
+    out.push_str(&suite.table("makespan", "Fig 7a: average makespan (s)"));
+    out.push_str(&suite.table(
+        "jct",
+        "Fig 7a′ (supplementary): average job completion time (s) — at the \
+paper's 45 s mean inter-arrival our simulated cluster is underloaded, so \
+total makespan is arrival-dominated and JCT is the discriminating metric",
+    ));
+    out.push_str(&suite.table("p98", "Fig 7b: p98 decision time (ms)"));
+    out.push_str(&decision_cdf_section(&suite, &CONT_ALGOS));
+    write_results("fig7.md", &out)?;
+    write_results("fig7.csv", &suite.to_csv())?;
+    Ok(out)
+}
+
+/// Fig 4: the learning curve. Trains Lachesis from the AOT init through
+/// the AOT train_step and dumps the per-episode series.
+pub fn fig4(cfg: &TrainConfig, artifact_dir: &str, out_params: &str) -> Result<String> {
+    let init = params::load_expected(
+        &format!("{artifact_dir}/params_init.bin"),
+        crate::policy::net::param_len(),
+    )?;
+    let backend = PjrtTrainBackend::new(artifact_dir, init)?;
+    let batch = backend.batch_size();
+    let mut trainer = Trainer::new(cfg.clone(), backend, FeatureMode::Full);
+    let stats = trainer.train(batch)?;
+    let mut csv = String::from(crate::rl::trainer::EpisodeStat::csv_header());
+    csv.push('\n');
+    for s in &stats {
+        csv.push_str(&s.csv_row());
+        csv.push('\n');
+    }
+    write_results("fig4_learning_curve.csv", &csv)?;
+    if let Some(dir) = std::path::Path::new(out_params).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    params::save_f32(out_params, trainer.backend.params())?;
+    crate::log_info!("saved trained parameters to {out_params}");
+    // Render a compact textual learning curve + ASCII chart of the
+    // held-out greedy eval makespan.
+    let eval_series: Vec<(f64, f64)> = stats
+        .iter()
+        .filter(|s| s.eval_makespan.is_finite())
+        .map(|s| (s.episode as f64, s.eval_makespan))
+        .collect();
+    let chart = crate::metrics::chart::line_chart(
+        "greedy eval makespan (s) vs episode",
+        &[("eval", eval_series)],
+        70,
+        14,
+    );
+    let mut out = String::from("# Fig 4 — learning curve\n\nepisode  avg-makespan  loss\n");
+    let stride = (stats.len() / 20).max(1);
+    for s in stats.iter().step_by(stride) {
+        out.push_str(&format!(
+            "{:>7}  {:>12.1}  {:>8.4}\n",
+            s.episode, s.makespan, s.loss
+        ));
+    }
+    if let (Some(first), Some(last)) = (stats.first(), stats.last()) {
+        out.push_str(&format!(
+            "\nfirst-episode makespan {:.1}s → last {:.1}s\n\n",
+            first.makespan, last.makespan
+        ));
+    }
+    out.push_str(&chart);
+    write_results("fig4.md", &out)?;
+    Ok(out)
+}
+
+/// Ablations over the design choices DESIGN.md calls out: DEFT vs EFT in
+/// phase 2, and the value of duplication across network speeds.
+pub fn ablate(src: &PolicySource, seeds: usize) -> Result<String> {
+    use crate::sched::selectors::RankUpSelector;
+    use crate::sched::{EftAllocator, TwoPhase};
+    let mut out = String::from("# Ablations\n\n");
+
+    // (a) phase-2 allocator: rank_up selector with EFT vs DEFT, across
+    // communication speeds.
+    out.push_str("## DEFT vs EFT (phase-2 allocator) across network speeds\n\n");
+    out.push_str("| comm MB/s | EFT makespan | DEFT makespan | DEFT dup count | gain |\n|---|---|---|---|---|\n");
+    for &comm in &[10.0, 50.0, 100.0, 500.0] {
+        let mut eft_ms = Vec::new();
+        let mut deft_ms = Vec::new();
+        let mut dups = 0usize;
+        for seed in 0..seeds as u64 {
+            let mut ccfg = ClusterConfig::default();
+            ccfg.comm_mbps = comm;
+            let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 4000 + seed)
+                .generate();
+            let r1 = Simulator::new(Cluster::heterogeneous(&ccfg, seed), w.clone())
+                .run(&mut TwoPhase::named(RankUpSelector, EftAllocator::new(), "rankup-eft"))?;
+            let r2 = Simulator::new(Cluster::heterogeneous(&ccfg, seed), w)
+                .run(&mut HighRankUpScheduler::new())?;
+            eft_ms.push(r1.makespan);
+            dups += r2.n_duplicates;
+            deft_ms.push(r2.makespan);
+        }
+        let (e, d) = (
+            crate::util::stats::mean(&eft_ms),
+            crate::util::stats::mean(&deft_ms),
+        );
+        out.push_str(&format!(
+            "| {comm} | {e:.1} | {d:.1} | {} | {:.1}% |\n",
+            dups / seeds.max(1),
+            100.0 * (e - d) / e
+        ));
+    }
+
+    // (b) selector ablation at fixed allocator (all DEFT).
+    out.push_str("\n## Phase-1 selector (all with DEFT)\n\n");
+    let cfg = ExperimentConfig {
+        cluster: ClusterConfig::default(),
+        workload_base: WorkloadConfig::large_batch(1),
+        job_counts: vec![30],
+        seeds: (0..seeds as u64).map(|s| 5000 + s).collect(),
+    };
+    let suite = sweep(
+        &cfg,
+        &[
+            "Random-DEFT",
+            "FIFO-DEFT",
+            "SJF-DEFT",
+            "HRRN-DEFT",
+            "HighRankUp-DEFT",
+            "Lachesis",
+        ],
+        src,
+    )?;
+    out.push_str(&suite.table("makespan", "makespan at 30 jobs"));
+    write_results("ablations.md", &out)?;
+    Ok(out)
+}
+
+/// The decision-time CDF series the paper plots (Figs 5d/6d/7b).
+fn decision_cdf_section(suite: &SuiteReport, algos: &[&str]) -> String {
+    let mut out = String::from("### Decision-time CDF (ms)\n\n| algo | p50 | p90 | p98 | p99.9 | max |\n|---|---|---|---|---|---|\n");
+    for &a in algos {
+        let rec = suite.decision_recorder(a);
+        if rec.is_empty() {
+            continue;
+        }
+        out.push_str(&format!(
+            "| {a} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
+            rec.percentile(50.0),
+            rec.percentile(90.0),
+            rec.percentile(98.0),
+            rec.percentile(99.9),
+            rec.max()
+        ));
+    }
+    out.push('\n');
+    out
+}
+
+/// The paper's headline claims, recomputed from the sweep: Lachesis'
+/// makespan reduction and speedup improvement vs the best baseline.
+fn headline_section(suite: &SuiteReport) -> String {
+    let mut best_red = f64::NEG_INFINITY;
+    let mut best_spd = f64::NEG_INFINITY;
+    for x in suite.xs() {
+        let Some(lach) = suite.summarize("Lachesis", x) else {
+            continue;
+        };
+        let mut best_base_ms = f64::INFINITY;
+        let mut best_base_spd = f64::NEG_INFINITY;
+        for a in suite.algos() {
+            if a == "Lachesis" {
+                continue;
+            }
+            if let Some(s) = suite.summarize(&a, x) {
+                best_base_ms = best_base_ms.min(s.makespan);
+                best_base_spd = best_base_spd.max(s.speedup);
+            }
+        }
+        best_red = best_red.max(100.0 * (best_base_ms - lach.makespan) / best_base_ms);
+        best_spd = best_spd.max(100.0 * (lach.speedup - best_base_spd) / best_base_spd);
+    }
+    format!(
+        "### Headline (paper: ≤26.7% makespan reduction, ≤35.2% speedup gain)\n\n\
+         max makespan reduction vs best baseline: {best_red:.1}%\n\
+         max speedup improvement vs best baseline: {best_spd:.1}%\n\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_all_heuristic_schedulers() {
+        let src = PolicySource {
+            backend: "rust".into(),
+            ..Default::default()
+        };
+        for name in [
+            "FIFO-DEFT",
+            "SJF-DEFT",
+            "HRRN-DEFT",
+            "HighRankUp-DEFT",
+            "HEFT",
+            "CPOP",
+            "DLS",
+            "TDCA",
+            "Random-DEFT",
+            "Decima-DEFT",
+            "Lachesis",
+        ] {
+            let s = build_scheduler(name, &src, 1).unwrap();
+            assert!(!s.name().is_empty());
+        }
+        assert!(build_scheduler("nope", &src, 1).is_err());
+    }
+
+    #[test]
+    fn tiny_sweep_produces_all_cells() {
+        let src = PolicySource {
+            backend: "rust".into(),
+            ..Default::default()
+        };
+        let cfg = ExperimentConfig {
+            cluster: ClusterConfig::with_executors(6),
+            workload_base: WorkloadConfig::small_batch(1),
+            job_counts: vec![2, 3],
+            seeds: vec![1, 2],
+        };
+        let suite = sweep(&cfg, &["FIFO-DEFT", "HEFT"], &src).unwrap();
+        for algo in ["FIFO-DEFT", "HEFT"] {
+            for x in [2, 3] {
+                let s = suite.summarize(algo, x).unwrap();
+                assert_eq!(s.n_seeds, 2);
+                assert!(s.makespan > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! # Lachesis
+//!
+//! A production-grade reproduction of *"Learning to Optimize DAG Scheduling
+//! in Heterogeneous Environment"* (Luo et al., 2021): a two-phase DAG
+//! scheduler that selects the next task with a graph-convolutional policy
+//! network (MGNet, Decima-style three-level embeddings) trained by
+//! actor–critic RL, and allocates executors with the **DEFT** heuristic
+//! (earliest-finish-time with optional single-parent duplication, CPEFT).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — event-driven heterogeneous cluster simulator,
+//!   the full scheduler zoo (FIFO/SJF/HRRN/HighRankUp/HEFT/CPOP/TDCA/
+//!   Decima-DEFT/Lachesis), the RL training loop, a plug-and-play
+//!   scheduling service, and the experiment harness for every figure in
+//!   the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — the MGNet + policy/value network
+//!   in JAX, AOT-lowered to HLO text once at build time.
+//! * **L1 (python/compile/kernels/gcn.py)** — the GCN message-passing hot
+//!   spot as a Pallas kernel (forward and backward), called from L2.
+//!
+//! Python never runs on the request path: [`runtime`] loads the
+//! `artifacts/*.hlo.txt` modules through the PJRT C API (`xla` crate) and
+//! executes them directly from rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lachesis::prelude::*;
+//!
+//! let cluster = Cluster::heterogeneous(&ClusterConfig::default(), 7);
+//! let workload = WorkloadGenerator::new(WorkloadConfig::small_batch(6), 42).generate();
+//! let mut sim = Simulator::new(cluster, workload);
+//! let report = sim.run(&mut HeftScheduler::new()).unwrap();
+//! println!("makespan = {:.2}s", report.makespan);
+//! ```
+
+pub mod bench_util;
+pub mod cluster;
+pub mod config;
+pub mod dag;
+pub mod exp;
+pub mod metrics;
+pub mod policy;
+pub mod rl;
+pub mod runtime;
+pub mod sched;
+pub mod service;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::cluster::{Cluster, Executor};
+    pub use crate::config::{ClusterConfig, ExperimentConfig, TrainConfig, WorkloadConfig};
+    pub use crate::dag::{Job, JobId, Task, TaskId, TaskRef};
+    pub use crate::metrics::{ScheduleReport, SuiteReport};
+    pub use crate::policy::{PolicyNet, RustPolicy};
+    pub use crate::sched::{
+        CpopScheduler, DecimaScheduler, DeftAllocator, FifoScheduler, HeftScheduler,
+        HighRankUpScheduler, HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler,
+        SjfScheduler, TdcaScheduler,
+    };
+    pub use crate::sim::Simulator;
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::{Workload, WorkloadGenerator};
+}

@@ -1,0 +1,306 @@
+//! `lachesis` — CLI for the DAG-scheduling system: workload generation,
+//! single schedules, RL training, the plug-and-play service, and the
+//! paper-reproduction harness (one subcommand per figure).
+
+use anyhow::{bail, Context, Result};
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, TrainConfig, WorkloadConfig};
+use lachesis::exp::{self, PolicySource};
+use lachesis::sim::Simulator;
+use lachesis::util::cli::Args;
+use lachesis::workload::{trace, WorkloadGenerator};
+
+const USAGE: &str = "\
+lachesis — learning to optimize DAG scheduling in heterogeneous environments
+
+USAGE:
+  lachesis workload  --jobs N [--mode batch|continuous] [--seed S] [--out trace.json]
+  lachesis schedule  --algo NAME [--jobs N] [--trace trace.json] [--seed S]
+                     [--executors M] [--validate] [--backend pjrt|rust]
+  lachesis train     [--episodes N] [--agents A] [--seed S] [--decima]
+                     [--artifacts DIR] [--out checkpoints/lachesis.bin]
+  lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
+  lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K] [--backend pjrt|rust]
+  lachesis ablate    [--seeds K]
+  lachesis info      [--artifacts DIR]
+
+Algorithms: FIFO-DEFT SJF-DEFT HRRN-DEFT HighRankUp-DEFT HEFT CPOP DLS TDCA
+            Random-DEFT Decima-DEFT Lachesis
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn policy_source(args: &Args) -> PolicySource {
+    PolicySource {
+        artifact_dir: args.opt_or("artifacts", "artifacts").to_string(),
+        lachesis_params: args.opt("lachesis-params").map(str::to_string),
+        decima_params: args.opt("decima-params").map(str::to_string),
+        backend: args.opt_or("backend", "pjrt").to_string(),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("workload") => cmd_workload(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("ablate") => {
+            let seeds = args.usize_opt("seeds", 3)?;
+            let out = exp::ablate(&policy_source(&args), seeds)?;
+            println!("{out}");
+            Ok(())
+        }
+        Some("info") => cmd_info(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let n = args.usize_opt("jobs", 10)?;
+    let seed = args.u64_opt("seed", 1)?;
+    let mode = args.opt_or("mode", "batch");
+    let cfg = match mode {
+        "batch" => WorkloadConfig::small_batch(n),
+        "continuous" => WorkloadConfig::continuous(n),
+        other => bail!("unknown mode '{other}'"),
+    };
+    let w = WorkloadGenerator::new(cfg, seed).generate();
+    println!(
+        "generated {} jobs / {} tasks / {} edges (total work {:.1} GHz·s)",
+        w.n_jobs(),
+        w.n_tasks(),
+        w.n_edges(),
+        w.total_work()
+    );
+    if let Some(out) = args.opt("out") {
+        trace::save(&w, out)?;
+        println!("trace written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let algo = args.opt_or("algo", "Lachesis");
+    let seed = args.u64_opt("seed", 1)?;
+    let executors = args.usize_opt("executors", 50)?;
+    let workload = match args.opt("trace") {
+        Some(path) => trace::load(path)?,
+        None => {
+            let n = args.usize_opt("jobs", 10)?;
+            WorkloadGenerator::new(WorkloadConfig::small_batch(n), seed).generate()
+        }
+    };
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+    let src = policy_source(args);
+    let mut sched = exp::build_scheduler(algo, &src, seed)?;
+    let mut sim = Simulator::new(cluster, workload);
+    let report = sim.run(sched.as_mut())?;
+    if args.flag("gantt") {
+        println!("{}", lachesis::metrics::gantt::render(&sim.state, 100));
+    }
+    if args.flag("validate") {
+        sim.state.validate().context("schedule validation")?;
+        println!("schedule validated: dependency + executor-exclusivity invariants hold");
+    }
+    println!(
+        "algo={} jobs={} tasks={}\n  makespan   {:.2}s\n  speedup    {:.2}x\n  avg SLR    {:.3}\n  avg JCT    {:.2}s\n  duplicates {}\n  utilization {:.1}%\n  decision p50/p98 {:.3}/{:.3} ms",
+        report.algo,
+        report.n_jobs,
+        report.n_tasks,
+        report.makespan,
+        report.speedup,
+        report.avg_slr,
+        report.avg_jct,
+        report.n_duplicates,
+        100.0 * report.utilization,
+        report.decision_ms.percentile(50.0),
+        report.decision_ms.percentile(98.0),
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    cfg.episodes = args.usize_opt("episodes", cfg.episodes)?;
+    cfg.agents = args.usize_opt("agents", cfg.agents)?;
+    cfg.seed = args.u64_opt("seed", cfg.seed)?;
+    cfg.jobs_per_episode = args.usize_opt("jobs-per-episode", cfg.jobs_per_episode)?;
+    cfg.executors = args.usize_opt("executors", cfg.executors)?;
+    cfg.imitation_epochs = args.usize_opt("imitation-epochs", cfg.imitation_epochs)?;
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    let default_out = if args.flag("decima") {
+        "checkpoints/decima.bin"
+    } else {
+        "checkpoints/lachesis.bin"
+    };
+    let out = args.opt_or("out", default_out);
+    if args.flag("decima") {
+        // Train the Decima-DEFT baseline (blind features).
+        use lachesis::policy::features::FeatureMode;
+        use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+        let init = lachesis::policy::params::load_expected(
+            &format!("{artifacts}/params_init.bin"),
+            lachesis::policy::net::param_len(),
+        )?;
+        let backend = PjrtTrainBackend::new(artifacts, init)?;
+        let batch = backend.batch_size();
+        let mut trainer = Trainer::new(cfg, backend, FeatureMode::HomogeneousBlind);
+        let stats = trainer.train(batch)?;
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        lachesis::policy::params::save_f32(out, trainer.backend.params())?;
+        println!(
+            "decima training done: {} episodes, final makespan {:.1}s → {out}",
+            stats.len(),
+            stats.last().map(|s| s.makespan).unwrap_or(0.0)
+        );
+    } else {
+        let summary = exp::fig4(&cfg, artifacts, out)?;
+        println!("{summary}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use lachesis::service::AgentServer;
+    let addr = args.opt_or("addr", "127.0.0.1:7654");
+    let algo = args.opt_or("algo", "HighRankUp-DEFT");
+    let executors = args.usize_opt("executors", 50)?;
+    let seed = args.u64_opt("seed", 1)?;
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+    let src = policy_source(args);
+    let sched = build_send_scheduler(algo, &src, seed)?;
+    let agent = AgentServer::new(cluster, sched);
+    println!("lachesis agent ({algo}) listening on {addr} — ctrl-c to stop");
+    agent.serve(addr, |bound| println!("bound {bound}"))?;
+    Ok(())
+}
+
+/// Like [`exp::build_scheduler`] but with a `Send` bound (the service
+/// moves its scheduler into the accept thread).
+fn build_send_scheduler(
+    name: &str,
+    src: &PolicySource,
+    seed: u64,
+) -> Result<Box<dyn lachesis::sched::Scheduler + Send>> {
+    use lachesis::policy::features::FeatureMode;
+    use lachesis::sched::{
+        CpopScheduler, DecimaScheduler, FifoScheduler, HeftScheduler, HighRankUpScheduler,
+        HrrnScheduler, LachesisScheduler, RandomScheduler, SjfScheduler, TdcaScheduler,
+    };
+    Ok(match name {
+        "FIFO-DEFT" => Box::new(FifoScheduler::new()),
+        "SJF-DEFT" => Box::new(SjfScheduler::new()),
+        "HRRN-DEFT" => Box::new(HrrnScheduler::new()),
+        "HighRankUp-DEFT" => Box::new(HighRankUpScheduler::new()),
+        "HEFT" => Box::new(HeftScheduler::new()),
+        "CPOP" => Box::new(CpopScheduler::new()),
+        "TDCA" => Box::new(TdcaScheduler::new()),
+        "Random-DEFT" => Box::new(RandomScheduler::new(seed)),
+        // The service thread needs Send; PJRT clients are Rc-based, so the
+        // served policy always uses the (numerically identical) rust
+        // forward pass.
+        "Decima-DEFT" => Box::new(DecimaScheduler::greedy_decima(Box::new(serve_policy(
+            src,
+            FeatureMode::HomogeneousBlind,
+        )))),
+        "Lachesis" => Box::new(LachesisScheduler::greedy(Box::new(serve_policy(
+            src,
+            FeatureMode::Full,
+        )))),
+        other => bail!("unknown scheduler '{other}'"),
+    })
+}
+
+fn serve_policy(
+    src: &PolicySource,
+    mode: lachesis::policy::features::FeatureMode,
+) -> lachesis::policy::RustPolicy {
+    let init = format!("{}/params_init.bin", src.artifact_dir);
+    let explicit = match mode {
+        lachesis::policy::features::FeatureMode::Full => src.lachesis_params.as_deref(),
+        _ => src.decima_params.as_deref(),
+    };
+    let candidates: Vec<&str> = match explicit {
+        Some(p) => vec![p],
+        None => vec!["checkpoints/lachesis.bin", &init],
+    };
+    let params = candidates
+        .iter()
+        .find_map(|p| {
+            lachesis::policy::params::load_expected(p, lachesis::policy::net::param_len()).ok()
+        })
+        .unwrap_or_else(|| lachesis::policy::RustPolicy::random(12345).params);
+    lachesis::policy::RustPolicy::new(params)
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = args.flag("quick");
+    let seeds = args.usize_opt("seeds", if quick { 2 } else { 10 })?;
+    let src = policy_source(args);
+    match which {
+        "fig4" => {
+            let mut cfg = TrainConfig::default();
+            cfg.episodes = args.usize_opt("episodes", if quick { 30 } else { cfg.episodes })?;
+            let out = exp::fig4(&cfg, &src.artifact_dir, "checkpoints/lachesis.bin")?;
+            println!("{out}");
+        }
+        "fig5" => println!("{}", exp::fig5(&src, quick, seeds)?),
+        "fig6" => println!("{}", exp::fig6(&src, quick, seeds)?),
+        "fig7" => println!("{}", exp::fig7(&src, quick, seeds)?),
+        "all" => {
+            println!("{}", exp::fig5(&src, quick, seeds)?);
+            println!("{}", exp::fig6(&src, quick, seeds)?);
+            println!("{}", exp::fig7(&src, quick, seeds)?);
+        }
+        other => bail!("unknown figure '{other}' (fig4|fig5|fig6|fig7|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    println!("rust model contract:");
+    println!("  param_len = {}", lachesis::policy::net::param_len());
+    println!(
+        "  F={} E={} K={} heads q=({},{},{}) v=({},{})",
+        lachesis::policy::F,
+        lachesis::policy::E,
+        lachesis::policy::K,
+        lachesis::policy::Q1,
+        lachesis::policy::Q2,
+        lachesis::policy::Q3,
+        lachesis::policy::V1,
+        lachesis::policy::V2
+    );
+    match lachesis::runtime::Runtime::new(dir) {
+        Ok(rt) => {
+            println!("artifacts at {dir}: OK (platform {})", rt.platform());
+            for (name, n, j) in &rt.meta.variants {
+                println!("  policy variant {name}: N={n} J={j}");
+            }
+            if let Some((name, b, n, j)) = &rt.meta.train {
+                println!("  train_step {name}: B={b} N={n} J={j}");
+            }
+        }
+        Err(e) => println!("artifacts at {dir}: unavailable ({e})"),
+    }
+    Ok(())
+}

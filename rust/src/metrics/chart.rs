@@ -1,0 +1,115 @@
+//! ASCII line charts for terminal-friendly experiment reports (the Fig 4
+//! learning curve and the decision-time CDFs render through this).
+
+/// Render one or more named series as an ASCII chart. Each series is a
+/// list of (x, y) points; NaN y-values are skipped (sparse series like
+/// the every-5-episodes eval makespan).
+pub fn line_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let width = width.clamp(16, 200);
+    let height = height.clamp(4, 60);
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    const MARKS: &[u8] = b"*o+x#%@&";
+    for (si, (_, s)) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in s {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{y1:>10.1}")
+        } else if r == height - 1 {
+            format!("{y0:>10.1}")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&format!(
+            "{label} |{}|\n",
+            String::from_utf8_lossy(row)
+        ));
+    }
+    out.push_str(&format!(
+        "{:>10}  {x0:<10.1}{}{x1:>10.1}\n",
+        "",
+        " ".repeat(width.saturating_sub(20))
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {name}", MARKS[i % MARKS.len()] as char))
+        .collect();
+    out.push_str(&format!("{:>12}{}\n", "", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_single_series() {
+        let s: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i as f64).sqrt())).collect();
+        let chart = line_chart("sqrt", &[("y", s)], 60, 12);
+        assert!(chart.contains("sqrt"));
+        assert!(chart.contains('*'));
+        assert!(chart.lines().count() >= 12);
+    }
+
+    #[test]
+    fn skips_nan_points() {
+        let s = vec![(0.0, 1.0), (1.0, f64::NAN), (2.0, 3.0)];
+        let chart = line_chart("nan", &[("y", s)], 40, 8);
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn multiple_series_use_distinct_marks() {
+        let a: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, i as f64)).collect();
+        let b: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 20.0 - i as f64)).collect();
+        let chart = line_chart("xy", &[("up", a), ("down", b)], 50, 10);
+        assert!(chart.contains('*') && chart.contains('o'));
+        assert!(chart.contains("* up") && chart.contains("o down"));
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        assert!(line_chart("e", &[("y", vec![])], 40, 8).contains("no data"));
+        let flat = vec![(0.0, 5.0), (1.0, 5.0)];
+        let chart = line_chart("flat", &[("y", flat)], 40, 8);
+        assert!(chart.contains('*'));
+    }
+}

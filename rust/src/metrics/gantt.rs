@@ -1,0 +1,120 @@
+//! ASCII Gantt-chart rendering of a completed schedule — invaluable when
+//! debugging duplication decisions and executor contention
+//! (`lachesis schedule --gantt`).
+
+use crate::sim::SimState;
+
+/// Render the executor timelines as an ASCII Gantt chart. `width` is the
+/// number of character columns for the time axis. Tasks are labeled
+//  `j<job>.<node>`; duplicated copies get a trailing `'`.
+pub fn render(state: &SimState, width: usize) -> String {
+    let width = width.clamp(20, 400);
+    let horizon = state.horizon.max(1e-9);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "schedule horizon {:.2}s — {} executors, {} tasks, {} duplicates\n",
+        state.horizon,
+        state.cluster.len(),
+        state.n_assigned,
+        state.n_duplicates
+    ));
+    for (e, log) in state.exec_log.iter().enumerate() {
+        let mut row = vec![b' '; width];
+        let mut labels: Vec<(usize, String)> = Vec::new();
+        let mut sorted = log.clone();
+        sorted.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+        for (task, pl) in &sorted {
+            let c0 = ((pl.start / horizon) * width as f64).floor() as usize;
+            let c1 = (((pl.finish / horizon) * width as f64).ceil() as usize).min(width);
+            for c in c0..c1.max(c0 + 1).min(width) {
+                row[c] = if pl.duplicate { b'+' } else { b'#' };
+            }
+            let tag = format!(
+                "j{}.{}{}",
+                task.job,
+                task.node,
+                if pl.duplicate { "'" } else { "" }
+            );
+            labels.push((c0, tag));
+        }
+        let speed = state.cluster.speed(e);
+        out.push_str(&format!(
+            "e{e:<3} {speed:.1}GHz |{}|",
+            String::from_utf8(row).unwrap()
+        ));
+        // Append up to 4 labels to keep lines readable.
+        if !labels.is_empty() {
+            let shown: Vec<String> = labels.iter().take(4).map(|(_, t)| t.clone()).collect();
+            out.push_str(&format!(
+                "  {}{}",
+                shown.join(" "),
+                if labels.len() > 4 { " …" } else { "" }
+            ));
+        }
+        out.push('\n');
+    }
+    // Time axis.
+    out.push_str(&format!(
+        "{:>10} 0{}{:.1}s\n",
+        "",
+        " ".repeat(width.saturating_sub(6)),
+        state.horizon
+    ));
+    out.push_str("   ('#' primary copy, '+' duplicated copy)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dag::TaskRef;
+    use crate::sim::{Allocation, SimState};
+    use crate::workload::Workload;
+
+    fn simple_state() -> SimState {
+        let mut cluster = Cluster::homogeneous(2, 1.0, 10.0);
+        cluster.executors[1].speed = 2.0;
+        let job = crate::dag::Job::new(0, "chain", 0.0, vec![4.0, 6.0], &[(0, 1, 20.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        st.apply(
+            TaskRef::new(0, 1),
+            Allocation::Duplicate { exec: 1, parent: 0 },
+        );
+        st
+    }
+
+    #[test]
+    fn renders_all_executors_and_markers() {
+        let st = simple_state();
+        let g = render(&st, 60);
+        assert!(g.contains("e0"));
+        assert!(g.contains("e1"));
+        assert!(g.contains('#'), "primary copies rendered");
+        assert!(g.contains('+'), "duplicate copies rendered");
+        assert!(g.contains("j0.0"));
+        assert!(g.contains("j0.0'"), "duplicate label marked");
+        assert!(g.contains("1 duplicates"));
+    }
+
+    #[test]
+    fn width_is_clamped() {
+        let st = simple_state();
+        let narrow = render(&st, 1);
+        let wide = render(&st, 100_000);
+        for line in narrow.lines().chain(wide.lines()) {
+            assert!(line.len() < 500);
+        }
+    }
+
+    #[test]
+    fn empty_schedule_renders() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let job = crate::dag::Job::new(0, "j", 10.0, vec![1.0], &[]);
+        let st = SimState::new(cluster, Workload::new(vec![job]));
+        let g = render(&st, 40);
+        assert!(g.contains("0 tasks"));
+    }
+}

@@ -1,0 +1,276 @@
+//! Evaluation metrics (paper §5.2): makespan, speedup (Eq 13), schedule
+//! length ratio (Eq 14), decision-time distribution, plus reporting
+//! helpers that print the markdown/CSV tables the experiment harness
+//! emits for each figure.
+
+pub mod chart;
+pub mod gantt;
+
+use crate::dag::graph::critical_path_min;
+use crate::sim::SimState;
+use crate::util::stats::{mean, Recorder};
+
+/// Metrics of one completed schedule.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    pub algo: String,
+    pub n_jobs: usize,
+    pub n_tasks: usize,
+    /// Completion time of the whole workload (max primary-copy AFT).
+    pub makespan: f64,
+    /// Eq 13: sequential time on the fastest executor / makespan.
+    pub speedup: f64,
+    /// Eq 14 averaged over jobs: (completion − arrival) / critical-path
+    /// lower bound.
+    pub avg_slr: f64,
+    /// Mean job completion time (completion − arrival).
+    pub avg_jct: f64,
+    /// Number of duplicated task copies DEFT created.
+    pub n_duplicates: usize,
+    /// Busy time / (executors × makespan).
+    pub utilization: f64,
+    /// Per-decision scheduler latency in milliseconds.
+    pub decision_ms: Recorder,
+}
+
+impl ScheduleReport {
+    pub fn from_state(state: &SimState, algo: &str, decision_ms: Recorder) -> ScheduleReport {
+        let v_max = state.cluster.v_max();
+        let total_work: f64 = state.jobs.iter().map(|j| j.total_work()).sum();
+        let mut makespan = 0.0f64;
+        let mut slrs = Vec::with_capacity(state.jobs.len());
+        let mut jcts = Vec::with_capacity(state.jobs.len());
+        for (ji, job) in state.jobs.iter().enumerate() {
+            let completion = state.job_completion(ji);
+            if completion > makespan {
+                makespan = completion;
+            }
+            let (_, cp) = critical_path_min(job, v_max);
+            let jct = completion - job.arrival;
+            jcts.push(jct);
+            slrs.push(jct / cp.max(1e-12));
+        }
+        let busy: f64 = state
+            .exec_log
+            .iter()
+            .flat_map(|log| log.iter().map(|(_, p)| p.finish - p.start))
+            .sum();
+        let utilization = if makespan > 0.0 {
+            busy / (state.cluster.len() as f64 * makespan)
+        } else {
+            0.0
+        };
+        ScheduleReport {
+            algo: algo.to_string(),
+            n_jobs: state.jobs.len(),
+            n_tasks: state.n_tasks_total(),
+            makespan,
+            speedup: (total_work / v_max) / makespan.max(1e-12),
+            avg_slr: mean(&slrs),
+            avg_jct: mean(&jcts),
+            n_duplicates: state.n_duplicates,
+            utilization,
+            decision_ms,
+        }
+    }
+}
+
+/// Aggregation of reports across seeds for one (algorithm, x) point of a
+/// figure sweep.
+#[derive(Debug, Clone)]
+pub struct PointSummary {
+    pub algo: String,
+    /// x-axis value (number of jobs for Figs 5–7).
+    pub x: usize,
+    pub makespan: f64,
+    pub speedup: f64,
+    pub slr: f64,
+    pub jct: f64,
+    pub decision_p98_ms: f64,
+    pub n_seeds: usize,
+}
+
+/// Collects reports over a sweep and renders the paper-style series.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteReport {
+    reports: Vec<(usize, ScheduleReport)>,
+}
+
+impl SuiteReport {
+    pub fn new() -> SuiteReport {
+        SuiteReport::default()
+    }
+
+    pub fn push(&mut self, x: usize, report: ScheduleReport) {
+        self.reports.push((x, report));
+    }
+
+    pub fn merge(&mut self, other: SuiteReport) {
+        self.reports.extend(other.reports);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reports.is_empty()
+    }
+
+    /// Distinct algorithm names in insertion order.
+    pub fn algos(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for (_, r) in &self.reports {
+            if !out.contains(&r.algo) {
+                out.push(r.algo.clone());
+            }
+        }
+        out
+    }
+
+    /// Distinct x values sorted ascending.
+    pub fn xs(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.reports.iter().map(|(x, _)| *x).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Mean metrics for one (algo, x) cell across seeds.
+    pub fn summarize(&self, algo: &str, x: usize) -> Option<PointSummary> {
+        let cell: Vec<&ScheduleReport> = self
+            .reports
+            .iter()
+            .filter(|(rx, r)| *rx == x && r.algo == algo)
+            .map(|(_, r)| r)
+            .collect();
+        if cell.is_empty() {
+            return None;
+        }
+        let mut dec = Recorder::new();
+        for r in &cell {
+            dec.extend_from(&r.decision_ms);
+        }
+        Some(PointSummary {
+            algo: algo.to_string(),
+            x,
+            makespan: mean(&cell.iter().map(|r| r.makespan).collect::<Vec<_>>()),
+            speedup: mean(&cell.iter().map(|r| r.speedup).collect::<Vec<_>>()),
+            slr: mean(&cell.iter().map(|r| r.avg_slr).collect::<Vec<_>>()),
+            jct: mean(&cell.iter().map(|r| r.avg_jct).collect::<Vec<_>>()),
+            decision_p98_ms: dec.percentile(98.0),
+            n_seeds: cell.len(),
+        })
+    }
+
+    /// Merge every decision-time sample of one algorithm (for CDF panels).
+    pub fn decision_recorder(&self, algo: &str) -> Recorder {
+        let mut rec = Recorder::new();
+        for (_, r) in &self.reports {
+            if r.algo == algo {
+                rec.extend_from(&r.decision_ms);
+            }
+        }
+        rec
+    }
+
+    /// Render one metric as a markdown table: rows = x, columns = algos.
+    /// `metric` ∈ {"makespan", "speedup", "slr", "p98"}.
+    pub fn table(&self, metric: &str, title: &str) -> String {
+        let algos = self.algos();
+        let xs = self.xs();
+        let mut out = String::new();
+        out.push_str(&format!("### {title}\n\n"));
+        out.push_str("| jobs |");
+        for a in &algos {
+            out.push_str(&format!(" {a} |"));
+        }
+        out.push('\n');
+        out.push_str("|---|");
+        for _ in &algos {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for &x in &xs {
+            out.push_str(&format!("| {x} |"));
+            for a in &algos {
+                match self.summarize(a, x) {
+                    Some(s) => {
+                        let v = match metric {
+                            "makespan" => s.makespan,
+                            "speedup" => s.speedup,
+                            "slr" => s.slr,
+                            "jct" => s.jct,
+                            "p98" => s.decision_p98_ms,
+                            other => panic!("unknown metric '{other}'"),
+                        };
+                        out.push_str(&format!(" {v:.3} |"));
+                    }
+                    None => out.push_str(" - |"),
+                }
+            }
+            out.push('\n');
+        }
+        out.push('\n');
+        out
+    }
+
+    /// CSV dump of all cells (one row per algo × x), for plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("algo,jobs,n_seeds,makespan,speedup,slr,decision_p98_ms\n");
+        for a in self.algos() {
+            for x in self.xs() {
+                if let Some(s) = self.summarize(&a, x) {
+                    out.push_str(&format!(
+                        "{},{},{},{:.6},{:.6},{:.6},{:.6}\n",
+                        s.algo, s.x, s.n_seeds, s.makespan, s.speedup, s.slr, s.decision_p98_ms
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::WorkloadConfig;
+    use crate::sched::{FifoScheduler, Scheduler};
+    use crate::sim::Simulator;
+    use crate::workload::WorkloadGenerator;
+
+    fn quick_report(seed: u64) -> ScheduleReport {
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), seed).generate();
+        let mut sim = Simulator::new(cluster, w);
+        let mut s = FifoScheduler::new();
+        let _ = s.name();
+        sim.run(&mut s).unwrap()
+    }
+
+    #[test]
+    fn report_metrics_sane() {
+        let r = quick_report(5);
+        assert!(r.makespan > 0.0);
+        assert!(r.speedup > 0.0);
+        // SLR is lower-bounded by 1 for every job.
+        assert!(r.avg_slr >= 1.0 - 1e-9, "slr={}", r.avg_slr);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert!(!r.decision_ms.is_empty());
+    }
+
+    #[test]
+    fn suite_aggregates_and_renders() {
+        let mut suite = SuiteReport::new();
+        for seed in 0..3 {
+            suite.push(3, quick_report(seed));
+        }
+        let s = suite.summarize("FIFO-DEFT", 3).unwrap();
+        assert_eq!(s.n_seeds, 3);
+        assert!(s.makespan > 0.0);
+        let table = suite.table("makespan", "test");
+        assert!(table.contains("FIFO-DEFT"));
+        assert!(table.contains("| 3 |"));
+        let csv = suite.to_csv();
+        assert!(csv.lines().count() >= 2);
+    }
+}

@@ -1,0 +1,294 @@
+//! Fixed-shape state encoding for the AOT-compiled network.
+//!
+//! The AOT artifacts are compiled for static shapes, so the dynamic
+//! scheduling state (arbitrary numbers of jobs and tasks) is packed into
+//! one of two variants — N=64/J=8 for small states, N=256/J=32 for large —
+//! with explicit node/job masks. Slots map back to tasks through
+//! [`EncodedState::slot_task`].
+//!
+//! Packing policy: unassigned tasks of arrived jobs, jobs in arrival
+//! order. If the state exceeds the large variant (never at paper scales —
+//! see DESIGN.md), the lowest-`rank_up` tasks are dropped from the
+//! encoding; they remain schedulable later once the frontier drains.
+
+use super::features::{node_features, FeatureMode};
+use super::F;
+use crate::dag::TaskRef;
+use crate::sim::SimState;
+
+/// A compiled shape variant (must match `python/compile/shapes.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeVariant {
+    /// Max nodes N.
+    pub n: usize,
+    /// Max jobs J.
+    pub j: usize,
+    /// Artifact name stem, e.g. `policy_n64`.
+    pub name: &'static str,
+}
+
+/// The two compiled variants, ascending capacity.
+pub const VARIANTS: [ShapeVariant; 2] = [
+    ShapeVariant {
+        n: 64,
+        j: 8,
+        name: "policy_n64",
+    },
+    ShapeVariant {
+        n: 256,
+        j: 32,
+        name: "policy_n256",
+    },
+];
+
+/// Pick the smallest variant that fits `n_tasks` tasks over `n_jobs` jobs;
+/// falls back to the largest.
+pub fn pick_variant(n_tasks: usize, n_jobs: usize) -> ShapeVariant {
+    for v in VARIANTS {
+        if n_tasks <= v.n && n_jobs <= v.j {
+            return v;
+        }
+    }
+    VARIANTS[VARIANTS.len() - 1]
+}
+
+/// The dense tensors the network consumes (row-major, f32 — exactly what
+/// both the rust forward and the PJRT artifact take).
+#[derive(Debug, Clone)]
+pub struct EncodedState {
+    pub variant: ShapeVariant,
+    /// Node features [N, F].
+    pub x: Vec<f32>,
+    /// Adjacency [N, N]: `adj[i*N+j] = 1` iff slot j is a *child* of slot
+    /// i (Eq 5 aggregates children embeddings into the parent).
+    pub adj: Vec<f32>,
+    /// Job membership [J, N]: `jobmat[j*N+i] = 1` iff slot i belongs to
+    /// job-slot j.
+    pub jobmat: Vec<f32>,
+    /// 1.0 for occupied node slots.
+    pub node_mask: Vec<f32>,
+    /// 1.0 for slots whose task is currently executable (`A_t`).
+    pub exec_mask: Vec<f32>,
+    /// Slot → task mapping (len = used slots).
+    slots: Vec<TaskRef>,
+}
+
+impl EncodedState {
+    /// The task behind a slot index.
+    pub fn slot_task(&self, slot: usize) -> Option<TaskRef> {
+        self.slots.get(slot).copied()
+    }
+
+    /// The slot of a task, if encoded.
+    pub fn task_slot(&self, t: TaskRef) -> Option<usize> {
+        self.slots.iter().position(|&s| s == t)
+    }
+
+    pub fn n_used(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of executable slots.
+    pub fn n_executable(&self) -> usize {
+        self.exec_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// Encode the current scheduling state.
+pub fn encode(state: &SimState, mode: FeatureMode) -> EncodedState {
+    // Gather candidate tasks: unassigned tasks of arrived jobs, jobs in
+    // arrival order (ids are arrival-ordered by Workload::new).
+    let mut jobs: Vec<usize> = (0..state.jobs.len())
+        .filter(|&j| state.arrived[j] && state.job_left_tasks(j) > 0)
+        .collect();
+    jobs.sort_unstable(); // arrival order == id order
+
+    let mut tasks: Vec<TaskRef> = Vec::new();
+    for &j in &jobs {
+        for node in 0..state.jobs[j].n_tasks() {
+            if !state.assigned[j][node] {
+                tasks.push(TaskRef::new(j, node));
+            }
+        }
+    }
+    let variant = pick_variant(tasks.len(), jobs.len());
+
+    // Truncate if needed: drop lowest-rank_up tasks first, then re-gather
+    // per-job. Executable tasks are always kept in preference.
+    if tasks.len() > variant.n || jobs.len() > variant.j {
+        if jobs.len() > variant.j {
+            jobs.truncate(variant.j);
+        }
+        let mut kept: Vec<TaskRef> = tasks
+            .into_iter()
+            .filter(|t| jobs.contains(&t.job))
+            .collect();
+        kept.sort_by(|a, b| {
+            let ea = state.is_executable(*a);
+            let eb = state.is_executable(*b);
+            eb.cmp(&ea).then(
+                state.rank_up[b.job][b.node]
+                    .partial_cmp(&state.rank_up[a.job][a.node])
+                    .unwrap(),
+            )
+        });
+        kept.truncate(variant.n);
+        kept.sort_unstable();
+        tasks = kept;
+    }
+
+    let n = variant.n;
+    let jcap = variant.j;
+    let mut enc = EncodedState {
+        variant,
+        x: vec![0.0; n * F],
+        adj: vec![0.0; n * n],
+        jobmat: vec![0.0; jcap * n],
+        node_mask: vec![0.0; n],
+        exec_mask: vec![0.0; n],
+        slots: tasks,
+    };
+
+    // Job slot assignment in arrival order.
+    let mut job_slot: std::collections::BTreeMap<usize, usize> = Default::default();
+    for t in &enc.slots {
+        let next = job_slot.len();
+        job_slot.entry(t.job).or_insert(next);
+    }
+
+    for (i, &t) in enc.slots.iter().enumerate() {
+        node_features(state, t, mode, &mut enc.x[i * F..(i + 1) * F]);
+        enc.node_mask[i] = 1.0;
+        if state.is_executable(t) {
+            enc.exec_mask[i] = 1.0;
+        }
+        let js = job_slot[&t.job];
+        enc.jobmat[js * n + i] = 1.0;
+    }
+    // Adjacency between encoded slots (edges to assigned tasks vanish —
+    // their influence is already summarized in the features).
+    for (i, &t) in enc.slots.iter().enumerate() {
+        for e in &state.jobs[t.job].children[t.node] {
+            let c = TaskRef::new(t.job, e.other);
+            // Children are unassigned if t is unassigned, but may have been
+            // truncated out.
+            if let Some(ci) = enc.slots.binary_search(&c).ok() {
+                enc.adj[i * n + ci] = 1.0;
+            }
+        }
+    }
+    enc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::WorkloadConfig;
+    use crate::sim::{Allocation, SimState};
+    use crate::workload::WorkloadGenerator;
+
+    fn state(n_jobs: usize, seed: u64) -> SimState {
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
+        let mut st = SimState::new(cluster, w);
+        for j in 0..n_jobs {
+            st.mark_arrived(j);
+        }
+        st
+    }
+
+    #[test]
+    fn encodes_all_tasks_small() {
+        let st = state(3, 1);
+        let enc = encode(&st, FeatureMode::Full);
+        assert_eq!(enc.variant.n, 64);
+        assert_eq!(enc.n_used(), st.n_tasks_total());
+        assert_eq!(enc.n_executable(), st.executable().len());
+        // Masks consistent.
+        let used = enc.node_mask.iter().filter(|&&m| m > 0.0).count();
+        assert_eq!(used, enc.n_used());
+    }
+
+    #[test]
+    fn picks_large_variant_for_many_jobs() {
+        let st = state(15, 2);
+        let enc = encode(&st, FeatureMode::Full);
+        assert_eq!(enc.variant.n, 256);
+    }
+
+    #[test]
+    fn slot_mapping_roundtrips() {
+        let st = state(2, 3);
+        let enc = encode(&st, FeatureMode::Full);
+        for slot in 0..enc.n_used() {
+            let t = enc.slot_task(slot).unwrap();
+            assert_eq!(enc.task_slot(t), Some(slot));
+        }
+        assert!(enc.slot_task(enc.n_used()).is_none());
+    }
+
+    #[test]
+    fn adjacency_matches_dag() {
+        let st = state(1, 4);
+        let enc = encode(&st, FeatureMode::Full);
+        let n = enc.variant.n;
+        let mut edge_count = 0;
+        for i in 0..enc.n_used() {
+            for j in 0..enc.n_used() {
+                if enc.adj[i * n + j] > 0.0 {
+                    edge_count += 1;
+                    let ti = enc.slot_task(i).unwrap();
+                    let tj = enc.slot_task(j).unwrap();
+                    assert_eq!(ti.job, tj.job);
+                    assert!(st.jobs[ti.job].edge_data(ti.node, tj.node) > 0.0);
+                }
+            }
+        }
+        assert_eq!(edge_count, st.jobs[0].n_edges());
+    }
+
+    #[test]
+    fn assigned_tasks_leave_encoding() {
+        let mut st = state(1, 5);
+        let before = encode(&st, FeatureMode::Full).n_used();
+        let t = st.executable()[0];
+        st.apply(t, Allocation::Direct { exec: 0 });
+        let after = encode(&st, FeatureMode::Full).n_used();
+        assert_eq!(after, before - 1);
+    }
+
+    #[test]
+    fn jobmat_partitions_nodes() {
+        let st = state(3, 6);
+        let enc = encode(&st, FeatureMode::Full);
+        let n = enc.variant.n;
+        for i in 0..enc.n_used() {
+            let memberships: usize = (0..enc.variant.j)
+                .filter(|&j| enc.jobmat[j * n + i] > 0.0)
+                .count();
+            assert_eq!(memberships, 1, "slot {i} in {memberships} jobs");
+        }
+    }
+
+    #[test]
+    fn truncation_keeps_executable_tasks() {
+        // Build a state larger than the big variant by using many jobs.
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(40), 7).generate();
+        let mut st = SimState::new(cluster, w);
+        for j in 0..40 {
+            st.mark_arrived(j);
+        }
+        let enc = encode(&st, FeatureMode::Full);
+        assert_eq!(enc.variant.n, 256);
+        assert!(enc.n_used() <= 256);
+        // Every encoded executable slot must be genuinely executable.
+        for i in 0..enc.n_used() {
+            let t = enc.slot_task(i).unwrap();
+            assert_eq!(enc.exec_mask[i] > 0.0, st.is_executable(t));
+        }
+        // At least one executable task survives truncation.
+        assert!(enc.n_executable() > 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Node feature extraction (paper §4.1): per-task features combining task,
+//! DAG-position and job-level information, all computed in rust on the
+//! request path (python only ever sees the resulting tensors at training
+//! time, through the AOT train_step).
+//!
+//! All features are squashed to [0, 1) with `x / (x + c)` saturation so the
+//! network sees bounded inputs regardless of workload scale; the constants
+//! are part of the model contract (changing them invalidates trained
+//! parameters).
+
+use crate::dag::TaskRef;
+use crate::sim::SimState;
+
+/// Number of features per node. Must match `python/compile/shapes.py::F`.
+pub const NODE_FEATURES: usize = 12;
+
+/// Saturating normalization to [0, 1).
+#[inline]
+pub fn squash(x: f64, c: f64) -> f32 {
+    (x / (x + c)) as f32
+}
+
+/// Which executor-awareness the features carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureMode {
+    /// Lachesis: heterogeneity- and communication-aware features.
+    Full,
+    /// Decima-DEFT: Decima models a homogeneous cluster and ignores data
+    /// transmission (paper §2) — speed features use a unit executor and
+    /// communication features are zeroed.
+    HomogeneousBlind,
+}
+
+/// Time-scale constants for squashing (seconds).
+const T_EXEC: f64 = 60.0;
+const T_RANK: f64 = 300.0;
+const T_DATA: f64 = 30.0;
+const T_WAIT: f64 = 120.0;
+const N_TASKS: f64 = 10.0;
+
+/// Compute the feature vector of one task. `out` must have length
+/// [`NODE_FEATURES`]; the function overwrites it (allocation-free hot
+/// path).
+pub fn node_features(state: &SimState, t: TaskRef, mode: FeatureMode, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), NODE_FEATURES);
+    let job = &state.jobs[t.job];
+    let (v_avg, c_avg) = match mode {
+        FeatureMode::Full => (state.cluster.v_avg(), state.cluster.c_avg()),
+        FeatureMode::HomogeneousBlind => (1.0, f64::INFINITY),
+    };
+
+    // 0: average execution time of the task.
+    out[0] = squash(job.tasks[t.node].compute / v_avg, T_EXEC);
+    // 1: rank_up — remaining critical path below this node (Eq 6).
+    out[1] = squash(state.rank_up[t.job][t.node], T_RANK);
+    // 2: rank_down — longest path from the entry (Eq 7).
+    out[2] = squash(state.rank_down[t.job][t.node], T_RANK);
+    // 3: average incoming data time.
+    let in_data: f64 = job.parents[t.node].iter().map(|e| e.data).sum();
+    out[3] = if c_avg.is_finite() {
+        squash(in_data / c_avg, T_DATA)
+    } else {
+        0.0
+    };
+    // 4: average outgoing data time.
+    let out_data: f64 = job.children[t.node].iter().map(|e| e.data).sum();
+    out[4] = if c_avg.is_finite() {
+        squash(out_data / c_avg, T_DATA)
+    } else {
+        0.0
+    };
+    // 5: number of parents (DAG in-degree).
+    out[5] = squash(job.parents[t.node].len() as f64, 4.0);
+    // 6: number of children (DAG out-degree).
+    out[6] = squash(job.children[t.node].len() as f64, 4.0);
+    // 7: job's remaining task count.
+    out[7] = squash(state.job_left_tasks(t.job) as f64, N_TASKS);
+    // 8: job's remaining work (average execution time of left tasks ×
+    //    count ≈ total, paper's "sum of average execution time").
+    out[8] = squash(state.job_left_work(t.job) / v_avg, T_RANK);
+    // 9: executable right now?
+    out[9] = if state.is_executable(t) { 1.0 } else { 0.0 };
+    // 10: fraction of parents whose earliest copy has finished.
+    let n_par = job.parents[t.node].len();
+    if n_par == 0 {
+        out[10] = 1.0;
+    } else {
+        let fin = job.parents[t.node]
+            .iter()
+            .filter(|e| state.is_finished(TaskRef::new(t.job, e.other)))
+            .count();
+        out[10] = fin as f32 / n_par as f32;
+    }
+    // 11: job wait time since arrival.
+    out[11] = squash((state.wall - job.arrival).max(0.0), T_WAIT);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dag::Job;
+    use crate::workload::Workload;
+
+    fn state() -> SimState {
+        let cluster = Cluster::homogeneous(2, 2.0, 100.0);
+        let job = Job::new(
+            0,
+            "diamond",
+            0.0,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[(0, 1, 10.0), (0, 2, 20.0), (1, 3, 30.0), (2, 3, 40.0)],
+        );
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st
+    }
+
+    #[test]
+    fn features_bounded() {
+        let st = state();
+        let mut f = [0.0f32; NODE_FEATURES];
+        for node in 0..4 {
+            node_features(&st, TaskRef::new(0, node), FeatureMode::Full, &mut f);
+            for (i, &x) in f.iter().enumerate() {
+                assert!((0.0..=1.0).contains(&x), "feature {i} = {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn executable_flag_tracks_frontier() {
+        let st = state();
+        let mut f = [0.0f32; NODE_FEATURES];
+        node_features(&st, TaskRef::new(0, 0), FeatureMode::Full, &mut f);
+        assert_eq!(f[9], 1.0);
+        node_features(&st, TaskRef::new(0, 3), FeatureMode::Full, &mut f);
+        assert_eq!(f[9], 0.0);
+    }
+
+    #[test]
+    fn blind_mode_zeroes_comm() {
+        let st = state();
+        let mut f = [0.0f32; NODE_FEATURES];
+        node_features(&st, TaskRef::new(0, 0), FeatureMode::HomogeneousBlind, &mut f);
+        assert_eq!(f[3], 0.0);
+        assert_eq!(f[4], 0.0);
+        let mut ff = [0.0f32; NODE_FEATURES];
+        node_features(&st, TaskRef::new(0, 0), FeatureMode::Full, &mut ff);
+        assert!(ff[4] > 0.0, "full mode sees outgoing data");
+    }
+
+    #[test]
+    fn rank_features_order_nodes() {
+        let st = state();
+        let mut f0 = [0.0f32; NODE_FEATURES];
+        let mut f3 = [0.0f32; NODE_FEATURES];
+        node_features(&st, TaskRef::new(0, 0), FeatureMode::Full, &mut f0);
+        node_features(&st, TaskRef::new(0, 3), FeatureMode::Full, &mut f3);
+        assert!(f0[1] > f3[1], "entry has larger rank_up");
+        assert!(f3[2] > f0[2], "exit has larger rank_down");
+    }
+
+    #[test]
+    fn squash_monotone_and_bounded() {
+        let mut prev = -1.0f32;
+        for i in 0..100 {
+            let v = squash(i as f64, 10.0);
+            assert!(v >= prev);
+            assert!((0.0..1.0).contains(&v));
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! The learned node-selection policy (paper §4.1): feature extraction,
+//! fixed-shape state encoding for the AOT-compiled network, a pure-rust
+//! reference implementation of the MGNet forward pass, and parameter I/O.
+//!
+//! Network architecture (mirrored exactly by `python/compile/model.py` —
+//! the flat parameter layout is defined once in [`net::LAYOUT`] and
+//! asserted equal to the python side's `meta.json` at artifact load):
+//!
+//! ```text
+//! x[N,F] ──W_in──▶ e0[N,E]
+//! repeat K:  e ← g2(tanh(g1(A·e))) + e0          (Eq 5, shared params)
+//! y[J,E] = f(Σ_{n∈job} e_n)                      (per-job summary)
+//! z[E]   = f(Σ_j y_j)                            (global summary)
+//! q_n    = MLP([e_n ; y_job(n) ; z]) → score      (Eq 8 softmax outside)
+//! v      = MLP(z) → scalar value (critic baseline)
+//! ```
+
+pub mod encode;
+pub mod features;
+pub mod net;
+pub mod params;
+
+pub use encode::{EncodedState, ShapeVariant};
+pub use features::{FeatureMode, NODE_FEATURES};
+pub use net::RustPolicy;
+
+use anyhow::Result;
+
+/// Number of raw node features F.
+pub const F: usize = NODE_FEATURES;
+/// Embedding width E.
+pub const E: usize = 16;
+/// Hidden width H of the g/f MLPs.
+pub const H: usize = 32;
+/// Message-passing iterations K (the paper's three-layer MGNet).
+pub const K: usize = 3;
+/// Policy head hidden sizes (paper §5.1: 32/16/8).
+pub const Q1: usize = 32;
+pub const Q2: usize = 16;
+pub const Q3: usize = 8;
+/// Value head hidden sizes.
+pub const V1: usize = 32;
+pub const V2: usize = 16;
+
+/// Anything that can score an encoded state: the pure-rust forward or the
+/// PJRT-loaded AOT artifact ([`crate::runtime::PjrtPolicy`]).
+pub trait PolicyEval: Send {
+    /// Per-slot logits (padding slots get arbitrary values — mask before
+    /// use) and the critic's value estimate.
+    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)>;
+    fn backend_name(&self) -> &'static str;
+}
+
+/// A boxed policy evaluator plus sampling behaviour — what the Lachesis
+/// scheduler owns.
+pub struct PolicyNet {
+    pub eval: Box<dyn PolicyEval>,
+}
+
+impl PolicyNet {
+    pub fn new(eval: Box<dyn PolicyEval>) -> PolicyNet {
+        PolicyNet { eval }
+    }
+
+    /// Greedy argmax over executable slots.
+    pub fn argmax(&mut self, enc: &EncodedState) -> Result<Option<usize>> {
+        let (logits, _) = self.eval.logits_value(enc)?;
+        let mut best: Option<(f32, usize)> = None;
+        for i in 0..enc.variant.n {
+            if enc.exec_mask[i] == 0.0 {
+                continue;
+            }
+            if best.map(|(b, _)| logits[i] > b).unwrap_or(true) {
+                best = Some((logits[i], i));
+            }
+        }
+        Ok(best.map(|(_, i)| i))
+    }
+
+    /// Softmax-sample over executable slots (exploration during training).
+    pub fn sample(
+        &mut self,
+        enc: &EncodedState,
+        rng: &mut crate::util::rng::Rng,
+        temperature: f64,
+    ) -> Result<Option<(usize, f32)>> {
+        let (logits, value) = self.eval.logits_value(enc)?;
+        let mask: Vec<bool> = enc.exec_mask.iter().map(|&m| m > 0.0).collect();
+        if !mask.iter().any(|&m| m) {
+            return Ok(None);
+        }
+        let slot = rng.softmax_sample(&logits[..enc.variant.n], &mask[..enc.variant.n], temperature);
+        let _ = value;
+        Ok(Some((slot, value)))
+    }
+}

@@ -1,0 +1,400 @@
+//! Pure-rust reference implementation of the MGNet + policy/value forward
+//! pass.
+//!
+//! This mirrors `python/compile/model.py` *exactly* (same flat parameter
+//! layout, same ops, same activation functions) and is cross-validated
+//! against the AOT artifact in `rust/tests/integration_runtime.rs`. It
+//! serves three purposes: a test oracle for the JAX model, a no-PJRT
+//! fallback backend, and the decision-latency baseline for §Perf.
+
+use super::encode::EncodedState;
+use super::{PolicyEval, E, F, H, K, Q1, Q2, Q3, V1, V2};
+use anyhow::Result;
+
+/// The flat parameter layout: (name, rows, cols). Biases are 1×cols.
+/// THIS IS THE MODEL CONTRACT — `python/compile/model.py::LAYOUT` must
+/// list identical shapes in identical order.
+pub const LAYOUT: &[(&str, usize, usize)] = &[
+    ("w_in", F, E),
+    ("b_in", 1, E),
+    ("g1", E, H),
+    ("bg1", 1, H),
+    ("g2", H, E),
+    ("bg2", 1, E),
+    ("fj1", E, H),
+    ("bfj1", 1, H),
+    ("fj2", H, E),
+    ("bfj2", 1, E),
+    ("fg1", E, H),
+    ("bfg1", 1, H),
+    ("fg2", H, E),
+    ("bfg2", 1, E),
+    ("q1", 3 * E, Q1),
+    ("bq1", 1, Q1),
+    ("q2", Q1, Q2),
+    ("bq2", 1, Q2),
+    ("q3", Q2, Q3),
+    ("bq3", 1, Q3),
+    ("q4", Q3, 1),
+    ("bq4", 1, 1),
+    ("v1", E, V1),
+    ("bv1", 1, V1),
+    ("v2", V1, V2),
+    ("bv2", 1, V2),
+    ("v3", V2, 1),
+    ("bv3", 1, 1),
+];
+
+/// Total flat parameter count P.
+pub fn param_len() -> usize {
+    LAYOUT.iter().map(|(_, r, c)| r * c).sum()
+}
+
+/// Offset of a named tensor within the flat vector.
+pub fn param_offset(name: &str) -> usize {
+    let mut off = 0;
+    for (n, r, c) in LAYOUT {
+        if *n == name {
+            return off;
+        }
+        off += r * c;
+    }
+    panic!("unknown parameter '{name}'");
+}
+
+/// out[m,n] += a[m,k] · b[k,n] — row-major, allocation-free.
+fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // adjacency/jobmat rows are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            // zip elides bounds checks → autovectorizes.
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Dense layer: out = act(x·w + b) for a batch of m rows.
+fn dense(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    din: usize,
+    dout: usize,
+    tanh: bool,
+) {
+    out[..m * dout].fill(0.0);
+    matmul_into(&x[..m * din], w, &mut out[..m * dout], m, din, dout);
+    for row in out[..m * dout].chunks_exact_mut(dout) {
+        for (o, &bv) in row.iter_mut().zip(b) {
+            let v = *o + bv;
+            *o = if tanh { v.tanh() } else { v };
+        }
+    }
+}
+
+/// A pure-rust policy: flat parameters + scratch buffers.
+pub struct RustPolicy {
+    pub params: Vec<f32>,
+    // Scratch (sized lazily for the variant in use).
+    scratch: Scratch,
+}
+
+#[derive(Default)]
+struct Scratch {
+    n: usize,
+    j: usize,
+    e0: Vec<f32>,
+    e: Vec<f32>,
+    agg: Vec<f32>,
+    h: Vec<f32>,
+    m: Vec<f32>,
+    jobsum: Vec<f32>,
+    jh: Vec<f32>,
+    y: Vec<f32>,
+    gsum: Vec<f32>,
+    gh: Vec<f32>,
+    z: Vec<f32>,
+    cat: Vec<f32>,
+    q_h1: Vec<f32>,
+    q_h2: Vec<f32>,
+    q_h3: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl Scratch {
+    fn ensure(&mut self, n: usize, j: usize) {
+        if self.n == n && self.j == j {
+            return;
+        }
+        self.n = n;
+        self.j = j;
+        self.e0 = vec![0.0; n * E];
+        self.e = vec![0.0; n * E];
+        self.agg = vec![0.0; n * E];
+        self.h = vec![0.0; n * H];
+        self.m = vec![0.0; n * E];
+        self.jobsum = vec![0.0; j * E];
+        self.jh = vec![0.0; j * H];
+        self.y = vec![0.0; j * E];
+        self.gsum = vec![0.0; E];
+        self.gh = vec![0.0; H];
+        self.z = vec![0.0; E];
+        self.cat = vec![0.0; n * 3 * E];
+        self.q_h1 = vec![0.0; n * Q1];
+        self.q_h2 = vec![0.0; n * Q2];
+        self.q_h3 = vec![0.0; n * Q3];
+        self.logits = vec![0.0; n];
+    }
+}
+
+impl RustPolicy {
+    pub fn new(params: Vec<f32>) -> RustPolicy {
+        assert_eq!(
+            params.len(),
+            param_len(),
+            "parameter vector length mismatch: got {}, layout wants {}",
+            params.len(),
+            param_len()
+        );
+        RustPolicy {
+            params,
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Glorot-uniform random initialization — same scheme as the python
+    /// side's `init_params` (not bit-identical, used when artifacts are
+    /// unavailable, e.g. pure-rust tests).
+    pub fn random(seed: u64) -> RustPolicy {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x9017_11E7);
+        let mut params = vec![0.0f32; param_len()];
+        let mut off = 0;
+        for (name, r, c) in LAYOUT {
+            let fan = (*r + *c) as f64;
+            let lim = (6.0 / fan).sqrt();
+            for p in params[off..off + r * c].iter_mut() {
+                *p = if name.starts_with('b') {
+                    0.0
+                } else {
+                    rng.range_f(-lim, lim) as f32
+                };
+            }
+            off += r * c;
+        }
+        RustPolicy::new(params)
+    }
+
+    fn p(&self, name: &str) -> &[f32] {
+        let off = param_offset(name);
+        let (_, r, c) = LAYOUT
+            .iter()
+            .find(|(n, _, _)| *n == name)
+            .expect("known name");
+        &self.params[off..off + r * c]
+    }
+
+    /// Full forward pass. Returns (logits[N], value). Padding slots carry
+    /// meaningless logits — mask before use.
+    pub fn forward(&mut self, enc: &EncodedState) -> (Vec<f32>, f32) {
+        let n = enc.variant.n;
+        let jcap = enc.variant.j;
+        // Slots are packed [0, n_used): all row-wise work can stop there
+        // (padding rows are identically zero by construction).
+        let m = enc.n_used().max(1);
+        // Split scratch borrow from params borrow: copy param slices is
+        // avoided by indexing through raw offsets below.
+        let mut s = std::mem::take(&mut self.scratch);
+        s.ensure(n, jcap);
+
+        // e0 = tanh(x·W_in + b_in), masked.
+        s.e0.fill(0.0);
+        dense(&enc.x, self.p("w_in"), self.p("b_in"), &mut s.e0, m, F, E, true);
+        for i in 0..m {
+            if enc.node_mask[i] == 0.0 {
+                s.e0[i * E..(i + 1) * E].fill(0.0);
+            }
+        }
+        s.e.copy_from_slice(&s.e0);
+
+        // K message-passing iterations with shared g (Eq 5).
+        for _ in 0..K {
+            s.agg[..m * E].fill(0.0);
+            matmul_into(&enc.adj[..m * n], &s.e, &mut s.agg[..m * E], m, n, E);
+            dense(&s.agg, self.p("g1"), self.p("bg1"), &mut s.h, m, E, H, true);
+            dense(&s.h, self.p("g2"), self.p("bg2"), &mut s.m, m, H, E, true);
+            for i in 0..m {
+                let mask = enc.node_mask[i];
+                for d in 0..E {
+                    s.e[i * E + d] = (s.m[i * E + d] + s.e0[i * E + d]) * mask;
+                }
+            }
+        }
+
+        // Per-job summaries: jobsum = jobmat · e, y = f(jobsum).
+        s.jobsum.fill(0.0);
+        matmul_into(&enc.jobmat, &s.e, &mut s.jobsum, jcap, n, E);
+        dense(&s.jobsum, self.p("fj1"), self.p("bfj1"), &mut s.jh, jcap, E, H, true);
+        dense(&s.jh, self.p("fj2"), self.p("bfj2"), &mut s.y, jcap, H, E, true);
+        // Zero-out empty job slots (jobmat row all-zero ⇒ jobsum row zero,
+        // but tanh(bias) could leak — mask explicitly).
+        for j in 0..jcap {
+            let occupied = (0..n).any(|i| enc.jobmat[j * n + i] > 0.0);
+            if !occupied {
+                s.y[j * E..(j + 1) * E].fill(0.0);
+            }
+        }
+
+        // Global summary: z = f(Σ_j y_j).
+        s.gsum.fill(0.0);
+        for j in 0..jcap {
+            for d in 0..E {
+                s.gsum[d] += s.y[j * E + d];
+            }
+        }
+        dense(&s.gsum, self.p("fg1"), self.p("bfg1"), &mut s.gh, 1, E, H, true);
+        dense(&s.gh, self.p("fg2"), self.p("bfg2"), &mut s.z, 1, H, E, true);
+
+        // Per-node score over [e_n ; y_job(n) ; z] (Eq 8's q).
+        // y_job(n) = jobmatᵀ gather.
+        for i in 0..m {
+            let cat = &mut s.cat[i * 3 * E..(i + 1) * 3 * E];
+            cat[..E].copy_from_slice(&s.e[i * E..(i + 1) * E]);
+            cat[E..2 * E].fill(0.0);
+            for j in 0..jcap {
+                if enc.jobmat[j * n + i] > 0.0 {
+                    cat[E..2 * E].copy_from_slice(&s.y[j * E..(j + 1) * E]);
+                    break;
+                }
+            }
+            cat[2 * E..].copy_from_slice(&s.z);
+        }
+        dense(&s.cat, self.p("q1"), self.p("bq1"), &mut s.q_h1, m, 3 * E, Q1, true);
+        dense(&s.q_h1, self.p("q2"), self.p("bq2"), &mut s.q_h2, m, Q1, Q2, true);
+        dense(&s.q_h2, self.p("q3"), self.p("bq3"), &mut s.q_h3, m, Q2, Q3, true);
+        s.logits.fill(0.0);
+        dense(&s.q_h3, self.p("q4"), self.p("bq4"), &mut s.logits, m, Q3, 1, false);
+        let logits = s.logits.clone();
+
+        // Value head over z.
+        let mut vh1 = vec![0.0f32; V1];
+        let mut vh2 = vec![0.0f32; V2];
+        let mut vout = vec![0.0f32; 1];
+        dense(&s.z, self.p("v1"), self.p("bv1"), &mut vh1, 1, E, V1, true);
+        dense(&vh1, self.p("v2"), self.p("bv2"), &mut vh2, 1, V1, V2, true);
+        dense(&vh2, self.p("v3"), self.p("bv3"), &mut vout, 1, V2, 1, false);
+
+        self.scratch = s;
+        (logits, vout[0])
+    }
+}
+
+impl PolicyEval for RustPolicy {
+    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)> {
+        Ok(self.forward(enc))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::WorkloadConfig;
+    use crate::policy::encode::encode;
+    use crate::policy::features::FeatureMode;
+    use crate::sim::SimState;
+    use crate::workload::WorkloadGenerator;
+
+    fn enc(n_jobs: usize, seed: u64) -> EncodedState {
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
+        let mut st = SimState::new(cluster, w);
+        for j in 0..n_jobs {
+            st.mark_arrived(j);
+        }
+        encode(&st, FeatureMode::Full)
+    }
+
+    #[test]
+    fn layout_is_consistent() {
+        assert!(param_len() > 1000);
+        assert_eq!(param_offset("w_in"), 0);
+        assert_eq!(param_offset("b_in"), F * E);
+        // Offsets strictly increase and the last block ends at param_len.
+        let mut off = 0;
+        for (name, r, c) in LAYOUT {
+            assert_eq!(param_offset(name), off);
+            off += r * c;
+        }
+        assert_eq!(off, param_len());
+    }
+
+    #[test]
+    fn forward_produces_finite_outputs() {
+        let mut net = RustPolicy::random(1);
+        let e = enc(3, 1);
+        let (logits, value) = net.forward(&e);
+        assert_eq!(logits.len(), e.variant.n);
+        assert!(value.is_finite());
+        for i in 0..e.n_used() {
+            assert!(logits[i].is_finite());
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let mut net = RustPolicy::random(2);
+        let e = enc(2, 2);
+        let (l1, v1) = net.forward(&e);
+        let (l2, v2) = net.forward(&e);
+        assert_eq!(l1, l2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn different_params_different_logits() {
+        let e = enc(2, 3);
+        let (l1, _) = RustPolicy::random(10).forward(&e);
+        let (l2, _) = RustPolicy::random(11).forward(&e);
+        let used = e.n_used();
+        assert!(
+            l1[..used] != l2[..used],
+            "different params must change logits"
+        );
+    }
+
+    #[test]
+    fn node_order_permutation_equivariance_of_padding() {
+        // Padding slots must not affect used slots: compare a small state
+        // against itself (the padded tail is already zero; this guards the
+        // masking logic by ensuring logits don't depend on scratch resize).
+        let mut net = RustPolicy::random(4);
+        let e_small = enc(1, 4);
+        let (l1, _) = net.forward(&e_small);
+        let e_big = enc(12, 4); // forces the 256-variant, resizing scratch
+        let _ = net.forward(&e_big);
+        let (l2, _) = net.forward(&e_small);
+        assert_eq!(l1, l2, "scratch reuse must not leak state");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn rejects_wrong_param_len() {
+        RustPolicy::new(vec![0.0; 10]);
+    }
+}

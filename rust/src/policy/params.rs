@@ -1,0 +1,113 @@
+//! Flat parameter vector I/O: raw little-endian f32 files.
+//!
+//! Rust treats network weights as an opaque `Vec<f32>` — the layout is
+//! owned jointly by `net::LAYOUT` and `python/compile/model.py`. The AOT
+//! build writes `artifacts/params_init.bin`; training checkpoints go to
+//! `checkpoints/*.bin` with a sidecar JSON of training metadata.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Load a raw f32-LE parameter file.
+pub fn load_f32(path: &str) -> Result<Vec<f32>> {
+    let mut file = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)
+        .with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path}: length {} is not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a raw f32-LE parameter file.
+pub fn save_f32(path: &str, params: &[f32]) -> Result<()> {
+    let mut file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for &p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    file.write_all(&bytes)
+        .with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+/// Save a checkpoint: parameters + JSON sidecar with training metadata.
+pub fn save_checkpoint(
+    dir: &str,
+    tag: &str,
+    params: &[f32],
+    episode: usize,
+    avg_return: f64,
+) -> Result<String> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir}"))?;
+    let bin = format!("{dir}/{tag}.bin");
+    save_f32(&bin, params)?;
+    let meta = Json::from_pairs(vec![
+        ("tag", Json::from(tag)),
+        ("episode", Json::from(episode)),
+        ("avg_return", Json::from(avg_return)),
+        ("param_len", Json::from(params.len())),
+    ]);
+    std::fs::write(format!("{dir}/{tag}.json"), meta.to_pretty())?;
+    Ok(bin)
+}
+
+/// Load parameters validated against the expected length.
+pub fn load_expected(path: &str, expected_len: usize) -> Result<Vec<f32>> {
+    let p = load_f32(path)?;
+    if p.len() != expected_len {
+        bail!(
+            "{path}: has {} parameters, model wants {expected_len} \
+             (stale checkpoint from an older model layout?)",
+            p.len()
+        );
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let path = "/tmp/lachesis_params_test.bin";
+        save_f32(path, &params).unwrap();
+        let back = load_f32(path).unwrap();
+        assert_eq!(params, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_expected_validates() {
+        let path = "/tmp/lachesis_params_test2.bin";
+        save_f32(path, &[1.0, 2.0]).unwrap();
+        assert!(load_expected(path, 2).is_ok());
+        assert!(load_expected(path, 3).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_writes_sidecar() {
+        let dir = "/tmp/lachesis_ckpt_test";
+        let bin = save_checkpoint(dir, "ep10", &[1.0; 8], 10, -42.0).unwrap();
+        assert!(std::path::Path::new(&bin).exists());
+        let meta = std::fs::read_to_string(format!("{dir}/ep10.json")).unwrap();
+        assert!(meta.contains("avg_return"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let path = "/tmp/lachesis_params_bad.bin";
+        std::fs::write(path, [0u8, 1, 2]).unwrap();
+        assert!(load_f32(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,129 @@
+//! Episode post-processing: rewards, discounted returns, advantages.
+//!
+//! The paper penalizes each action by the wall-clock increment
+//! `r_k = -(t_k - t_{k-1})`, whose episode sum is `-t_T` — the makespan.
+//! Because our engine (like any list scheduler) may assign many tasks at
+//! a single event time, we use the equivalent *schedule-horizon*
+//! increment: `r_k = -(horizon_{k+1} - horizon_k)` where `horizon` is the
+//! running max AFT. The episode return is still exactly `-makespan`, but
+//! credit is assigned to the decision that actually extended the
+//! schedule (denser, better-conditioned signal; see DESIGN.md).
+
+use crate::sched::lachesis::Transition;
+
+/// Per-step rewards from the recorded horizons and the final makespan.
+pub fn rewards_from_transitions(transitions: &[Transition], final_makespan: f64) -> Vec<f64> {
+    let n = transitions.len();
+    let mut rewards = Vec::with_capacity(n);
+    for k in 0..n {
+        let next_h = if k + 1 < n {
+            transitions[k + 1].horizon_before
+        } else {
+            final_makespan
+        };
+        rewards.push(-(next_h - transitions[k].horizon_before));
+    }
+    rewards
+}
+
+/// Discounted reward-to-go.
+pub fn returns(rewards: &[f64], gamma: f64) -> Vec<f64> {
+    let mut out = vec![0.0; rewards.len()];
+    let mut acc = 0.0;
+    for k in (0..rewards.len()).rev() {
+        acc = rewards[k] + gamma * acc;
+        out[k] = acc;
+    }
+    out
+}
+
+/// Advantage = return − critic value, normalized to zero mean / unit std
+/// across the batch (stabilizes the policy gradient; standard practice).
+pub fn advantages(returns: &[f64], values: &[f32]) -> Vec<f64> {
+    assert_eq!(returns.len(), values.len());
+    let raw: Vec<f64> = returns
+        .iter()
+        .zip(values)
+        .map(|(r, &v)| r - v as f64)
+        .collect();
+    let n = raw.len().max(1) as f64;
+    let mean = raw.iter().sum::<f64>() / n;
+    let var = raw.iter().map(|a| (a - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-6);
+    raw.iter().map(|a| (a - mean) / std).collect()
+}
+
+/// Normalize returns for the value-regression target (same scale the
+/// critic is trained in; keeps value magnitudes O(1) across workloads).
+pub fn normalize_returns(returns: &[f64], scale: f64) -> Vec<f32> {
+    returns.iter().map(|&r| (r / scale) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::encode::EncodedState;
+    use crate::policy::features::FeatureMode;
+
+    fn fake_transition(horizon: f64) -> Transition {
+        // Build a tiny valid encoding from a 1-task state.
+        let cluster = crate::cluster::Cluster::homogeneous(1, 1.0, 10.0);
+        let job = crate::dag::Job::new(0, "t", 0.0, vec![1.0], &[]);
+        let mut st =
+            crate::sim::SimState::new(cluster, crate::workload::Workload::new(vec![job]));
+        st.mark_arrived(0);
+        let enc: EncodedState = crate::policy::encode::encode(&st, FeatureMode::Full);
+        Transition {
+            enc,
+            action_slot: 0,
+            value: 0.0,
+            horizon_before: horizon,
+            wall: horizon,
+        }
+    }
+
+    #[test]
+    fn rewards_sum_to_negative_makespan() {
+        let ts = vec![
+            fake_transition(0.0),
+            fake_transition(3.0),
+            fake_transition(3.0),
+            fake_transition(7.0),
+        ];
+        let r = rewards_from_transitions(&ts, 10.0);
+        assert_eq!(r, vec![-3.0, 0.0, -4.0, -3.0]);
+        assert!((r.iter().sum::<f64>() + 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn undiscounted_returns_are_suffix_sums() {
+        let r = returns(&[-1.0, -2.0, -3.0], 1.0);
+        assert_eq!(r, vec![-6.0, -5.0, -3.0]);
+    }
+
+    #[test]
+    fn discounting_shrinks_tail() {
+        let r = returns(&[-1.0, -1.0, -1.0], 0.5);
+        assert!((r[0] - (-1.75)).abs() < 1e-12);
+        assert!((r[1] - (-1.5)).abs() < 1e-12);
+        assert!((r[2] - (-1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advantages_are_standardized() {
+        let adv = advantages(&[-10.0, -20.0, -30.0], &[0.0, 0.0, 0.0]);
+        let mean: f64 = adv.iter().sum::<f64>() / 3.0;
+        assert!(mean.abs() < 1e-9);
+        let var: f64 = adv.iter().map(|a| (a - mean).powi(2)).sum::<f64>() / 3.0;
+        assert!((var - 1.0).abs() < 1e-9);
+        // Better (less negative) return ⇒ larger advantage.
+        assert!(adv[0] > adv[1] && adv[1] > adv[2]);
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        assert!(rewards_from_transitions(&[], 5.0).is_empty());
+        assert!(returns(&[], 0.9).is_empty());
+        assert!(advantages(&[], &[]).is_empty());
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, HLO
+//! *text* — see DESIGN.md for why not serialized protos) onto the CPU
+//! PJRT client and executes them from the rust hot path. Python is never
+//! involved after `make artifacts`.
+
+use crate::policy::encode::EncodedState;
+use crate::policy::{net, PolicyEval};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/meta.json`, written by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Flat parameter vector length (must equal `net::param_len()`).
+    pub param_len: usize,
+    pub f: usize,
+    pub e: usize,
+    pub k: usize,
+    /// Policy-forward shape variants: (artifact stem, N, J).
+    pub variants: Vec<(String, usize, usize)>,
+    /// Train-step shapes: (artifact stem, batch B, N, J).
+    pub train: Option<(String, usize, usize, usize)>,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let variants = v
+            .req("variants")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("variants must be an array"))?
+            .iter()
+            .map(|x| {
+                Ok((
+                    x.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                    x.req_usize("n").map_err(|e| anyhow!("{e}"))?,
+                    x.req_usize("j").map_err(|e| anyhow!("{e}"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let train = match v.get("train") {
+            Some(t) if !matches!(t, Json::Null) => Some((
+                t.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                t.req_usize("b").map_err(|e| anyhow!("{e}"))?,
+                t.req_usize("n").map_err(|e| anyhow!("{e}"))?,
+                t.req_usize("j").map_err(|e| anyhow!("{e}"))?,
+            )),
+            _ => None,
+        };
+        let meta = ArtifactMeta {
+            param_len: v.req_usize("param_len").map_err(|e| anyhow!("{e}"))?,
+            f: v.req_usize("f").map_err(|e| anyhow!("{e}"))?,
+            e: v.req_usize("e").map_err(|e| anyhow!("{e}"))?,
+            k: v.req_usize("k").map_err(|e| anyhow!("{e}"))?,
+            variants,
+            train,
+        };
+        meta.check_model_contract()?;
+        Ok(meta)
+    }
+
+    /// The python model and the rust reference must agree on the layout.
+    pub fn check_model_contract(&self) -> Result<()> {
+        if self.param_len != net::param_len() {
+            bail!(
+                "model contract violation: python param_len {} != rust {} \
+                 (python/compile/model.py and rust/src/policy/net.rs diverged)",
+                self.param_len,
+                net::param_len()
+            );
+        }
+        if self.f != crate::policy::F || self.e != crate::policy::E || self.k != crate::policy::K {
+            bail!(
+                "model contract violation: (F,E,K) python ({},{},{}) != rust ({},{},{})",
+                self.f,
+                self.e,
+                self.k,
+                crate::policy::F,
+                crate::policy::E,
+                crate::policy::K
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: `PjRtClient` wraps an `Rc` around the PJRT C-API client, which
+// itself is thread-safe. The `Rc` only makes *sharing clones across
+// threads* unsound; `Runtime` owns the client and every executable holding
+// a clone of it, so moving the whole `Runtime` transfers the entire
+// reference group to one thread at a time. `Runtime` is deliberately not
+// `Sync`.
+unsafe impl Send for Runtime {}
+
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`), parse metadata
+    /// and start a CPU PJRT client.
+    pub fn new(dir: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(dir);
+        let meta = ArtifactMeta::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            meta,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (once) the artifact with the given stem.
+    pub fn load(&mut self, stem: &str) -> Result<()> {
+        if self.cache.contains_key(stem) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{stem}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {stem}: {e:?}"))?;
+        self.cache.insert(stem.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a cached artifact; returns the flattened tuple elements.
+    pub fn execute(&mut self, stem: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(stem)?;
+        let exe = self.cache.get(stem).unwrap();
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {stem}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {stem} result: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        out.to_tuple().map_err(|e| anyhow!("untupling {stem}: {e:?}"))
+    }
+
+    /// Helper: f32 tensor literal with the given dims.
+    pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != data.len() {
+            bail!("literal shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Helper: i32 tensor literal.
+    pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != data.len() {
+            bail!("literal shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn read_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+}
+
+/// The PJRT-backed policy evaluator: the production inference path.
+pub struct PjrtPolicy {
+    runtime: Runtime,
+    pub params: Vec<f32>,
+}
+
+impl PjrtPolicy {
+    /// Load from an artifact dir and a parameter file (defaults to the
+    /// freshly initialized `params_init.bin`).
+    pub fn new(artifact_dir: &str, params_path: Option<&str>) -> Result<PjrtPolicy> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let default_params = format!("{artifact_dir}/params_init.bin");
+        let path = params_path.unwrap_or(&default_params);
+        let params = crate::policy::params::load_expected(path, runtime.meta.param_len)?;
+        Ok(PjrtPolicy { runtime, params })
+    }
+
+    pub fn with_params(artifact_dir: &str, params: Vec<f32>) -> Result<PjrtPolicy> {
+        let runtime = Runtime::new(artifact_dir)?;
+        if params.len() != runtime.meta.param_len {
+            bail!("params length {} != {}", params.len(), runtime.meta.param_len);
+        }
+        Ok(PjrtPolicy { runtime, params })
+    }
+
+    /// The variant artifact stem for an encoded state; errors if the AOT
+    /// build lacks it.
+    fn stem_for(&self, enc: &EncodedState) -> Result<String> {
+        self.runtime
+            .meta
+            .variants
+            .iter()
+            .find(|(_, n, j)| *n == enc.variant.n && *j == enc.variant.j)
+            .map(|(name, _, _)| name.clone())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for variant N={} J={} — rebuild artifacts",
+                    enc.variant.n,
+                    enc.variant.j
+                )
+            })
+    }
+}
+
+impl PolicyEval for PjrtPolicy {
+    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)> {
+        let stem = self.stem_for(enc)?;
+        let n = enc.variant.n as i64;
+        let j = enc.variant.j as i64;
+        let f = crate::policy::F as i64;
+        let inputs = [
+            Runtime::lit_f32(&self.params, &[self.params.len() as i64])?,
+            Runtime::lit_f32(&enc.x, &[n, f])?,
+            Runtime::lit_f32(&enc.adj, &[n, n])?,
+            Runtime::lit_f32(&enc.jobmat, &[j, n])?,
+            Runtime::lit_f32(&enc.node_mask, &[n])?,
+        ];
+        let out = self.runtime.execute(&stem, &inputs)?;
+        if out.len() != 2 {
+            bail!("policy artifact returned {} outputs, expected 2", out.len());
+        }
+        let logits = Runtime::read_f32(&out[0])?;
+        let value = Runtime::read_f32(&out[1])?;
+        Ok((logits, value.first().copied().unwrap_or(0.0)))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,134 @@
+//! CPOP — Critical-Path-on-a-Processor (Topcuoglu et al. 2002; discussed
+//! in the paper's related work as the companion of HEFT).
+//!
+//! Priority of a task is `rank_up + rank_down`; tasks on the critical path
+//! (priority equal to the entry's, which is the CP length) are pinned to
+//! the *critical-path processor* — the executor minimizing the path's
+//! total execution time (for uniform-communication clusters, the fastest
+//! executor). Off-path tasks fall back to best-EFT.
+
+use super::eft::best_eft;
+use super::Scheduler;
+use crate::dag::TaskRef;
+use crate::sim::{Allocation, SimState};
+use anyhow::Result;
+
+pub struct CpopScheduler {
+    /// Per-job CP membership cache, keyed by job id.
+    cp_member: Vec<Option<Vec<bool>>>,
+}
+
+impl CpopScheduler {
+    pub fn new() -> CpopScheduler {
+        CpopScheduler {
+            cp_member: Vec::new(),
+        }
+    }
+
+    fn ensure_job(&mut self, state: &SimState, job: usize) {
+        if self.cp_member.len() < state.jobs.len() {
+            self.cp_member.resize(state.jobs.len(), None);
+        }
+        if self.cp_member[job].is_some() {
+            return;
+        }
+        let ju = &state.rank_up[job];
+        let jd = &state.rank_down[job];
+        let n = state.jobs[job].n_tasks();
+        // CP length = max entry priority; members are nodes whose
+        // rank_up + rank_down equals it (within tolerance).
+        let cp_len = (0..n)
+            .map(|i| ju[i] + jd[i])
+            .fold(f64::NEG_INFINITY, f64::max);
+        let members: Vec<bool> = (0..n)
+            .map(|i| (ju[i] + jd[i]) >= cp_len * (1.0 - 1e-9))
+            .collect();
+        self.cp_member[job] = Some(members);
+    }
+}
+
+impl Default for CpopScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for CpopScheduler {
+    fn name(&self) -> String {
+        "CPOP".to_string()
+    }
+
+    fn reset(&mut self) {
+        self.cp_member.clear();
+    }
+
+    fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        // Select by priority rank_up + rank_down.
+        let mut best: Option<(f64, TaskRef)> = None;
+        for &t in state.executable() {
+            let p = state.rank_up[t.job][t.node] + state.rank_down[t.job][t.node];
+            match best {
+                None => best = Some((p, t)),
+                Some((bp, bt)) => {
+                    if p > bp + 1e-12 || (p > bp - 1e-12 && t < bt) {
+                        best = Some((p, t));
+                    }
+                }
+            }
+        }
+        let Some((_, task)) = best else {
+            return Ok(None);
+        };
+        self.ensure_job(state, task.job);
+        let on_cp = self.cp_member[task.job].as_ref().unwrap()[task.node];
+        let exec = if on_cp {
+            // Pin to the CP processor (fastest executor under the uniform
+            // communication model).
+            state.cluster.fastest()
+        } else {
+            best_eft(state, task).0
+        };
+        Ok(Some((task, Allocation::Direct { exec })))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::WorkloadConfig;
+    use crate::sim::Simulator;
+    use crate::workload::WorkloadGenerator;
+
+    #[test]
+    fn cpop_completes_and_validates() {
+        let cfg = crate::config::ClusterConfig::with_executors(6);
+        let cluster = Cluster::heterogeneous(&cfg, 1);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), 1).generate();
+        let mut sim = Simulator::new(cluster, w);
+        let report = sim.run(&mut CpopScheduler::new()).unwrap();
+        assert!(report.makespan > 0.0);
+        assert_eq!(report.n_duplicates, 0);
+        sim.state.validate().unwrap();
+    }
+
+    #[test]
+    fn critical_path_tasks_land_on_fastest_executor() {
+        let mut cluster = Cluster::homogeneous(3, 1.0, 100.0);
+        cluster.executors[2].speed = 3.0;
+        // A pure chain: every node is on the critical path.
+        let job = crate::dag::Job::new(
+            0,
+            "chain",
+            0.0,
+            vec![2.0, 2.0, 2.0],
+            &[(0, 1, 0.1), (1, 2, 0.1)],
+        );
+        let w = crate::workload::Workload::new(vec![job]);
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut CpopScheduler::new()).unwrap();
+        for node in 0..3 {
+            assert_eq!(sim.state.placements[0][node][0].exec, 2);
+        }
+    }
+}

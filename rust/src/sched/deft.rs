@@ -1,0 +1,208 @@
+//! DEFT — Duplication-aware Earliest Finish Time (paper §4.2, Eq 9–11,
+//! Algorithm 1).
+//!
+//! For a selected task `n_i`, DEFT evaluates, for every executor `r_j`:
+//!
+//! * **EFT** — run `n_i` on `r_j` directly (Eq 3), and
+//! * **CPEFT** — *copy-parent* EFT (Eq 10): first re-execute one parent
+//!   `n_p` on `r_j` (making its output local, saving the `e_pi / c_pj`
+//!   transfer), then run `n_i` there.
+//!
+//! The minimum over all `(mode, parent, executor)` combinations wins
+//! (Eq 11). Complexity is `O(P · M)` per task (`P` parents, `M`
+//! executors) and `O(E · M)` for a whole workload, as analyzed in §5.1.
+
+use super::eft::{best_eft, est};
+use super::Allocator;
+use crate::dag::{NodeId, TaskRef};
+use crate::sim::{Allocation, SimState};
+
+/// CPEFT (Eq 10, with the duplicate's own execution modeled): finish time
+/// of `task` on `exec` if parent `parent` is first duplicated onto `exec`.
+///
+/// The duplicated copy must wait for *its* input data on `exec` and for the
+/// executor to be free; the task then starts at
+/// `max(duplicate finish, other parents' data-ready)` — parent data is
+/// local after duplication (`AFTC` with zero transfer), and the executor is
+/// serially occupied by the duplicate until it finishes.
+pub fn cpeft(state: &SimState, task: TaskRef, parent: NodeId, exec: usize) -> f64 {
+    let p = TaskRef::new(task.job, parent);
+    // Duplicate's start: its own data-ready on exec (Eq 9 applied to the
+    // parent's parents), executor availability, wall clock, job arrival.
+    let dup_start = est(state, p, exec).max(state.exec_ready[exec]);
+    let dup_finish = dup_start + state.task_compute(p) / state.cluster.speed(exec);
+    // Task start: duplicate holds the executor until dup_finish and its
+    // output is then local; other parents stream in from their copies
+    // (min over R_{n_m}, Eq 9).
+    let mut start = dup_finish;
+    for e in &state.jobs[task.job].parents[task.node] {
+        if e.other == parent {
+            continue;
+        }
+        let avail = state.parent_data_at(task, e.other, exec);
+        if avail > start {
+            start = avail;
+        }
+    }
+    start + state.task_compute(task) / state.cluster.speed(exec)
+}
+
+/// DEFT (Eq 11, Algorithm 1): the minimum-finish-time allocation across
+/// plain EFT and every (parent, executor) duplication, with the predicted
+/// finish time. Deterministic tie-break: EFT preferred over duplication,
+/// lower executor id preferred (avoids gratuitous copies).
+pub fn deft(state: &SimState, task: TaskRef) -> (Allocation, f64) {
+    let (exec, mut best) = best_eft(state, task);
+    let mut alloc = Allocation::Direct { exec };
+    let parents = &state.jobs[task.job].parents[task.node];
+    if !parents.is_empty() {
+        for e in 0..state.cluster.len() {
+            for edge in parents {
+                let f = cpeft(state, task, edge.other, e);
+                if f + 1e-12 < best {
+                    best = f;
+                    alloc = Allocation::Duplicate {
+                        exec: e,
+                        parent: edge.other,
+                    };
+                }
+            }
+        }
+    }
+    (alloc, best)
+}
+
+/// Phase-2 allocator wrapping [`deft`] — the paper's executor-allocation
+/// heuristic used by Lachesis and all `*-DEFT` baselines.
+#[derive(Debug, Clone, Default)]
+pub struct DeftAllocator;
+
+impl DeftAllocator {
+    pub fn new() -> Self {
+        DeftAllocator
+    }
+}
+
+impl Allocator for DeftAllocator {
+    fn name(&self) -> String {
+        "deft".to_string()
+    }
+
+    fn allocate(&self, state: &SimState, task: TaskRef) -> (Allocation, f64) {
+        deft(state, task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dag::Job;
+    use crate::sim::SimState;
+    use crate::workload::Workload;
+
+    /// Two executors (1 GHz, 2 GHz), slow 10 MB/s link, heavy 20 MB edge:
+    /// duplication should beat shipping the data.
+    fn dup_favorable() -> SimState {
+        let mut cluster = Cluster::homogeneous(2, 1.0, 10.0);
+        cluster.executors[1].speed = 2.0;
+        let job = Job::new(0, "chain", 0.0, vec![4.0, 6.0], &[(0, 1, 20.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st
+    }
+
+    #[test]
+    fn cpeft_hand_computed() {
+        let mut st = dup_favorable();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // AFT 4 @ e0
+        let t1 = TaskRef::new(0, 1);
+        // Duplicate node 0 on e1: dup start 0, finish 2; child 2 + 3 = 5.
+        assert_eq!(cpeft(&st, t1, 0, 1), 5.0);
+        // Duplicate on e0 (same place it already ran): exec busy till 4,
+        // dup 4..8, child 8..14.
+        assert_eq!(cpeft(&st, t1, 0, 0), 14.0);
+    }
+
+    #[test]
+    fn deft_chooses_duplication_when_it_wins() {
+        let mut st = dup_favorable();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        let t1 = TaskRef::new(0, 1);
+        let (alloc, finish) = deft(&st, t1);
+        assert_eq!(
+            alloc,
+            Allocation::Duplicate { exec: 1, parent: 0 }
+        );
+        assert_eq!(finish, 5.0); // vs EFT best of 9.0
+    }
+
+    #[test]
+    fn deft_predicted_finish_matches_apply() {
+        let mut st = dup_favorable();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        let t1 = TaskRef::new(0, 1);
+        let (alloc, predicted) = deft(&st, t1);
+        let actual = st.apply(t1, alloc);
+        assert!((predicted - actual).abs() < 1e-12);
+        st.validate().unwrap();
+    }
+
+    #[test]
+    fn deft_falls_back_to_eft_on_fast_network() {
+        // 1 GB/s link: shipping 20 MB costs 0.02 s — duplication can't win.
+        let mut cluster = Cluster::homogeneous(2, 1.0, 1000.0);
+        cluster.executors[1].speed = 2.0;
+        let job = Job::new(0, "chain", 0.0, vec![4.0, 6.0], &[(0, 1, 20.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 1 });
+        let (alloc, _) = deft(&st, TaskRef::new(0, 1));
+        assert!(matches!(alloc, Allocation::Direct { .. }));
+    }
+
+    #[test]
+    fn deft_entry_task_has_no_duplication() {
+        let st = dup_favorable();
+        let (alloc, finish) = deft(&st, TaskRef::new(0, 0));
+        assert_eq!(alloc, Allocation::Direct { exec: 1 });
+        assert_eq!(finish, 2.0);
+    }
+
+    /// DEFT never predicts a worse finish than plain EFT (Eq 11 is a min
+    /// including EFT).
+    #[test]
+    fn deft_never_worse_than_eft() {
+        let mut st = dup_favorable();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        let t1 = TaskRef::new(0, 1);
+        let (_, eft_best) = best_eft(&st, t1);
+        let (_, deft_best) = deft(&st, t1);
+        assert!(deft_best <= eft_best);
+    }
+
+    /// Multi-parent case: duplicating one parent must still wait for the
+    /// other parents' data.
+    #[test]
+    fn cpeft_waits_for_other_parents() {
+        let mut cluster = Cluster::homogeneous(3, 1.0, 10.0);
+        cluster.executors[2].speed = 2.0;
+        // join: 0 -> 2, 1 -> 2; heavy edge from 0, light from 1.
+        let job = Job::new(
+            0,
+            "join",
+            0.0,
+            vec![2.0, 8.0, 1.0],
+            &[(0, 2, 40.0), (1, 2, 1.0)],
+        );
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // AFT 2
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 }); // AFT 8
+        let t2 = TaskRef::new(0, 2);
+        // Duplicate parent 0 on e2: dup 0..1; other parent 1's data at
+        // 8 + 0.1 = 8.1; child starts 8.1, finish 8.6.
+        let f = cpeft(&st, t2, 0, 2);
+        assert!((f - 8.6).abs() < 1e-9, "f={f}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Earliest start / finish time math (paper Definitions 1–2, Eq 1–3) and
+//! the non-duplicating EFT allocator used by HEFT.
+
+use super::Allocator;
+use crate::dag::TaskRef;
+use crate::sim::{Allocation, SimState};
+
+/// Earliest start time of `task` on `exec` (Eq 2), additionally bounded by
+/// the current wall clock and the job's arrival (online constraints).
+/// Does *not* include the executor-availability bound — that's the `max`
+/// with `exec_ready` in [`eft`], matching the insertion-free append
+/// timeline the simulator uses.
+pub fn est(state: &SimState, task: TaskRef, exec: usize) -> f64 {
+    state
+        .data_ready(task, exec)
+        .max(state.wall)
+        .max(state.jobs[task.job].arrival)
+}
+
+/// Earliest finish time of `task` on `exec` (Eq 3) under the append
+/// timeline: start = max(EST, executor free), finish = start + w/v.
+pub fn eft(state: &SimState, task: TaskRef, exec: usize) -> f64 {
+    let start = est(state, task, exec).max(state.exec_ready[exec]);
+    start + state.task_compute(task) / state.cluster.speed(exec)
+}
+
+/// The executor minimizing EFT, with the winning finish time.
+pub fn best_eft(state: &SimState, task: TaskRef) -> (usize, f64) {
+    let mut best_exec = 0;
+    let mut best = f64::INFINITY;
+    for e in 0..state.cluster.len() {
+        let f = eft(state, task, e);
+        if f < best {
+            best = f;
+            best_exec = e;
+        }
+    }
+    (best_exec, best)
+}
+
+/// Phase-2 allocator that picks `argmin_exec EFT` without duplication
+/// (HEFT's allocation rule).
+#[derive(Debug, Clone, Default)]
+pub struct EftAllocator;
+
+impl EftAllocator {
+    pub fn new() -> Self {
+        EftAllocator
+    }
+}
+
+impl Allocator for EftAllocator {
+    fn name(&self) -> String {
+        "eft".to_string()
+    }
+
+    fn allocate(&self, state: &SimState, task: TaskRef) -> (Allocation, f64) {
+        let (exec, finish) = best_eft(state, task);
+        (Allocation::Direct { exec }, finish)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dag::Job;
+    use crate::sim::SimState;
+    use crate::workload::Workload;
+
+    fn state() -> SimState {
+        let mut cluster = Cluster::homogeneous(2, 1.0, 10.0);
+        cluster.executors[1].speed = 2.0;
+        let job = Job::new(0, "chain", 0.0, vec![4.0, 6.0], &[(0, 1, 20.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st
+    }
+
+    #[test]
+    fn eft_prefers_fast_executor_for_entry() {
+        let st = state();
+        let t0 = TaskRef::new(0, 0);
+        assert_eq!(eft(&st, t0, 0), 4.0);
+        assert_eq!(eft(&st, t0, 1), 2.0);
+        let (exec, f) = best_eft(&st, t0);
+        assert_eq!(exec, 1);
+        assert_eq!(f, 2.0);
+    }
+
+    #[test]
+    fn eft_accounts_for_parent_location() {
+        let mut st = state();
+        st.apply(TaskRef::new(0, 0), crate::sim::Allocation::Direct { exec: 0 });
+        let t1 = TaskRef::new(0, 1);
+        // Same exec: start 4, run 6 → 10. Other exec: data 4+2=6, run 3 → 9.
+        assert_eq!(eft(&st, t1, 0), 10.0);
+        assert_eq!(eft(&st, t1, 1), 9.0);
+        let (exec, f) = best_eft(&st, t1);
+        assert_eq!((exec, f), (1, 9.0));
+    }
+
+    #[test]
+    fn predicted_eft_matches_apply() {
+        let mut st = state();
+        let t0 = TaskRef::new(0, 0);
+        let (exec, predicted) = best_eft(&st, t0);
+        let actual = st.apply(t0, crate::sim::Allocation::Direct { exec });
+        assert!((predicted - actual).abs() < 1e-12);
+        let t1 = TaskRef::new(0, 1);
+        let (exec, predicted) = best_eft(&st, t1);
+        let actual = st.apply(t1, crate::sim::Allocation::Direct { exec });
+        assert!((predicted - actual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn est_respects_wall_clock() {
+        let mut st = state();
+        st.wall = 50.0;
+        assert_eq!(est(&st, TaskRef::new(0, 0), 0), 50.0);
+        assert_eq!(eft(&st, TaskRef::new(0, 0), 0), 54.0);
+    }
+}

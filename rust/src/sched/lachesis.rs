@@ -1,0 +1,301 @@
+//! The learned schedulers: **Lachesis** (this paper) and **Decima-DEFT**
+//! (baseline 5) — a policy-network task selector in phase 1 + DEFT in
+//! phase 2.
+//!
+//! The selector encodes the scheduling state to fixed-shape tensors,
+//! evaluates the MGNet policy (pure-rust or PJRT backend), and picks the
+//! argmax (inference) or a softmax sample (training). During training it
+//! records transitions — (encoded state, action slot, critic value,
+//! horizon at decision time) — which the RL trainer turns into
+//! advantage-weighted updates.
+
+use super::{DeftAllocator, TaskSelector, TwoPhase};
+use crate::dag::TaskRef;
+use crate::policy::encode::encode;
+use crate::policy::features::FeatureMode;
+use crate::policy::{EncodedState, PolicyEval, PolicyNet};
+use crate::sim::SimState;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// One recorded decision for RL training.
+#[derive(Clone)]
+pub struct Transition {
+    pub enc: EncodedState,
+    pub action_slot: usize,
+    pub value: f32,
+    /// Schedule horizon (max AFT) *before* this decision was applied; the
+    /// trainer differences consecutive horizons to get the paper's
+    /// makespan-increment penalty (Σ rewards = −makespan).
+    pub horizon_before: f64,
+    /// Simulation wall time of the decision (the paper's t_k).
+    pub wall: f64,
+}
+
+/// How actions are drawn from the policy distribution (Eq 8).
+pub enum SelectMode {
+    /// Greedy argmax (evaluation).
+    Greedy,
+    /// Softmax sampling at a temperature (training exploration).
+    Sample { temperature: f64, rng: Rng },
+}
+
+/// Phase-1 selector driven by the policy network.
+pub struct PolicySelector {
+    pub net: PolicyNet,
+    pub feature_mode: FeatureMode,
+    pub mode: SelectMode,
+    /// When true, record transitions for the trainer.
+    pub record: bool,
+    pub transitions: Vec<Transition>,
+    label: String,
+}
+
+impl PolicySelector {
+    pub fn new(
+        eval: Box<dyn PolicyEval>,
+        feature_mode: FeatureMode,
+        mode: SelectMode,
+        label: &str,
+    ) -> PolicySelector {
+        PolicySelector {
+            net: PolicyNet::new(eval),
+            feature_mode,
+            mode,
+            record: false,
+            transitions: Vec::new(),
+            label: label.to_string(),
+        }
+    }
+
+    /// Drain recorded transitions (trainer API).
+    pub fn take_transitions(&mut self) -> Vec<Transition> {
+        std::mem::take(&mut self.transitions)
+    }
+}
+
+impl TaskSelector for PolicySelector {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn reset(&mut self) {
+        self.transitions.clear();
+    }
+
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
+        if state.executable().is_empty() {
+            return Ok(None);
+        }
+        let enc = encode(state, self.feature_mode);
+        if enc.n_executable() == 0 {
+            // All executable tasks were truncated out of the encoding —
+            // fall back to the highest-rank_up executable task so the
+            // schedule always completes.
+            let t = *state
+                .executable()
+                .iter()
+                .max_by(|a, b| {
+                    state.rank_up[a.job][a.node]
+                        .partial_cmp(&state.rank_up[b.job][b.node])
+                        .unwrap()
+                })
+                .unwrap();
+            return Ok(Some(t));
+        }
+        let (slot, value) = match &mut self.mode {
+            SelectMode::Greedy => {
+                let slot = self
+                    .net
+                    .argmax(&enc)?
+                    .ok_or_else(|| anyhow!("argmax over empty executable mask"))?;
+                (slot, 0.0)
+            }
+            SelectMode::Sample { temperature, rng } => {
+                let temp = *temperature;
+                let (slot, value) = self
+                    .net
+                    .sample(&enc, rng, temp)?
+                    .ok_or_else(|| anyhow!("sample over empty executable mask"))?;
+                (slot, value)
+            }
+        };
+        let task = enc
+            .slot_task(slot)
+            .ok_or_else(|| anyhow!("selected padding slot {slot}"))?;
+        debug_assert!(state.is_executable(task));
+        if self.record {
+            self.transitions.push(Transition {
+                enc,
+                action_slot: slot,
+                value,
+                horizon_before: state.horizon,
+                wall: state.wall,
+            });
+        }
+        Ok(Some(task))
+    }
+}
+
+/// Lachesis: policy selector (full heterogeneity-aware features) + DEFT.
+pub type LachesisScheduler = TwoPhase<PolicySelector, DeftAllocator>;
+
+impl LachesisScheduler {
+    /// Greedy-inference Lachesis (evaluation mode).
+    pub fn greedy(eval: Box<dyn PolicyEval>) -> LachesisScheduler {
+        TwoPhase::named(
+            PolicySelector::new(eval, FeatureMode::Full, SelectMode::Greedy, "lachesis"),
+            DeftAllocator::new(),
+            "Lachesis",
+        )
+    }
+
+    /// Sampling Lachesis with transition recording (training mode).
+    pub fn training(eval: Box<dyn PolicyEval>, temperature: f64, seed: u64) -> LachesisScheduler {
+        let mut sel = PolicySelector::new(
+            eval,
+            FeatureMode::Full,
+            SelectMode::Sample {
+                temperature,
+                rng: Rng::new(seed),
+            },
+            "lachesis",
+        );
+        sel.record = true;
+        TwoPhase::named(sel, DeftAllocator::new(), "Lachesis")
+    }
+}
+
+/// Decima-DEFT: the same architecture with heterogeneity-blind features
+/// (Decima assumes homogeneous executors and no data transmission).
+pub type DecimaScheduler = TwoPhase<PolicySelector, DeftAllocator>;
+
+impl DecimaScheduler {
+    pub fn greedy_decima(eval: Box<dyn PolicyEval>) -> DecimaScheduler {
+        TwoPhase::named(
+            PolicySelector::new(
+                eval,
+                FeatureMode::HomogeneousBlind,
+                SelectMode::Greedy,
+                "decima",
+            ),
+            DeftAllocator::new(),
+            "Decima-DEFT",
+        )
+    }
+
+    pub fn training_decima(
+        eval: Box<dyn PolicyEval>,
+        temperature: f64,
+        seed: u64,
+    ) -> DecimaScheduler {
+        let mut sel = PolicySelector::new(
+            eval,
+            FeatureMode::HomogeneousBlind,
+            SelectMode::Sample {
+                temperature,
+                rng: Rng::new(seed),
+            },
+            "decima",
+        );
+        sel.record = true;
+        TwoPhase::named(sel, DeftAllocator::new(), "Decima-DEFT")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::{ClusterConfig, WorkloadConfig};
+    use crate::policy::RustPolicy;
+    use crate::sched::Scheduler;
+    use crate::sim::Simulator;
+    use crate::workload::WorkloadGenerator;
+
+    #[test]
+    fn greedy_lachesis_completes_schedule() {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(6), 1);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 1).generate();
+        let mut sched = LachesisScheduler::greedy(Box::new(RustPolicy::random(7)));
+        let mut sim = Simulator::new(cluster, w);
+        let report = sim.run(&mut sched).unwrap();
+        assert_eq!(report.algo, "Lachesis");
+        assert!(report.makespan > 0.0);
+        sim.state.validate().unwrap();
+    }
+
+    #[test]
+    fn training_mode_records_transitions() {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(4), 2);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 2).generate();
+        let n_tasks = w.n_tasks();
+        let mut sched = LachesisScheduler::training(Box::new(RustPolicy::random(8)), 1.0, 3);
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut sched).unwrap();
+        let trans = sched.selector.take_transitions();
+        assert_eq!(trans.len(), n_tasks);
+        // Horizons are non-decreasing over the episode.
+        for w in trans.windows(2) {
+            assert!(w[1].horizon_before >= w[0].horizon_before - 1e-9);
+        }
+    }
+
+    #[test]
+    fn reset_clears_transitions() {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(4), 3);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 3).generate();
+        let mut sched = LachesisScheduler::training(Box::new(RustPolicy::random(9)), 1.0, 4);
+        let mut sim = Simulator::new(cluster, w.clone());
+        sim.run(&mut sched).unwrap();
+        assert!(!sched.selector.transitions.is_empty());
+        let mut sim2 = Simulator::new(
+            Cluster::heterogeneous(&ClusterConfig::with_executors(4), 3),
+            w,
+        );
+        sim2.run(&mut sched).unwrap(); // run() calls reset()
+        let n = sim2.state.n_tasks_total();
+        assert_eq!(sched.selector.transitions.len(), n);
+    }
+
+    #[test]
+    fn decima_uses_blind_features() {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(4), 4);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 4).generate();
+        let mut sched = DecimaScheduler::greedy_decima(Box::new(RustPolicy::random(10)));
+        assert_eq!(sched.name(), "Decima-DEFT");
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut sched).unwrap();
+        sim.state.validate().unwrap();
+    }
+
+    #[test]
+    fn sampled_runs_differ_by_seed_but_not_within() {
+        let cfg = ClusterConfig::with_executors(4);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 5).generate();
+        let run = |seed: u64| {
+            let mut sched =
+                LachesisScheduler::training(Box::new(RustPolicy::random(11)), 1.0, seed);
+            let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, 5), w.clone());
+            let r = sim.run(&mut sched).unwrap();
+            (
+                r.makespan,
+                sched
+                    .selector
+                    .take_transitions()
+                    .iter()
+                    .map(|t| t.action_slot)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let (m1, a1) = run(100);
+        let (m1b, a1b) = run(100);
+        assert_eq!(a1, a1b);
+        assert_eq!(m1, m1b);
+        let (_, a2) = run(101);
+        // Usually differs; tolerate rare equality only if tiny episodes.
+        if a1.len() > 5 {
+            assert_ne!(a1, a2, "different sampling seeds should diverge");
+        }
+    }
+}

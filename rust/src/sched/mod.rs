@@ -1,0 +1,108 @@
+//! Scheduling algorithms: the paper's two-phase framework (task selection →
+//! executor allocation) plus every baseline it is evaluated against.
+//!
+//! * Phase 1 — [`TaskSelector`]: FIFO, SJF, HRRN, HighRankUp, random, or
+//!   the learned policy (Lachesis / Decima-DEFT, in [`lachesis`]).
+//! * Phase 2 — [`Allocator`]: EFT (Eq 2–3) or DEFT (Eq 9–11, Algorithm 1)
+//!   which additionally considers duplicating one parent.
+//! * Whole-schedule heuristics: HEFT, CPOP, TDCA.
+
+pub mod cpop;
+pub mod deft;
+pub mod dls;
+pub mod eft;
+pub mod heft;
+pub mod lachesis;
+pub mod selectors;
+pub mod tdca;
+
+pub use cpop::CpopScheduler;
+pub use dls::DlsScheduler;
+pub use deft::DeftAllocator;
+pub use eft::EftAllocator;
+pub use heft::HeftScheduler;
+pub use lachesis::{DecimaScheduler, LachesisScheduler};
+pub use selectors::{
+    FifoScheduler, HighRankUpScheduler, HrrnScheduler, RandomScheduler, SjfScheduler,
+};
+pub use tdca::TdcaScheduler;
+
+use crate::dag::TaskRef;
+use crate::sim::{Allocation, SimState};
+use anyhow::Result;
+
+/// A scheduling algorithm: called once per decision at each scheduling
+/// event; returns `None` to pass (e.g. intentionally wait for a future
+/// event even though executable tasks remain — none of the implemented
+/// algorithms do, but the engine supports it).
+pub trait Scheduler {
+    fn name(&self) -> String;
+    /// Reset internal state before a fresh simulation run.
+    fn reset(&mut self) {}
+    fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>>;
+}
+
+/// Phase-1 policy: pick the next task from the executable set.
+pub trait TaskSelector {
+    fn name(&self) -> String;
+    fn reset(&mut self) {}
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>>;
+}
+
+/// Phase-2 policy: place a selected task on an executor, possibly
+/// duplicating a parent. Returns the decision and its predicted finish
+/// time (which must match what [`SimState::apply`] will produce).
+pub trait Allocator {
+    fn name(&self) -> String;
+    fn allocate(&self, state: &SimState, task: TaskRef) -> (Allocation, f64);
+}
+
+/// The paper's two-phase composition: any selector + any allocator.
+pub struct TwoPhase<S: TaskSelector, A: Allocator> {
+    pub selector: S,
+    pub allocator: A,
+    rename: Option<String>,
+}
+
+impl<S: TaskSelector, A: Allocator> TwoPhase<S, A> {
+    pub fn of(selector: S, allocator: A) -> Self {
+        TwoPhase {
+            selector,
+            allocator,
+            rename: None,
+        }
+    }
+
+    /// Override the reported algorithm name (e.g. "HEFT" instead of
+    /// "rankup-eft").
+    pub fn named(selector: S, allocator: A, name: &str) -> Self {
+        TwoPhase {
+            selector,
+            allocator,
+            rename: Some(name.to_string()),
+        }
+    }
+}
+
+impl<S: TaskSelector, A: Allocator> Scheduler for TwoPhase<S, A> {
+    fn name(&self) -> String {
+        match &self.rename {
+            Some(n) => n.clone(),
+            None => format!("{}-{}", self.selector.name(), self.allocator.name()),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.selector.reset();
+    }
+
+    fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        match self.selector.select(state)? {
+            None => Ok(None),
+            Some(task) => {
+                let (alloc, _eft) = self.allocator.allocate(state, task);
+                Ok(Some((task, alloc)))
+            }
+        }
+    }
+}

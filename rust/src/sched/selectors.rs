@@ -1,0 +1,293 @@
+//! Phase-1 task selectors for the heuristic baselines (paper §5.2):
+//! FIFO, SJF, HRRN, HighRankUp and a random control. Each pairs with the
+//! DEFT allocator to form the `*-DEFT` baselines.
+
+use super::{DeftAllocator, TaskSelector, TwoPhase};
+use crate::dag::TaskRef;
+use crate::sim::SimState;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Pick the executable task maximizing a score; deterministic tie-break on
+/// (job, node).
+fn argmax_by<F: Fn(&SimState, TaskRef) -> f64>(state: &SimState, score: F) -> Option<TaskRef> {
+    let mut best: Option<(f64, TaskRef)> = None;
+    for &t in state.executable() {
+        let s = score(state, t);
+        match best {
+            None => best = Some((s, t)),
+            Some((bs, bt)) => {
+                if s > bs + 1e-12 || (s > bs - 1e-12 && t < bt) {
+                    best = Some((s, t));
+                }
+            }
+        }
+    }
+    best.map(|(_, t)| t)
+}
+
+// ---------------------------------------------------------------------------
+// FIFO: ascending job arrival order (paper baseline 1).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct FifoSelector;
+
+impl TaskSelector for FifoSelector {
+    fn name(&self) -> String {
+        "fifo".to_string()
+    }
+
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
+        // Earlier arrival first; within a job, earlier topo position first
+        // (the frontier is sorted, so negate job arrival/ids for argmax).
+        Ok(argmax_by(state, |st, t| {
+            -(st.jobs[t.job].arrival * 1e6 + t.job as f64)
+        }))
+    }
+}
+
+/// FIFO-DEFT baseline.
+pub type FifoScheduler = TwoPhase<FifoSelector, DeftAllocator>;
+
+impl FifoScheduler {
+    pub fn new() -> FifoScheduler {
+        TwoPhase::named(FifoSelector, DeftAllocator::new(), "FIFO-DEFT")
+    }
+}
+
+impl Default for FifoScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SJF: shortest job first (by remaining job work; paper baseline 2).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct SjfSelector;
+
+impl TaskSelector for SjfSelector {
+    fn name(&self) -> String {
+        "sjf".to_string()
+    }
+
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
+        Ok(argmax_by(state, |st, t| -st.job_left_work(t.job)))
+    }
+}
+
+/// SJF-DEFT baseline.
+pub type SjfScheduler = TwoPhase<SjfSelector, DeftAllocator>;
+
+impl SjfScheduler {
+    pub fn new() -> SjfScheduler {
+        TwoPhase::named(SjfSelector, DeftAllocator::new(), "SJF-DEFT")
+    }
+}
+
+impl Default for SjfScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HRRN: highest response ratio next (paper baseline 7):
+// ratio = t_wait / (t_wait + t_execution).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct HrrnSelector;
+
+impl TaskSelector for HrrnSelector {
+    fn name(&self) -> String {
+        "hrrn".to_string()
+    }
+
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
+        let v_avg = state.cluster.v_avg();
+        Ok(argmax_by(state, |st, t| {
+            let wait = (st.wall - st.jobs[t.job].arrival).max(0.0);
+            let exec = st.task_compute(t) / v_avg;
+            wait / (wait + exec).max(1e-12)
+        }))
+    }
+}
+
+/// HRRN-DEFT baseline.
+pub type HrrnScheduler = TwoPhase<HrrnSelector, DeftAllocator>;
+
+impl HrrnScheduler {
+    pub fn new() -> HrrnScheduler {
+        TwoPhase::named(HrrnSelector, DeftAllocator::new(), "HRRN-DEFT")
+    }
+}
+
+impl Default for HrrnScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HighRankUp: descending rank_up (paper baseline 6; also HEFT's phase 1).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct RankUpSelector;
+
+impl TaskSelector for RankUpSelector {
+    fn name(&self) -> String {
+        "rankup".to_string()
+    }
+
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
+        Ok(argmax_by(state, |st, t| st.rank_up[t.job][t.node]))
+    }
+}
+
+/// HighRankUp-DEFT baseline.
+pub type HighRankUpScheduler = TwoPhase<RankUpSelector, DeftAllocator>;
+
+impl HighRankUpScheduler {
+    pub fn new() -> HighRankUpScheduler {
+        TwoPhase::named(RankUpSelector, DeftAllocator::new(), "HighRankUp-DEFT")
+    }
+}
+
+impl Default for HighRankUpScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random selector (sanity-check control, not in the paper).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct RandomSelector {
+    rng: Rng,
+    seed: u64,
+}
+
+impl RandomSelector {
+    pub fn new(seed: u64) -> RandomSelector {
+        RandomSelector {
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+}
+
+impl TaskSelector for RandomSelector {
+    fn name(&self) -> String {
+        "random".to_string()
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+
+    fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
+        let frontier = state.executable();
+        if frontier.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(*self.rng.choice(frontier)))
+    }
+}
+
+/// Random-DEFT control.
+pub type RandomScheduler = TwoPhase<RandomSelector, DeftAllocator>;
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> RandomScheduler {
+        TwoPhase::named(RandomSelector::new(seed), DeftAllocator::new(), "Random-DEFT")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dag::Job;
+    use crate::sched::Scheduler;
+    use crate::sim::SimState;
+    use crate::workload::Workload;
+
+    fn two_job_state() -> SimState {
+        let cluster = Cluster::homogeneous(2, 1.0, 100.0);
+        let j0 = Job::new(0, "big", 0.0, vec![100.0, 1.0], &[(0, 1, 1.0)]);
+        let j1 = Job::new(1, "small", 5.0, vec![2.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![j0, j1]));
+        st.mark_arrived(0);
+        st.mark_arrived(1);
+        st
+    }
+
+    #[test]
+    fn fifo_prefers_earlier_arrival() {
+        let st = two_job_state();
+        let t = FifoSelector.select(&st).unwrap().unwrap();
+        assert_eq!(t.job, 0);
+    }
+
+    #[test]
+    fn sjf_prefers_lighter_job() {
+        let st = two_job_state();
+        let t = SjfSelector.select(&st).unwrap().unwrap();
+        assert_eq!(t.job, 1); // 2.0 work vs 101.0
+    }
+
+    #[test]
+    fn hrrn_prefers_long_waiters() {
+        let mut st = two_job_state();
+        st.wall = 100.0;
+        // job0 waited 100s, job1 waited 95s; job0's task is huge though:
+        // ratio0 = 100/(100+100), ratio1 = 95/(95+2) — job1 wins.
+        let t = HrrnSelector.select(&st).unwrap().unwrap();
+        assert_eq!(t.job, 1);
+    }
+
+    #[test]
+    fn rankup_prefers_critical_task() {
+        let st = two_job_state();
+        let t = RankUpSelector.select(&st).unwrap().unwrap();
+        // job0 node0 has rank_up ≈ 101 — the largest.
+        assert_eq!((t.job, t.node), (0, 0));
+    }
+
+    #[test]
+    fn random_is_reproducible_after_reset() {
+        let st = two_job_state();
+        let mut s = RandomSelector::new(9);
+        let picks: Vec<TaskRef> = (0..5).map(|_| s.select(&st).unwrap().unwrap()).collect();
+        s.reset();
+        let picks2: Vec<TaskRef> = (0..5).map(|_| s.select(&st).unwrap().unwrap()).collect();
+        assert_eq!(picks, picks2);
+    }
+
+    #[test]
+    fn two_phase_name_composition() {
+        let s = FifoScheduler::new();
+        assert_eq!(s.name(), "FIFO-DEFT");
+        let named = TwoPhase::named(RankUpSelector, crate::sched::EftAllocator::new(), "HEFT");
+        assert_eq!(named.name(), "HEFT");
+    }
+
+    #[test]
+    fn selectors_return_none_on_empty_frontier() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let j = Job::new(0, "late", 10.0, vec![1.0], &[]);
+        let st = SimState::new(cluster, Workload::new(vec![j]));
+        assert!(FifoSelector.select(&st).unwrap().is_none());
+        assert!(SjfSelector.select(&st).unwrap().is_none());
+        assert!(HrrnSelector.select(&st).unwrap().is_none());
+        assert!(RankUpSelector.select(&st).unwrap().is_none());
+        assert!(RandomSelector::new(1).select(&st).unwrap().is_none());
+    }
+}

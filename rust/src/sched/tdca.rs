@@ -1,0 +1,253 @@
+//! TDCA — Task-Duplication based Clustering Algorithm (He et al., TPDS
+//! 2019; paper baseline 4). A batch-mode whole-DAG scheduler in four
+//! phases:
+//!
+//! 1. **Cluster initialization** — walk up from each task to its *critical
+//!    parent* (the parent with the latest data arrival), forming
+//!    critical-parent chains; each chain becomes a cluster.
+//! 2. **Cluster-to-executor mapping** — heaviest clusters (by total work)
+//!    onto fastest executors; surplus clusters merge onto the least-loaded
+//!    executors (TDCA's "processor merging").
+//! 3. **Duplication** — when a cluster's head task reads a heavy edge from
+//!    a parent placed elsewhere, re-execute the parent locally if that
+//!    reduces the head's finish time (evaluated with the CPEFT math).
+//! 4. **Task insertion** — emit tasks cluster-by-cluster in topological
+//!    order; the simulator's append timeline realizes the schedule.
+//!
+//! TDCA is defined for batch workloads; under continuous arrivals it
+//! re-plans over the arrived-but-unassigned set at each arrival event,
+//! which matches how the paper could only run it in batch mode.
+
+use super::deft::cpeft;
+use super::eft::eft;
+use super::Scheduler;
+use crate::dag::TaskRef;
+use crate::sim::{Allocation, SimState};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+pub struct TdcaScheduler {
+    /// Planned decisions awaiting emission.
+    plan: VecDeque<(TaskRef, usize)>, // (task, executor)
+    /// Jobs already covered by a plan.
+    planned_jobs: Vec<bool>,
+}
+
+impl TdcaScheduler {
+    pub fn new() -> TdcaScheduler {
+        TdcaScheduler {
+            plan: VecDeque::new(),
+            planned_jobs: Vec::new(),
+        }
+    }
+
+    /// Build clusters for every arrived-but-unplanned job and append the
+    /// placement plan.
+    fn replan(&mut self, state: &SimState) {
+        if self.planned_jobs.len() < state.jobs.len() {
+            self.planned_jobs.resize(state.jobs.len(), false);
+        }
+        let n_exec = state.cluster.len();
+        // Executor load accumulated by this planning round (work / speed).
+        let mut exec_load: Vec<f64> = state.exec_ready.clone();
+
+        for (ji, job) in state.jobs.iter().enumerate() {
+            if !state.arrived[ji] || self.planned_jobs[ji] {
+                continue;
+            }
+            self.planned_jobs[ji] = true;
+            let n = job.n_tasks();
+
+            // --- Phase 1: critical-parent chains ---------------------------
+            // critical parent of v = parent maximizing rank_down + edge
+            // weight (the latest-arriving input).
+            let rd = &state.rank_down[ji];
+            let c_avg = state.cluster.c_avg();
+            let v_avg = state.cluster.v_avg();
+            let mut cluster_of: Vec<Option<usize>> = vec![None; n];
+            let mut clusters: Vec<Vec<usize>> = Vec::new();
+            // Walk nodes in reverse topological order; an unclustered node
+            // starts a new cluster and pulls in its critical-parent chain.
+            for &v in job.topo().iter().rev() {
+                if cluster_of[v].is_some() {
+                    continue;
+                }
+                let cid = clusters.len();
+                clusters.push(Vec::new());
+                let mut cur = v;
+                loop {
+                    cluster_of[cur] = Some(cid);
+                    clusters[cid].push(cur);
+                    // Find the critical parent not yet clustered.
+                    let mut crit: Option<(f64, usize)> = None;
+                    for e in &job.parents[cur] {
+                        if cluster_of[e.other].is_some() {
+                            continue;
+                        }
+                        let arrive = rd[e.other]
+                            + job.tasks[e.other].compute / v_avg
+                            + e.data / c_avg;
+                        if crit.map(|(b, _)| arrive > b).unwrap_or(true) {
+                            crit = Some((arrive, e.other));
+                        }
+                    }
+                    match crit {
+                        Some((_, p)) => cur = p,
+                        None => break,
+                    }
+                }
+                // The chain was built child→ancestor; reverse to topo order.
+                clusters[cid].reverse();
+            }
+
+            // --- Phase 2: map clusters to executors ------------------------
+            // Heaviest cluster first onto the executor with minimum
+            // (load + cluster_work / speed) — merging happens naturally
+            // when clusters outnumber executors.
+            let mut order: Vec<usize> = (0..clusters.len()).collect();
+            let work =
+                |c: &Vec<usize>| -> f64 { c.iter().map(|&t| job.tasks[t].compute).sum() };
+            order.sort_by(|&a, &b| {
+                work(&clusters[b])
+                    .partial_cmp(&work(&clusters[a]))
+                    .unwrap()
+            });
+            let mut cluster_exec: Vec<usize> = vec![0; clusters.len()];
+            for &cid in &order {
+                let w = work(&clusters[cid]);
+                let best = (0..n_exec)
+                    .min_by(|&a, &b| {
+                        let la = exec_load[a] + w / state.cluster.speed(a);
+                        let lb = exec_load[b] + w / state.cluster.speed(b);
+                        la.partial_cmp(&lb).unwrap()
+                    })
+                    .unwrap();
+                cluster_exec[cid] = best;
+                exec_load[best] += w / state.cluster.speed(best);
+            }
+
+            // --- Phases 3+4: emit in global topological order --------------
+            // (duplication is decided at emission time in `step`, where the
+            // live timeline is known).
+            for &v in job.topo() {
+                let cid = cluster_of[v].unwrap();
+                self.plan
+                    .push_back((TaskRef::new(ji, v), cluster_exec[cid]));
+            }
+        }
+    }
+}
+
+impl Default for TdcaScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for TdcaScheduler {
+    fn name(&self) -> String {
+        "TDCA".to_string()
+    }
+
+    fn reset(&mut self) {
+        self.plan.clear();
+        self.planned_jobs.clear();
+    }
+
+    fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        self.replan(state);
+        // Emit the first plan entry that is currently executable (plans are
+        // topo-ordered per job, so the head is almost always executable;
+        // cross-job interleavings may require a scan).
+        let idx = self
+            .plan
+            .iter()
+            .position(|(t, _)| state.is_executable(*t));
+        let Some(idx) = idx else {
+            return Ok(None);
+        };
+        let (task, exec) = self.plan.remove(idx).unwrap();
+        // Phase 3: duplicate the critical parent onto `exec` if it beats
+        // the plain placement (TDCA's duplication rule, via CPEFT).
+        let direct = eft(state, task, exec);
+        let mut best = (Allocation::Direct { exec }, direct);
+        for e in &state.jobs[task.job].parents[task.node] {
+            let f = cpeft(state, task, e.other, exec);
+            if f + 1e-12 < best.1 {
+                best = (
+                    Allocation::Duplicate {
+                        exec,
+                        parent: e.other,
+                    },
+                    f,
+                );
+            }
+        }
+        Ok(Some((task, best.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::{ClusterConfig, WorkloadConfig};
+    use crate::sim::Simulator;
+    use crate::workload::WorkloadGenerator;
+
+    #[test]
+    fn tdca_completes_batch_and_validates() {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(8), 2);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), 2).generate();
+        let mut sim = Simulator::new(cluster, w);
+        let report = sim.run(&mut TdcaScheduler::new()).unwrap();
+        assert!(report.makespan > 0.0);
+        sim.state.validate().unwrap();
+    }
+
+    #[test]
+    fn tdca_handles_continuous_arrivals() {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(8), 3);
+        let w = WorkloadGenerator::new(WorkloadConfig::continuous(6), 3).generate();
+        let mut sim = Simulator::new(cluster, w);
+        let report = sim.run(&mut TdcaScheduler::new()).unwrap();
+        assert!(report.makespan > 0.0);
+        sim.state.validate().unwrap();
+    }
+
+    #[test]
+    fn tdca_reset_allows_reuse() {
+        let mut sched = TdcaScheduler::new();
+        for seed in 0..2 {
+            let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(4), seed);
+            let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), seed).generate();
+            let mut sim = Simulator::new(cluster, w);
+            sim.run(&mut sched).unwrap();
+            sim.state.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn clusters_colocate_chains() {
+        // A pure chain should land entirely on one executor (single
+        // cluster), eliminating all communication.
+        let cluster = Cluster::homogeneous(4, 2.0, 10.0);
+        let job = crate::dag::Job::new(
+            0,
+            "chain",
+            0.0,
+            vec![1.0, 1.0, 1.0, 1.0],
+            &[(0, 1, 50.0), (1, 2, 50.0), (2, 3, 50.0)],
+        );
+        let w = crate::workload::Workload::new(vec![job]);
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut TdcaScheduler::new()).unwrap();
+        let execs: Vec<usize> = (0..4)
+            .map(|n| sim.state.placements[0][n][0].exec)
+            .collect();
+        assert!(
+            execs.iter().all(|&e| e == execs[0]),
+            "chain split across {execs:?}"
+        );
+    }
+}

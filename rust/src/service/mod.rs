@@ -1,0 +1,13 @@
+//! Plug-and-play scheduling service (paper §5.1, Fig 3).
+//!
+//! The data-processing platform's resource manager connects over TCP and
+//! speaks a JSON-line protocol: it submits jobs, reports task completions
+//! via heartbeats, and asks the Lachesis agent for the next assignments.
+//! The agent holds the same [`SimState`] the simulator uses, so the
+//! decision logic is byte-for-byte the scheduler zoo of [`crate::sched`].
+
+pub mod protocol;
+pub mod server;
+
+pub use protocol::{Request, Response};
+pub use server::{AgentServer, ServiceClient};

@@ -1,0 +1,358 @@
+//! JSON-line wire protocol between the platform's resource manager (master
+//! node) and the Lachesis agent.
+//!
+//! One JSON object per line. Requests:
+//!
+//! * `{"type":"submit_job", "job": {name, arrival, computes, edges}}`
+//! * `{"type":"task_complete", "job": j, "node": n, "time": t}`  (heartbeat)
+//! * `{"type":"schedule", "time": t}` — ask for assignments at wall time t
+//! * `{"type":"status"}` / `{"type":"shutdown"}`
+//!
+//! Responses mirror them with `"ok"` / `"assignments"` / `"status"`.
+
+use crate::dag::Job;
+use crate::sim::Allocation;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// A request from the resource manager.
+#[derive(Debug, Clone)]
+pub enum Request {
+    SubmitJob {
+        name: String,
+        arrival: f64,
+        computes: Vec<f64>,
+        edges: Vec<(usize, usize, f64)>,
+    },
+    TaskComplete {
+        job: usize,
+        node: usize,
+        time: f64,
+    },
+    Schedule {
+        time: f64,
+    },
+    Status,
+    Shutdown,
+}
+
+/// One task assignment in a schedule response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub job: usize,
+    pub node: usize,
+    pub exec: usize,
+    /// Parent duplicated onto `exec` first, if any.
+    pub dup_parent: Option<usize>,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// A response to the resource manager.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Ok {
+        job_id: Option<usize>,
+    },
+    Assignments(Vec<Assignment>),
+    Status {
+        jobs: usize,
+        assigned: usize,
+        executors: usize,
+        horizon: f64,
+    },
+    Error(String),
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::SubmitJob {
+                name,
+                arrival,
+                computes,
+                edges,
+            } => {
+                let edges_json: Vec<Json> = edges
+                    .iter()
+                    .map(|&(u, v, d)| {
+                        Json::Arr(vec![Json::from(u), Json::from(v), Json::from(d)])
+                    })
+                    .collect();
+                Json::from_pairs(vec![
+                    ("type", Json::from("submit_job")),
+                    ("name", Json::from(name.clone())),
+                    ("arrival", Json::from(*arrival)),
+                    ("computes", Json::from(computes.clone())),
+                    ("edges", Json::Arr(edges_json)),
+                ])
+            }
+            Request::TaskComplete { job, node, time } => Json::from_pairs(vec![
+                ("type", Json::from("task_complete")),
+                ("job", Json::from(*job)),
+                ("node", Json::from(*node)),
+                ("time", Json::from(*time)),
+            ]),
+            Request::Schedule { time } => Json::from_pairs(vec![
+                ("type", Json::from("schedule")),
+                ("time", Json::from(*time)),
+            ]),
+            Request::Status => Json::from_pairs(vec![("type", Json::from("status"))]),
+            Request::Shutdown => Json::from_pairs(vec![("type", Json::from("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request> {
+        match v.req_str("type").map_err(|e| anyhow!("{e}"))? {
+            "submit_job" => {
+                let computes = v
+                    .req("computes")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("computes must be an array"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad compute")))
+                    .collect::<Result<Vec<_>>>()?;
+                let edges = v
+                    .req("edges")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("edges must be an array"))?
+                    .iter()
+                    .map(|e| {
+                        let u = e.at(0).and_then(Json::as_usize);
+                        let w = e.at(1).and_then(Json::as_usize);
+                        let d = e.at(2).and_then(Json::as_f64);
+                        match (u, w, d) {
+                            (Some(u), Some(w), Some(d)) => Ok((u, w, d)),
+                            _ => Err(anyhow!("bad edge")),
+                        }
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Request::SubmitJob {
+                    name: v.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                    arrival: v.req_f64("arrival").map_err(|e| anyhow!("{e}"))?,
+                    computes,
+                    edges,
+                })
+            }
+            "task_complete" => Ok(Request::TaskComplete {
+                job: v.req_usize("job").map_err(|e| anyhow!("{e}"))?,
+                node: v.req_usize("node").map_err(|e| anyhow!("{e}"))?,
+                time: v.req_f64("time").map_err(|e| anyhow!("{e}"))?,
+            }),
+            "schedule" => Ok(Request::Schedule {
+                time: v.req_f64("time").map_err(|e| anyhow!("{e}"))?,
+            }),
+            "status" => Ok(Request::Status),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown request type '{other}'"),
+        }
+    }
+
+    /// Build the Job object for a submit request.
+    pub fn build_job(&self, id: usize) -> Result<Job> {
+        match self {
+            Request::SubmitJob {
+                name,
+                arrival,
+                computes,
+                edges,
+            } => Job::try_new(id, name.clone(), *arrival, computes.clone(), edges),
+            _ => bail!("not a submit_job request"),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Ok { job_id } => {
+                let mut o = Json::from_pairs(vec![("type", Json::from("ok"))]);
+                if let Some(id) = job_id {
+                    o.set("job_id", Json::from(*id));
+                }
+                o
+            }
+            Response::Assignments(asgs) => {
+                let items: Vec<Json> = asgs
+                    .iter()
+                    .map(|a| {
+                        let mut o = Json::from_pairs(vec![
+                            ("job", Json::from(a.job)),
+                            ("node", Json::from(a.node)),
+                            ("exec", Json::from(a.exec)),
+                            ("start", Json::from(a.start)),
+                            ("finish", Json::from(a.finish)),
+                        ]);
+                        if let Some(p) = a.dup_parent {
+                            o.set("dup_parent", Json::from(p));
+                        }
+                        o
+                    })
+                    .collect();
+                Json::from_pairs(vec![
+                    ("type", Json::from("assignments")),
+                    ("items", Json::Arr(items)),
+                ])
+            }
+            Response::Status {
+                jobs,
+                assigned,
+                executors,
+                horizon,
+            } => Json::from_pairs(vec![
+                ("type", Json::from("status")),
+                ("jobs", Json::from(*jobs)),
+                ("assigned", Json::from(*assigned)),
+                ("executors", Json::from(*executors)),
+                ("horizon", Json::from(*horizon)),
+            ]),
+            Response::Error(msg) => Json::from_pairs(vec![
+                ("type", Json::from("error")),
+                ("message", Json::from(msg.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response> {
+        match v.req_str("type").map_err(|e| anyhow!("{e}"))? {
+            "ok" => Ok(Response::Ok {
+                job_id: v.get("job_id").and_then(Json::as_usize),
+            }),
+            "assignments" => {
+                let items = v
+                    .req("items")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("items must be an array"))?
+                    .iter()
+                    .map(|a| {
+                        Ok(Assignment {
+                            job: a.req_usize("job").map_err(|e| anyhow!("{e}"))?,
+                            node: a.req_usize("node").map_err(|e| anyhow!("{e}"))?,
+                            exec: a.req_usize("exec").map_err(|e| anyhow!("{e}"))?,
+                            dup_parent: a.get("dup_parent").and_then(Json::as_usize),
+                            start: a.req_f64("start").map_err(|e| anyhow!("{e}"))?,
+                            finish: a.req_f64("finish").map_err(|e| anyhow!("{e}"))?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Response::Assignments(items))
+            }
+            "status" => Ok(Response::Status {
+                jobs: v.req_usize("jobs").map_err(|e| anyhow!("{e}"))?,
+                assigned: v.req_usize("assigned").map_err(|e| anyhow!("{e}"))?,
+                executors: v.req_usize("executors").map_err(|e| anyhow!("{e}"))?,
+                horizon: v.req_f64("horizon").map_err(|e| anyhow!("{e}"))?,
+            }),
+            "error" => Ok(Response::Error(
+                v.req_str("message").map_err(|e| anyhow!("{e}"))?.to_string(),
+            )),
+            other => bail!("unknown response type '{other}'"),
+        }
+    }
+}
+
+/// Translate an applied allocation into a wire assignment.
+pub fn assignment_from(
+    job: usize,
+    node: usize,
+    alloc: Allocation,
+    start: f64,
+    finish: f64,
+) -> Assignment {
+    match alloc {
+        Allocation::Direct { exec } => Assignment {
+            job,
+            node,
+            exec,
+            dup_parent: None,
+            start,
+            finish,
+        },
+        Allocation::Duplicate { exec, parent } => Assignment {
+            job,
+            node,
+            exec,
+            dup_parent: Some(parent),
+            start,
+            finish,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::SubmitJob {
+                name: "q1".into(),
+                arrival: 1.5,
+                computes: vec![1.0, 2.0],
+                edges: vec![(0, 1, 3.0)],
+            },
+            Request::TaskComplete {
+                job: 1,
+                node: 2,
+                time: 9.0,
+            },
+            Request::Schedule { time: 10.0 },
+            Request::Status,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let j = r.to_json();
+            let r2 = Request::from_json(&j).unwrap();
+            assert_eq!(j.to_string(), r2.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = vec![
+            Response::Ok { job_id: Some(3) },
+            Response::Assignments(vec![Assignment {
+                job: 0,
+                node: 1,
+                exec: 2,
+                dup_parent: Some(0),
+                start: 1.0,
+                finish: 2.0,
+            }]),
+            Response::Status {
+                jobs: 2,
+                assigned: 5,
+                executors: 8,
+                horizon: 42.0,
+            },
+            Response::Error("boom".into()),
+        ];
+        for r in resps {
+            let j = r.to_json();
+            let r2 = Response::from_json(&j).unwrap();
+            assert_eq!(j.to_string(), r2.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn build_job_validates() {
+        let r = Request::SubmitJob {
+            name: "bad".into(),
+            arrival: 0.0,
+            computes: vec![1.0, 1.0],
+            edges: vec![(0, 1, 1.0), (1, 0, 1.0)],
+        };
+        assert!(r.build_job(0).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_types() {
+        let v = Json::parse(r#"{"type": "nope"}"#).unwrap();
+        assert!(Request::from_json(&v).is_err());
+        assert!(Response::from_json(&v).is_err());
+    }
+}

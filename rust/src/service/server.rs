@@ -1,0 +1,236 @@
+//! The Lachesis agent as a network service, plus the resource-manager
+//! client used by examples and tests. std::net + threads (the offline
+//! registry has no tokio; the protocol is line-oriented and the master
+//! node is a single long-lived peer, so blocking I/O is the right tool).
+
+use super::protocol::{assignment_from, Request, Response};
+use crate::cluster::Cluster;
+use crate::sched::Scheduler;
+use crate::sim::SimState;
+use crate::util::json::Json;
+use crate::workload::Workload;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// The scheduling agent: live state + a scheduler behind a TCP endpoint.
+pub struct AgentServer {
+    state: SimState,
+    scheduler: Box<dyn Scheduler + Send>,
+}
+
+impl AgentServer {
+    pub fn new(cluster: Cluster, scheduler: Box<dyn Scheduler + Send>) -> AgentServer {
+        AgentServer {
+            state: SimState::new(cluster, Workload::new_empty()),
+            scheduler,
+        }
+    }
+
+    /// Handle one request against the live state.
+    pub fn handle(&mut self, req: Request) -> Response {
+        match req {
+            Request::SubmitJob { .. } => match req.build_job(0) {
+                Ok(job) => {
+                    let id = self.state.add_job(job);
+                    self.state.mark_arrived(id);
+                    Response::Ok { job_id: Some(id) }
+                }
+                Err(e) => Response::Error(format!("invalid job: {e}")),
+            },
+            Request::TaskComplete { time, .. } => {
+                // Heartbeat: completions advance the agent's wall clock
+                // (placements already fix AFTs deterministically).
+                if time > self.state.wall {
+                    self.state.wall = time;
+                }
+                Response::Ok { job_id: None }
+            }
+            Request::Schedule { time } => {
+                if time > self.state.wall {
+                    self.state.wall = time;
+                }
+                let mut out = Vec::new();
+                loop {
+                    if self.state.executable().is_empty() {
+                        break;
+                    }
+                    match self.scheduler.step(&self.state) {
+                        Err(e) => return Response::Error(format!("scheduler: {e}")),
+                        Ok(None) => break,
+                        Ok(Some((task, alloc))) => {
+                            let finish = self.state.apply(task, alloc);
+                            let pl = self.state.placements[task.job][task.node]
+                                .iter()
+                                .rev()
+                                .find(|p| !p.duplicate)
+                                .copied()
+                                .expect("primary placement exists");
+                            out.push(assignment_from(task.job, task.node, alloc, pl.start, finish));
+                        }
+                    }
+                }
+                Response::Assignments(out)
+            }
+            Request::Status => Response::Status {
+                jobs: self.state.jobs.len(),
+                assigned: self.state.n_assigned,
+                executors: self.state.cluster.len(),
+                horizon: self.state.horizon,
+            },
+            Request::Shutdown => Response::Ok { job_id: None },
+        }
+    }
+
+    /// Serve connections until a `shutdown` request arrives. Returns the
+    /// bound address through `on_bound` (use port 0 for ephemeral).
+    pub fn serve(mut self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        on_bound(listener.local_addr()?);
+        'outer: for stream in listener.incoming() {
+            let stream = stream?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut writer = BufWriter::new(stream);
+            let mut line = String::new();
+            loop {
+                line.clear();
+                let n = reader.read_line(&mut line)?;
+                if n == 0 {
+                    break; // peer closed; accept the next master
+                }
+                let resp = match Json::parse(line.trim())
+                    .map_err(|e| anyhow!("{e}"))
+                    .and_then(|v| Request::from_json(&v))
+                {
+                    Ok(req) => {
+                        let shutdown = matches!(req, Request::Shutdown);
+                        let resp = self.handle(req);
+                        writeln!(writer, "{}", resp.to_json().to_string())?;
+                        writer.flush()?;
+                        if shutdown {
+                            break 'outer;
+                        }
+                        continue;
+                    }
+                    Err(e) => Response::Error(format!("bad request: {e}")),
+                };
+                writeln!(writer, "{}", resp.to_json().to_string())?;
+                writer.flush()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Blocking client for the agent protocol (what the resource manager — or
+/// our examples/tests — runs).
+pub struct ServiceClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl ServiceClient {
+    pub fn connect(addr: &str) -> Result<ServiceClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(ServiceClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.to_json().to_string())?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        Response::from_json(&v)
+    }
+}
+
+impl Workload {
+    /// An empty workload (service mode starts with no jobs).
+    pub fn new_empty() -> Workload {
+        Workload { jobs: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::FifoScheduler;
+
+    #[test]
+    fn handle_submit_schedule_status() {
+        let cluster = Cluster::homogeneous(2, 2.0, 100.0);
+        let mut agent = AgentServer::new(cluster, Box::new(FifoScheduler::new()));
+        let resp = agent.handle(Request::SubmitJob {
+            name: "j".into(),
+            arrival: 0.0,
+            computes: vec![2.0, 4.0],
+            edges: vec![(0, 1, 10.0)],
+        });
+        match resp {
+            Response::Ok { job_id: Some(0) } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        let resp = agent.handle(Request::Schedule { time: 0.0 });
+        match resp {
+            Response::Assignments(asgs) => {
+                assert_eq!(asgs.len(), 2);
+                assert!(asgs[0].finish <= asgs[1].finish);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match agent.handle(Request::Status) {
+            Response::Status { jobs, assigned, .. } => {
+                assert_eq!(jobs, 1);
+                assert_eq!(assigned, 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_rejects_bad_job() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let mut agent = AgentServer::new(cluster, Box::new(FifoScheduler::new()));
+        let resp = agent.handle(Request::SubmitJob {
+            name: "cyclic".into(),
+            arrival: 0.0,
+            computes: vec![1.0, 1.0],
+            edges: vec![(0, 1, 1.0), (1, 0, 1.0)],
+        });
+        assert!(matches!(resp, Response::Error(_)));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let cluster = Cluster::homogeneous(2, 2.0, 100.0);
+        let agent = AgentServer::new(cluster, Box::new(FifoScheduler::new()));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            agent
+                .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+        let resp = client
+            .call(&Request::SubmitJob {
+                name: "q".into(),
+                arrival: 0.0,
+                computes: vec![1.0],
+                edges: vec![],
+            })
+            .unwrap();
+        assert!(matches!(resp, Response::Ok { job_id: Some(0) }));
+        let resp = client.call(&Request::Schedule { time: 0.0 }).unwrap();
+        match resp {
+            Response::Assignments(a) => assert_eq!(a.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        client.call(&Request::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,16 @@
+//! Event-driven simulator for the heterogeneous data-processing platform
+//! (paper Appendix D, Algorithm 3).
+//!
+//! The simulator owns the shared scheduling state ([`state::SimState`]):
+//! executor timelines, task placements (including duplicated copies), the
+//! executable frontier and cached rank features. The engine replays
+//! scheduling events (job arrivals, task completions) in time order and
+//! invokes the scheduler at each event until no executable unassigned task
+//! remains, recording per-decision wall-clock latency — the paper's
+//! decision-time metric (Figs 5d/6d/7b).
+
+pub mod engine;
+pub mod state;
+
+pub use engine::Simulator;
+pub use state::{Allocation, Placement, SimState};

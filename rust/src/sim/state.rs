@@ -1,0 +1,480 @@
+//! Shared scheduling state: placements (with task duplication), executor
+//! timelines, the executable frontier, and the paper's timing equations'
+//! common building blocks (actual finish times, data-ready times).
+
+use crate::cluster::Cluster;
+use crate::dag::{ranks, Job, NodeId, TaskRef};
+use crate::workload::Workload;
+
+/// One scheduled copy of a task on an executor (a member of `R_{n_i}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub exec: usize,
+    /// Actual start time (AST).
+    pub start: f64,
+    /// Actual finish time (AFT, Eq 1).
+    pub finish: f64,
+    /// True if this copy was created by DEFT's parent duplication.
+    pub duplicate: bool,
+}
+
+/// A scheduler's allocation decision for one selected task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Allocation {
+    /// Run the task on `exec` (EFT mode).
+    Direct { exec: usize },
+    /// First duplicate parent `parent` onto `exec`, then run the task there
+    /// (CPEFT mode, Eq 9–10).
+    Duplicate { exec: usize, parent: NodeId },
+}
+
+impl Allocation {
+    pub fn exec(&self) -> usize {
+        match *self {
+            Allocation::Direct { exec } => exec,
+            Allocation::Duplicate { exec, .. } => exec,
+        }
+    }
+}
+
+/// Everything a scheduler may observe, plus assignment bookkeeping.
+#[derive(Debug, Clone)]
+pub struct SimState {
+    pub cluster: Cluster,
+    pub jobs: Vec<Job>,
+    /// Whether each job has arrived (continuous mode).
+    pub arrived: Vec<bool>,
+    /// Whether each task has been assigned (its primary copy scheduled).
+    pub assigned: Vec<Vec<bool>>,
+    /// All scheduled copies per task: `placements[job][node]` = `R_{n_i}`.
+    pub placements: Vec<Vec<Vec<Placement>>>,
+    /// Time each executor's timeline becomes free (append scheduling).
+    pub exec_ready: Vec<f64>,
+    /// Full per-executor schedule log for validation and reporting.
+    pub exec_log: Vec<Vec<(TaskRef, Placement)>>,
+    /// Current simulation wall time.
+    pub wall: f64,
+    /// max AFT over all scheduled copies — the running makespan horizon.
+    pub horizon: f64,
+    /// Cached rank_up per job (Eq 6, with cluster averages).
+    pub rank_up: Vec<Vec<f64>>,
+    /// Cached rank_down per job (Eq 7).
+    pub rank_down: Vec<Vec<f64>>,
+    /// Count of assigned tasks (primary copies).
+    pub n_assigned: usize,
+    /// Count of duplicated copies created.
+    pub n_duplicates: usize,
+    /// Incremental executable frontier (arrived ∧ unassigned ∧ parents all
+    /// assigned), kept sorted for deterministic iteration.
+    frontier: Vec<TaskRef>,
+}
+
+impl SimState {
+    pub fn new(cluster: Cluster, workload: Workload) -> SimState {
+        let v_avg = cluster.v_avg();
+        let c_avg = cluster.c_avg();
+        let jobs = workload.jobs;
+        let rank_up: Vec<Vec<f64>> = jobs.iter().map(|j| ranks::rank_up(j, v_avg, c_avg)).collect();
+        let rank_down: Vec<Vec<f64>> = jobs
+            .iter()
+            .map(|j| ranks::rank_down(j, v_avg, c_avg))
+            .collect();
+        let n_exec = cluster.len();
+        SimState {
+            arrived: vec![false; jobs.len()],
+            assigned: jobs.iter().map(|j| vec![false; j.n_tasks()]).collect(),
+            placements: jobs.iter().map(|j| vec![Vec::new(); j.n_tasks()]).collect(),
+            exec_ready: vec![0.0; n_exec],
+            exec_log: vec![Vec::new(); n_exec],
+            wall: 0.0,
+            horizon: 0.0,
+            rank_up,
+            rank_down,
+            n_assigned: 0,
+            n_duplicates: 0,
+            frontier: Vec::new(),
+            cluster,
+            jobs,
+        }
+    }
+
+    pub fn n_tasks_total(&self) -> usize {
+        self.jobs.iter().map(|j| j.n_tasks()).sum()
+    }
+
+    pub fn task_compute(&self, t: TaskRef) -> f64 {
+        self.jobs[t.job].tasks[t.node].compute
+    }
+
+    /// Dynamically add a job (plug-and-play service mode, where jobs are
+    /// submitted over the wire instead of known up front). Returns its id.
+    pub fn add_job(&mut self, mut job: Job) -> usize {
+        let id = self.jobs.len();
+        job.id = id;
+        let v_avg = self.cluster.v_avg();
+        let c_avg = self.cluster.c_avg();
+        self.rank_up.push(ranks::rank_up(&job, v_avg, c_avg));
+        self.rank_down.push(ranks::rank_down(&job, v_avg, c_avg));
+        self.arrived.push(false);
+        self.assigned.push(vec![false; job.n_tasks()]);
+        self.placements.push(vec![Vec::new(); job.n_tasks()]);
+        self.jobs.push(job);
+        id
+    }
+
+    /// Mark a job as arrived and add its newly executable tasks to the
+    /// frontier. Called by the engine on arrival events.
+    pub fn mark_arrived(&mut self, job: usize) {
+        if self.arrived[job] {
+            return;
+        }
+        self.arrived[job] = true;
+        for node in 0..self.jobs[job].n_tasks() {
+            let t = TaskRef::new(job, node);
+            if self.compute_executable(t) {
+                self.frontier.push(t);
+            }
+        }
+        self.frontier.sort_unstable();
+    }
+
+    /// Slow-path executability check (used to maintain the frontier).
+    fn compute_executable(&self, t: TaskRef) -> bool {
+        self.arrived[t.job]
+            && !self.assigned[t.job][t.node]
+            && self.jobs[t.job].parents[t.node]
+                .iter()
+                .all(|e| self.assigned[t.job][e.other])
+    }
+
+    /// The executable set `A_t` (paper notation): arrived, unassigned,
+    /// every parent assigned. Sorted, deterministic.
+    pub fn executable(&self) -> &[TaskRef] {
+        &self.frontier
+    }
+
+    pub fn is_executable(&self, t: TaskRef) -> bool {
+        self.frontier.binary_search(&t).is_ok()
+    }
+
+    /// Earliest finish time among a task's scheduled copies
+    /// (`min_{r_k ∈ R_{n_p}} AFT(n_p, r_k)`; ∞ if unassigned).
+    pub fn min_aft(&self, t: TaskRef) -> f64 {
+        self.placements[t.job][t.node]
+            .iter()
+            .map(|p| p.finish)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Has the task's earliest copy finished by the current wall time?
+    pub fn is_finished(&self, t: TaskRef) -> bool {
+        self.min_aft(t) <= self.wall
+    }
+
+    /// Earliest time parent `p`'s output data can be available on executor
+    /// `exec` (Eq 9's AFTC): min over parent copies of copy AFT + transfer.
+    pub fn parent_data_at(&self, child: TaskRef, parent: NodeId, exec: usize) -> f64 {
+        let p = TaskRef::new(child.job, parent);
+        let edge = self.jobs[child.job].edge_data(parent, child.node);
+        self.placements[p.job][p.node]
+            .iter()
+            .map(|pl| pl.finish + self.cluster.transfer_time(edge, pl.exec, exec))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Earliest time *all* of a task's input data is available on `exec`
+    /// (the inner max of Eq 2). Job arrival bounds entry tasks.
+    pub fn data_ready(&self, t: TaskRef, exec: usize) -> f64 {
+        let job = &self.jobs[t.job];
+        let mut ready = job.arrival;
+        for e in &job.parents[t.node] {
+            let avail = self.parent_data_at(t, e.other, exec);
+            if avail > ready {
+                ready = avail;
+            }
+        }
+        ready
+    }
+
+    /// Remaining (unassigned) task count of a job.
+    pub fn job_left_tasks(&self, job: usize) -> usize {
+        self.assigned[job].iter().filter(|&&a| !a).count()
+    }
+
+    /// Remaining (unassigned) work of a job, in GHz·s.
+    pub fn job_left_work(&self, job: usize) -> f64 {
+        self.assigned[job]
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| !a)
+            .map(|(n, _)| self.jobs[job].tasks[n].compute)
+            .sum()
+    }
+
+    pub fn all_assigned(&self) -> bool {
+        self.n_assigned == self.n_tasks_total()
+    }
+
+    /// Apply an allocation decision for `task`. Returns the task's finish
+    /// time (its completion event time). Panics if `task` is not
+    /// executable or `alloc` is invalid — schedulers must only emit legal
+    /// decisions; the engine relies on this invariant.
+    pub fn apply(&mut self, task: TaskRef, alloc: Allocation) -> f64 {
+        assert!(
+            self.is_executable(task),
+            "scheduler selected non-executable task {task:?}"
+        );
+        let exec = alloc.exec();
+        assert!(exec < self.cluster.len(), "executor {exec} out of range");
+        let arrival = self.jobs[task.job].arrival;
+
+        if let Allocation::Duplicate { parent, .. } = alloc {
+            assert!(
+                self.jobs[task.job].parents[task.node]
+                    .iter()
+                    .any(|e| e.other == parent),
+                "duplicate of non-parent node {parent}"
+            );
+            // Re-execute the parent on `exec`: it needs its own inputs
+            // there, plus the executor slot.
+            let p = TaskRef::new(task.job, parent);
+            let p_data = self.data_ready(p, exec);
+            let start = p_data
+                .max(self.exec_ready[exec])
+                .max(self.wall)
+                .max(arrival);
+            let finish = start + self.task_compute(p) / self.cluster.speed(exec);
+            let pl = Placement {
+                exec,
+                start,
+                finish,
+                duplicate: true,
+            };
+            self.placements[p.job][p.node].push(pl);
+            self.exec_ready[exec] = finish;
+            self.exec_log[exec].push((p, pl));
+            self.n_duplicates += 1;
+            if finish > self.horizon {
+                self.horizon = finish;
+            }
+        }
+
+        // Primary copy of the selected task.
+        let data = self.data_ready(task, exec);
+        let start = data
+            .max(self.exec_ready[exec])
+            .max(self.wall)
+            .max(arrival);
+        let finish = start + self.task_compute(task) / self.cluster.speed(exec);
+        let pl = Placement {
+            exec,
+            start,
+            finish,
+            duplicate: false,
+        };
+        self.placements[task.job][task.node].push(pl);
+        self.exec_ready[exec] = finish;
+        self.exec_log[exec].push((task, pl));
+        self.assigned[task.job][task.node] = true;
+        self.n_assigned += 1;
+        if finish > self.horizon {
+            self.horizon = finish;
+        }
+
+        // Frontier maintenance: remove `task`, add children that became
+        // executable.
+        if let Ok(idx) = self.frontier.binary_search(&task) {
+            self.frontier.remove(idx);
+        }
+        let child_ids: Vec<NodeId> = self.jobs[task.job].children[task.node]
+            .iter()
+            .map(|e| e.other)
+            .collect();
+        for c in child_ids {
+            let cref = TaskRef::new(task.job, c);
+            if self.compute_executable(cref) {
+                if let Err(idx) = self.frontier.binary_search(&cref) {
+                    self.frontier.insert(idx, cref);
+                }
+            }
+        }
+        finish
+    }
+
+    /// Completion time of a job: max AFT over primary copies (∞ until all
+    /// assigned).
+    pub fn job_completion(&self, job: usize) -> f64 {
+        let mut t = 0.0f64;
+        for node in 0..self.jobs[job].n_tasks() {
+            if !self.assigned[job][node] {
+                return f64::INFINITY;
+            }
+            // Primary (non-duplicate) copy finish.
+            let f = self.placements[job][node]
+                .iter()
+                .filter(|p| !p.duplicate)
+                .map(|p| p.finish)
+                .fold(f64::NEG_INFINITY, f64::max);
+            if f > t {
+                t = f;
+            }
+        }
+        t
+    }
+
+    /// Validate executor timelines: no overlapping intervals on any
+    /// executor, every start ≥ job arrival, every child starts after the
+    /// copy of each parent it could have read from. Used by tests and the
+    /// `--validate` flag.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::bail;
+        for (e, log) in self.exec_log.iter().enumerate() {
+            let mut sorted = log.clone();
+            sorted.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+            for w in sorted.windows(2) {
+                if w[1].1.start < w[0].1.finish - 1e-9 {
+                    bail!(
+                        "executor {e}: overlap {:?}@{:.3}-{:.3} vs {:?}@{:.3}",
+                        w[0].0,
+                        w[0].1.start,
+                        w[0].1.finish,
+                        w[1].0,
+                        w[1].1.start
+                    );
+                }
+            }
+        }
+        for (ji, job) in self.jobs.iter().enumerate() {
+            for node in 0..job.n_tasks() {
+                for pl in &self.placements[ji][node] {
+                    if pl.start + 1e-9 < job.arrival {
+                        bail!("task ({ji},{node}) starts before its job arrives");
+                    }
+                    // Data-readiness: the copy must not start before every
+                    // parent's data could be at pl.exec.
+                    for edge in &job.parents[node] {
+                        let avail =
+                            self.parent_data_at(TaskRef::new(ji, node), edge.other, pl.exec);
+                        if pl.start + 1e-6 < avail {
+                            bail!(
+                                "task ({ji},{node}) on exec {} starts {:.4} before parent {} data at {:.4}",
+                                pl.exec,
+                                pl.start,
+                                edge.other,
+                                avail
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dag::Job;
+    use crate::workload::Workload;
+
+    fn two_exec_state() -> SimState {
+        // speeds 1.0 and 2.0, comm 10 MB/s
+        let mut cluster = Cluster::homogeneous(2, 1.0, 10.0);
+        cluster.executors[1].speed = 2.0;
+        // chain 0 -> 1 with 20 MB edge; w = [4, 6]
+        let job = Job::new(0, "chain", 0.0, vec![4.0, 6.0], &[(0, 1, 20.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st
+    }
+
+    #[test]
+    fn frontier_starts_with_entries() {
+        let st = two_exec_state();
+        assert_eq!(st.executable(), &[TaskRef::new(0, 0)]);
+        assert!(!st.is_executable(TaskRef::new(0, 1)));
+    }
+
+    #[test]
+    fn apply_direct_chain_accounts_comm() {
+        let mut st = two_exec_state();
+        let t0 = TaskRef::new(0, 0);
+        let f0 = st.apply(t0, Allocation::Direct { exec: 0 });
+        assert!((f0 - 4.0).abs() < 1e-12); // 4 / 1.0
+        assert!(st.is_executable(TaskRef::new(0, 1)));
+        // child on other executor: data ready at 4 + 20/10 = 6; run 6/2 = 3.
+        let f1 = st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 });
+        assert!((f1 - 9.0).abs() < 1e-12);
+        assert!((st.horizon - 9.0).abs() < 1e-12);
+        st.validate().unwrap();
+    }
+
+    #[test]
+    fn apply_same_executor_no_comm() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 1 });
+        // f0 = 4/2 = 2; child same exec: no comm, start at max(2, ready=2)
+        let f1 = st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 });
+        assert!((f1 - (2.0 + 3.0)).abs() < 1e-12);
+        st.validate().unwrap();
+    }
+
+    #[test]
+    fn apply_duplicate_parent() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // AFT 4 on e0
+        // Duplicate parent 0 onto e1, then run child there:
+        // dup start 0, dup finish 4/2 = 2; child start max(2, data local) = 2,
+        // finish 2 + 3 = 5. Better than the 9.0 of the cross-exec path.
+        let f1 = st.apply(
+            TaskRef::new(0, 1),
+            Allocation::Duplicate { exec: 1, parent: 0 },
+        );
+        assert!((f1 - 5.0).abs() < 1e-12, "f1={f1}");
+        assert_eq!(st.n_duplicates, 1);
+        assert_eq!(st.placements[0][0].len(), 2);
+        st.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "non-executable")]
+    fn apply_rejects_non_executable() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 0 });
+    }
+
+    #[test]
+    fn wall_time_lower_bounds_start() {
+        let mut st = two_exec_state();
+        st.wall = 100.0;
+        let f = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 1 });
+        assert!((f - 102.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_completion_ignores_duplicates() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        st.apply(
+            TaskRef::new(0, 1),
+            Allocation::Duplicate { exec: 1, parent: 0 },
+        );
+        // Completion = child primary finish (5.0), not the dup copy's.
+        assert!((st.job_completion(0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unarrived_jobs_not_executable() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let job = Job::new(0, "late", 50.0, vec![1.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        assert!(st.executable().is_empty());
+        st.mark_arrived(0);
+        assert_eq!(st.executable().len(), 1);
+        // Even though wall=0, start must respect arrival.
+        let f = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        assert!((f - 51.0).abs() < 1e-12);
+    }
+}

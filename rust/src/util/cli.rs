@@ -1,0 +1,178 @@
+//! A small command-line argument parser (the offline registry has no clap).
+//!
+//! Supports `binary <subcommand> [positionals] [--flag] [--key value|--key=value]`.
+//! Typed accessors return `anyhow` errors with the offending flag named, and
+//! unknown-flag detection catches typos in experiment scripts.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (e.g. `repro`, `train`, `serve`).
+    pub subcommand: Option<String>,
+    /// Remaining non-flag tokens in order.
+    pub positionals: Vec<String>,
+    /// `--key value` and `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own argv.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        // A `--key value` where the value was actually intended as a flag
+        // still counts via opts lookup of "true"/"false".
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_opt(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_opt(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_opt(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Validate that every provided option/flag is in the allowed set
+    /// (catches typos like `--episods`).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown option '--{k}' (allowed: {})",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["repro", "fig5", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positionals, vec!["fig5", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["train", "--episodes", "100", "--seed=7"]);
+        assert_eq!(a.usize_opt("episodes", 0).unwrap(), 100);
+        assert_eq!(a.u64_opt("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["repro", "--quick", "--out", "x.csv"]);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.opt("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b"]);
+        assert!(a.flag("a"));
+        assert!(a.flag("b"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_opt("n", 0).is_err());
+        assert!(a.f64_opt("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = parse(&["x", "--good", "1", "--bad", "2"]);
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize_opt("n", 5).unwrap(), 5);
+        assert_eq!(a.f64_opt("r", 1.5).unwrap(), 1.5);
+        assert_eq!(a.opt_or("name", "d"), "d");
+    }
+}

@@ -1,0 +1,57 @@
+//! Substrate utilities built from scratch (the offline registry carries
+//! only the `xla` crate's dependency closure, so the usual ecosystem
+//! crates — serde, clap, rand, criterion — are reimplemented here at the
+//! scale this project needs).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+/// Clamp helper for f64 (std's `clamp` panics on NaN bounds; ours is total).
+pub fn fclamp(x: f64, lo: f64, hi: f64) -> f64 {
+    if x < lo {
+        lo
+    } else if x > hi {
+        hi
+    } else {
+        x
+    }
+}
+
+/// Format a duration in seconds with adaptive units for human-facing logs.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fclamp_basic() {
+        assert_eq!(fclamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(fclamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(fclamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("us"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(600.0).ends_with("min"));
+    }
+}

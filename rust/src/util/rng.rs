@@ -1,0 +1,275 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! A PCG-XSH-RR 64/32-style generator seeded through SplitMix64, plus the
+//! distributions the simulator and workload generator need (uniform,
+//! exponential, normal, Poisson-process intervals, categorical sampling).
+//! Everything is reproducible from a single `u64` seed — experiment runs in
+//! the paper-reproduction harness record their seeds.
+
+/// A small, fast, reproducible PRNG (PCG64-like: 128-bit LCG state with
+/// xorshift-rotate output). Not cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let a = splitmix64(&mut s) as u128;
+        let b = splitmix64(&mut s) as u128;
+        let c = splitmix64(&mut s) as u128;
+        let d = splitmix64(&mut s) as u128;
+        let mut rng = Rng {
+            state: (a << 64) | b,
+            inc: ((c << 64) | d) | 1,
+        };
+        // Warm up: decorrelates close seeds.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive an independent child stream (for per-thread / per-episode rngs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut s = self.next_u64() ^ stream.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let a = splitmix64(&mut s) as u128;
+        let b = splitmix64(&mut s) as u128;
+        let c = splitmix64(&mut s) as u128;
+        let d = splitmix64(&mut s) as u128;
+        let mut rng = Rng {
+            state: (a << 64) | b,
+            inc: ((c << 64) | d) | 1,
+        };
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Next raw 64 bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. Panics if `n == 0`.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::below(0)");
+        // Lemire's multiply-shift with rejection for unbiasedness.
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn range_u(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn range_f(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Exponentially distributed sample with the given mean (inter-arrival
+    /// times of a Poisson process — the paper's continuous mode uses mean
+    /// 45 s).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        assert!(mean > 0.0);
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Pick a uniformly random element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Fisher–Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted sample over zero-mass weights");
+        let mut t = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample from a categorical distribution given by logits (softmax
+    /// sampling; numerically stabilized). `mask[i] == false` excludes `i`.
+    pub fn softmax_sample(&mut self, logits: &[f32], mask: &[bool], temperature: f64) -> usize {
+        debug_assert_eq!(logits.len(), mask.len());
+        let t = if temperature <= 0.0 { 1.0 } else { temperature };
+        let mut max = f64::NEG_INFINITY;
+        for (i, &l) in logits.iter().enumerate() {
+            if mask[i] && (l as f64) > max {
+                max = l as f64;
+            }
+        }
+        assert!(max.is_finite(), "softmax_sample: empty mask");
+        let mut weights = vec![0.0f64; logits.len()];
+        for i in 0..logits.len() {
+            if mask[i] {
+                weights[i] = ((logits[i] as f64 - max) / t).exp();
+            }
+        }
+        self.weighted(&weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::new(3);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(13);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(45.0)).sum::<f64>() / n as f64;
+        assert!((mean - 45.0).abs() < 1.5, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(19);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.2, "var={var}");
+    }
+
+    #[test]
+    fn weighted_respects_mass() {
+        let mut r = Rng::new(23);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..8000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "ratio={ratio}");
+    }
+
+    #[test]
+    fn softmax_sample_respects_mask() {
+        let mut r = Rng::new(29);
+        let logits = [0.0f32, 100.0, 0.0];
+        let mask = [true, false, true];
+        for _ in 0..100 {
+            let i = r.softmax_sample(&logits, &mask, 1.0);
+            assert_ne!(i, 1);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(31);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,184 @@
+//! Summary statistics, percentiles and CDFs for the experiment harness
+//! (decision-time distributions, makespan aggregation across seeds).
+
+/// Mean of a slice; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted data (`p` in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// Percentile when data is already sorted ascending.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Online recorder of samples: summary stats + empirical CDF extraction.
+/// Used to report the paper's "98% of decisions < X ms" figures (5d, 6d, 7b).
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    samples: Vec<f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn extend_from(&mut self, other: &Recorder) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        std_dev(&self.samples)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Empirical CDF evaluated at `points` thresholds: fraction of samples
+    /// ≤ threshold.
+    pub fn cdf_at(&self, points: &[f64]) -> Vec<f64> {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        points
+            .iter()
+            .map(|&t| {
+                let cnt = sorted.partition_point(|&x| x <= t);
+                cnt as f64 / sorted.len().max(1) as f64
+            })
+            .collect()
+    }
+
+    /// (value, cumulative fraction) pairs at `n` evenly spaced quantiles —
+    /// the series the paper plots as the decision-time CDF.
+    pub fn cdf_series(&self, n: usize) -> Vec<(f64, f64)> {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (0..=n)
+            .map(|i| {
+                let q = i as f64 / n as f64 * 100.0;
+                (percentile_sorted(&sorted, q), q / 100.0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let r = Recorder::new();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn recorder_cdf() {
+        let mut r = Recorder::new();
+        for i in 1..=100 {
+            r.push(i as f64);
+        }
+        let cdf = r.cdf_at(&[0.0, 50.0, 98.0, 100.0]);
+        assert_eq!(cdf, vec![0.0, 0.5, 0.98, 1.0]);
+        assert!((r.percentile(98.0) - 98.02).abs() < 0.1);
+    }
+
+    #[test]
+    fn cdf_series_monotone() {
+        let mut r = Recorder::new();
+        let mut v = 17u64;
+        for _ in 0..500 {
+            v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+            r.push((v >> 32) as f64);
+        }
+        let series = r.cdf_series(20);
+        for w in series.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

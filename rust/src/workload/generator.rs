@@ -1,0 +1,136 @@
+//! Random workload sampling per the paper's experiment settings:
+//! query shape uniform over the 22 TPC-H plans (or a configured subset),
+//! scale factor uniform over {2, 5, 10, 50, 80, 100} GB, and arrival
+//! times either all-zero (batch) or a Poisson process with mean
+//! inter-arrival 45 s (continuous).
+
+use super::tpch;
+use super::Workload;
+use crate::config::{Arrival, WorkloadConfig};
+use crate::util::rng::Rng;
+
+/// Deterministic workload generator: (config, seed) → workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadGenerator {
+    cfg: WorkloadConfig,
+    seed: u64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(cfg: WorkloadConfig, seed: u64) -> WorkloadGenerator {
+        cfg.validate().expect("invalid workload config");
+        WorkloadGenerator { cfg, seed }
+    }
+
+    pub fn config(&self) -> &WorkloadConfig {
+        &self.cfg
+    }
+
+    /// Generate the workload. Same (config, seed) → identical jobs.
+    pub fn generate(&self) -> Workload {
+        let mut rng = Rng::new(self.seed ^ 0x7C9C_0FFE);
+        let shapes: Vec<tpch::Shape> = if self.cfg.query_ids.is_empty() {
+            tpch::all_shapes()
+        } else {
+            self.cfg.query_ids.iter().map(|&q| tpch::shape(q)).collect()
+        };
+        let mut jobs = Vec::with_capacity(self.cfg.n_jobs);
+        let mut t = 0.0f64;
+        for id in 0..self.cfg.n_jobs {
+            let shape = rng.choice(&shapes);
+            let size = *rng.choice(&self.cfg.sizes_gb);
+            let arrival = match self.cfg.arrival {
+                Arrival::Batch => 0.0,
+                Arrival::Poisson { mean_interval } => {
+                    // First job arrives at t = 0 (paper §5.3.3); the rest
+                    // follow the Poisson process.
+                    if id == 0 {
+                        0.0
+                    } else {
+                        t += rng.exponential(mean_interval);
+                        t
+                    }
+                }
+            };
+            jobs.push(shape.instantiate(id, size, arrival));
+        }
+        Workload::new(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn batch_workload_all_at_zero() {
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(12), 1).generate();
+        assert_eq!(w.n_jobs(), 12);
+        assert!(w.is_batch());
+        assert!(w.n_tasks() > 12);
+    }
+
+    #[test]
+    fn continuous_arrivals_increase() {
+        let w = WorkloadGenerator::new(WorkloadConfig::continuous(20), 2).generate();
+        assert_eq!(w.jobs[0].arrival, 0.0);
+        for pair in w.jobs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+        }
+        assert!(w.jobs.last().unwrap().arrival > 0.0);
+    }
+
+    #[test]
+    fn continuous_mean_interval_roughly_45s() {
+        let mut cfg = WorkloadConfig::continuous(400);
+        cfg.sizes_gb = vec![2.0];
+        let w = WorkloadGenerator::new(cfg, 3).generate();
+        let last = w.jobs.last().unwrap().arrival;
+        let mean = last / 399.0;
+        assert!((mean - 45.0).abs() < 6.0, "mean interval {mean}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g = WorkloadGenerator::new(WorkloadConfig::small_batch(8), 99);
+        let a = g.generate();
+        let b = g.generate();
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.n_tasks(), y.n_tasks());
+        }
+        let c = WorkloadGenerator::new(WorkloadConfig::small_batch(8), 100).generate();
+        let same_names = a
+            .jobs
+            .iter()
+            .zip(&c.jobs)
+            .filter(|(x, y)| x.name == y.name)
+            .count();
+        assert!(same_names < a.n_jobs(), "different seeds should differ");
+    }
+
+    #[test]
+    fn respects_query_subset() {
+        let mut cfg = WorkloadConfig::small_batch(10);
+        cfg.query_ids = vec![1, 6];
+        let w = WorkloadGenerator::new(cfg, 5).generate();
+        for j in &w.jobs {
+            assert!(
+                j.name.contains("q01") || j.name.contains("q06"),
+                "unexpected {}",
+                j.name
+            );
+        }
+    }
+
+    #[test]
+    fn sizes_come_from_config() {
+        let mut cfg = WorkloadConfig::small_batch(30);
+        cfg.sizes_gb = vec![5.0];
+        let w = WorkloadGenerator::new(cfg, 6).generate();
+        for j in &w.jobs {
+            assert!(j.name.ends_with("-5g"), "{}", j.name);
+        }
+    }
+}

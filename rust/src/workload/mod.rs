@@ -1,0 +1,68 @@
+//! Workload generation: TPC-H shaped jobs under batch or Poisson
+//! (continuous-mode) arrival processes, plus JSON trace save/load so
+//! experiments can be replayed bit-identically.
+
+pub mod generator;
+pub mod tpch;
+pub mod trace;
+
+pub use generator::WorkloadGenerator;
+
+use crate::dag::Job;
+
+/// A concrete set of jobs to schedule. Jobs are ordered by arrival time.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub jobs: Vec<Job>,
+}
+
+impl Workload {
+    pub fn new(mut jobs: Vec<Job>) -> Workload {
+        jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = i;
+        }
+        Workload { jobs }
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.jobs.iter().map(|j| j.n_tasks()).sum()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.jobs.iter().map(|j| j.n_edges()).sum()
+    }
+
+    /// Total computation volume (GHz·s) across all jobs — the numerator of
+    /// the paper's speedup metric divides this by the fastest speed.
+    pub fn total_work(&self) -> f64 {
+        self.jobs.iter().map(|j| j.total_work()).sum()
+    }
+
+    /// True if every job arrives at t=0 (batch mode).
+    pub fn is_batch(&self) -> bool {
+        self.jobs.iter().all(|j| j.arrival == 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Job;
+
+    #[test]
+    fn workload_sorts_and_reindexes_by_arrival() {
+        let j1 = Job::new(0, "late", 10.0, vec![1.0], &[]);
+        let j2 = Job::new(1, "early", 0.0, vec![1.0], &[]);
+        let w = Workload::new(vec![j1, j2]);
+        assert_eq!(w.jobs[0].name, "early");
+        assert_eq!(w.jobs[0].id, 0);
+        assert_eq!(w.jobs[1].name, "late");
+        assert_eq!(w.jobs[1].id, 1);
+        assert!(!w.is_batch());
+    }
+}

@@ -1,0 +1,500 @@
+//! TPC-H derived job shapes (paper §5.2).
+//!
+//! The paper extracts "task dependencies and workload size" from TPC-H
+//! queries executed on a real data-processing platform and replays them in
+//! a simulator. We reproduce that structural distribution: each of the 22
+//! TPC-H queries is hand-encoded as the operator DAG a Spark-SQL-style
+//! planner produces (scans → join tree → aggregation → sort/limit, plus
+//! scalar/semi-join subplans), with per-node computation and per-edge data
+//! volumes proportional to the scale factor (2/5/10/50/80/100 GB).
+//!
+//! Table size fractions follow the TPC-H schema (lineitem dominates):
+//! L≈0.75, O≈0.16, PS≈0.11, P≈0.03, C≈0.02, S≈0.002, N/R tiny.
+//!
+//! Units: a node's `work_factor` is GHz·seconds per GB of scale factor; an
+//! edge's `data_factor` is MB per GB of scale factor. A q5 job at 50 GB on
+//! a 3 GHz executor therefore takes `50 * Σwork / 3` seconds of pure
+//! compute.
+
+use crate::dag::Job;
+
+/// TPC-H table size fractions of the total database volume.
+pub const L: f64 = 0.75; // lineitem
+pub const O: f64 = 0.16; // orders
+pub const PS: f64 = 0.11; // partsupp
+pub const P: f64 = 0.03; // part
+pub const C: f64 = 0.02; // customer
+pub const S: f64 = 0.002; // supplier
+pub const N: f64 = 0.0002; // nation
+pub const R: f64 = 0.0001; // region
+
+/// Number of distinct query shapes (TPC-H Q1–Q22).
+pub const N_QUERIES: usize = 22;
+
+/// Cost model knobs (GHz·s per GB scanned / joined / aggregated).
+const SCAN_CPG: f64 = 6.0; // full-table scan cost per GB of table
+const JOIN_CPG: f64 = 9.0; // join cost per GB of combined input
+const AGG_CPG: f64 = 3.0; // aggregation cost per GB of input
+const SORT_CPG: f64 = 4.0; // sort cost per GB of input
+/// Fraction of scanned bytes surviving the scan's filter, in MB/GB.
+const SCAN_OUT: f64 = 300.0;
+/// Shuffle compression/projection factor applied at joins.
+const JOIN_OUT: f64 = 0.55;
+/// Aggregations collapse data hard.
+const AGG_OUT: f64 = 0.05;
+
+/// A query shape: computation factors per node and data factors per edge,
+/// all scaled by the job's size in GB at instantiation.
+#[derive(Debug, Clone)]
+pub struct Shape {
+    pub qid: usize,
+    pub labels: Vec<&'static str>,
+    pub work_factors: Vec<f64>,
+    /// (src, dst, data_factor MB/GB)
+    pub edges: Vec<(usize, usize, f64)>,
+}
+
+/// Incremental DAG builder used by the per-query constructors below.
+struct B {
+    labels: Vec<&'static str>,
+    work: Vec<f64>,
+    edges: Vec<(usize, usize, f64)>,
+    /// Data volume factor flowing out of each node (MB/GB), tracked so
+    /// joins/aggs can size their cost and output from their inputs.
+    out: Vec<f64>,
+}
+
+impl B {
+    fn new() -> B {
+        B {
+            labels: Vec::new(),
+            work: Vec::new(),
+            edges: Vec::new(),
+            out: Vec::new(),
+        }
+    }
+
+    /// Table scan node; returns its id.
+    fn scan(&mut self, label: &'static str, frac: f64) -> usize {
+        self.labels.push(label);
+        self.work.push((SCAN_CPG * frac).max(0.01));
+        self.out.push((SCAN_OUT * frac).max(0.5));
+        self.work.len() - 1
+    }
+
+    /// Generic operator combining `inputs`; `cost_per_gb` applies to the
+    /// summed input volume and `out_ratio` shrinks/grows it.
+    fn op(
+        &mut self,
+        label: &'static str,
+        inputs: &[usize],
+        cost_cpg: f64,
+        out_ratio: f64,
+    ) -> usize {
+        let in_mb: f64 = inputs.iter().map(|&i| self.out[i]).sum();
+        let in_gb = in_mb / 1000.0;
+        self.labels.push(label);
+        self.work.push((cost_cpg * in_gb).max(0.02));
+        self.out.push((in_mb * out_ratio).max(0.25));
+        let id = self.work.len() - 1;
+        for &i in inputs {
+            self.edges.push((i, id, self.out[i]));
+        }
+        id
+    }
+
+    fn join(&mut self, a: usize, b: usize) -> usize {
+        self.op("join", &[a, b], JOIN_CPG, JOIN_OUT)
+    }
+
+    fn agg(&mut self, input: usize) -> usize {
+        self.op("agg", &[input], AGG_CPG, AGG_OUT)
+    }
+
+    fn sort(&mut self, input: usize) -> usize {
+        self.op("sort", &[input], SORT_CPG, 1.0)
+    }
+
+    fn finish(self, qid: usize) -> Shape {
+        Shape {
+            qid,
+            labels: self.labels,
+            work_factors: self.work,
+            edges: self.edges,
+        }
+    }
+}
+
+/// Build the shape of TPC-H query `qid` (1-based, 1..=22).
+pub fn shape(qid: usize) -> Shape {
+    assert!((1..=N_QUERIES).contains(&qid), "qid must be 1..=22");
+    let mut b = B::new();
+    match qid {
+        // Q1: pricing summary — scan lineitem, aggregate, order.
+        1 => {
+            let l = b.scan("scan:L", L);
+            let a = b.agg(l);
+            b.sort(a);
+        }
+        // Q2: minimum-cost supplier — 5-way join + correlated min subquery.
+        2 => {
+            let p = b.scan("scan:P", P);
+            let ps = b.scan("scan:PS", PS);
+            let s = b.scan("scan:S", S);
+            let n = b.scan("scan:N", N);
+            let r = b.scan("scan:R", R);
+            let j1 = b.join(p, ps);
+            let j2 = b.join(j1, s);
+            let j3 = b.join(j2, n);
+            let j4 = b.join(j3, r);
+            // scalar subquery: min supplycost over PS⋈S⋈N⋈R
+            let ps2 = b.scan("scan:PS'", PS);
+            let s2 = b.scan("scan:S'", S);
+            let sj = b.join(ps2, s2);
+            let sub = b.agg(sj);
+            let f = b.op("filter-min", &[j4, sub], JOIN_CPG, 0.2);
+            b.sort(f);
+        }
+        // Q3: shipping priority — C⋈O⋈L, aggregate, top-k.
+        3 => {
+            let c = b.scan("scan:C", C);
+            let o = b.scan("scan:O", O);
+            let l = b.scan("scan:L", L);
+            let j1 = b.join(c, o);
+            let j2 = b.join(j1, l);
+            let a = b.agg(j2);
+            b.sort(a);
+        }
+        // Q4: order priority checking — O semi-join L(exists).
+        4 => {
+            let o = b.scan("scan:O", O);
+            let l = b.scan("scan:L", L);
+            let semi = b.op("semijoin", &[o, l], JOIN_CPG, 0.25);
+            let a = b.agg(semi);
+            b.sort(a);
+        }
+        // Q5: local supplier volume — 6-way join.
+        5 => {
+            let c = b.scan("scan:C", C);
+            let o = b.scan("scan:O", O);
+            let l = b.scan("scan:L", L);
+            let s = b.scan("scan:S", S);
+            let n = b.scan("scan:N", N);
+            let r = b.scan("scan:R", R);
+            let j1 = b.join(c, o);
+            let j2 = b.join(j1, l);
+            let j3 = b.join(j2, s);
+            let j4 = b.join(n, r);
+            let j5 = b.join(j3, j4);
+            let a = b.agg(j5);
+            b.sort(a);
+        }
+        // Q6: forecasting revenue — single scan + aggregate.
+        6 => {
+            let l = b.scan("scan:L", L);
+            b.agg(l);
+        }
+        // Q7: volume shipping — S⋈L⋈O⋈C with two nation dims.
+        7 => {
+            let s = b.scan("scan:S", S);
+            let l = b.scan("scan:L", L);
+            let o = b.scan("scan:O", O);
+            let c = b.scan("scan:C", C);
+            let n1 = b.scan("scan:N1", N);
+            let n2 = b.scan("scan:N2", N);
+            let j1 = b.join(s, l);
+            let j2 = b.join(j1, o);
+            let j3 = b.join(j2, c);
+            let j4 = b.join(j3, n1);
+            let j5 = b.join(j4, n2);
+            let a = b.agg(j5);
+            b.sort(a);
+        }
+        // Q8: national market share — widest join tree (8 tables).
+        8 => {
+            let p = b.scan("scan:P", P);
+            let l = b.scan("scan:L", L);
+            let s = b.scan("scan:S", S);
+            let o = b.scan("scan:O", O);
+            let c = b.scan("scan:C", C);
+            let n1 = b.scan("scan:N1", N);
+            let n2 = b.scan("scan:N2", N);
+            let r = b.scan("scan:R", R);
+            let j1 = b.join(p, l);
+            let j2 = b.join(j1, s);
+            let j3 = b.join(j2, o);
+            let cn = b.join(c, n1);
+            let j4 = b.join(cn, r);
+            let j5 = b.join(j3, j4);
+            let j6 = b.join(j5, n2);
+            let a = b.agg(j6);
+            b.sort(a);
+        }
+        // Q9: product type profit — P⋈L⋈S⋈PS⋈O⋈N.
+        9 => {
+            let p = b.scan("scan:P", P);
+            let l = b.scan("scan:L", L);
+            let s = b.scan("scan:S", S);
+            let ps = b.scan("scan:PS", PS);
+            let o = b.scan("scan:O", O);
+            let n = b.scan("scan:N", N);
+            let j1 = b.join(p, l);
+            let j2 = b.join(j1, ps);
+            let j3 = b.join(j2, s);
+            let j4 = b.join(j3, o);
+            let j5 = b.join(j4, n);
+            let a = b.agg(j5);
+            b.sort(a);
+        }
+        // Q10: returned items — C⋈O⋈L⋈N, top 20.
+        10 => {
+            let c = b.scan("scan:C", C);
+            let o = b.scan("scan:O", O);
+            let l = b.scan("scan:L", L);
+            let n = b.scan("scan:N", N);
+            let j1 = b.join(c, o);
+            let j2 = b.join(j1, l);
+            let j3 = b.join(j2, n);
+            let a = b.agg(j3);
+            b.sort(a);
+        }
+        // Q11: important stock — PS⋈S⋈N twice (group + global threshold).
+        11 => {
+            let ps = b.scan("scan:PS", PS);
+            let s = b.scan("scan:S", S);
+            let n = b.scan("scan:N", N);
+            let j1 = b.join(ps, s);
+            let j2 = b.join(j1, n);
+            let a1 = b.agg(j2);
+            let ps2 = b.scan("scan:PS'", PS);
+            let s2 = b.scan("scan:S'", S);
+            let j3 = b.join(ps2, s2);
+            let a2 = b.agg(j3);
+            let f = b.op("filter-having", &[a1, a2], AGG_CPG, 0.5);
+            b.sort(f);
+        }
+        // Q12: shipping modes — O⋈L.
+        12 => {
+            let o = b.scan("scan:O", O);
+            let l = b.scan("scan:L", L);
+            let j = b.join(o, l);
+            let a = b.agg(j);
+            b.sort(a);
+        }
+        // Q13: customer distribution — C left-outer-join O, double agg.
+        13 => {
+            let c = b.scan("scan:C", C);
+            let o = b.scan("scan:O", O);
+            let j = b.op("outerjoin", &[c, o], JOIN_CPG, 0.8);
+            let a1 = b.agg(j);
+            let a2 = b.agg(a1);
+            b.sort(a2);
+        }
+        // Q14: promotion effect — L⋈P.
+        14 => {
+            let l = b.scan("scan:L", L);
+            let p = b.scan("scan:P", P);
+            let j = b.join(l, p);
+            b.agg(j);
+        }
+        // Q15: top supplier — revenue view (L agg), max subquery, join S.
+        15 => {
+            let l = b.scan("scan:L", L);
+            let rev = b.agg(l);
+            let mx = b.agg(rev);
+            let s = b.scan("scan:S", S);
+            let j1 = b.op("filter-max", &[rev, mx], AGG_CPG, 0.5);
+            let j2 = b.join(j1, s);
+            b.sort(j2);
+        }
+        // Q16: parts/supplier relationship — PS⋈P anti-join S subquery.
+        16 => {
+            let ps = b.scan("scan:PS", PS);
+            let p = b.scan("scan:P", P);
+            let s = b.scan("scan:S", S);
+            let j1 = b.join(ps, p);
+            let anti = b.op("antijoin", &[j1, s], JOIN_CPG, 0.6);
+            let a = b.agg(anti);
+            b.sort(a);
+        }
+        // Q17: small-quantity-order revenue — L⋈P with per-part avg subplan.
+        17 => {
+            let l = b.scan("scan:L", L);
+            let p = b.scan("scan:P", P);
+            let j1 = b.join(l, p);
+            let l2 = b.scan("scan:L'", L);
+            let avg = b.agg(l2);
+            let f = b.op("filter-avg", &[j1, avg], JOIN_CPG, 0.1);
+            b.agg(f);
+        }
+        // Q18: large volume customer — group L subquery ⋈ O ⋈ C ⋈ L.
+        18 => {
+            let l1 = b.scan("scan:L1", L);
+            let big = b.agg(l1);
+            let o = b.scan("scan:O", O);
+            let c = b.scan("scan:C", C);
+            let l2 = b.scan("scan:L2", L);
+            let j1 = b.op("semijoin", &[o, big], JOIN_CPG, 0.3);
+            let j2 = b.join(j1, c);
+            let j3 = b.join(j2, l2);
+            let a = b.agg(j3);
+            b.sort(a);
+        }
+        // Q19: discounted revenue — L⋈P, three OR predicate branches.
+        19 => {
+            let l = b.scan("scan:L", L);
+            let p = b.scan("scan:P", P);
+            let f1 = b.op("filter-b1", &[l], AGG_CPG, 0.2);
+            let f2 = b.op("filter-b2", &[l], AGG_CPG, 0.2);
+            let f3 = b.op("filter-b3", &[l], AGG_CPG, 0.2);
+            let u = b.op("union", &[f1, f2, f3], AGG_CPG, 1.0);
+            let j = b.join(u, p);
+            b.agg(j);
+        }
+        // Q20: potential part promotion — nested subqueries feeding S⋈N.
+        20 => {
+            let p = b.scan("scan:P", P);
+            let ps = b.scan("scan:PS", PS);
+            let l = b.scan("scan:L", L);
+            let s = b.scan("scan:S", S);
+            let n = b.scan("scan:N", N);
+            let sub1 = b.op("semijoin", &[ps, p], JOIN_CPG, 0.4);
+            let agg_l = b.agg(l);
+            let sub2 = b.op("filter-qty", &[sub1, agg_l], JOIN_CPG, 0.3);
+            let j1 = b.op("semijoin", &[s, sub2], JOIN_CPG, 0.4);
+            let j2 = b.join(j1, n);
+            b.sort(j2);
+        }
+        // Q21: suppliers who kept orders waiting — L three ways.
+        21 => {
+            let s = b.scan("scan:S", S);
+            let l1 = b.scan("scan:L1", L);
+            let o = b.scan("scan:O", O);
+            let n = b.scan("scan:N", N);
+            let l2 = b.scan("scan:L2", L);
+            let l3 = b.scan("scan:L3", L);
+            let j1 = b.join(s, l1);
+            let j2 = b.join(j1, o);
+            let j3 = b.join(j2, n);
+            let semi = b.op("semijoin", &[j3, l2], JOIN_CPG, 0.5);
+            let anti = b.op("antijoin", &[semi, l3], JOIN_CPG, 0.5);
+            let a = b.agg(anti);
+            b.sort(a);
+        }
+        // Q22: global sales opportunity — C with avg subquery, anti-join O.
+        22 => {
+            let c = b.scan("scan:C", C);
+            let c2 = b.scan("scan:C'", C);
+            let o = b.scan("scan:O", O);
+            let avg = b.agg(c2);
+            let f = b.op("filter-avg", &[c, avg], AGG_CPG, 0.4);
+            let anti = b.op("antijoin", &[f, o], JOIN_CPG, 0.6);
+            let a = b.agg(anti);
+            b.sort(a);
+        }
+        _ => unreachable!(),
+    }
+    b.finish(qid)
+}
+
+impl Shape {
+    /// Instantiate this shape as a concrete [`Job`] at `size_gb` scale.
+    pub fn instantiate(&self, job_id: usize, size_gb: f64, arrival: f64) -> Job {
+        assert!(size_gb > 0.0);
+        let name = format!("tpch-q{:02}-{}g", self.qid, size_gb);
+        let computes: Vec<f64> = self.work_factors.iter().map(|w| w * size_gb).collect();
+        let edges: Vec<(usize, usize, f64)> = self
+            .edges
+            .iter()
+            .map(|&(u, v, d)| (u, v, d * size_gb))
+            .collect();
+        Job::new(job_id, name, arrival, computes, &edges)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.work_factors.len()
+    }
+}
+
+/// All 22 shapes (cached construction is cheap; call freely).
+pub fn all_shapes() -> Vec<Shape> {
+    (1..=N_QUERIES).map(shape).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_22_shapes_build_valid_dags() {
+        for s in all_shapes() {
+            let job = s.instantiate(0, 10.0, 0.0);
+            assert!(job.n_tasks() >= 2, "q{} too small", s.qid);
+            assert!(job.n_tasks() <= 26, "q{} too big: {}", s.qid, job.n_tasks());
+            // Exactly one exit node (the final sort/agg).
+            assert_eq!(job.exits().len(), 1, "q{} should have one sink", s.qid);
+            // Entries are scans.
+            for e in job.entries() {
+                assert!(
+                    s.labels[e].starts_with("scan"),
+                    "q{} entry {} is {}",
+                    s.qid,
+                    e,
+                    s.labels[e]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_are_distinct() {
+        let shapes = all_shapes();
+        let mut sigs: Vec<(usize, usize)> = shapes
+            .iter()
+            .map(|s| (s.n_nodes(), s.edges.len()))
+            .collect();
+        sigs.sort_unstable();
+        sigs.dedup();
+        // Not all 22 need unique (nodes, edges) signatures, but most should.
+        assert!(sigs.len() >= 15, "only {} distinct signatures", sigs.len());
+    }
+
+    #[test]
+    fn work_scales_linearly_with_size() {
+        let s = shape(5);
+        let j2 = s.instantiate(0, 2.0, 0.0);
+        let j100 = s.instantiate(0, 100.0, 0.0);
+        let ratio = j100.total_work() / j2.total_work();
+        assert!((ratio - 50.0).abs() < 1e-9);
+        let dratio = j100.total_data() / j2.total_data();
+        assert!((dratio - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lineitem_queries_dominate_cost() {
+        // Q1 scans lineitem; Q6 too. Their scan node must dominate Q11's
+        // (partsupp-based) at equal scale.
+        let q1 = shape(1).instantiate(0, 10.0, 0.0);
+        let q11 = shape(11).instantiate(0, 10.0, 0.0);
+        let q1_max = q1.tasks.iter().map(|t| t.compute).fold(0.0, f64::max);
+        let q11_max = q11.tasks.iter().map(|t| t.compute).fold(0.0, f64::max);
+        assert!(q1_max > q11_max);
+    }
+
+    #[test]
+    fn q8_is_the_widest_join_tree() {
+        let q8 = shape(8);
+        let scans = q8
+            .labels
+            .iter()
+            .filter(|l| l.starts_with("scan"))
+            .count();
+        assert_eq!(scans, 8);
+    }
+
+    #[test]
+    fn shape_panics_on_bad_qid() {
+        assert!(std::panic::catch_unwind(|| shape(0)).is_err());
+        assert!(std::panic::catch_unwind(|| shape(23)).is_err());
+    }
+}

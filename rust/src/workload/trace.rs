@@ -1,0 +1,153 @@
+//! Workload trace serialization: save generated workloads to JSON and load
+//! them back bit-identically, so experiment runs can be archived and
+//! replayed (`lachesis workload --out trace.json` / `--trace trace.json`).
+
+use super::Workload;
+use crate::dag::Job;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// Serialize a workload to a JSON value.
+pub fn to_json(w: &Workload) -> Json {
+    let jobs: Vec<Json> = w
+        .jobs
+        .iter()
+        .map(|j| {
+            let computes: Vec<f64> = j.tasks.iter().map(|t| t.compute).collect();
+            let edges: Vec<Json> = (0..j.n_tasks())
+                .flat_map(|u| {
+                    j.children[u].iter().map(move |e| {
+                        Json::Arr(vec![
+                            Json::from(u),
+                            Json::from(e.other),
+                            Json::from(e.data),
+                        ])
+                    })
+                })
+                .collect();
+            Json::from_pairs(vec![
+                ("name", Json::from(j.name.clone())),
+                ("arrival", Json::from(j.arrival)),
+                ("computes", Json::from(computes)),
+                ("edges", Json::Arr(edges)),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("format", Json::from("lachesis-trace-v1")),
+        ("jobs", Json::Arr(jobs)),
+    ])
+}
+
+/// Deserialize a workload from a JSON value, revalidating every DAG.
+pub fn from_json(v: &Json) -> Result<Workload> {
+    let fmt = v.req_str("format").map_err(|e| anyhow!("{e}"))?;
+    if fmt != "lachesis-trace-v1" {
+        anyhow::bail!("unsupported trace format '{fmt}'");
+    }
+    let jobs_json = v
+        .req("jobs")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'jobs' must be an array"))?;
+    let mut jobs = Vec::with_capacity(jobs_json.len());
+    for (id, jj) in jobs_json.iter().enumerate() {
+        let name = jj.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string();
+        let arrival = jj.req_f64("arrival").map_err(|e| anyhow!("{e}"))?;
+        let computes = jj
+            .req("computes")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'computes' must be an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad compute")))
+            .collect::<Result<Vec<f64>>>()?;
+        let edges = jj
+            .req("edges")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'edges' must be an array"))?
+            .iter()
+            .map(|e| {
+                let u = e.at(0).and_then(Json::as_usize);
+                let v = e.at(1).and_then(Json::as_usize);
+                let d = e.at(2).and_then(Json::as_f64);
+                match (u, v, d) {
+                    (Some(u), Some(v), Some(d)) => Ok((u, v, d)),
+                    _ => Err(anyhow!("bad edge triple")),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let job = Job::try_new(id, name, arrival, computes, &edges)
+            .with_context(|| format!("trace job {id}"))?;
+        jobs.push(job);
+    }
+    Ok(Workload::new(jobs))
+}
+
+/// Save a workload trace to a file (pretty JSON).
+pub fn save(w: &Workload, path: &str) -> Result<()> {
+    std::fs::write(path, to_json(w).to_pretty()).with_context(|| format!("writing {path}"))
+}
+
+/// Load a workload trace from a file.
+pub fn load(path: &str) -> Result<Workload> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    from_json(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::WorkloadGenerator;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let w = WorkloadGenerator::new(WorkloadConfig::continuous(6), 11).generate();
+        let j = to_json(&w);
+        let w2 = from_json(&j).unwrap();
+        assert_eq!(w.n_jobs(), w2.n_jobs());
+        assert_eq!(w.n_tasks(), w2.n_tasks());
+        assert_eq!(w.n_edges(), w2.n_edges());
+        for (a, b) in w.jobs.iter().zip(&w2.jobs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.arrival, b.arrival);
+            for (ta, tb) in a.tasks.iter().zip(&b.tasks) {
+                assert_eq!(ta.compute, tb.compute);
+            }
+            for u in 0..a.n_tasks() {
+                assert_eq!(a.children[u].len(), b.children[u].len());
+                for (ea, eb) in a.children[u].iter().zip(&b.children[u]) {
+                    assert_eq!(ea.other, eb.other);
+                    assert_eq!(ea.data, eb.data);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let v = Json::parse(r#"{"format": "other", "jobs": []}"#).unwrap();
+        assert!(from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_cyclic_trace() {
+        let text = r#"{"format":"lachesis-trace-v1","jobs":[{"name":"x","arrival":0,
+            "computes":[1,1],"edges":[[0,1,1],[1,0,1]]}]}"#;
+        let v = Json::parse(text).unwrap();
+        assert!(from_json(&v).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 4).generate();
+        let path = "/tmp/lachesis_trace_test.json";
+        save(&w, path).unwrap();
+        let w2 = load(path).unwrap();
+        assert_eq!(w.n_tasks(), w2.n_tasks());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,168 @@
+//! Hand-computed schedules: small DAGs where the optimal/expected
+//! behaviour of each heuristic can be verified against pencil-and-paper
+//! timelines (the style of worked example in the HEFT paper).
+
+use lachesis::cluster::Cluster;
+use lachesis::dag::{Job, TaskRef};
+use lachesis::sched::deft::{cpeft, deft};
+use lachesis::sched::eft::{best_eft, eft};
+use lachesis::sched::{
+    CpopScheduler, FifoScheduler, HeftScheduler, HighRankUpScheduler, SjfScheduler,
+    TdcaScheduler,
+};
+use lachesis::sim::{Allocation, SimState, Simulator};
+use lachesis::workload::Workload;
+
+/// Cluster: e0 = 1 GHz, e1 = 2 GHz, link 10 MB/s.
+fn cluster() -> Cluster {
+    let mut c = Cluster::homogeneous(2, 1.0, 10.0);
+    c.executors[1].speed = 2.0;
+    c
+}
+
+/// Fork-join: 0 → {1, 2} → 3. w = [2, 6, 6, 2]; all edges 10 MB (1 s).
+fn fork_join() -> Job {
+    Job::new(
+        0,
+        "forkjoin",
+        0.0,
+        vec![2.0, 6.0, 6.0, 2.0],
+        &[(0, 1, 10.0), (0, 2, 10.0), (1, 3, 10.0), (2, 3, 10.0)],
+    )
+}
+
+#[test]
+fn heft_fork_join_hand_timeline() {
+    let w = Workload::new(vec![fork_join()]);
+    let mut sim = Simulator::new(cluster(), w);
+    let report = sim.run(&mut HeftScheduler::new()).unwrap();
+    // HEFT hand timeline: node 0 → e1 (finish 2/2 = 1). First child → e1
+    // (local data, start 1, finish 1+6/2 = 4; e0 would be 2+6 = 8).
+    // Second child: e1 again (start 4, finish 7) beats e0 (start 2,
+    // finish 8). Node 3: e1 local, start 7, finish 7+2/2 = 8; e0 would be
+    // max(7+1, arrival) + 2 = 10. Makespan = 8.
+    assert!((report.makespan - 8.0).abs() < 1e-9, "{}", report.makespan);
+    sim.state.validate().unwrap();
+}
+
+#[test]
+fn deft_beats_eft_on_communication_heavy_join() {
+    // chain with a huge edge: duplication saves the transfer.
+    let job = Job::new(0, "heavy", 0.0, vec![2.0, 4.0], &[(0, 1, 100.0)]);
+    let w = Workload::new(vec![job]);
+    // EFT-only (HEFT):
+    let r_eft = Simulator::new(cluster(), w.clone())
+        .run(&mut HeftScheduler::new())
+        .unwrap();
+    // DEFT (same selector):
+    let r_deft = Simulator::new(cluster(), w)
+        .run(&mut HighRankUpScheduler::new())
+        .unwrap();
+    // Hand check: node0 → e1 (finish 1). EFT for node1: e1 no-comm →
+    // 1 + 2 = 3. DEFT can't beat 3 (dup on e1: 1+1+2 = 4). Both equal
+    // here — so makespans match; now force the parent onto e0:
+    assert!(r_deft.makespan <= r_eft.makespan + 1e-9);
+
+    // Scripted state to force duplication:
+    let job = Job::new(0, "heavy2", 0.0, vec![2.0, 4.0], &[(0, 1, 100.0)]);
+    let mut st = SimState::new(cluster(), Workload::new(vec![job]));
+    st.mark_arrived(0);
+    st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // AFT 2 @ e0
+    let t1 = TaskRef::new(0, 1);
+    // EFT: e0 → 2 + 4 = 6; e1 → (2 + 10) + 2 = 14 → best 6.
+    assert_eq!(best_eft(&st, t1), (0, 6.0));
+    // CPEFT on e1: dup 0 (start 0, finish 1), task 1 + 2 = 3.
+    assert_eq!(cpeft(&st, t1, 0, 1), 3.0);
+    let (alloc, f) = deft(&st, t1);
+    assert_eq!(alloc, Allocation::Duplicate { exec: 1, parent: 0 });
+    assert_eq!(f, 3.0);
+}
+
+#[test]
+fn eft_math_matches_simulator_for_all_executors() {
+    // For every (task, executor), predicted EFT must equal the finish the
+    // simulator produces when forced to that executor.
+    let job = fork_join();
+    for exec_seq in [[0, 1, 0, 1], [1, 1, 1, 1], [0, 0, 1, 0]] {
+        let mut st = SimState::new(cluster(), Workload::new(vec![job.clone()]));
+        st.mark_arrived(0);
+        // fork_join topo order is 0,1,2,3.
+        for (node, &e) in exec_seq.iter().enumerate() {
+            let t = TaskRef::new(0, node);
+            let predicted = eft(&st, t, e);
+            let actual = st.apply(t, Allocation::Direct { exec: e });
+            assert!(
+                (predicted - actual).abs() < 1e-9,
+                "node {node} exec {e}: {predicted} vs {actual}"
+            );
+        }
+        st.validate().unwrap();
+    }
+}
+
+#[test]
+fn cpop_pins_critical_path() {
+    // Chain + slack branch; the chain is critical and must go to e1 (2 GHz).
+    let job = Job::new(
+        0,
+        "cp",
+        0.0,
+        vec![4.0, 4.0, 4.0, 0.1],
+        &[(0, 1, 1.0), (1, 2, 1.0), (0, 3, 1.0)],
+    );
+    let w = Workload::new(vec![job]);
+    let mut sim = Simulator::new(cluster(), w);
+    sim.run(&mut CpopScheduler::new()).unwrap();
+    for node in [0, 1, 2] {
+        assert_eq!(
+            sim.state.placements[0][node][0].exec, 1,
+            "critical node {node} not on CP processor"
+        );
+    }
+}
+
+#[test]
+fn tdca_single_chain_one_executor_no_comm() {
+    let job = Job::new(
+        0,
+        "chain",
+        0.0,
+        vec![2.0, 2.0, 2.0],
+        &[(0, 1, 50.0), (1, 2, 50.0)],
+    );
+    let w = Workload::new(vec![job]);
+    let mut sim = Simulator::new(cluster(), w);
+    let report = sim.run(&mut TdcaScheduler::new()).unwrap();
+    // Whole chain on the 2 GHz executor: 3 × 2/2 = 3 s, no transfers.
+    assert!((report.makespan - 3.0).abs() < 1e-9, "{}", report.makespan);
+}
+
+#[test]
+fn sjf_finishes_short_job_first() {
+    let big = Job::new(0, "big", 0.0, vec![50.0, 50.0], &[(0, 1, 1.0)]);
+    let small = Job::new(1, "small", 0.0, vec![1.0], &[]);
+    let w = Workload::new(vec![big, small]);
+    let mut sim = Simulator::new(cluster(), w);
+    sim.run(&mut SjfScheduler::new()).unwrap();
+    let small_done = sim.state.job_completion(1);
+    let big_done = sim.state.job_completion(0);
+    assert!(small_done < big_done);
+    // The small job was selected first so it starts at t=0 on some
+    // executor.
+    assert!(small_done <= 1.0 + 1e-9);
+}
+
+#[test]
+fn fifo_respects_arrival_order_in_continuous_mode() {
+    let j0 = Job::new(0, "first", 0.0, vec![10.0], &[]);
+    let j1 = Job::new(1, "second", 1.0, vec![1.0], &[]);
+    let w = Workload::new(vec![j0, j1]);
+    let mut sim = Simulator::new(cluster(), w);
+    sim.run(&mut FifoScheduler::new()).unwrap();
+    let p0 = sim.state.placements[0][0][0];
+    let p1 = sim.state.placements[1][0][0];
+    // First job grabbed the fast executor at t=0; second job runs
+    // without waiting for the first (free executor 0).
+    assert_eq!(p0.exec, 1);
+    assert!(p0.start < p1.start);
+}

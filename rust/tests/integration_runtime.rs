@@ -1,0 +1,172 @@
+//! Cross-layer integration: the AOT artifact executed through PJRT must
+//! agree with the pure-rust reference forward on real encoded states —
+//! this is the proof that L1 (Pallas kernel), L2 (JAX model) and the rust
+//! model contract all describe the same network.
+//!
+//! Requires `make artifacts` to have run (the Makefile test target
+//! guarantees it).
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::encode::encode;
+use lachesis::policy::features::FeatureMode;
+use lachesis::policy::{params, PolicyEval, RustPolicy};
+use lachesis::runtime::{PjrtPolicy, Runtime};
+use lachesis::sim::{Allocation, SimState};
+use lachesis::workload::WorkloadGenerator;
+
+const ART: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(&format!("{ART}/meta.json")).exists()
+}
+
+fn make_state(n_jobs: usize, seed: u64, big: bool) -> SimState {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(8), seed);
+    let cfg = if big {
+        WorkloadConfig::large_batch(n_jobs)
+    } else {
+        WorkloadConfig::small_batch(n_jobs)
+    };
+    let w = WorkloadGenerator::new(cfg, seed).generate();
+    let mut st = SimState::new(cluster, w);
+    for j in 0..n_jobs {
+        st.mark_arrived(j);
+    }
+    st
+}
+
+#[test]
+fn meta_matches_rust_contract() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = Runtime::new(ART).unwrap();
+    assert_eq!(rt.meta.param_len, lachesis::policy::net::param_len());
+    assert_eq!(rt.meta.f, lachesis::policy::F);
+    assert_eq!(rt.meta.variants.len(), 2);
+}
+
+#[test]
+fn pjrt_and_rust_forward_agree_small_variant() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let p = params::load_expected(
+        &format!("{ART}/params_init.bin"),
+        lachesis::policy::net::param_len(),
+    )
+    .unwrap();
+    let mut pjrt = PjrtPolicy::with_params(ART, p.clone()).unwrap();
+    let mut rust = RustPolicy::new(p);
+    for seed in 0..5u64 {
+        let st = make_state(2, seed, false);
+        let enc = encode(&st, FeatureMode::Full);
+        assert_eq!(enc.variant.n, 64);
+        let (lp, vp) = pjrt.logits_value(&enc).unwrap();
+        let (lr, vr) = rust.logits_value(&enc).unwrap();
+        for i in 0..enc.n_used() {
+            assert!(
+                (lp[i] - lr[i]).abs() < 1e-4,
+                "seed {seed} slot {i}: pjrt {} vs rust {}",
+                lp[i],
+                lr[i]
+            );
+        }
+        assert!((vp - vr).abs() < 1e-4, "value: {vp} vs {vr}");
+    }
+}
+
+#[test]
+fn pjrt_and_rust_forward_agree_large_variant() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let p = params::load_expected(
+        &format!("{ART}/params_init.bin"),
+        lachesis::policy::net::param_len(),
+    )
+    .unwrap();
+    let mut pjrt = PjrtPolicy::with_params(ART, p.clone()).unwrap();
+    let mut rust = RustPolicy::new(p);
+    let st = make_state(12, 3, false);
+    let enc = encode(&st, FeatureMode::Full);
+    assert_eq!(enc.variant.n, 256, "12 jobs should spill into the big variant");
+    let (lp, vp) = pjrt.logits_value(&enc).unwrap();
+    let (lr, vr) = rust.logits_value(&enc).unwrap();
+    for i in 0..enc.n_used() {
+        assert!((lp[i] - lr[i]).abs() < 1e-4, "slot {i}");
+    }
+    assert!((vp - vr).abs() < 1e-4);
+}
+
+#[test]
+fn agreement_holds_mid_schedule() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let p = params::load_expected(
+        &format!("{ART}/params_init.bin"),
+        lachesis::policy::net::param_len(),
+    )
+    .unwrap();
+    let mut pjrt = PjrtPolicy::with_params(ART, p.clone()).unwrap();
+    let mut rust = RustPolicy::new(p);
+    let mut st = make_state(2, 9, false);
+    // Assign half the frontier greedily, re-checking agreement each step.
+    for step in 0..6 {
+        if st.executable().is_empty() {
+            break;
+        }
+        let enc = encode(&st, FeatureMode::Full);
+        let (lp, _) = pjrt.logits_value(&enc).unwrap();
+        let (lr, _) = rust.logits_value(&enc).unwrap();
+        for i in 0..enc.n_used() {
+            assert!((lp[i] - lr[i]).abs() < 1e-4, "step {step} slot {i}");
+        }
+        let t = st.executable()[0];
+        st.apply(t, Allocation::Direct { exec: step % 8 });
+    }
+}
+
+#[test]
+fn lachesis_via_pjrt_schedules_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use lachesis::sched::LachesisScheduler;
+    use lachesis::sim::Simulator;
+    let pjrt = PjrtPolicy::new(ART, None).unwrap();
+    let mut sched = LachesisScheduler::greedy(Box::new(pjrt));
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(10), 4);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), 4).generate();
+    let mut sim = Simulator::new(cluster, w);
+    let report = sim.run(&mut sched).unwrap();
+    assert!(report.makespan > 0.0);
+    sim.state.validate().unwrap();
+    // Median decision latency should be small even in debug builds (the
+    // p98 includes the first-call XLA compilation; the release benches in
+    // rust/benches/ measure the steady state the paper reports).
+    assert!(
+        report.decision_ms.percentile(50.0) < 50.0,
+        "p50 = {} ms",
+        report.decision_ms.percentile(50.0)
+    );
+}
+
+#[test]
+fn rejects_stale_params_file() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let path = "/tmp/lachesis_stale_params.bin";
+    params::save_f32(path, &[0.0; 7]).unwrap();
+    assert!(PjrtPolicy::new(ART, Some(path)).is_err());
+    std::fs::remove_file(path).ok();
+}

