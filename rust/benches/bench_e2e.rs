@@ -6,6 +6,7 @@ use lachesis::bench_util::Bench;
 use lachesis::cluster::Cluster;
 use lachesis::config::{ClusterConfig, WorkloadConfig};
 use lachesis::policy::RustPolicy;
+#[cfg(feature = "pjrt")]
 use lachesis::runtime::PjrtPolicy;
 use lachesis::sched::LachesisScheduler;
 use lachesis::sim::Simulator;
@@ -21,7 +22,7 @@ fn run_once(jobs: usize, large: bool, pjrt: bool, seed: u64) -> (f64, f64) {
     let w = WorkloadGenerator::new(wcfg, seed).generate();
     let cluster = Cluster::heterogeneous(&cfg, seed);
     let mut sched = if pjrt {
-        LachesisScheduler::greedy(Box::new(PjrtPolicy::new("artifacts", None).unwrap()))
+        pjrt_sched()
     } else {
         LachesisScheduler::greedy(Box::new(RustPolicy::random(seed)))
     };
@@ -33,9 +34,20 @@ fn run_once(jobs: usize, large: bool, pjrt: bool, seed: u64) -> (f64, f64) {
     )
 }
 
+#[cfg(feature = "pjrt")]
+fn pjrt_sched() -> LachesisScheduler {
+    LachesisScheduler::greedy(Box::new(PjrtPolicy::new("artifacts", None).unwrap()))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_sched() -> LachesisScheduler {
+    unreachable!("PJRT cases are skipped when built without --features pjrt")
+}
+
 fn main() {
     let mut b = Bench::new();
-    let have_artifacts = std::path::Path::new("artifacts/meta.json").exists();
+    let have_artifacts =
+        cfg!(feature = "pjrt") && std::path::Path::new("artifacts/meta.json").exists();
     println!("== per-decision latency (paper targets: p98 ≤ 14 ms small, ≤ 30 ms large) ==");
     for &(jobs, large, tag) in &[(5usize, false, "small5"), (20, false, "small20"), (40, true, "large40")]
     {

@@ -9,6 +9,7 @@ use lachesis::config::{ClusterConfig, WorkloadConfig};
 use lachesis::policy::encode::encode;
 use lachesis::policy::features::{node_features, FeatureMode, NODE_FEATURES};
 use lachesis::policy::{PolicyEval, RustPolicy};
+#[cfg(feature = "pjrt")]
 use lachesis::runtime::PjrtPolicy;
 use lachesis::sim::SimState;
 use lachesis::workload::WorkloadGenerator;
@@ -51,6 +52,7 @@ fn main() {
         black_box(rust.logits_value(&enc256).unwrap());
     });
 
+    #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/meta.json").exists() {
         let mut pjrt = PjrtPolicy::new("artifacts", None).unwrap();
         // Warm both executables (compile happens once, off the hot path).
@@ -65,5 +67,7 @@ fn main() {
     } else {
         eprintln!("(artifacts missing — skipping PJRT cases)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("(built without `pjrt` — skipping PJRT cases)");
     b.finish("bench_policy");
 }

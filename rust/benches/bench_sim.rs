@@ -1,15 +1,19 @@
 //! Whole-simulation throughput: events/second and full-schedule wall time
-//! for each scheduler family at paper scales.
+//! for each scheduler family at paper scales, plus the gap-aware vs
+//! append makespan comparison. Writes `BENCH_sim.json` (override with
+//! `BENCH_JSON`) so future PRs have a perf trajectory to compare against.
 
 use lachesis::bench_util::{black_box, Bench};
 use lachesis::cluster::Cluster;
-use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::config::{ClusterConfig, SchedMode, WorkloadConfig};
 use lachesis::policy::RustPolicy;
 use lachesis::sched::{
-    FifoScheduler, HeftScheduler, HighRankUpScheduler, LachesisScheduler, TdcaScheduler,
+    FifoScheduler, HeftScheduler, HighRankUpScheduler, LachesisScheduler, SjfScheduler,
+    TdcaScheduler,
 };
 use lachesis::sim::Simulator;
 use lachesis::workload::WorkloadGenerator;
+use std::time::Instant;
 
 fn main() {
     let mut b = Bench::new();
@@ -30,11 +34,71 @@ fn main() {
             let mut sim = Simulator::new(cluster.clone(), w.clone());
             black_box(sim.run(&mut FifoScheduler::new()).unwrap());
         });
+        // SJF leans hardest on the per-job remaining-work cache (its score
+        // probes job_left_work for every executable task of every
+        // decision) — the headline case for the incremental SimState.
+        b.case(&format!("sim_sjf_deft/{tag}"), || {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut SjfScheduler::new()).unwrap());
+        });
         b.case(&format!("sim_tdca/{tag}"), || {
             let mut sim = Simulator::new(cluster.clone(), w.clone());
             black_box(sim.run(&mut TdcaScheduler::new()).unwrap());
         });
     }
+
+    // Decision throughput at the batch50 scale: scheduling decisions per
+    // second of wall time across a full run (the ≥2× acceptance metric).
+    {
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(50), 2).generate();
+        let cluster = Cluster::heterogeneous(&cfg, 2);
+        let mut decisions = 0u64;
+        let mut secs = 0.0f64;
+        for _ in 0..3 {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let t0 = Instant::now();
+            let r = sim.run(&mut HeftScheduler::new()).unwrap();
+            secs += t0.elapsed().as_secs_f64();
+            decisions += r.n_tasks as u64;
+        }
+        b.note("decision_throughput_heft_batch50_per_sec", decisions as f64 / secs);
+        let mut decisions = 0u64;
+        let mut secs = 0.0f64;
+        for _ in 0..3 {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let t0 = Instant::now();
+            let r = sim.run(&mut SjfScheduler::new()).unwrap();
+            secs += t0.elapsed().as_secs_f64();
+            decisions += r.n_tasks as u64;
+        }
+        b.note("decision_throughput_sjf_batch50_per_sec", decisions as f64 / secs);
+    }
+
+    // Gap-aware vs append EFT: same workloads, same HEFT scheduler, only
+    // the booking mode differs. Gap-aware backfilling should never lose.
+    {
+        let mut gap_cfg = cfg.clone();
+        gap_cfg.sched_mode = SchedMode::GapAware;
+        let mut append_total = 0.0;
+        let mut gap_total = 0.0;
+        for seed in 0..5u64 {
+            let w = WorkloadGenerator::new(WorkloadConfig::large_batch(30), seed).generate();
+            let append_ms = Simulator::new(Cluster::heterogeneous(&cfg, seed), w.clone())
+                .run(&mut HeftScheduler::new())
+                .unwrap()
+                .makespan;
+            let gap_ms = Simulator::new(Cluster::heterogeneous(&gap_cfg, seed), w)
+                .run(&mut HeftScheduler::new())
+                .unwrap()
+                .makespan;
+            append_total += append_ms;
+            gap_total += gap_ms;
+            b.note(&format!("makespan_heft_append_seed{seed}"), append_ms);
+            b.note(&format!("makespan_heft_gap_seed{seed}"), gap_ms);
+        }
+        b.note("makespan_gap_over_append_ratio", gap_total / append_total);
+    }
+
     // Learned policy (rust backend) at moderate scale.
     let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 3).generate();
     let cluster = Cluster::heterogeneous(&cfg, 3);
@@ -44,4 +108,12 @@ fn main() {
         black_box(sim.run(&mut sched).unwrap());
     });
     b.finish("bench_sim");
+    if std::env::var("BENCH_JSON").is_err() {
+        // Cargo runs benches with cwd = the package dir (rust/); anchor
+        // the default report next to the repo-root placeholder instead.
+        b.write_json(
+            "bench_sim",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json"),
+        );
+    }
 }

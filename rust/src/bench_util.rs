@@ -49,6 +49,9 @@ pub struct Bench {
     pub results: Vec<BenchResult>,
     /// Target total measurement time per case, seconds.
     pub budget_secs: f64,
+    /// Named scalar metrics recorded alongside the cases (makespans,
+    /// throughputs, comparison ratios) — serialized into the JSON report.
+    pub notes: Vec<(String, f64)>,
 }
 
 impl Bench {
@@ -60,7 +63,14 @@ impl Bench {
         Bench {
             results: Vec::new(),
             budget_secs,
+            notes: Vec::new(),
         }
+    }
+
+    /// Record a named scalar metric (printed and included in the JSON).
+    pub fn note(&mut self, key: &str, value: f64) {
+        println!("{key} = {value:.6}");
+        self.notes.push((key.to_string(), value));
     }
 
     /// Run `f` repeatedly: warm up, calibrate an iteration count to fill
@@ -96,7 +106,8 @@ impl Bench {
         self.results.last().unwrap()
     }
 
-    /// Print a closing summary and optionally write CSV next to the bench.
+    /// Print a closing summary and optionally write CSV/JSON reports
+    /// (`BENCH_CSV` / `BENCH_JSON` environment variables).
     pub fn finish(&self, label: &str) {
         println!("\n== {label}: {} cases ==", self.results.len());
         if let Ok(path) = std::env::var("BENCH_CSV") {
@@ -108,6 +119,46 @@ impl Bench {
                 ));
             }
             let _ = std::fs::write(path, csv);
+        }
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            self.write_json(label, &path);
+        }
+    }
+
+    /// Write the machine-readable report (cases + notes) as JSON, for
+    /// cross-PR perf trajectories (e.g. `BENCH_sim.json`). Serialized
+    /// through `util::json` so escaping and non-finite values are handled.
+    pub fn write_json(&self, label: &str, path: &str) {
+        use crate::util::json::Json;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("name", Json::from(r.name.clone())),
+                    ("iters", Json::from(r.iters)),
+                    ("mean_ns", Json::from(r.mean_ns)),
+                    ("std_ns", Json::from(r.std_ns)),
+                    ("p50_ns", Json::from(r.p50_ns)),
+                    ("p95_ns", Json::from(r.p95_ns)),
+                ])
+            })
+            .collect();
+        let notes = Json::from_pairs(
+            self.notes
+                .iter()
+                .map(|(k, v)| (k.as_str(), Json::from(*v)))
+                .collect(),
+        );
+        let report = Json::from_pairs(vec![
+            ("bench", Json::from(label)),
+            ("cases", Json::Arr(cases)),
+            ("notes", notes),
+        ]);
+        if std::fs::write(path, report.to_pretty()).is_ok() {
+            println!("bench report written to {path}");
+        } else {
+            eprintln!("failed to write bench report to {path}");
         }
     }
 }
@@ -126,7 +177,7 @@ mod tests {
     fn bench_measures_something() {
         let mut b = Bench {
             budget_secs: 0.02,
-            results: Vec::new(),
+            ..Default::default()
         };
         let mut acc = 0u64;
         let r = b
@@ -137,5 +188,23 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.mean_ns >= 0.0);
         b.finish("test");
+    }
+
+    #[test]
+    fn json_report_includes_cases_and_notes() {
+        let mut b = Bench {
+            budget_secs: 0.01,
+            ..Default::default()
+        };
+        b.case("c1", || {});
+        b.note("makespan_ratio", 1.5);
+        let path = std::env::temp_dir().join("lachesis_bench_util_test.json");
+        let path = path.to_str().unwrap().to_string();
+        b.write_json("t", &path);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"c1\""));
+        assert!(text.contains("makespan_ratio"));
+        assert!(text.contains("\"bench\": \"t\""));
+        let _ = std::fs::remove_file(&path);
     }
 }

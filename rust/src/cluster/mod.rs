@@ -5,7 +5,7 @@
 //! *distinct* executors runs at a uniform speed `c` (paper simplification);
 //! transfers within one executor are free.
 
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, SchedMode};
 use crate::util::rng::Rng;
 
 /// One computing executor.
@@ -22,6 +22,9 @@ pub struct Cluster {
     pub executors: Vec<Executor>,
     /// Uniform inter-executor transmission speed in MB/s.
     pub comm_mbps: f64,
+    /// How executor time is booked by the simulator (append-compat vs
+    /// gap-aware insertion); threaded from [`ClusterConfig::sched_mode`].
+    pub sched_mode: SchedMode,
 }
 
 impl Cluster {
@@ -39,6 +42,7 @@ impl Cluster {
         Cluster {
             executors,
             comm_mbps: cfg.comm_mbps,
+            sched_mode: cfg.sched_mode,
         }
     }
 
@@ -48,7 +52,15 @@ impl Cluster {
         Cluster {
             executors: (0..n).map(|id| Executor { id, speed }).collect(),
             comm_mbps,
+            sched_mode: SchedMode::Append,
         }
+    }
+
+    /// Builder-style override of the booking mode (used by tests and the
+    /// gap-aware bench comparisons).
+    pub fn with_sched_mode(mut self, mode: SchedMode) -> Cluster {
+        self.sched_mode = mode;
+        self
     }
 
     pub fn len(&self) -> usize {

@@ -9,6 +9,31 @@
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
+/// How executor time is booked when a task is placed.
+///
+/// `Append` reproduces the paper's timing equations exactly: each executor
+/// is a single growing tail and tasks queue behind it (Eq 2–3). `GapAware`
+/// additionally lets the allocator backfill a task into an earlier idle
+/// window of the executor timeline when the task (and its data) fit — the
+/// insertion-based HEFT variant, opening the backfilling scenario family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Paper-faithful append-only executor timelines (the default).
+    #[default]
+    Append,
+    /// Insertion-based booking into the earliest feasible idle gap.
+    GapAware,
+}
+
+impl SchedMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedMode::Append => "append",
+            SchedMode::GapAware => "gap",
+        }
+    }
+}
+
 /// How jobs arrive at the system (paper §5.3.2 vs §5.3.3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Arrival {
@@ -30,6 +55,8 @@ pub struct ClusterConfig {
     /// Uniform data transmission speed between distinct executors, MB/s
     /// (paper assumes identical transfer speed between executors).
     pub comm_mbps: f64,
+    /// Executor-time booking mode (append-compat vs gap-aware insertion).
+    pub sched_mode: SchedMode,
 }
 
 impl Default for ClusterConfig {
@@ -40,6 +67,7 @@ impl Default for ClusterConfig {
             n_executors: 50,
             freq_table,
             comm_mbps: 100.0,
+            sched_mode: SchedMode::Append,
         }
     }
 }
@@ -73,6 +101,7 @@ impl ClusterConfig {
             ("n_executors", Json::from(self.n_executors)),
             ("freq_table", Json::from(self.freq_table.clone())),
             ("comm_mbps", Json::from(self.comm_mbps)),
+            ("sched_mode", Json::from(self.sched_mode.as_str())),
         ])
     }
 
@@ -84,10 +113,18 @@ impl ClusterConfig {
             .iter()
             .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad frequency")))
             .collect::<Result<Vec<_>>>()?;
+        // Absent in pre-gap-aware configs: default to the paper-faithful
+        // append mode so old experiment files stay reproducible.
+        let sched_mode = match v.get("sched_mode").and_then(Json::as_str) {
+            None | Some("append") => SchedMode::Append,
+            Some("gap") | Some("gap_aware") => SchedMode::GapAware,
+            Some(other) => bail!("unknown sched_mode '{other}' (append|gap)"),
+        };
         let cfg = ClusterConfig {
             n_executors: v.req_usize("n_executors")?,
             freq_table,
             comm_mbps: v.req_f64("comm_mbps")?,
+            sched_mode,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -368,6 +405,23 @@ mod tests {
         assert_eq!(c2.freq_table.len(), 16);
         assert!((c2.freq_table[0] - 2.1).abs() < 1e-9);
         assert!((c2.freq_table[15] - 3.6).abs() < 1e-9);
+        assert_eq!(c2.sched_mode, SchedMode::Append);
+    }
+
+    #[test]
+    fn sched_mode_roundtrip_and_default() {
+        let mut c = ClusterConfig::with_executors(4);
+        c.sched_mode = SchedMode::GapAware;
+        let c2 = ClusterConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sched_mode, SchedMode::GapAware);
+        // Pre-gap-aware config files (no sched_mode key) default to append.
+        let legacy = Json::from_pairs(vec![
+            ("n_executors", Json::from(2usize)),
+            ("freq_table", Json::from(vec![2.0])),
+            ("comm_mbps", Json::from(10.0)),
+        ]);
+        let c3 = ClusterConfig::from_json(&legacy).unwrap();
+        assert_eq!(c3.sched_mode, SchedMode::Append);
     }
 
     #[test]

@@ -12,7 +12,9 @@ use crate::config::{ClusterConfig, ExperimentConfig, TrainConfig, WorkloadConfig
 use crate::metrics::SuiteReport;
 use crate::policy::features::FeatureMode;
 use crate::policy::{params, PolicyEval, RustPolicy};
+#[cfg(feature = "pjrt")]
 use crate::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+#[cfg(feature = "pjrt")]
 use crate::runtime::PjrtPolicy;
 use crate::sched::{
     CpopScheduler, DecimaScheduler, DlsScheduler, FifoScheduler, HeftScheduler,
@@ -78,12 +80,15 @@ impl PolicySource {
             }
         };
         if self.backend == "pjrt" {
+            #[cfg(feature = "pjrt")]
             match PjrtPolicy::with_params(&self.artifact_dir, params.clone()) {
                 Ok(p) => return Box::new(p),
                 Err(e) => {
                     crate::log_warn!("PJRT backend unavailable ({e}); using rust forward");
                 }
             }
+            #[cfg(not(feature = "pjrt"))]
+            crate::log_warn!("built without the `pjrt` feature; using rust forward");
         }
         Box::new(RustPolicy::new(params))
     }
@@ -231,7 +236,9 @@ total makespan is arrival-dominated and JCT is the discriminating metric",
 }
 
 /// Fig 4: the learning curve. Trains Lachesis from the AOT init through
-/// the AOT train_step and dumps the per-episode series.
+/// the AOT train_step and dumps the per-episode series. Requires the
+/// `pjrt` cargo feature (gradients run inside the AOT artifact).
+#[cfg(feature = "pjrt")]
 pub fn fig4(cfg: &TrainConfig, artifact_dir: &str, out_params: &str) -> Result<String> {
     let init = params::load_expected(
         &format!("{artifact_dir}/params_init.bin"),
@@ -283,6 +290,13 @@ pub fn fig4(cfg: &TrainConfig, artifact_dir: &str, out_params: &str) -> Result<S
     out.push_str(&chart);
     write_results("fig4.md", &out)?;
     Ok(out)
+}
+
+/// Offline builds cannot run the AOT `train_step`; fail with a pointer to
+/// the feature instead of panicking deep inside the runtime.
+#[cfg(not(feature = "pjrt"))]
+pub fn fig4(_cfg: &TrainConfig, _artifact_dir: &str, _out_params: &str) -> Result<String> {
+    bail!("fig4 training requires building with `--features pjrt` (AOT train_step artifact)")
 }
 
 /// Ablations over the design choices DESIGN.md calls out: DEFT vs EFT in

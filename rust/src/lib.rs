@@ -21,7 +21,17 @@
 //!
 //! Python never runs on the request path: [`runtime`] loads the
 //! `artifacts/*.hlo.txt` modules through the PJRT C API (`xla` crate) and
-//! executes them directly from rust.
+//! executes them directly from rust. The PJRT path is gated behind the
+//! off-by-default `pjrt` cargo feature; offline builds use the
+//! numerically identical pure-rust forward ([`policy::RustPolicy`]).
+//!
+//! The simulator itself is layered for heavy continuous traffic: each
+//! executor is a [`sim::Timeline`] of busy intervals (append-compat by
+//! default, gap-aware insertion via `ClusterConfig::sched_mode`), the
+//! executable set is tracked incrementally by [`sim::Frontier`] counters,
+//! and `SimState` memoizes `min_aft`, per-job remaining work/tasks and
+//! cluster averages so per-decision cost no longer scales with workload
+//! size.
 //!
 //! ## Quickstart
 //!
@@ -53,7 +63,9 @@ pub mod workload;
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
     pub use crate::cluster::{Cluster, Executor};
-    pub use crate::config::{ClusterConfig, ExperimentConfig, TrainConfig, WorkloadConfig};
+    pub use crate::config::{
+        ClusterConfig, ExperimentConfig, SchedMode, TrainConfig, WorkloadConfig,
+    };
     pub use crate::dag::{Job, JobId, Task, TaskId, TaskRef};
     pub use crate::metrics::{ScheduleReport, SuiteReport};
     pub use crate::policy::{PolicyNet, RustPolicy};
@@ -62,7 +74,7 @@ pub mod prelude {
         HighRankUpScheduler, HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler,
         SjfScheduler, TdcaScheduler,
     };
-    pub use crate::sim::Simulator;
+    pub use crate::sim::{Simulator, Timeline};
     pub use crate::util::rng::Rng;
     pub use crate::workload::{Workload, WorkloadGenerator};
 }

@@ -147,25 +147,33 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = args.opt_or("out", default_out);
     if args.flag("decima") {
         // Train the Decima-DEFT baseline (blind features).
-        use lachesis::policy::features::FeatureMode;
-        use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
-        let init = lachesis::policy::params::load_expected(
-            &format!("{artifacts}/params_init.bin"),
-            lachesis::policy::net::param_len(),
-        )?;
-        let backend = PjrtTrainBackend::new(artifacts, init)?;
-        let batch = backend.batch_size();
-        let mut trainer = Trainer::new(cfg, backend, FeatureMode::HomogeneousBlind);
-        let stats = trainer.train(batch)?;
-        if let Some(dir) = std::path::Path::new(out).parent() {
-            std::fs::create_dir_all(dir).ok();
+        #[cfg(feature = "pjrt")]
+        {
+            use lachesis::policy::features::FeatureMode;
+            use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+            let init = lachesis::policy::params::load_expected(
+                &format!("{artifacts}/params_init.bin"),
+                lachesis::policy::net::param_len(),
+            )?;
+            let backend = PjrtTrainBackend::new(artifacts, init)?;
+            let batch = backend.batch_size();
+            let mut trainer = Trainer::new(cfg, backend, FeatureMode::HomogeneousBlind);
+            let stats = trainer.train(batch)?;
+            if let Some(dir) = std::path::Path::new(out).parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            lachesis::policy::params::save_f32(out, trainer.backend.params())?;
+            println!(
+                "decima training done: {} episodes, final makespan {:.1}s → {out}",
+                stats.len(),
+                stats.last().map(|s| s.makespan).unwrap_or(0.0)
+            );
         }
-        lachesis::policy::params::save_f32(out, trainer.backend.params())?;
-        println!(
-            "decima training done: {} episodes, final makespan {:.1}s → {out}",
-            stats.len(),
-            stats.last().map(|s| s.makespan).unwrap_or(0.0)
-        );
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = (&cfg, &artifacts, &out);
+            bail!("`train --decima` requires building with `--features pjrt`");
+        }
     } else {
         let summary = exp::fig4(&cfg, artifacts, out)?;
         println!("{summary}");
@@ -290,17 +298,22 @@ fn cmd_info(args: &Args) -> Result<()> {
         lachesis::policy::V1,
         lachesis::policy::V2
     );
-    match lachesis::runtime::Runtime::new(dir) {
-        Ok(rt) => {
-            println!("artifacts at {dir}: OK (platform {})", rt.platform());
-            for (name, n, j) in &rt.meta.variants {
-                println!("  policy variant {name}: N={n} J={j}");
+    #[cfg(feature = "pjrt")]
+    {
+        match lachesis::runtime::Runtime::new(dir) {
+            Ok(rt) => {
+                println!("artifacts at {dir}: OK (platform {})", rt.platform());
+                for (name, n, j) in &rt.meta.variants {
+                    println!("  policy variant {name}: N={n} J={j}");
+                }
+                if let Some((name, b, n, j)) = &rt.meta.train {
+                    println!("  train_step {name}: B={b} N={n} J={j}");
+                }
             }
-            if let Some((name, b, n, j)) = &rt.meta.train {
-                println!("  train_step {name}: B={b} N={n} J={j}");
-            }
+            Err(e) => println!("artifacts at {dir}: unavailable ({e})"),
         }
-        Err(e) => println!("artifacts at {dir}: unavailable ({e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("artifacts at {dir}: PJRT disabled (build with --features pjrt)");
     Ok(())
 }

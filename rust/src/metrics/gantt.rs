@@ -12,17 +12,18 @@ pub fn render(state: &SimState, width: usize) -> String {
     let horizon = state.horizon.max(1e-9);
     let mut out = String::new();
     out.push_str(&format!(
-        "schedule horizon {:.2}s — {} executors, {} tasks, {} duplicates\n",
+        "schedule horizon {:.2}s — {} executors, {} tasks, {} duplicates, {} booking\n",
         state.horizon,
         state.cluster.len(),
         state.n_assigned,
-        state.n_duplicates
+        state.n_duplicates,
+        state.sched_mode.as_str(),
     ));
     for (e, log) in state.exec_log.iter().enumerate() {
         let mut row = vec![b' '; width];
         let mut labels: Vec<(usize, String)> = Vec::new();
         let mut sorted = log.clone();
-        sorted.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+        sorted.sort_by(|a, b| a.1.start.total_cmp(&b.1.start));
         for (task, pl) in &sorted {
             let c0 = ((pl.start / horizon) * width as f64).floor() as usize;
             let c1 = (((pl.finish / horizon) * width as f64).ceil() as usize).min(width);
@@ -38,8 +39,10 @@ pub fn render(state: &SimState, width: usize) -> String {
             labels.push((c0, tag));
         }
         let speed = state.cluster.speed(e);
+        // Per-executor busy share of the horizon, from the timeline.
+        let busy_pct = 100.0 * state.timeline(e).busy_time() / horizon;
         out.push_str(&format!(
-            "e{e:<3} {speed:.1}GHz |{}|",
+            "e{e:<3} {speed:.1}GHz {busy_pct:>3.0}% |{}|",
             String::from_utf8(row).unwrap()
         ));
         // Append up to 4 labels to keep lines readable.

@@ -50,10 +50,10 @@ impl ScheduleReport {
             jcts.push(jct);
             slrs.push(jct / cp.max(1e-12));
         }
-        let busy: f64 = state
-            .exec_log
-            .iter()
-            .flat_map(|log| log.iter().map(|(_, p)| p.finish - p.start))
+        // Busy time straight off the executor timelines (identical to
+        // summing the schedule log — `validate` pins them together).
+        let busy: f64 = (0..state.cluster.len())
+            .map(|e| state.timeline(e).busy_time())
             .sum();
         let utilization = if makespan > 0.0 {
             busy / (state.cluster.len() as f64 * makespan)

@@ -98,6 +98,7 @@ impl EncodedState {
 pub fn encode(state: &SimState, mode: FeatureMode) -> EncodedState {
     // Gather candidate tasks: unassigned tasks of arrived jobs, jobs in
     // arrival order (ids are arrival-ordered by Workload::new).
+    // `job_left_tasks` is an O(1) counter, so this filter is O(jobs).
     let mut jobs: Vec<usize> = (0..state.jobs.len())
         .filter(|&j| state.arrived[j] && state.job_left_tasks(j) > 0)
         .collect();

@@ -44,8 +44,9 @@ const N_TASKS: f64 = 10.0;
 pub fn node_features(state: &SimState, t: TaskRef, mode: FeatureMode, out: &mut [f32]) {
     debug_assert_eq!(out.len(), NODE_FEATURES);
     let job = &state.jobs[t.job];
+    // Cluster averages are memoized on the state — no per-feature scan.
     let (v_avg, c_avg) = match mode {
-        FeatureMode::Full => (state.cluster.v_avg(), state.cluster.c_avg()),
+        FeatureMode::Full => (state.v_avg(), state.c_avg()),
         FeatureMode::HomogeneousBlind => (1.0, f64::INFINITY),
     };
 
@@ -73,10 +74,11 @@ pub fn node_features(state: &SimState, t: TaskRef, mode: FeatureMode, out: &mut 
     out[5] = squash(job.parents[t.node].len() as f64, 4.0);
     // 6: number of children (DAG out-degree).
     out[6] = squash(job.children[t.node].len() as f64, 4.0);
-    // 7: job's remaining task count.
+    // 7: job's remaining task count (O(1) incremental counter).
     out[7] = squash(state.job_left_tasks(t.job) as f64, N_TASKS);
     // 8: job's remaining work (average execution time of left tasks ×
-    //    count ≈ total, paper's "sum of average execution time").
+    //    count ≈ total, paper's "sum of average execution time"); O(1)
+    //    incremental counter instead of a per-feature task scan.
     out[8] = squash(state.job_left_work(t.job) / v_avg, T_RANK);
     // 9: executable right now?
     out[9] = if state.is_executable(t) { 1.0 } else { 0.0 };

@@ -7,15 +7,20 @@ use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, TrainConfig, WorkloadConfig};
 use crate::policy::encode::EncodedState;
 use crate::policy::features::FeatureMode;
-use crate::policy::{RustPolicy, F};
+use crate::policy::RustPolicy;
+#[cfg(feature = "pjrt")]
+use crate::policy::F;
 use crate::rl::episode;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::sched::lachesis::{LachesisScheduler, Transition};
 use crate::sched::{HeftScheduler, Scheduler};
 use crate::sim::Simulator;
 use crate::util::rng::Rng;
 use crate::workload::WorkloadGenerator;
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context};
+use anyhow::Result;
 
 /// One batch row fed to train_step.
 pub struct Row {
@@ -36,6 +41,10 @@ pub trait TrainBackend {
 }
 
 /// PJRT-backed trainer state: parameters + Adam moments + step counter.
+/// Requires the `pjrt` cargo feature (drives the AOT `train_step`
+/// artifact); offline builds train only through [`FakeBackend`]-style
+/// test backends.
+#[cfg(feature = "pjrt")]
 pub struct PjrtTrainBackend {
     runtime: Runtime,
     stem: String,
@@ -48,6 +57,7 @@ pub struct PjrtTrainBackend {
     step: f32,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtTrainBackend {
     pub fn new(artifact_dir: &str, init_params: Vec<f32>) -> Result<PjrtTrainBackend> {
         let runtime = Runtime::new(artifact_dir)?;
@@ -78,6 +88,7 @@ impl PjrtTrainBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainBackend for PjrtTrainBackend {
     fn update(&mut self, batch: &[Row], lr: f32, entropy_w: f32, vw: f32) -> Result<[f32; 4]> {
         let (b, n, j) = (self.b, self.n, self.j);

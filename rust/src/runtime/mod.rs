@@ -2,13 +2,25 @@
 //! *text* — see DESIGN.md for why not serialized protos) onto the CPU
 //! PJRT client and executes them from the rust hot path. Python is never
 //! involved after `make artifacts`.
+//!
+//! Everything touching the `xla` crate is gated behind the off-by-default
+//! `pjrt` cargo feature so the crate builds and tests offline; without
+//! the feature only [`ArtifactMeta`] (pure JSON parsing and the model
+//! contract check) is available, and every policy consumer falls back to
+//! the numerically identical pure-rust forward (`RustPolicy`).
 
+#[cfg(feature = "pjrt")]
 use crate::policy::encode::EncodedState;
-use crate::policy::{net, PolicyEval};
+use crate::policy::net;
+#[cfg(feature = "pjrt")]
+use crate::policy::PolicyEval;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 /// Parsed `artifacts/meta.json`, written by `python/compile/aot.py`.
 #[derive(Debug, Clone)]
@@ -91,6 +103,7 @@ impl ArtifactMeta {
 }
 
 /// Compiled-executable cache over a PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -104,9 +117,10 @@ pub struct Runtime {
 // a clone of it, so moving the whole `Runtime` transfers the entire
 // reference group to one thread at a time. `Runtime` is deliberately not
 // `Sync`.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Runtime {}
 
-
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (default `artifacts/`), parse metadata
     /// and start a CPU PJRT client.
@@ -184,11 +198,13 @@ impl Runtime {
 }
 
 /// The PJRT-backed policy evaluator: the production inference path.
+#[cfg(feature = "pjrt")]
 pub struct PjrtPolicy {
     runtime: Runtime,
     pub params: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtPolicy {
     /// Load from an artifact dir and a parameter file (defaults to the
     /// freshly initialized `params_init.bin`).
@@ -227,6 +243,7 @@ impl PjrtPolicy {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl PolicyEval for PjrtPolicy {
     fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)> {
         let stem = self.stem_for(enc)?;

@@ -12,7 +12,7 @@
 //! (Eq 11). Complexity is `O(P · M)` per task (`P` parents, `M`
 //! executors) and `O(E · M)` for a whole workload, as analyzed in §5.1.
 
-use super::eft::{best_eft, est};
+use super::eft::best_eft;
 use super::Allocator;
 use crate::dag::{NodeId, TaskRef};
 use crate::sim::{Allocation, SimState};
@@ -20,31 +20,16 @@ use crate::sim::{Allocation, SimState};
 /// CPEFT (Eq 10, with the duplicate's own execution modeled): finish time
 /// of `task` on `exec` if parent `parent` is first duplicated onto `exec`.
 ///
-/// The duplicated copy must wait for *its* input data on `exec` and for the
-/// executor to be free; the task then starts at
+/// The duplicated copy must wait for *its* input data on `exec` and for an
+/// executor slot; the task then starts at
 /// `max(duplicate finish, other parents' data-ready)` — parent data is
 /// local after duplication (`AFTC` with zero transfer), and the executor is
-/// serially occupied by the duplicate until it finishes.
+/// serially occupied by the duplicate until it finishes. Both slots are
+/// planned through [`SimState::plan_duplicate`], the same math `apply`
+/// books, so the prediction is exact in both booking modes.
 pub fn cpeft(state: &SimState, task: TaskRef, parent: NodeId, exec: usize) -> f64 {
-    let p = TaskRef::new(task.job, parent);
-    // Duplicate's start: its own data-ready on exec (Eq 9 applied to the
-    // parent's parents), executor availability, wall clock, job arrival.
-    let dup_start = est(state, p, exec).max(state.exec_ready[exec]);
-    let dup_finish = dup_start + state.task_compute(p) / state.cluster.speed(exec);
-    // Task start: duplicate holds the executor until dup_finish and its
-    // output is then local; other parents stream in from their copies
-    // (min over R_{n_m}, Eq 9).
-    let mut start = dup_finish;
-    for e in &state.jobs[task.job].parents[task.node] {
-        if e.other == parent {
-            continue;
-        }
-        let avail = state.parent_data_at(task, e.other, exec);
-        if avail > start {
-            start = avail;
-        }
-    }
-    start + state.task_compute(task) / state.cluster.speed(exec)
+    let (_, (_, finish)) = state.plan_duplicate(task, parent, exec);
+    finish
 }
 
 /// DEFT (Eq 11, Algorithm 1): the minimum-finish-time allocation across

@@ -37,7 +37,7 @@ impl DlsScheduler {
         // Static level: longest computation-only path to an exit, using
         // the mean execution time (no communication).
         let j = &state.jobs[job];
-        let v_avg = state.cluster.v_avg();
+        let v_avg = state.v_avg();
         let n = j.n_tasks();
         let mut sl = vec![0.0f64; n];
         for &u in j.topo().iter().rev() {
@@ -63,7 +63,7 @@ impl Scheduler for DlsScheduler {
     }
 
     fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
-        let v_avg = state.cluster.v_avg();
+        let v_avg = state.v_avg();
         let tasks: Vec<TaskRef> = state.executable().to_vec();
         let mut best: Option<(f64, TaskRef, usize)> = None;
         for t in tasks {
@@ -71,11 +71,9 @@ impl Scheduler for DlsScheduler {
             let sl = self.sl[t.job].as_ref().unwrap()[t.node];
             let w = state.task_compute(t);
             for r in 0..state.cluster.len() {
-                let start = state
-                    .data_ready(t, r)
-                    .max(state.exec_ready[r])
-                    .max(state.wall)
-                    .max(state.jobs[t.job].arrival);
+                // Achievable start on r under the state's booking mode
+                // (append tail or earliest feasible gap).
+                let start = state.plan_direct(t, r).0;
                 let delta = w / v_avg - w / state.cluster.speed(r);
                 let dl = sl - start + delta;
                 let better = match best {

@@ -7,21 +7,20 @@ use crate::sim::{Allocation, SimState};
 
 /// Earliest start time of `task` on `exec` (Eq 2), additionally bounded by
 /// the current wall clock and the job's arrival (online constraints).
-/// Does *not* include the executor-availability bound — that's the `max`
-/// with `exec_ready` in [`eft`], matching the insertion-free append
-/// timeline the simulator uses.
+/// Does *not* include the executor-availability bound — that's applied by
+/// the timeline probe in [`eft`] (append tail or earliest feasible gap,
+/// per the state's booking mode).
 pub fn est(state: &SimState, task: TaskRef, exec: usize) -> f64 {
-    state
-        .data_ready(task, exec)
-        .max(state.wall)
-        .max(state.jobs[task.job].arrival)
+    state.ready_time(task, exec)
 }
 
-/// Earliest finish time of `task` on `exec` (Eq 3) under the append
-/// timeline: start = max(EST, executor free), finish = start + w/v.
+/// Earliest finish time of `task` on `exec` (Eq 3): the executor timeline
+/// is probed through [`SimState::plan_direct`], so the same math drives
+/// the prediction here and the booking in `apply` — in append mode this
+/// is `max(EST, tail) + w/v` exactly as the paper writes it, in gap-aware
+/// mode the earliest idle window that fits.
 pub fn eft(state: &SimState, task: TaskRef, exec: usize) -> f64 {
-    let start = est(state, task, exec).max(state.exec_ready[exec]);
-    start + state.task_compute(task) / state.cluster.speed(exec)
+    state.plan_direct(task, exec).1
 }
 
 /// The executor minimizing EFT, with the winning finish time.

@@ -47,6 +47,22 @@ mod tests {
     }
 
     #[test]
+    fn gap_aware_heft_completes_and_validates() {
+        use crate::config::SchedMode;
+        // Insertion-based HEFT: same selector/allocator, gap-aware booking.
+        for seed in 0..4 {
+            let mut cfg = crate::config::ClusterConfig::with_executors(8);
+            cfg.sched_mode = SchedMode::GapAware;
+            let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), seed).generate();
+            let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, seed), w);
+            let report = sim.run(&mut HeftScheduler::new()).unwrap();
+            assert!(report.makespan.is_finite() && report.makespan > 0.0);
+            assert_eq!(report.n_duplicates, 0);
+            sim.state.validate().unwrap();
+        }
+    }
+
+    #[test]
     fn heft_beats_fifo_on_average() {
         // Statistical sanity: across several seeds HEFT's rank_up ordering
         // should beat FIFO's arrival ordering (both using their allocators).

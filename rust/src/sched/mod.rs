@@ -42,6 +42,23 @@ pub trait Scheduler {
     fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>>;
 }
 
+/// Boxed schedulers are schedulers too, so wrappers (tracing, recording,
+/// composition) can be generic over `S: Scheduler` and still accept the
+/// `Box<dyn Scheduler>` the builders hand out.
+impl Scheduler for Box<dyn Scheduler> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+
+    fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        (**self).step(state)
+    }
+}
+
 /// Phase-1 policy: pick the next task from the executable set.
 pub trait TaskSelector {
     fn name(&self) -> String;

@@ -64,6 +64,8 @@ impl Default for FifoScheduler {
 
 // ---------------------------------------------------------------------------
 // SJF: shortest job first (by remaining job work; paper baseline 2).
+// `job_left_work` is an O(1) incremental counter, so this selector is
+// O(|A_t|) per decision instead of O(|A_t| · tasks-per-job).
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Default)]
@@ -108,7 +110,7 @@ impl TaskSelector for HrrnSelector {
     }
 
     fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
-        let v_avg = state.cluster.v_avg();
+        let v_avg = state.v_avg();
         Ok(argmax_by(state, |st, t| {
             let wait = (st.wall - st.jobs[t.job].arrival).max(0.0);
             let exec = st.task_compute(t) / v_avg;

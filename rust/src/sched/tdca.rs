@@ -48,8 +48,9 @@ impl TdcaScheduler {
             self.planned_jobs.resize(state.jobs.len(), false);
         }
         let n_exec = state.cluster.len();
-        // Executor load accumulated by this planning round (work / speed).
-        let mut exec_load: Vec<f64> = state.exec_ready.clone();
+        // Executor load accumulated by this planning round (work / speed),
+        // seeded from the live timeline tails.
+        let mut exec_load: Vec<f64> = (0..n_exec).map(|e| state.exec_ready(e)).collect();
 
         for (ji, job) in state.jobs.iter().enumerate() {
             if !state.arrived[ji] || self.planned_jobs[ji] {
@@ -62,8 +63,8 @@ impl TdcaScheduler {
             // critical parent of v = parent maximizing rank_down + edge
             // weight (the latest-arriving input).
             let rd = &state.rank_down[ji];
-            let c_avg = state.cluster.c_avg();
-            let v_avg = state.cluster.v_avg();
+            let c_avg = state.c_avg();
+            let v_avg = state.v_avg();
             let mut cluster_of: Vec<Option<usize>> = vec![None; n];
             let mut clusters: Vec<Vec<usize>> = Vec::new();
             // Walk nodes in reverse topological order; an unclustered node

@@ -60,6 +60,8 @@ pub enum Response {
         assigned: usize,
         executors: usize,
         horizon: f64,
+        /// Size of the executable frontier (tasks ready to be scheduled).
+        executable: usize,
     },
     Error(String),
 }
@@ -201,12 +203,14 @@ impl Response {
                 assigned,
                 executors,
                 horizon,
+                executable,
             } => Json::from_pairs(vec![
                 ("type", Json::from("status")),
                 ("jobs", Json::from(*jobs)),
                 ("assigned", Json::from(*assigned)),
                 ("executors", Json::from(*executors)),
                 ("horizon", Json::from(*horizon)),
+                ("executable", Json::from(*executable)),
             ]),
             Response::Error(msg) => Json::from_pairs(vec![
                 ("type", Json::from("error")),
@@ -245,6 +249,8 @@ impl Response {
                 assigned: v.req_usize("assigned").map_err(|e| anyhow!("{e}"))?,
                 executors: v.req_usize("executors").map_err(|e| anyhow!("{e}"))?,
                 horizon: v.req_f64("horizon").map_err(|e| anyhow!("{e}"))?,
+                // Absent in pre-frontier peers: default 0 for compatibility.
+                executable: v.get("executable").and_then(Json::as_usize).unwrap_or(0),
             }),
             "error" => Ok(Response::Error(
                 v.req_str("message").map_err(|e| anyhow!("{e}"))?.to_string(),
@@ -328,6 +334,7 @@ mod tests {
                 assigned: 5,
                 executors: 8,
                 horizon: 42.0,
+                executable: 3,
             },
             Response::Error("boom".into()),
         ];

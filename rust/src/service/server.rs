@@ -77,6 +77,7 @@ impl AgentServer {
                 assigned: self.state.n_assigned,
                 executors: self.state.cluster.len(),
                 horizon: self.state.horizon,
+                executable: self.state.executable().len(),
             },
             Request::Shutdown => Response::Ok { job_id: None },
         }

@@ -43,11 +43,13 @@ impl PartialOrd for Ev {
 }
 impl Ord for Ev {
     // Reverse ordering: BinaryHeap is a max-heap, we want earliest first.
+    // `total_cmp` keeps the order total even for pathological times;
+    // `push_event` additionally rejects non-finite times outright, since a
+    // NaN completion time would otherwise corrupt the heap invariant.
     fn cmp(&self, other: &Self) -> Ordering {
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -70,19 +72,22 @@ impl Simulator {
             seq: 0,
             decision_ms: Recorder::new(),
         };
-        for (id, job) in sim.state.jobs.iter().enumerate() {
-            let ev = Ev {
-                time: job.arrival,
-                seq: id as u64,
-                kind: EventKind::Arrival(id),
-            };
-            sim.events.push(ev);
+        // Seed arrivals through `push_event` so seq numbers stay unique
+        // even when events are added later (hand-rolled job-id seqs would
+        // collide with service-mode arrivals pushed mid-run).
+        let arrivals: Vec<(f64, usize)> =
+            sim.state.jobs.iter().map(|j| (j.arrival, j.id)).collect();
+        for (time, id) in arrivals {
+            sim.push_event(time, EventKind::Arrival(id));
         }
-        sim.seq = sim.state.jobs.len() as u64;
         sim
     }
 
     fn push_event(&mut self, time: f64, kind: EventKind) {
+        assert!(
+            time.is_finite(),
+            "non-finite event time {time} for {kind:?}"
+        );
         self.seq += 1;
         self.events.push(Ev {
             time,
@@ -170,6 +175,47 @@ mod tests {
         // Makespan must cover the last arrival — its tasks run after it.
         assert!(report.makespan >= last_arrival);
         sim.state.validate().unwrap();
+    }
+
+    #[test]
+    fn arrival_seeding_has_unique_seqs() {
+        let cluster = Cluster::homogeneous(2, 2.0, 100.0);
+        // Two jobs with identical arrival times must still pop in job-id
+        // order (seq tie-break), and later pushes must not collide.
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 7).generate();
+        let mut sim = Simulator::new(cluster, w);
+        assert_eq!(sim.seq, sim.state.jobs.len() as u64);
+        sim.push_event(1.0, EventKind::Completion(crate::dag::TaskRef::new(0, 0)));
+        let seqs: Vec<u64> = sim.events.iter().map(|e| e.seq).collect();
+        let distinct: std::collections::BTreeSet<u64> = seqs.iter().copied().collect();
+        assert_eq!(seqs.len(), distinct.len(), "duplicate event seqs");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn push_event_rejects_nan_time() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(1), 1).generate();
+        let mut sim = Simulator::new(cluster, w);
+        sim.push_event(f64::NAN, EventKind::Arrival(0));
+    }
+
+    #[test]
+    fn ev_order_total_even_with_nan() {
+        // Defense in depth: even if a NaN slipped past the push assert,
+        // total_cmp keeps Ord consistent (no panic, deterministic order).
+        let a = Ev {
+            time: f64::NAN,
+            seq: 1,
+            kind: EventKind::Arrival(0),
+        };
+        let b = Ev {
+            time: 1.0,
+            seq: 2,
+            kind: EventKind::Arrival(1),
+        };
+        assert_ne!(a.cmp(&b), std::cmp::Ordering::Equal);
+        assert_eq!(a.cmp(&b), b.cmp(&a).reverse());
     }
 
     #[test]

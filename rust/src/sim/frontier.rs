@@ -1,0 +1,174 @@
+//! Incremental executable-set tracker.
+//!
+//! The executable set `A_t` (paper notation: arrived ∧ unassigned ∧ every
+//! parent assigned) used to be maintained by re-checking all parents of
+//! every affected child on each assignment. `Frontier` instead keeps a
+//! per-task counter of *unassigned distinct parents*: an assignment
+//! decrements its children's counters in O(out-degree) and a task enters
+//! the frontier exactly when its counter hits zero. Membership updates on
+//! the sorted item list are a binary search plus a memmove.
+
+use crate::dag::{Job, NodeId, TaskRef};
+
+/// The executable frontier plus the dependency counters that drive it.
+#[derive(Debug, Clone, Default)]
+pub struct Frontier {
+    /// Executable tasks, kept sorted for deterministic iteration.
+    items: Vec<TaskRef>,
+    /// `pending[job][node]` — number of distinct unassigned parents.
+    pending: Vec<Vec<usize>>,
+}
+
+impl Frontier {
+    pub fn new() -> Frontier {
+        Frontier::default()
+    }
+
+    /// Number of jobs registered.
+    pub fn n_jobs(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Register a job's dependency counters (distinct parents per node).
+    /// Must be called once per job, in job-id order.
+    pub fn add_job(&mut self, job: &Job) {
+        let counts = (0..job.n_tasks())
+            .map(|n| {
+                let mut parents: Vec<NodeId> =
+                    job.parents[n].iter().map(|e| e.other).collect();
+                parents.sort_unstable();
+                parents.dedup();
+                parents.len()
+            })
+            .collect();
+        self.pending.push(counts);
+    }
+
+    /// A job arrived: its dependency-free tasks enter the frontier. (At
+    /// arrival no task of the job can be assigned yet, so "counter zero"
+    /// is exactly "all parents assigned".)
+    pub fn activate_job(&mut self, job: usize) {
+        for node in 0..self.pending[job].len() {
+            if self.pending[job][node] == 0 {
+                self.insert(TaskRef::new(job, node));
+            }
+        }
+    }
+
+    /// A task was assigned: remove it and admit every child whose last
+    /// unassigned parent this was. The caller guarantees `t` was
+    /// executable, which implies its job has arrived.
+    pub fn assign(&mut self, dag: &Job, t: TaskRef) {
+        self.remove(t);
+        // Parallel edges to the same child must decrement only once.
+        let mut seen: Vec<NodeId> = Vec::new();
+        for e in &dag.children[t.node] {
+            if seen.contains(&e.other) {
+                continue;
+            }
+            seen.push(e.other);
+            let c = &mut self.pending[t.job][e.other];
+            debug_assert!(*c > 0, "child ({}, {}) underflow", t.job, e.other);
+            *c -= 1;
+            if *c == 0 {
+                self.insert(TaskRef::new(t.job, e.other));
+            }
+        }
+    }
+
+    /// The executable set, sorted.
+    pub fn items(&self) -> &[TaskRef] {
+        &self.items
+    }
+
+    pub fn contains(&self, t: TaskRef) -> bool {
+        self.items.binary_search(&t).is_ok()
+    }
+
+    /// Remaining unassigned distinct parents of a task.
+    pub fn unassigned_parents(&self, t: TaskRef) -> usize {
+        self.pending[t.job][t.node]
+    }
+
+    fn insert(&mut self, t: TaskRef) {
+        if let Err(i) = self.items.binary_search(&t) {
+            self.items.insert(i, t);
+        }
+    }
+
+    fn remove(&mut self, t: TaskRef) {
+        if let Ok(i) = self.items.binary_search(&t) {
+            self.items.remove(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Job;
+
+    fn diamond() -> Job {
+        // 0 -> {1, 2} -> 3
+        Job::new(
+            0,
+            "diamond",
+            0.0,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)],
+        )
+    }
+
+    #[test]
+    fn activation_admits_entries_only() {
+        let job = diamond();
+        let mut f = Frontier::new();
+        f.add_job(&job);
+        assert!(f.items().is_empty());
+        f.activate_job(0);
+        assert_eq!(f.items(), &[TaskRef::new(0, 0)]);
+        assert_eq!(f.unassigned_parents(TaskRef::new(0, 3)), 2);
+    }
+
+    #[test]
+    fn assignment_cascades_through_counters() {
+        let job = diamond();
+        let mut f = Frontier::new();
+        f.add_job(&job);
+        f.activate_job(0);
+        f.assign(&job, TaskRef::new(0, 0));
+        assert_eq!(f.items(), &[TaskRef::new(0, 1), TaskRef::new(0, 2)]);
+        f.assign(&job, TaskRef::new(0, 1));
+        assert_eq!(f.items(), &[TaskRef::new(0, 2)]);
+        assert_eq!(f.unassigned_parents(TaskRef::new(0, 3)), 1);
+        f.assign(&job, TaskRef::new(0, 2));
+        assert_eq!(f.items(), &[TaskRef::new(0, 3)]);
+        f.assign(&job, TaskRef::new(0, 3));
+        assert!(f.items().is_empty());
+    }
+
+    #[test]
+    fn parallel_edges_count_once() {
+        // Two edges 0 -> 1: node 1 has one distinct parent.
+        let job = Job::new(0, "multi", 0.0, vec![1.0, 1.0], &[(0, 1, 1.0), (0, 1, 2.0)]);
+        let mut f = Frontier::new();
+        f.add_job(&job);
+        f.activate_job(0);
+        assert_eq!(f.unassigned_parents(TaskRef::new(0, 1)), 1);
+        f.assign(&job, TaskRef::new(0, 0));
+        assert!(f.contains(TaskRef::new(0, 1)));
+    }
+
+    #[test]
+    fn multiple_jobs_are_independent() {
+        let j0 = diamond();
+        let j1 = Job::new(1, "solo", 0.0, vec![1.0], &[]);
+        let mut f = Frontier::new();
+        f.add_job(&j0);
+        f.add_job(&j1);
+        f.activate_job(1);
+        assert_eq!(f.items(), &[TaskRef::new(1, 0)]);
+        f.activate_job(0);
+        assert_eq!(f.items(), &[TaskRef::new(0, 0), TaskRef::new(1, 0)]);
+    }
+}

@@ -1,16 +1,29 @@
 //! Event-driven simulator for the heterogeneous data-processing platform
-//! (paper Appendix D, Algorithm 3).
+//! (paper Appendix D, Algorithm 3), layered as three subsystems:
 //!
-//! The simulator owns the shared scheduling state ([`state::SimState`]):
-//! executor timelines, task placements (including duplicated copies), the
-//! executable frontier and cached rank features. The engine replays
-//! scheduling events (job arrivals, task completions) in time order and
-//! invokes the scheduler at each event until no executable unassigned task
-//! remains, recording per-decision wall-clock latency — the paper's
-//! decision-time metric (Figs 5d/6d/7b).
+//! * [`timeline`] — per-executor busy-interval timelines with O(1) append
+//!   booking and O(log n) gap search. Append mode reproduces the paper's
+//!   single-`exec_ready`-scalar semantics exactly; gap-aware mode
+//!   backfills tasks into idle windows (insertion-based HEFT style),
+//!   toggled via `ClusterConfig::sched_mode`.
+//! * [`frontier`] — the incremental executable-set tracker: per-task
+//!   unassigned-parent counters instead of re-scanning all parents.
+//! * [`state`] — the composed [`state::SimState`]: placements (including
+//!   duplicated copies), cached ranks, and O(1) incremental caches for
+//!   `min_aft`, per-job remaining work/tasks, and cluster averages.
+//!
+//! The [`engine`] replays scheduling events (job arrivals, task
+//! completions) in time order and invokes the scheduler at each event
+//! until no executable unassigned task remains, recording per-decision
+//! wall-clock latency — the paper's decision-time metric (Figs 5d/6d/7b).
 
 pub mod engine;
+pub mod frontier;
 pub mod state;
+pub mod timeline;
 
+pub use crate::config::SchedMode;
 pub use engine::Simulator;
+pub use frontier::Frontier;
 pub use state::{Allocation, Placement, SimState};
+pub use timeline::Timeline;

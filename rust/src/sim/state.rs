@@ -1,8 +1,15 @@
-//! Shared scheduling state: placements (with task duplication), executor
-//! timelines, the executable frontier, and the paper's timing equations'
-//! common building blocks (actual finish times, data-ready times).
+//! Shared scheduling state: placements (with task duplication), the
+//! paper's timing equations' common building blocks (actual finish times,
+//! data-ready times), and the composition of the two incremental
+//! subsystems — per-executor [`Timeline`]s and the executable
+//! [`Frontier`] — plus O(1) caches for the quantities schedulers and the
+//! policy featurizer probe on every decision (`min_aft`, per-job
+//! `left_tasks`/`left_work`, cluster-average transfer terms).
 
+use super::frontier::Frontier;
+use super::timeline::Timeline;
 use crate::cluster::Cluster;
+use crate::config::SchedMode;
 use crate::dag::{ranks, Job, NodeId, TaskRef};
 use crate::workload::Workload;
 
@@ -48,8 +55,6 @@ pub struct SimState {
     pub assigned: Vec<Vec<bool>>,
     /// All scheduled copies per task: `placements[job][node]` = `R_{n_i}`.
     pub placements: Vec<Vec<Vec<Placement>>>,
-    /// Time each executor's timeline becomes free (append scheduling).
-    pub exec_ready: Vec<f64>,
     /// Full per-executor schedule log for validation and reporting.
     pub exec_log: Vec<Vec<(TaskRef, Placement)>>,
     /// Current simulation wall time.
@@ -64,9 +69,24 @@ pub struct SimState {
     pub n_assigned: usize,
     /// Count of duplicated copies created.
     pub n_duplicates: usize,
-    /// Incremental executable frontier (arrived ∧ unassigned ∧ parents all
-    /// assigned), kept sorted for deterministic iteration.
-    frontier: Vec<TaskRef>,
+    /// Executor-time booking mode, threaded from the cluster config.
+    pub sched_mode: SchedMode,
+    /// Per-executor busy-interval timelines (replace the old append-only
+    /// `exec_ready` scalars).
+    timelines: Vec<Timeline>,
+    /// Incremental executable-set tracker.
+    frontier: Frontier,
+    /// `min_aft_cache[job][node]` — earliest finish over scheduled copies
+    /// (∞ while unscheduled), min-updated on every booking.
+    min_aft_cache: Vec<Vec<f64>>,
+    /// Remaining unassigned task count per job.
+    left_tasks: Vec<usize>,
+    /// Remaining unassigned work per job, GHz·s.
+    left_work: Vec<f64>,
+    /// Memoized cluster averages (the cluster is immutable after
+    /// construction; `Cluster::v_avg` is an O(M) scan).
+    v_avg: f64,
+    c_avg: f64,
 }
 
 impl SimState {
@@ -80,11 +100,14 @@ impl SimState {
             .map(|j| ranks::rank_down(j, v_avg, c_avg))
             .collect();
         let n_exec = cluster.len();
+        let mut frontier = Frontier::new();
+        for job in &jobs {
+            frontier.add_job(job);
+        }
         SimState {
             arrived: vec![false; jobs.len()],
             assigned: jobs.iter().map(|j| vec![false; j.n_tasks()]).collect(),
             placements: jobs.iter().map(|j| vec![Vec::new(); j.n_tasks()]).collect(),
-            exec_ready: vec![0.0; n_exec],
             exec_log: vec![Vec::new(); n_exec],
             wall: 0.0,
             horizon: 0.0,
@@ -92,7 +115,17 @@ impl SimState {
             rank_down,
             n_assigned: 0,
             n_duplicates: 0,
-            frontier: Vec::new(),
+            sched_mode: cluster.sched_mode,
+            timelines: vec![Timeline::new(); n_exec],
+            frontier,
+            min_aft_cache: jobs
+                .iter()
+                .map(|j| vec![f64::INFINITY; j.n_tasks()])
+                .collect(),
+            left_tasks: jobs.iter().map(|j| j.n_tasks()).collect(),
+            left_work: jobs.iter().map(|j| j.total_work()).collect(),
+            v_avg,
+            c_avg,
             cluster,
             jobs,
         }
@@ -106,18 +139,42 @@ impl SimState {
         self.jobs[t.job].tasks[t.node].compute
     }
 
+    /// Memoized mean executor speed `v̄`.
+    pub fn v_avg(&self) -> f64 {
+        self.v_avg
+    }
+
+    /// Memoized average inter-executor transmission speed `c̄`.
+    pub fn c_avg(&self) -> f64 {
+        self.c_avg
+    }
+
+    /// Append-mode ready time of an executor (the old `exec_ready`
+    /// scalar): when its timeline goes idle forever.
+    pub fn exec_ready(&self, exec: usize) -> f64 {
+        self.timelines[exec].tail()
+    }
+
+    /// The executor's full busy-interval timeline.
+    pub fn timeline(&self, exec: usize) -> &Timeline {
+        &self.timelines[exec]
+    }
+
     /// Dynamically add a job (plug-and-play service mode, where jobs are
     /// submitted over the wire instead of known up front). Returns its id.
     pub fn add_job(&mut self, mut job: Job) -> usize {
         let id = self.jobs.len();
         job.id = id;
-        let v_avg = self.cluster.v_avg();
-        let c_avg = self.cluster.c_avg();
-        self.rank_up.push(ranks::rank_up(&job, v_avg, c_avg));
-        self.rank_down.push(ranks::rank_down(&job, v_avg, c_avg));
+        self.rank_up.push(ranks::rank_up(&job, self.v_avg, self.c_avg));
+        self.rank_down
+            .push(ranks::rank_down(&job, self.v_avg, self.c_avg));
         self.arrived.push(false);
         self.assigned.push(vec![false; job.n_tasks()]);
         self.placements.push(vec![Vec::new(); job.n_tasks()]);
+        self.min_aft_cache.push(vec![f64::INFINITY; job.n_tasks()]);
+        self.left_tasks.push(job.n_tasks());
+        self.left_work.push(job.total_work());
+        self.frontier.add_job(&job);
         self.jobs.push(job);
         id
     }
@@ -129,37 +186,49 @@ impl SimState {
             return;
         }
         self.arrived[job] = true;
-        for node in 0..self.jobs[job].n_tasks() {
-            let t = TaskRef::new(job, node);
-            if self.compute_executable(t) {
-                self.frontier.push(t);
-            }
-        }
-        self.frontier.sort_unstable();
-    }
-
-    /// Slow-path executability check (used to maintain the frontier).
-    fn compute_executable(&self, t: TaskRef) -> bool {
-        self.arrived[t.job]
-            && !self.assigned[t.job][t.node]
-            && self.jobs[t.job].parents[t.node]
-                .iter()
-                .all(|e| self.assigned[t.job][e.other])
+        self.frontier.activate_job(job);
     }
 
     /// The executable set `A_t` (paper notation): arrived, unassigned,
-    /// every parent assigned. Sorted, deterministic.
+    /// every parent assigned. Sorted, deterministic, maintained
+    /// incrementally by the [`Frontier`].
     pub fn executable(&self) -> &[TaskRef] {
-        &self.frontier
+        self.frontier.items()
     }
 
     pub fn is_executable(&self, t: TaskRef) -> bool {
-        self.frontier.binary_search(&t).is_ok()
+        self.frontier.contains(t)
+    }
+
+    /// Recompute the executable set from scratch (the pre-refactor
+    /// definition). Used by `validate` and the property tests to pin the
+    /// incremental frontier to its scan-based meaning.
+    pub fn executable_scan(&self) -> Vec<TaskRef> {
+        let mut out = Vec::new();
+        for (ji, job) in self.jobs.iter().enumerate() {
+            if !self.arrived[ji] {
+                continue;
+            }
+            for node in 0..job.n_tasks() {
+                if !self.assigned[ji][node]
+                    && job.parents[node].iter().all(|e| self.assigned[ji][e.other])
+                {
+                    out.push(TaskRef::new(ji, node));
+                }
+            }
+        }
+        out
     }
 
     /// Earliest finish time among a task's scheduled copies
-    /// (`min_{r_k ∈ R_{n_p}} AFT(n_p, r_k)`; ∞ if unassigned).
+    /// (`min_{r_k ∈ R_{n_p}} AFT(n_p, r_k)`; ∞ if unassigned). O(1) from
+    /// the incremental cache.
     pub fn min_aft(&self, t: TaskRef) -> f64 {
+        self.min_aft_cache[t.job][t.node]
+    }
+
+    /// Scan-based `min_aft` definition (for validation).
+    pub fn min_aft_scan(&self, t: TaskRef) -> f64 {
         self.placements[t.job][t.node]
             .iter()
             .map(|p| p.finish)
@@ -196,13 +265,76 @@ impl SimState {
         ready
     }
 
-    /// Remaining (unassigned) task count of a job.
+    /// Lower bound on a task's start on `exec` independent of executor
+    /// availability: data readiness, the wall clock, and the job arrival
+    /// (the online constraints of Eq 2).
+    pub fn ready_time(&self, t: TaskRef, exec: usize) -> f64 {
+        self.data_ready(t, exec)
+            .max(self.wall)
+            .max(self.jobs[t.job].arrival)
+    }
+
+    /// Plan the primary copy of `task` on `exec` without committing:
+    /// `(start, finish)` under the state's booking mode. `apply` uses the
+    /// same plan, so an allocator's predicted finish always matches the
+    /// committed one.
+    pub fn plan_direct(&self, task: TaskRef, exec: usize) -> (f64, f64) {
+        let ready = self.ready_time(task, exec);
+        let dur = self.task_compute(task) / self.cluster.speed(exec);
+        let start = self.timelines[exec].earliest_start(ready, dur, self.sched_mode);
+        (start, start + dur)
+    }
+
+    /// Plan duplicating `parent` onto `exec` and then running `task` there
+    /// (Eq 9–10): returns `((dup_start, dup_finish), (start, finish))`.
+    ///
+    /// The duplicate waits for its own inputs and an executor slot; the
+    /// task then starts no earlier than the duplicate's finish (the copy
+    /// holds the executor and makes the parent's output local) and the
+    /// other parents' data arrivals. Because the task's ready time is ≥
+    /// the duplicate's finish, planning both against the pre-booking
+    /// timeline cannot produce overlapping slots, in either booking mode.
+    pub fn plan_duplicate(
+        &self,
+        task: TaskRef,
+        parent: NodeId,
+        exec: usize,
+    ) -> ((f64, f64), (f64, f64)) {
+        let p = TaskRef::new(task.job, parent);
+        let (dup_start, dup_finish) = self.plan_direct(p, exec);
+        let mut ready = dup_finish;
+        for e in &self.jobs[task.job].parents[task.node] {
+            if e.other == parent {
+                continue;
+            }
+            let avail = self.parent_data_at(task, e.other, exec);
+            if avail > ready {
+                ready = avail;
+            }
+        }
+        let dur = self.task_compute(task) / self.cluster.speed(exec);
+        let start = self.timelines[exec].earliest_start(ready, dur, self.sched_mode);
+        ((dup_start, dup_finish), (start, start + dur))
+    }
+
+    /// Remaining (unassigned) task count of a job. O(1) from the counter.
     pub fn job_left_tasks(&self, job: usize) -> usize {
+        self.left_tasks[job]
+    }
+
+    /// Remaining (unassigned) work of a job, in GHz·s. O(1) from the
+    /// counter (clamped against float drift from repeated subtraction).
+    pub fn job_left_work(&self, job: usize) -> f64 {
+        self.left_work[job].max(0.0)
+    }
+
+    /// Scan-based `job_left_tasks` definition (for validation).
+    pub fn job_left_tasks_scan(&self, job: usize) -> usize {
         self.assigned[job].iter().filter(|&&a| !a).count()
     }
 
-    /// Remaining (unassigned) work of a job, in GHz·s.
-    pub fn job_left_work(&self, job: usize) -> f64 {
+    /// Scan-based `job_left_work` definition (for validation).
+    pub fn job_left_work_scan(&self, job: usize) -> f64 {
         self.assigned[job]
             .iter()
             .enumerate()
@@ -213,6 +345,29 @@ impl SimState {
 
     pub fn all_assigned(&self) -> bool {
         self.n_assigned == self.n_tasks_total()
+    }
+
+    /// Commit one booked copy: placement list, timeline, log, and the
+    /// min-AFT / horizon caches.
+    fn book(&mut self, t: TaskRef, exec: usize, start: f64, finish: f64, duplicate: bool) {
+        let pl = Placement {
+            exec,
+            start,
+            finish,
+            duplicate,
+        };
+        self.placements[t.job][t.node].push(pl);
+        self.timelines[exec].book(start, finish);
+        self.exec_log[exec].push((t, pl));
+        if finish < self.min_aft_cache[t.job][t.node] {
+            self.min_aft_cache[t.job][t.node] = finish;
+        }
+        if finish > self.horizon {
+            self.horizon = finish;
+        }
+        if duplicate {
+            self.n_duplicates += 1;
+        }
     }
 
     /// Apply an allocation decision for `task`. Returns the task's finish
@@ -226,78 +381,34 @@ impl SimState {
         );
         let exec = alloc.exec();
         assert!(exec < self.cluster.len(), "executor {exec} out of range");
-        let arrival = self.jobs[task.job].arrival;
 
-        if let Allocation::Duplicate { parent, .. } = alloc {
-            assert!(
-                self.jobs[task.job].parents[task.node]
-                    .iter()
-                    .any(|e| e.other == parent),
-                "duplicate of non-parent node {parent}"
-            );
-            // Re-execute the parent on `exec`: it needs its own inputs
-            // there, plus the executor slot.
-            let p = TaskRef::new(task.job, parent);
-            let p_data = self.data_ready(p, exec);
-            let start = p_data
-                .max(self.exec_ready[exec])
-                .max(self.wall)
-                .max(arrival);
-            let finish = start + self.task_compute(p) / self.cluster.speed(exec);
-            let pl = Placement {
-                exec,
-                start,
-                finish,
-                duplicate: true,
-            };
-            self.placements[p.job][p.node].push(pl);
-            self.exec_ready[exec] = finish;
-            self.exec_log[exec].push((p, pl));
-            self.n_duplicates += 1;
-            if finish > self.horizon {
-                self.horizon = finish;
+        let finish = match alloc {
+            Allocation::Duplicate { parent, .. } => {
+                assert!(
+                    self.jobs[task.job].parents[task.node]
+                        .iter()
+                        .any(|e| e.other == parent),
+                    "duplicate of non-parent node {parent}"
+                );
+                let (dup, primary) = self.plan_duplicate(task, parent, exec);
+                let p = TaskRef::new(task.job, parent);
+                self.book(p, exec, dup.0, dup.1, true);
+                self.book(task, exec, primary.0, primary.1, false);
+                primary.1
             }
-        }
-
-        // Primary copy of the selected task.
-        let data = self.data_ready(task, exec);
-        let start = data
-            .max(self.exec_ready[exec])
-            .max(self.wall)
-            .max(arrival);
-        let finish = start + self.task_compute(task) / self.cluster.speed(exec);
-        let pl = Placement {
-            exec,
-            start,
-            finish,
-            duplicate: false,
+            Allocation::Direct { .. } => {
+                let (start, finish) = self.plan_direct(task, exec);
+                self.book(task, exec, start, finish, false);
+                finish
+            }
         };
-        self.placements[task.job][task.node].push(pl);
-        self.exec_ready[exec] = finish;
-        self.exec_log[exec].push((task, pl));
+
+        // Assignment bookkeeping: flags, per-job counters, frontier.
         self.assigned[task.job][task.node] = true;
         self.n_assigned += 1;
-        if finish > self.horizon {
-            self.horizon = finish;
-        }
-
-        // Frontier maintenance: remove `task`, add children that became
-        // executable.
-        if let Ok(idx) = self.frontier.binary_search(&task) {
-            self.frontier.remove(idx);
-        }
-        let child_ids: Vec<NodeId> = self.jobs[task.job].children[task.node]
-            .iter()
-            .map(|e| e.other)
-            .collect();
-        for c in child_ids {
-            let cref = TaskRef::new(task.job, c);
-            if self.compute_executable(cref) {
-                if let Err(idx) = self.frontier.binary_search(&cref) {
-                    self.frontier.insert(idx, cref);
-                }
-            }
-        }
+        self.left_tasks[task.job] -= 1;
+        self.left_work[task.job] -= self.task_compute(task);
+        self.frontier.assign(&self.jobs[task.job], task);
         finish
     }
 
@@ -322,15 +433,17 @@ impl SimState {
         t
     }
 
-    /// Validate executor timelines: no overlapping intervals on any
+    /// Validate the composed state: no overlapping intervals on any
     /// executor, every start ≥ job arrival, every child starts after the
-    /// copy of each parent it could have read from. Used by tests and the
-    /// `--validate` flag.
+    /// copy of each parent it could have read from, the executor
+    /// timelines agree with the schedule log, and every incremental cache
+    /// (frontier, `min_aft`, per-job counters) equals its scan-based
+    /// definition. Used by tests and the `--validate` flag.
     pub fn validate(&self) -> anyhow::Result<()> {
         use anyhow::bail;
         for (e, log) in self.exec_log.iter().enumerate() {
             let mut sorted = log.clone();
-            sorted.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+            sorted.sort_by(|a, b| a.1.start.total_cmp(&b.1.start));
             for w in sorted.windows(2) {
                 if w[1].1.start < w[0].1.finish - 1e-9 {
                     bail!(
@@ -340,6 +453,26 @@ impl SimState {
                         w[0].1.finish,
                         w[1].0,
                         w[1].1.start
+                    );
+                }
+            }
+            // The timeline must be exactly the sorted log intervals.
+            let tl = self.timelines[e].intervals();
+            if tl.len() != sorted.len() {
+                bail!(
+                    "executor {e}: timeline has {} intervals, log has {}",
+                    tl.len(),
+                    sorted.len()
+                );
+            }
+            for (iv, (_, pl)) in tl.iter().zip(&sorted) {
+                if (iv.0 - pl.start).abs() > 1e-9 || (iv.1 - pl.finish).abs() > 1e-9 {
+                    bail!(
+                        "executor {e}: timeline interval {:.4}-{:.4} != log {:.4}-{:.4}",
+                        iv.0,
+                        iv.1,
+                        pl.start,
+                        pl.finish
                     );
                 }
             }
@@ -366,7 +499,31 @@ impl SimState {
                         }
                     }
                 }
+                let t = TaskRef::new(ji, node);
+                let cached = self.min_aft(t);
+                let scanned = self.min_aft_scan(t);
+                if cached != scanned && !(cached.is_infinite() && scanned.is_infinite()) {
+                    bail!("task ({ji},{node}): min_aft cache {cached} != scan {scanned}");
+                }
             }
+            if self.job_left_tasks(ji) != self.job_left_tasks_scan(ji) {
+                bail!(
+                    "job {ji}: left_tasks counter {} != scan {}",
+                    self.job_left_tasks(ji),
+                    self.job_left_tasks_scan(ji)
+                );
+            }
+            let (lw, lws) = (self.job_left_work(ji), self.job_left_work_scan(ji));
+            if (lw - lws).abs() > 1e-6 * (1.0 + lws.abs()) {
+                bail!("job {ji}: left_work counter {lw} != scan {lws}");
+            }
+        }
+        if self.frontier.items() != self.executable_scan().as_slice() {
+            bail!(
+                "frontier {:?} != scan {:?}",
+                self.frontier.items(),
+                self.executable_scan()
+            );
         }
         Ok(())
     }
@@ -476,5 +633,79 @@ mod tests {
         // Even though wall=0, start must respect arrival.
         let f = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
         assert!((f - 51.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incremental_caches_track_assignments() {
+        let mut st = two_exec_state();
+        assert_eq!(st.job_left_tasks(0), 2);
+        assert!((st.job_left_work(0) - 10.0).abs() < 1e-12);
+        assert!(st.min_aft(TaskRef::new(0, 0)).is_infinite());
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        assert_eq!(st.job_left_tasks(0), 1);
+        assert!((st.job_left_work(0) - 6.0).abs() < 1e-12);
+        assert_eq!(st.min_aft(TaskRef::new(0, 0)), 4.0);
+        // A duplicate does not change the left counters but can lower the
+        // parent's min AFT.
+        st.apply(
+            TaskRef::new(0, 1),
+            Allocation::Duplicate { exec: 1, parent: 0 },
+        );
+        assert_eq!(st.job_left_tasks(0), 0);
+        assert!(st.job_left_work(0).abs() < 1e-9);
+        assert_eq!(st.min_aft(TaskRef::new(0, 0)), 2.0); // dup copy 0..2
+        st.validate().unwrap();
+    }
+
+    /// Gap-aware booking backfills an idle window that append mode cannot
+    /// use: a late-arriving job books far in the future, then an
+    /// earlier-ready task slots into the hole before it. Note that
+    /// `Workload::new` orders jobs by arrival and renumbers ids, so the
+    /// early job is job 0 and the late job is job 1.
+    #[test]
+    fn gap_aware_backfills_idle_window() {
+        let cluster =
+            Cluster::homogeneous(1, 1.0, 10.0).with_sched_mode(SchedMode::GapAware);
+        let early = Job::new(0, "early", 0.0, vec![3.0], &[]);
+        let late = Job::new(1, "late", 10.0, vec![2.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![early, late]));
+        st.mark_arrived(0);
+        st.mark_arrived(1);
+        // The late job is arrival-bound: books 10..12, leaving [0, 10] idle.
+        let f_late = st.apply(TaskRef::new(1, 0), Allocation::Direct { exec: 0 });
+        assert!((f_late - 12.0).abs() < 1e-12, "f_late={f_late}");
+        // Gap mode backfills the hole: 0..3 instead of append's 12..15.
+        let f_early = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        assert!((f_early - 3.0).abs() < 1e-12, "f_early={f_early}");
+        assert!((st.horizon - 12.0).abs() < 1e-12);
+        st.validate().unwrap();
+
+        // The identical decisions under append mode queue behind the tail.
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let early = Job::new(0, "early", 0.0, vec![3.0], &[]);
+        let late = Job::new(1, "late", 10.0, vec![2.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![early, late]));
+        st.mark_arrived(0);
+        st.mark_arrived(1);
+        st.apply(TaskRef::new(1, 0), Allocation::Direct { exec: 0 });
+        let f_early = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        assert!((f_early - 15.0).abs() < 1e-12, "f_early={f_early}");
+        st.validate().unwrap();
+    }
+
+    #[test]
+    fn gap_aware_duplicate_plans_match_apply() {
+        let mut cluster = Cluster::homogeneous(2, 1.0, 10.0);
+        cluster.executors[1].speed = 2.0;
+        let cluster = cluster.with_sched_mode(SchedMode::GapAware);
+        let job = Job::new(0, "chain", 0.0, vec![4.0, 6.0], &[(0, 1, 20.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        let t1 = TaskRef::new(0, 1);
+        let (_, (_, predicted)) = st.plan_duplicate(t1, 0, 1);
+        let actual = st.apply(t1, Allocation::Duplicate { exec: 1, parent: 0 });
+        assert!((predicted - actual).abs() < 1e-12);
+        st.validate().unwrap();
     }
 }

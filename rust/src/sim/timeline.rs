@@ -1,0 +1,187 @@
+//! Per-executor busy-interval timeline.
+//!
+//! The pre-refactor simulator modeled each executor as a single
+//! `exec_ready` scalar — append-only scheduling with no memory of idle
+//! windows. `Timeline` keeps the full sorted list of booked busy
+//! intervals instead, so the allocator can either reproduce the append
+//! semantics exactly ([`SchedMode::Append`], the paper-faithful default)
+//! or backfill a task into the earliest idle gap that fits
+//! ([`SchedMode::GapAware`], the insertion-based HEFT variant). Gap
+//! search binary-searches for the first constraining interval and then
+//! walks forward; appends book in O(1).
+
+use crate::config::SchedMode;
+
+/// Float slack for interval comparisons, matching the tolerance
+/// `SimState::validate` accepts for adjacent bookings.
+pub const EPS: f64 = 1e-9;
+
+/// Sorted, non-overlapping busy intervals `(start, finish)` of one
+/// executor. Non-overlap means sorting by start also sorts by finish, so
+/// the append tail is just the last interval's finish.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    busy: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { busy: Vec::new() }
+    }
+
+    /// The append-mode ready time: when the executor goes idle forever.
+    /// Equals the old `exec_ready` scalar.
+    pub fn tail(&self) -> f64 {
+        self.busy.last().map_or(0.0, |&(_, f)| f)
+    }
+
+    pub fn len(&self) -> usize {
+        self.busy.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.busy.is_empty()
+    }
+
+    /// The booked intervals, sorted by start.
+    pub fn intervals(&self) -> &[(f64, f64)] {
+        &self.busy
+    }
+
+    /// Total booked time (the utilization numerator).
+    pub fn busy_time(&self) -> f64 {
+        self.busy.iter().map(|&(s, f)| f - s).sum()
+    }
+
+    /// Earliest start ≥ `ready` of a `dur`-long slot under `mode`.
+    ///
+    /// In append mode this is `max(ready, tail())` — identical to the
+    /// pre-refactor `max(EST, exec_ready)`. In gap-aware mode it is never
+    /// later than the append answer (the fall-through of the gap walk is
+    /// bounded by `max(ready, tail())`).
+    pub fn earliest_start(&self, ready: f64, dur: f64, mode: SchedMode) -> f64 {
+        match mode {
+            SchedMode::Append => ready.max(self.tail()),
+            SchedMode::GapAware => self.earliest_gap(ready, dur),
+        }
+    }
+
+    /// Earliest `t ≥ ready` such that `[t, t + dur]` overlaps no booked
+    /// interval. Binary search skips every interval finishing before
+    /// `ready`; the walk then visits only intervals that actually
+    /// constrain the slot.
+    pub fn earliest_gap(&self, ready: f64, dur: f64) -> f64 {
+        let first = self.busy.partition_point(|&(_, f)| f <= ready + EPS);
+        let mut t = ready;
+        for &(s, f) in &self.busy[first..] {
+            if t + dur <= s + EPS {
+                return t;
+            }
+            if f > t {
+                t = f;
+            }
+        }
+        t
+    }
+
+    /// Book `[start, finish]`. The caller must have planned the slot with
+    /// [`Timeline::earliest_start`] (or otherwise guaranteed no overlap);
+    /// booking keeps the interval list sorted — O(1) for tail appends,
+    /// O(n) memmove for gap insertions.
+    pub fn book(&mut self, start: f64, finish: f64) {
+        debug_assert!(start.is_finite() && finish.is_finite());
+        debug_assert!(finish >= start - EPS, "negative-length booking");
+        if self.busy.last().map_or(true, |&(s, _)| s <= start) {
+            debug_assert!(
+                self.tail() <= start + EPS,
+                "booking [{start:.4}, {finish:.4}] overlaps tail {:.4}",
+                self.tail()
+            );
+            self.busy.push((start, finish));
+            return;
+        }
+        let idx = self.busy.partition_point(|&(s, _)| s <= start);
+        debug_assert!(idx == 0 || self.busy[idx - 1].1 <= start + EPS);
+        debug_assert!(finish <= self.busy[idx].0 + EPS);
+        self.busy.insert(idx, (start, finish));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn booked(intervals: &[(f64, f64)]) -> Timeline {
+        let mut tl = Timeline::new();
+        for &(s, f) in intervals {
+            tl.book(s, f);
+        }
+        tl
+    }
+
+    #[test]
+    fn empty_timeline_starts_at_ready() {
+        let tl = Timeline::new();
+        assert_eq!(tl.tail(), 0.0);
+        assert_eq!(tl.earliest_start(3.0, 1.0, SchedMode::Append), 3.0);
+        assert_eq!(tl.earliest_start(3.0, 1.0, SchedMode::GapAware), 3.0);
+        assert!(tl.is_empty());
+    }
+
+    #[test]
+    fn append_mode_matches_tail_scalar() {
+        let tl = booked(&[(0.0, 2.0), (5.0, 7.0)]);
+        assert_eq!(tl.tail(), 7.0);
+        // Append ignores the [2, 5] gap entirely.
+        assert_eq!(tl.earliest_start(1.0, 1.0, SchedMode::Append), 7.0);
+        assert_eq!(tl.earliest_start(9.0, 1.0, SchedMode::Append), 9.0);
+    }
+
+    #[test]
+    fn gap_search_fits_earliest_hole() {
+        let tl = booked(&[(0.0, 2.0), (5.0, 7.0), (10.0, 12.0)]);
+        // Fits in [2, 5].
+        assert_eq!(tl.earliest_gap(0.0, 3.0), 2.0);
+        assert_eq!(tl.earliest_gap(3.0, 2.0), 3.0);
+        // Too long for [2, 5], fits in [7, 10].
+        assert_eq!(tl.earliest_gap(0.0, 3.5), 7.0);
+        // Too long for every hole: falls through to the tail.
+        assert_eq!(tl.earliest_gap(0.0, 4.0), 12.0);
+        // Ready inside a busy interval pushes to its finish.
+        assert_eq!(tl.earliest_gap(6.0, 1.0), 7.0);
+    }
+
+    #[test]
+    fn gap_never_later_than_append() {
+        let tl = booked(&[(1.0, 4.0), (6.0, 9.0), (9.5, 20.0)]);
+        for ready in [0.0, 0.5, 2.0, 4.0, 5.9, 8.0, 21.0] {
+            for dur in [0.1, 0.5, 2.0, 5.0] {
+                let gap = tl.earliest_start(ready, dur, SchedMode::GapAware);
+                let app = tl.earliest_start(ready, dur, SchedMode::Append);
+                assert!(gap <= app + EPS, "ready={ready} dur={dur}: {gap} > {app}");
+                assert!(gap >= ready);
+            }
+        }
+    }
+
+    #[test]
+    fn booking_into_gap_keeps_order() {
+        let mut tl = booked(&[(0.0, 2.0), (8.0, 10.0)]);
+        let t = tl.earliest_gap(0.0, 3.0);
+        assert_eq!(t, 2.0);
+        tl.book(t, t + 3.0);
+        assert_eq!(tl.intervals(), &[(0.0, 2.0), (2.0, 5.0), (8.0, 10.0)]);
+        assert_eq!(tl.tail(), 10.0);
+        assert!((tl.busy_time() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn booked_slot_no_longer_available() {
+        let mut tl = booked(&[(0.0, 1.0), (4.0, 5.0)]);
+        let t = tl.earliest_gap(0.0, 2.0);
+        tl.book(t, t + 2.0);
+        // The [1, 4] hole now only has one unit left.
+        assert_eq!(tl.earliest_gap(0.0, 2.0), 5.0);
+        assert_eq!(tl.earliest_gap(0.0, 1.0), 3.0);
+    }
+}

@@ -4,7 +4,9 @@
 //! model contract all describe the same network.
 //!
 //! Requires `make artifacts` to have run (the Makefile test target
-//! guarantees it).
+//! guarantees it) and the `pjrt` cargo feature; without the feature this
+//! whole test target compiles to nothing.
+#![cfg(feature = "pjrt")]
 
 use lachesis::cluster::Cluster;
 use lachesis::config::{ClusterConfig, WorkloadConfig};

@@ -1,6 +1,9 @@
 //! RL training integration through the AOT train_step artifact: the full
 //! loop (rollout → returns → Adam update inside XLA) must run, change
-//! parameters, and reduce the imitation loss. Requires `make artifacts`.
+//! parameters, and reduce the imitation loss. Requires `make artifacts`
+//! and the `pjrt` cargo feature; without the feature this whole test
+//! target compiles to nothing.
+#![cfg(feature = "pjrt")]
 
 use lachesis::config::TrainConfig;
 use lachesis::policy::features::FeatureMode;

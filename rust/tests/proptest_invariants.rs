@@ -188,6 +188,127 @@ fn prop_trace_roundtrip_preserves_schedules() {
     }
 }
 
+/// After every `apply`, the incremental frontier must equal the
+/// recomputed-from-scratch executable set, and the cached `min_aft` /
+/// `left_tasks` / `left_work` must equal their scan-based definitions —
+/// including under DEFT duplications and continuous arrivals.
+#[test]
+fn prop_incremental_caches_match_scan_definitions() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(6200 + case);
+        let w = random_workload(&mut rng, 3, case % 2 == 0);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+            assert_eq!(
+                st.executable(),
+                st.executable_scan().as_slice(),
+                "case {case}: frontier after arrival"
+            );
+        }
+        while !st.executable().is_empty() {
+            let t = st.executable()[rng.below(st.executable().len())];
+            // Mix DEFT decisions (which duplicate) with arbitrary ones.
+            let alloc = if rng.chance(0.5) {
+                deft(&st, t).0
+            } else {
+                Allocation::Direct {
+                    exec: rng.below(st.cluster.len()),
+                }
+            };
+            st.apply(t, alloc);
+            assert_eq!(
+                st.executable(),
+                st.executable_scan().as_slice(),
+                "case {case}: frontier after apply"
+            );
+            for (ji, job) in st.jobs.iter().enumerate() {
+                assert_eq!(
+                    st.job_left_tasks(ji),
+                    st.job_left_tasks_scan(ji),
+                    "case {case}: left_tasks job {ji}"
+                );
+                let (lw, lws) = (st.job_left_work(ji), st.job_left_work_scan(ji));
+                assert!(
+                    (lw - lws).abs() <= 1e-6 * (1.0 + lws.abs()),
+                    "case {case}: left_work job {ji}: {lw} vs {lws}"
+                );
+                for node in 0..job.n_tasks() {
+                    let tr = TaskRef::new(ji, node);
+                    let (c, s) = (st.min_aft(tr), st.min_aft_scan(tr));
+                    assert!(
+                        c == s || (c.is_infinite() && s.is_infinite()),
+                        "case {case}: min_aft ({ji},{node}): {c} vs {s}"
+                    );
+                }
+            }
+        }
+        st.validate().unwrap();
+    }
+}
+
+/// Gap-aware schedules still satisfy every schedule invariant
+/// (`SimState::validate`: exclusivity, arrival/data readiness, timeline =
+/// log, caches = scans), and the per-probe gap start never exceeds the
+/// append start.
+#[test]
+fn prop_gap_aware_schedules_validate() {
+    use lachesis::config::SchedMode;
+    for case in 0..CASES {
+        let mut rng = Rng::new(7100 + case);
+        let n_jobs = rng.range_u(1, 5);
+        let w = random_workload(&mut rng, n_jobs, case % 2 == 1);
+        let cluster = random_cluster(&mut rng).with_sched_mode(SchedMode::GapAware);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(HeftScheduler::new()),
+            Box::new(HighRankUpScheduler::new()),
+            Box::new(TdcaScheduler::new()),
+        ];
+        for sched in scheds.iter_mut() {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let report = sim
+                .run(sched.as_mut())
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", sched.name()));
+            assert!(report.makespan.is_finite() && report.makespan > 0.0);
+            sim.state
+                .validate()
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", sched.name()));
+        }
+    }
+}
+
+/// Pointwise dominance: for any (task, executor) probe in any reachable
+/// state, the gap-aware start is never later than the append start (the
+/// gap walk's fall-through is bounded by max(ready, tail)).
+#[test]
+fn prop_gap_start_never_later_than_append() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case);
+        let w = random_workload(&mut rng, 2, false);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+        }
+        while !st.executable().is_empty() {
+            let t = st.executable()[rng.below(st.executable().len())];
+            for e in 0..st.cluster.len() {
+                let ready = st.ready_time(t, e);
+                let dur = st.jobs[t.job].tasks[t.node].compute / st.cluster.speed(e);
+                let gap = st.timeline(e).earliest_gap(ready, dur);
+                let append = ready.max(st.exec_ready(e));
+                assert!(
+                    gap <= append + 1e-9,
+                    "case {case}: gap start {gap} > append {append}"
+                );
+            }
+            let exec = rng.below(st.cluster.len());
+            st.apply(t, Allocation::Direct { exec });
+        }
+    }
+}
+
 #[test]
 fn prop_encoding_masks_consistent() {
     use lachesis::policy::encode::encode;
