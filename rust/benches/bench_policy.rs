@@ -1,17 +1,23 @@
 //! Policy inference latency — the paper's decision-time metric (Figs
 //! 5d/6d/7b target: ≤14 ms small / ≤30 ms large / ≤38 ms continuous at
-//! p98). Measures feature extraction, encoding, the pure-rust forward and
-//! the PJRT artifact, per shape variant.
+//! p98). Measures feature extraction, from-scratch vs cached-incremental
+//! encoding, the CSR-sparse rust forward vs the dense oracle, and the
+//! PJRT artifact, per shape variant.
+//!
+//! `BENCH_JSON=BENCH_policy.json cargo bench --bench bench_policy` writes
+//! the machine-readable report CI uploads (same pattern as bench_sim →
+//! `BENCH_sim.json`); the `notes` record the dense/sparse and
+//! fresh/cached speedups side by side.
 
 use lachesis::bench_util::{black_box, Bench};
 use lachesis::cluster::Cluster;
 use lachesis::config::{ClusterConfig, WorkloadConfig};
 use lachesis::policy::encode::encode;
 use lachesis::policy::features::{node_features, FeatureMode, NODE_FEATURES};
-use lachesis::policy::{PolicyEval, RustPolicy};
+use lachesis::policy::{EncoderCache, PolicyEval, RustPolicy};
 #[cfg(feature = "pjrt")]
 use lachesis::runtime::PjrtPolicy;
-use lachesis::sim::SimState;
+use lachesis::sim::{Allocation, SimState};
 use lachesis::workload::WorkloadGenerator;
 
 fn state(jobs: usize) -> SimState {
@@ -22,6 +28,36 @@ fn state(jobs: usize) -> SimState {
         st.mark_arrived(j);
     }
     st
+}
+
+/// Per-decision encoding cost along an identical evolving episode: apply
+/// one task (the sim's dirty-tracking log records what changed), then
+/// produce the encoding — fresh `encode()` vs incremental cache refresh.
+/// Both variants drive the exact same apply/wall sequence and reset to a
+/// fresh episode clone when drained, so the measured difference is
+/// precisely "full rebuild" vs "patch" on equal states.
+fn bench_encode_loop(b: &mut Bench, name: &str, jobs: usize, cached: bool) {
+    let template = state(jobs);
+    let mut st = template.clone();
+    let mut cache = EncoderCache::new(FeatureMode::Full);
+    if cached {
+        cache.refresh(&st);
+    }
+    b.case(name, move || {
+        if st.executable().is_empty() {
+            st = template.clone();
+            cache.reset();
+        } else {
+            let t = st.executable()[0];
+            let finish = st.apply(t, Allocation::Direct { exec: 0 });
+            st.wall = st.wall.max(finish * 0.5); // monotone mid-flight wall
+        }
+        if cached {
+            black_box(cache.refresh(&st));
+        } else {
+            black_box(encode(&st, FeatureMode::Full));
+        }
+    });
 }
 
 fn main() {
@@ -35,22 +71,70 @@ fn main() {
         node_features(&small, black_box(t), FeatureMode::Full, &mut feat);
         black_box(&feat);
     });
-    b.case("encode/n64", || {
+    // From-scratch encode of the full initial state (the cache's rebuild
+    // path — now CSR, so no N² adjacency is materialized).
+    b.case("encode_initial/n64", || {
         black_box(encode(&small, FeatureMode::Full));
     });
-    b.case("encode/n256", || {
+    b.case("encode_initial/n256", || {
         black_box(encode(&large, FeatureMode::Full));
     });
+    // Like-for-like per-decision comparison: identical apply/wall loops,
+    // fresh rebuild vs incremental patch (the pair CI gates on).
+    bench_encode_loop(&mut b, "encode/n64", 3, false);
+    bench_encode_loop(&mut b, "encode/n256", 14, false);
+    bench_encode_loop(&mut b, "encode_cached/n64", 3, true);
+    bench_encode_loop(&mut b, "encode_cached/n256", 14, true);
 
     let enc64 = encode(&small, FeatureMode::Full);
     let enc256 = encode(&large, FeatureMode::Full);
     let mut rust = RustPolicy::random(1);
+    let mut logits = Vec::new();
+    // The production serving path: CSR-sparse message passing through the
+    // PolicyEval trait, logits written into a reused buffer.
     b.case("forward_rust/n64", || {
-        black_box(rust.logits_value(&enc64).unwrap());
+        black_box(rust.logits_value_into(&enc64, &mut logits).unwrap());
+        black_box(&logits);
     });
     b.case("forward_rust/n256", || {
-        black_box(rust.logits_value(&enc256).unwrap());
+        black_box(rust.logits_value_into(&enc256, &mut logits).unwrap());
+        black_box(&logits);
     });
+    // The raw sparse kernel (no trait indirection).
+    b.case("forward_sparse/n64", || {
+        black_box(rust.forward_into(&enc64, &mut logits));
+        black_box(&logits);
+    });
+    b.case("forward_sparse/n256", || {
+        black_box(rust.forward_into(&enc256, &mut logits));
+        black_box(&logits);
+    });
+    // The dense oracle — what the old forward computed (and what the
+    // PJRT artifact computes), kept as the comparison baseline.
+    b.case("forward_dense/n64", || {
+        black_box(rust.forward_dense(&enc64));
+    });
+    b.case("forward_dense/n256", || {
+        black_box(rust.forward_dense(&enc256));
+    });
+
+    // Side-by-side speedups for the JSON report (CI asserts sparse/cached
+    // beat their dense/fresh counterparts).
+    let mean = |b: &Bench, name: &str| {
+        b.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.mean_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup_fwd64 = mean(&b, "forward_dense/n64") / mean(&b, "forward_rust/n64");
+    let speedup_fwd256 = mean(&b, "forward_dense/n256") / mean(&b, "forward_rust/n256");
+    let speedup_enc64 = mean(&b, "encode/n64") / mean(&b, "encode_cached/n64");
+    let speedup_enc256 = mean(&b, "encode/n256") / mean(&b, "encode_cached/n256");
+    b.note("forward_sparse_speedup_n64", speedup_fwd64);
+    b.note("forward_sparse_speedup_n256", speedup_fwd256);
+    b.note("encode_cached_speedup_n64", speedup_enc64);
+    b.note("encode_cached_speedup_n256", speedup_enc256);
 
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/meta.json").exists() {

@@ -1,0 +1,401 @@
+//! Incremental encoder cache: persists one [`EncodedState`] across the
+//! decisions of an episode and patches it instead of re-running the full
+//! `encode()` rebuild per decision.
+//!
+//! `SimState::apply` knows exactly which tasks changed, and publishes that
+//! knowledge through the [`EncEvent`] log: the assigned task leaves the
+//! encoding (one slot removal), its children's `executable` feature may
+//! flip, one job's `left_tasks`/`left_work` counters move (features 7/8
+//! of every slot of that job), and bookings schedule a future
+//! finished-parent flip for their children. The wall clock alone moves
+//! only the per-job wait feature plus whichever finished-parent fractions
+//! it crosses — tracked by a min-heap of pending copy-finish times.
+//!
+//! The cache's contract, pinned by proptests: after any replayable event
+//! sequence (monotone wall), [`EncoderCache::refresh`] returns an
+//! encoding **bitwise identical** to a fresh `encode()` of the same
+//! state. Whenever a patch would be unsound — a job arrival (slots get
+//! inserted), an active truncation (dropped tasks can re-enter), or a
+//! shape-variant change — the cache falls back to the full rebuild, so
+//! correctness never depends on the patch fast-path being reachable.
+
+use super::encode::{self, encode, pick_variant, EncodedState};
+use super::features::{job_wait_feature, FeatureMode, WAIT_FEATURE};
+use super::F;
+use crate::dag::TaskRef;
+use crate::sim::{EncEvent, SimState};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A future copy-finish: when the wall clock passes `finish`, the
+/// children of `task` flip their finished-parent fraction.
+#[derive(Debug, Clone, Copy)]
+struct PendingFinish {
+    finish: f64,
+    task: TaskRef,
+}
+
+impl PartialEq for PendingFinish {
+    fn eq(&self, other: &Self) -> bool {
+        self.finish == other.finish && self.task == other.task
+    }
+}
+impl Eq for PendingFinish {}
+impl PartialOrd for PendingFinish {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingFinish {
+    // Reverse ordering: BinaryHeap is a max-heap, we want earliest first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .finish
+            .total_cmp(&self.finish)
+            .then_with(|| other.task.cmp(&self.task))
+    }
+}
+
+/// The incremental encoder. One cache per episode/state lifecycle: call
+/// [`EncoderCache::reset`] when switching to a fresh `SimState`. Swapped
+/// or compacted-past states are detected defensively when
+/// `enc_events_since` cannot serve the replay cursor (the cache then
+/// rebuilds and reseeds its pending heap from live placements), but a
+/// foreign state whose log happens to cover the cursor cannot be told
+/// apart — the selector resets explicitly instead.
+pub struct EncoderCache {
+    mode: FeatureMode,
+    enc: Option<EncodedState>,
+    /// Absolute position in the state's event log up to which events
+    /// have been replayed (see `SimState::enc_events_since`).
+    cursor: u64,
+    /// Wall clock the cached encoding reflects.
+    wall: f64,
+    /// Min-heap of future copy finishes (may contain stale, superseded
+    /// entries — popping one re-featurizes from live state, which is
+    /// idempotent, so duplicates are harmless).
+    pending: BinaryHeap<PendingFinish>,
+    /// Diagnostics: full rebuilds vs incremental patches served.
+    pub rebuilds: usize,
+    pub patches: usize,
+}
+
+impl EncoderCache {
+    pub fn new(mode: FeatureMode) -> EncoderCache {
+        EncoderCache {
+            mode,
+            enc: None,
+            cursor: 0,
+            wall: 0.0,
+            pending: BinaryHeap::new(),
+            rebuilds: 0,
+            patches: 0,
+        }
+    }
+
+    pub fn mode(&self) -> FeatureMode {
+        self.mode
+    }
+
+    /// Forget everything (start of a new episode/state).
+    pub fn reset(&mut self) {
+        self.enc = None;
+        self.cursor = 0;
+        self.wall = 0.0;
+        self.pending.clear();
+    }
+
+    /// Bring the cached encoding up to date with `state` and return it.
+    /// Equivalent to `encode(state, mode)` — bitwise. The patch path
+    /// re-featurizes only dirty slots (the touched job, flipped
+    /// finished-parent children); the remaining work is memmove/renumber
+    /// passes (slot shift, CSR compaction, per-job wait fanout) that are
+    /// O(N + |E|) with tiny constants, versus the rebuild's full
+    /// per-slot feature extraction, allocation and edge re-gather.
+    pub fn refresh(&mut self, state: &SimState) -> &EncodedState {
+        let events: &[EncEvent] = match state.enc_events_since(self.cursor) {
+            Some(evs) => evs,
+            None => {
+                // Our cursor predates the state's compacted log window
+                // (or the state was swapped under us): the replay gap is
+                // unrecoverable, so rebuild and reseed the pending
+                // finish-heap from the live placements.
+                self.reset();
+                self.cursor = state.enc_log_end();
+                self.reseed_pending(state);
+                self.rebuild(state);
+                return self.enc.as_ref().expect("encoding present after rebuild");
+            }
+        };
+        debug_assert!(
+            state.wall >= self.wall || self.enc.is_none(),
+            "EncoderCache requires a monotone wall clock"
+        );
+
+        // Replay the event log: collect slot removals, schedule pending
+        // finishes, detect structural growth.
+        let mut removals: Vec<TaskRef> = Vec::new();
+        let mut rebuild =
+            self.enc.is_none() || self.enc.as_ref().map_or(false, |e| e.truncated);
+        for ev in events {
+            match *ev {
+                EncEvent::Assigned { task } => removals.push(task),
+                EncEvent::Booked { task, finish } => {
+                    self.pending.push(PendingFinish { finish, task })
+                }
+                EncEvent::Arrived { .. } => rebuild = true,
+            }
+        }
+        self.cursor = state.enc_log_end();
+
+        if !rebuild {
+            rebuild = !self.patch(state, &removals);
+        }
+        if rebuild {
+            self.rebuild(state);
+        }
+        self.enc.as_ref().expect("encoding present after refresh")
+    }
+
+    /// Reconstruct the pending finish-heap from the live placements: every
+    /// copy finishing after the current wall may still flip its children's
+    /// finished-parent fraction. Only needed when the event log cannot be
+    /// replayed (compaction gap / foreign state).
+    fn reseed_pending(&mut self, state: &SimState) {
+        self.pending.clear();
+        for (ji, per_task) in state.placements.iter().enumerate() {
+            for (node, copies) in per_task.iter().enumerate() {
+                for pl in copies {
+                    if pl.finish > state.wall {
+                        self.pending.push(PendingFinish {
+                            finish: pl.finish,
+                            task: TaskRef::new(ji, node),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Try to patch the cached encoding in place; returns false if a full
+    /// rebuild is required after all (missing slot, variant change).
+    fn patch(&mut self, state: &SimState, removals: &[TaskRef]) -> bool {
+        let enc = self.enc.as_mut().expect("patch requires a cached encoding");
+
+        // 1. Structural removals (assigned tasks leave the encoding;
+        // features, masks, job index and CSR all shift in place).
+        for &t in removals {
+            if enc.remove_slot(t).is_none() {
+                return false; // unknown slot — be safe, rebuild
+            }
+        }
+        // Fewer tasks/jobs can shrink the shape variant; fresh `encode`
+        // would pick the smaller one, so follow it.
+        if pick_variant(enc.n_used(), enc.n_jobs_used()) != enc.variant {
+            return false;
+        }
+
+        // 2. Re-featurize every slot of each touched job: the assignment
+        // moved the job's left_tasks/left_work (features 7/8 of all its
+        // slots) and possibly its children's executable flag/mask.
+        let mut dirty_jobs: Vec<usize> = removals.iter().map(|t| t.job).collect();
+        dirty_jobs.sort_unstable();
+        dirty_jobs.dedup();
+        for job in dirty_jobs {
+            let lo = enc.slots.partition_point(|s| s.job < job);
+            let hi = enc.slots.partition_point(|s| s.job <= job);
+            for i in lo..hi {
+                encode::fill_slot(state, self.mode, enc, i);
+            }
+        }
+
+        // 3. Wall-clock advance: the per-job wait feature moves for every
+        // encoded job (one squash per job, fanned out to its slots), and
+        // copies finishing inside (cached_wall, wall] flip their
+        // children's finished-parent fraction.
+        if state.wall != self.wall {
+            let mut i = 0;
+            while i < enc.n_used() {
+                let job = enc.slots[i].job;
+                let wait = job_wait_feature(state, job);
+                let hi = enc.slots.partition_point(|s| s.job <= job);
+                for k in i..hi {
+                    enc.x[k * F + WAIT_FEATURE] = wait;
+                }
+                i = hi;
+            }
+            while let Some(p) = self.pending.peek() {
+                if p.finish > state.wall {
+                    break;
+                }
+                let p = self.pending.pop().expect("peeked entry");
+                for e in &state.jobs[p.task.job].children[p.task.node] {
+                    let c = TaskRef::new(p.task.job, e.other);
+                    if let Ok(ci) = enc.slots.binary_search(&c) {
+                        encode::fill_slot(state, self.mode, enc, ci);
+                    }
+                }
+            }
+            self.wall = state.wall;
+        }
+        self.patches += 1;
+        true
+    }
+
+    /// Full rebuild: delegate to `encode` and drop pending entries the
+    /// fresh features already reflect.
+    fn rebuild(&mut self, state: &SimState) {
+        self.enc = Some(encode(state, self.mode));
+        self.wall = state.wall;
+        self.rebuilds += 1;
+        while let Some(p) = self.pending.peek() {
+            if p.finish > state.wall {
+                break;
+            }
+            self.pending.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::WorkloadConfig;
+    use crate::sim::{Allocation, SimState};
+    use crate::workload::WorkloadGenerator;
+
+    fn state(n_jobs: usize, seed: u64) -> SimState {
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
+        let mut st = SimState::new(cluster, w);
+        for j in 0..n_jobs {
+            st.mark_arrived(j);
+        }
+        st
+    }
+
+    fn assert_matches_fresh(cache: &mut EncoderCache, st: &SimState) {
+        let fresh = encode(st, cache.mode());
+        let cached = cache.refresh(st);
+        assert_eq!(cached, &fresh);
+    }
+
+    #[test]
+    fn first_refresh_rebuilds_then_patches() {
+        let mut st = state(2, 1);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        assert_matches_fresh(&mut cache, &st);
+        assert_eq!(cache.rebuilds, 1);
+        let t = st.executable()[0];
+        st.apply(t, Allocation::Direct { exec: 0 });
+        assert_matches_fresh(&mut cache, &st);
+        assert_eq!(cache.rebuilds, 1, "apply must patch, not rebuild");
+        assert_eq!(cache.patches, 1);
+    }
+
+    #[test]
+    fn tracks_full_episode_with_wall_advances() {
+        let mut st = state(3, 2);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        let mut step = 0usize;
+        while !st.executable().is_empty() {
+            let t = st.executable()[step % st.executable().len()];
+            let exec = step % st.cluster.len();
+            let finish = st.apply(t, Allocation::Direct { exec });
+            if step % 3 == 0 {
+                st.wall = st.wall.max(finish); // engine-style monotone advance
+            }
+            assert_matches_fresh(&mut cache, &st);
+            step += 1;
+        }
+        assert!(cache.patches > 0);
+    }
+
+    #[test]
+    fn arrival_triggers_rebuild() {
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 3).generate();
+        let mut st = SimState::new(cluster, w);
+        st.mark_arrived(0);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        assert_matches_fresh(&mut cache, &st);
+        let before = cache.rebuilds;
+        st.mark_arrived(1);
+        assert_matches_fresh(&mut cache, &st);
+        assert_eq!(cache.rebuilds, before + 1);
+        st.mark_arrived(2);
+        assert_matches_fresh(&mut cache, &st);
+    }
+
+    #[test]
+    fn duplicate_allocations_stay_bitwise() {
+        let mut st = state(2, 4);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        assert_matches_fresh(&mut cache, &st);
+        // Drain one entry task first so some task has an assigned parent.
+        let t0 = st.executable()[0];
+        let f0 = st.apply(t0, Allocation::Direct { exec: 0 });
+        assert_matches_fresh(&mut cache, &st);
+        // Find an executable task with a parent and duplicate it.
+        let cand = st
+            .executable()
+            .iter()
+            .copied()
+            .find(|t| !st.jobs[t.job].parents[t.node].is_empty());
+        if let Some(t) = cand {
+            let parent = st.jobs[t.job].parents[t.node][0].other;
+            st.apply(t, Allocation::Duplicate { exec: 1, parent });
+            assert_matches_fresh(&mut cache, &st);
+        }
+        // Cross the first finish boundary: finished-parent fractions flip.
+        st.wall = st.wall.max(f0 + 1e-6);
+        assert_matches_fresh(&mut cache, &st);
+    }
+
+    #[test]
+    fn reset_recovers_from_state_swap() {
+        let mut st = state(2, 5);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        for _ in 0..3 {
+            let t = st.executable()[0];
+            st.apply(t, Allocation::Direct { exec: 0 });
+            cache.refresh(&st);
+        }
+        // New, shorter-logged state: detected and replayed from scratch.
+        let st2 = state(3, 6);
+        assert_matches_fresh(&mut cache, &st2);
+        // Explicit reset also works.
+        cache.reset();
+        assert_matches_fresh(&mut cache, &st2);
+    }
+
+    #[test]
+    fn compaction_gap_falls_back_to_rebuild() {
+        let mut st = state(2, 8);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        // Generate events the cache never saw, then compact them away:
+        // the replay gap must trigger a rebuild + pending reseed.
+        let t = st.executable()[0];
+        let f = st.apply(t, Allocation::Direct { exec: 0 });
+        st.compact_enc_log();
+        assert_matches_fresh(&mut cache, &st);
+        // The reseeded heap still flips finished parents later on.
+        st.wall = f + 1e-6;
+        assert_matches_fresh(&mut cache, &st);
+    }
+
+    #[test]
+    fn variant_shrink_falls_back_to_rebuild() {
+        // 14 small jobs → N=256; drain jobs until the state fits N=64.
+        let mut st = state(14, 7);
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        assert_eq!(cache.refresh(&st).variant.n, 256);
+        while !st.executable().is_empty() {
+            let t = st.executable()[0];
+            st.apply(t, Allocation::Direct { exec: 0 });
+            assert_matches_fresh(&mut cache, &st);
+        }
+        assert_eq!(cache.refresh(&st).variant.n, 64, "empty state fits small");
+    }
+}

@@ -6,6 +6,14 @@
 //! with explicit node/job masks. Slots map back to tasks through
 //! [`EncodedState::slot_task`].
 //!
+//! The graph structure is stored **sparsely**: a CSR adjacency
+//! (`row_offsets`/`col_indices`, child slots per parent slot) and a
+//! per-slot job-slot index (`slot_job`) instead of dense N×N / J×N
+//! matrices. The pure-rust forward consumes the CSR directly — O(|E|)
+//! message passing instead of O(N²) — while [`EncodedState::dense_adj`] /
+//! [`EncodedState::dense_jobmat`] materialize the dense tensors on demand
+//! for the PJRT artifact and the cross-validation oracle.
+//!
 //! Packing policy: unassigned tasks of arrived jobs, jobs in arrival
 //! order. If the state exceeds the large variant (never at paper scales —
 //! see DESIGN.md), the lowest-`rank_up` tasks are dropped from the
@@ -52,25 +60,37 @@ pub fn pick_variant(n_tasks: usize, n_jobs: usize) -> ShapeVariant {
     VARIANTS[VARIANTS.len() - 1]
 }
 
-/// The dense tensors the network consumes (row-major, f32 — exactly what
-/// both the rust forward and the PJRT artifact take).
-#[derive(Debug, Clone)]
+/// The encoded scheduling state: dense node features/masks plus the
+/// sparse graph structure. Compact enough to clone per training
+/// transition (the old dense form cloned 65k+8k f32 per decision at
+/// N=256; the CSR form carries one u32 per edge plus one per slot).
+#[derive(Debug, Clone, PartialEq)]
 pub struct EncodedState {
     pub variant: ShapeVariant,
     /// Node features [N, F].
     pub x: Vec<f32>,
-    /// Adjacency [N, N]: `adj[i*N+j] = 1` iff slot j is a *child* of slot
-    /// i (Eq 5 aggregates children embeddings into the parent).
-    pub adj: Vec<f32>,
-    /// Job membership [J, N]: `jobmat[j*N+i] = 1` iff slot i belongs to
-    /// job-slot j.
-    pub jobmat: Vec<f32>,
     /// 1.0 for occupied node slots.
     pub node_mask: Vec<f32>,
     /// 1.0 for slots whose task is currently executable (`A_t`).
     pub exec_mask: Vec<f32>,
-    /// Slot → task mapping (len = used slots).
-    slots: Vec<TaskRef>,
+    /// CSR row offsets (len `n_used()+1`): the children of slot `i` are
+    /// `col_indices[row_offsets[i]..row_offsets[i+1]]`, sorted ascending
+    /// and deduplicated (parallel DAG edges aggregate once, exactly like
+    /// the saturated dense adjacency).
+    pub row_offsets: Vec<u32>,
+    /// CSR column indices: child slot per edge.
+    pub col_indices: Vec<u32>,
+    /// Job-slot index of each used slot (len `n_used()`).
+    pub slot_job: Vec<u32>,
+    /// Number of slots per used job slot (len = number of encoded jobs,
+    /// every entry > 0). Replaces the O(J·N) occupied-row scan in the
+    /// forward pass.
+    pub job_counts: Vec<u32>,
+    /// True if the state did not fit the variant and tasks/jobs were
+    /// dropped (incremental patching is unsound then — see `EncoderCache`).
+    pub truncated: bool,
+    /// Slot → task mapping (len = used slots, sorted by (job, node)).
+    pub(crate) slots: Vec<TaskRef>,
 }
 
 impl EncodedState {
@@ -79,9 +99,10 @@ impl EncodedState {
         self.slots.get(slot).copied()
     }
 
-    /// The slot of a task, if encoded.
+    /// The slot of a task, if encoded. Slots are sorted by (job, node),
+    /// so this is a binary search, not a linear scan.
     pub fn task_slot(&self, t: TaskRef) -> Option<usize> {
-        self.slots.iter().position(|&s| s == t)
+        self.slots.binary_search(&t).ok()
     }
 
     pub fn n_used(&self) -> usize {
@@ -91,6 +112,170 @@ impl EncodedState {
     /// Number of executable slots.
     pub fn n_executable(&self) -> usize {
         self.exec_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Number of encoded jobs (used job slots).
+    pub fn n_jobs_used(&self) -> usize {
+        self.job_counts.len()
+    }
+
+    /// Number of CSR edges.
+    pub fn n_edges(&self) -> usize {
+        self.col_indices.len()
+    }
+
+    /// Child slots of slot `i` (ascending, deduplicated).
+    pub fn children_of(&self, i: usize) -> &[u32] {
+        &self.col_indices[self.row_offsets[i] as usize..self.row_offsets[i + 1] as usize]
+    }
+
+    /// Write the dense [N, N] adjacency into `out` (must be zeroed,
+    /// len N²): `out[i*N+j] = 1` iff slot j is a *child* of slot i (Eq 5
+    /// aggregates children embeddings into the parent).
+    pub fn write_dense_adj(&self, out: &mut [f32]) {
+        let n = self.variant.n;
+        debug_assert_eq!(out.len(), n * n);
+        for i in 0..self.n_used() {
+            for &c in self.children_of(i) {
+                out[i * n + c as usize] = 1.0;
+            }
+        }
+    }
+
+    /// Materialize the dense [N, N] adjacency (PJRT artifact input and
+    /// dense-oracle cross-validation).
+    pub fn dense_adj(&self) -> Vec<f32> {
+        let n = self.variant.n;
+        let mut out = vec![0.0; n * n];
+        self.write_dense_adj(&mut out);
+        out
+    }
+
+    /// Write the dense [J, N] job membership into `out` (must be zeroed,
+    /// len J·N): `out[j*N+i] = 1` iff slot i belongs to job-slot j.
+    pub fn write_dense_jobmat(&self, out: &mut [f32]) {
+        let n = self.variant.n;
+        debug_assert_eq!(out.len(), self.variant.j * n);
+        for (i, &js) in self.slot_job.iter().enumerate() {
+            out[js as usize * n + i] = 1.0;
+        }
+    }
+
+    /// Materialize the dense [J, N] job membership matrix.
+    pub fn dense_jobmat(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.variant.j * self.variant.n];
+        self.write_dense_jobmat(&mut out);
+        out
+    }
+
+    /// Remove the slot of `t`: shift the feature rows, masks, job index
+    /// and CSR down by one, all in place. Returns the removed slot index,
+    /// or `None` if `t` is not encoded. Used by the incremental
+    /// `EncoderCache`; produces exactly what [`build_csr`] +
+    /// [`build_job_index`] would rebuild from the shrunken slot list
+    /// (sortedness and dedup survive deleting a column and decrementing
+    /// the columns above it, so rows stay in dense-matmul order).
+    pub(crate) fn remove_slot(&mut self, t: TaskRef) -> Option<usize> {
+        let i = self.slots.binary_search(&t).ok()?;
+        let m = self.slots.len();
+        self.slots.remove(i);
+        if i + 1 < m {
+            self.x.copy_within((i + 1) * F..m * F, i * F);
+            self.node_mask.copy_within(i + 1..m, i);
+            self.exec_mask.copy_within(i + 1..m, i);
+        }
+        self.x[(m - 1) * F..m * F].fill(0.0);
+        self.node_mask[m - 1] = 0.0;
+        self.exec_mask[m - 1] = 0.0;
+        // Job index: shrink the slot's job, dropping the job slot (and
+        // shifting later job slots down) when it empties.
+        let js = self.slot_job[i] as usize;
+        self.slot_job.remove(i);
+        self.job_counts[js] -= 1;
+        if self.job_counts[js] == 0 {
+            self.job_counts.remove(js);
+            for sj in self.slot_job.iter_mut() {
+                if *sj as usize > js {
+                    *sj -= 1;
+                }
+            }
+        }
+        // CSR: one compacting pass — drop row i, drop references to slot
+        // i, renumber slots above it. O(|E|) with no sorting or searches.
+        let mut write = 0usize;
+        let mut out_row = 0usize;
+        let mut lo = 0usize;
+        for r in 0..m {
+            let hi = self.row_offsets[r + 1] as usize;
+            if r != i {
+                for k in lo..hi {
+                    let c = self.col_indices[k] as usize;
+                    if c != i {
+                        self.col_indices[write] = if c > i { (c - 1) as u32 } else { c as u32 };
+                        write += 1;
+                    }
+                }
+                out_row += 1;
+                self.row_offsets[out_row] = write as u32;
+            }
+            lo = hi;
+        }
+        self.row_offsets.truncate(out_row + 1);
+        self.col_indices.truncate(write);
+        Some(i)
+    }
+}
+
+/// Fill slot `i`'s feature row and masks from the live state. Shared by
+/// [`encode`] and the incremental `EncoderCache` so a patched slot is
+/// bitwise identical to a freshly encoded one.
+pub(crate) fn fill_slot(state: &SimState, mode: FeatureMode, enc: &mut EncodedState, i: usize) {
+    let t = enc.slots[i];
+    node_features(state, t, mode, &mut enc.x[i * F..(i + 1) * F]);
+    enc.node_mask[i] = 1.0;
+    enc.exec_mask[i] = if state.is_executable(t) { 1.0 } else { 0.0 };
+}
+
+/// Rebuild `slot_job`/`job_counts` from the sorted slot list: job slots
+/// are assigned in order of first appearance, i.e. ascending job id.
+pub(crate) fn build_job_index(enc: &mut EncodedState) {
+    enc.slot_job.clear();
+    enc.job_counts.clear();
+    let mut last_job = usize::MAX;
+    for i in 0..enc.slots.len() {
+        let job = enc.slots[i].job;
+        if job != last_job || enc.job_counts.is_empty() {
+            enc.job_counts.push(0);
+            last_job = job;
+        }
+        let js = enc.job_counts.len() - 1;
+        enc.job_counts[js] += 1;
+        enc.slot_job.push(js as u32);
+    }
+}
+
+/// Rebuild the CSR adjacency from the sorted slot list. Edges to tasks
+/// outside the encoding (assigned or truncated away) vanish — their
+/// influence is already summarized in the features. Each row is sorted
+/// and deduplicated so sparse aggregation visits children in exactly the
+/// order the dense matmul does.
+pub(crate) fn build_csr(state: &SimState, enc: &mut EncodedState) {
+    enc.row_offsets.clear();
+    enc.col_indices.clear();
+    enc.row_offsets.push(0);
+    let mut row: Vec<u32> = Vec::new();
+    for &t in &enc.slots {
+        row.clear();
+        for e in &state.jobs[t.job].children[t.node] {
+            let c = TaskRef::new(t.job, e.other);
+            if let Ok(ci) = enc.slots.binary_search(&c) {
+                row.push(ci as u32);
+            }
+        }
+        row.sort_unstable();
+        row.dedup();
+        enc.col_indices.extend_from_slice(&row);
+        enc.row_offsets.push(enc.col_indices.len() as u32);
     }
 }
 
@@ -113,17 +298,22 @@ pub fn encode(state: &SimState, mode: FeatureMode) -> EncodedState {
         }
     }
     let variant = pick_variant(tasks.len(), jobs.len());
+    let mut truncated = false;
 
     // Truncate if needed: drop lowest-rank_up tasks first, then re-gather
     // per-job. Executable tasks are always kept in preference.
     if tasks.len() > variant.n || jobs.len() > variant.j {
+        truncated = true;
         if jobs.len() > variant.j {
             jobs.truncate(variant.j);
         }
-        let mut kept: Vec<TaskRef> = tasks
-            .into_iter()
-            .filter(|t| jobs.contains(&t.job))
-            .collect();
+        // Job-membership bool-vec: O(tasks + jobs) instead of the old
+        // O(tasks·jobs) `jobs.contains` scan.
+        let mut in_jobs = vec![false; state.jobs.len()];
+        for &j in &jobs {
+            in_jobs[j] = true;
+        }
+        let mut kept: Vec<TaskRef> = tasks.into_iter().filter(|t| in_jobs[t.job]).collect();
         kept.sort_by(|a, b| {
             let ea = state.is_executable(*a);
             let eb = state.is_executable(*b);
@@ -139,45 +329,24 @@ pub fn encode(state: &SimState, mode: FeatureMode) -> EncodedState {
     }
 
     let n = variant.n;
-    let jcap = variant.j;
     let mut enc = EncodedState {
         variant,
         x: vec![0.0; n * F],
-        adj: vec![0.0; n * n],
-        jobmat: vec![0.0; jcap * n],
         node_mask: vec![0.0; n],
         exec_mask: vec![0.0; n],
+        row_offsets: Vec::with_capacity(tasks.len() + 1),
+        col_indices: Vec::new(),
+        slot_job: Vec::with_capacity(tasks.len()),
+        job_counts: Vec::new(),
+        truncated,
         slots: tasks,
     };
 
-    // Job slot assignment in arrival order.
-    let mut job_slot: std::collections::BTreeMap<usize, usize> = Default::default();
-    for t in &enc.slots {
-        let next = job_slot.len();
-        job_slot.entry(t.job).or_insert(next);
+    build_job_index(&mut enc);
+    for i in 0..enc.slots.len() {
+        fill_slot(state, mode, &mut enc, i);
     }
-
-    for (i, &t) in enc.slots.iter().enumerate() {
-        node_features(state, t, mode, &mut enc.x[i * F..(i + 1) * F]);
-        enc.node_mask[i] = 1.0;
-        if state.is_executable(t) {
-            enc.exec_mask[i] = 1.0;
-        }
-        let js = job_slot[&t.job];
-        enc.jobmat[js * n + i] = 1.0;
-    }
-    // Adjacency between encoded slots (edges to assigned tasks vanish —
-    // their influence is already summarized in the features).
-    for (i, &t) in enc.slots.iter().enumerate() {
-        for e in &state.jobs[t.job].children[t.node] {
-            let c = TaskRef::new(t.job, e.other);
-            // Children are unassigned if t is unassigned, but may have been
-            // truncated out.
-            if let Some(ci) = enc.slots.binary_search(&c).ok() {
-                enc.adj[i * n + ci] = 1.0;
-            }
-        }
-    }
+    build_csr(state, &mut enc);
     enc
 }
 
@@ -206,6 +375,7 @@ mod tests {
         assert_eq!(enc.variant.n, 64);
         assert_eq!(enc.n_used(), st.n_tasks_total());
         assert_eq!(enc.n_executable(), st.executable().len());
+        assert!(!enc.truncated);
         // Masks consistent.
         let used = enc.node_mask.iter().filter(|&&m| m > 0.0).count();
         assert_eq!(used, enc.n_used());
@@ -234,10 +404,11 @@ mod tests {
         let st = state(1, 4);
         let enc = encode(&st, FeatureMode::Full);
         let n = enc.variant.n;
+        let adj = enc.dense_adj();
         let mut edge_count = 0;
         for i in 0..enc.n_used() {
             for j in 0..enc.n_used() {
-                if enc.adj[i * n + j] > 0.0 {
+                if adj[i * n + j] > 0.0 {
                     edge_count += 1;
                     let ti = enc.slot_task(i).unwrap();
                     let tj = enc.slot_task(j).unwrap();
@@ -247,6 +418,24 @@ mod tests {
             }
         }
         assert_eq!(edge_count, st.jobs[0].n_edges());
+    }
+
+    #[test]
+    fn csr_rows_sorted_and_bounded() {
+        let st = state(3, 8);
+        let enc = encode(&st, FeatureMode::Full);
+        assert_eq!(enc.row_offsets.len(), enc.n_used() + 1);
+        assert_eq!(enc.row_offsets[0], 0);
+        assert_eq!(*enc.row_offsets.last().unwrap() as usize, enc.n_edges());
+        for i in 0..enc.n_used() {
+            let row = enc.children_of(i);
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {i} not strictly ascending");
+            }
+            for &c in row {
+                assert!((c as usize) < enc.n_used());
+            }
+        }
     }
 
     #[test]
@@ -264,12 +453,55 @@ mod tests {
         let st = state(3, 6);
         let enc = encode(&st, FeatureMode::Full);
         let n = enc.variant.n;
+        let jobmat = enc.dense_jobmat();
         for i in 0..enc.n_used() {
             let memberships: usize = (0..enc.variant.j)
-                .filter(|&j| enc.jobmat[j * n + i] > 0.0)
+                .filter(|&j| jobmat[j * n + i] > 0.0)
                 .count();
             assert_eq!(memberships, 1, "slot {i} in {memberships} jobs");
         }
+        // job_counts sums to the used slots and matches slot_job.
+        let total: u32 = enc.job_counts.iter().sum();
+        assert_eq!(total as usize, enc.n_used());
+        for (i, &js) in enc.slot_job.iter().enumerate() {
+            assert!((js as usize) < enc.n_jobs_used(), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn remove_slot_matches_reencode() {
+        let mut st = state(2, 9);
+        let mut enc = encode(&st, FeatureMode::Full);
+        let t = st.executable()[0];
+        st.apply(t, Allocation::Direct { exec: 0 });
+        // Patch: remove (features, masks, job index and CSR all shift in
+        // place) + re-featurize the touched job. No rebuild.
+        enc.remove_slot(t).unwrap();
+        for i in 0..enc.n_used() {
+            if enc.slots[i].job == t.job {
+                fill_slot(&st, FeatureMode::Full, &mut enc, i);
+            }
+        }
+        let fresh = encode(&st, FeatureMode::Full);
+        assert_eq!(enc, fresh);
+    }
+
+    #[test]
+    fn remove_slot_drains_to_empty() {
+        let mut st = state(1, 10);
+        let mut enc = encode(&st, FeatureMode::Full);
+        while !st.executable().is_empty() {
+            let t = st.executable()[0];
+            st.apply(t, Allocation::Direct { exec: 0 });
+            enc.remove_slot(t).unwrap();
+            for i in 0..enc.n_used() {
+                fill_slot(&st, FeatureMode::Full, &mut enc, i);
+            }
+            assert_eq!(enc, encode(&st, FeatureMode::Full));
+        }
+        assert_eq!(enc.n_used(), 0);
+        assert_eq!(enc.row_offsets, vec![0]);
+        assert!(enc.col_indices.is_empty());
     }
 
     #[test]
@@ -284,6 +516,7 @@ mod tests {
         let enc = encode(&st, FeatureMode::Full);
         assert_eq!(enc.variant.n, 256);
         assert!(enc.n_used() <= 256);
+        assert!(enc.truncated);
         // Every encoded executable slot must be genuinely executable.
         for i in 0..enc.n_used() {
             let t = enc.slot_task(i).unwrap();

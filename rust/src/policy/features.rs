@@ -38,6 +38,19 @@ const T_DATA: f64 = 30.0;
 const T_WAIT: f64 = 120.0;
 const N_TASKS: f64 = 10.0;
 
+/// Index of the job-wait feature — the only feature that moves with the
+/// wall clock alone (the finished-parent fraction also depends on the
+/// wall, but only flips when a copy's finish time is crossed).
+pub const WAIT_FEATURE: usize = 11;
+
+/// Feature [`WAIT_FEATURE`]: job wait time since arrival. Shared by
+/// [`node_features`] and the incremental `EncoderCache` wall patch so
+/// both produce bitwise-identical values.
+#[inline]
+pub fn job_wait_feature(state: &SimState, job: usize) -> f32 {
+    squash((state.wall - state.jobs[job].arrival).max(0.0), T_WAIT)
+}
+
 /// Compute the feature vector of one task. `out` must have length
 /// [`NODE_FEATURES`]; the function overwrites it (allocation-free hot
 /// path).
@@ -94,7 +107,7 @@ pub fn node_features(state: &SimState, t: TaskRef, mode: FeatureMode, out: &mut 
         out[10] = fin as f32 / n_par as f32;
     }
     // 11: job wait time since arrival.
-    out[11] = squash((state.wall - job.arrival).max(0.0), T_WAIT);
+    out[WAIT_FEATURE] = job_wait_feature(state, t.job);
 }
 
 #[cfg(test)]

@@ -1,6 +1,7 @@
 //! The learned node-selection policy (paper §4.1): feature extraction,
 //! fixed-shape state encoding for the AOT-compiled network, a pure-rust
-//! reference implementation of the MGNet forward pass, and parameter I/O.
+//! reference implementation of the MGNet forward pass, an incremental
+//! per-episode encoder cache, and parameter I/O.
 //!
 //! Network architecture (mirrored exactly by `python/compile/model.py` —
 //! the flat parameter layout is defined once in [`net::LAYOUT`] and
@@ -14,12 +15,22 @@
 //! q_n    = MLP([e_n ; y_job(n) ; z]) → score      (Eq 8 softmax outside)
 //! v      = MLP(z) → scalar value (critic baseline)
 //! ```
+//!
+//! The serving hot path is sparse and incremental: `A` lives as a CSR
+//! edge list inside [`EncodedState`] (the rust forward never touches an
+//! N×N matrix), and [`EncoderCache`] patches the previous decision's
+//! encoding instead of re-featurizing the whole state. The dense tensors
+//! remain producible on demand ([`EncodedState::dense_adj`] /
+//! [`EncodedState::dense_jobmat`]) for the PJRT artifact and the
+//! dense-oracle cross-validation tests.
 
+pub mod cache;
 pub mod encode;
 pub mod features;
 pub mod net;
 pub mod params;
 
+pub use cache::EncoderCache;
 pub use encode::{EncodedState, ShapeVariant};
 pub use features::{FeatureMode, NODE_FEATURES};
 pub use net::RustPolicy;
@@ -45,33 +56,51 @@ pub const V2: usize = 16;
 /// Anything that can score an encoded state: the pure-rust forward or the
 /// PJRT-loaded AOT artifact ([`crate::runtime::PjrtPolicy`]).
 pub trait PolicyEval: Send {
-    /// Per-slot logits (padding slots get arbitrary values — mask before
-    /// use) and the critic's value estimate.
-    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)>;
+    /// Write the per-slot logits into `logits` (cleared and refilled to
+    /// the variant's N; padding slots get arbitrary values — mask before
+    /// use) and return the critic's value estimate. Implementations
+    /// should reuse internal buffers so the serving hot path stays
+    /// allocation-free.
+    fn logits_value_into(&mut self, enc: &EncodedState, logits: &mut Vec<f32>) -> Result<f32>;
+
+    /// Convenience wrapper allocating fresh logits (tests, one-shots).
+    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)> {
+        let mut logits = Vec::new();
+        let value = self.logits_value_into(enc, &mut logits)?;
+        Ok((logits, value))
+    }
+
     fn backend_name(&self) -> &'static str;
 }
 
 /// A boxed policy evaluator plus sampling behaviour — what the Lachesis
-/// scheduler owns.
+/// scheduler owns. Keeps reusable logits/mask buffers so per-decision
+/// evaluation does not allocate.
 pub struct PolicyNet {
     pub eval: Box<dyn PolicyEval>,
+    logits: Vec<f32>,
+    mask: Vec<bool>,
 }
 
 impl PolicyNet {
     pub fn new(eval: Box<dyn PolicyEval>) -> PolicyNet {
-        PolicyNet { eval }
+        PolicyNet {
+            eval,
+            logits: Vec::new(),
+            mask: Vec::new(),
+        }
     }
 
     /// Greedy argmax over executable slots.
     pub fn argmax(&mut self, enc: &EncodedState) -> Result<Option<usize>> {
-        let (logits, _) = self.eval.logits_value(enc)?;
+        self.eval.logits_value_into(enc, &mut self.logits)?;
         let mut best: Option<(f32, usize)> = None;
         for i in 0..enc.variant.n {
             if enc.exec_mask[i] == 0.0 {
                 continue;
             }
-            if best.map(|(b, _)| logits[i] > b).unwrap_or(true) {
-                best = Some((logits[i], i));
+            if best.map(|(b, _)| self.logits[i] > b).unwrap_or(true) {
+                best = Some((self.logits[i], i));
             }
         }
         Ok(best.map(|(_, i)| i))
@@ -84,13 +113,14 @@ impl PolicyNet {
         rng: &mut crate::util::rng::Rng,
         temperature: f64,
     ) -> Result<Option<(usize, f32)>> {
-        let (logits, value) = self.eval.logits_value(enc)?;
-        let mask: Vec<bool> = enc.exec_mask.iter().map(|&m| m > 0.0).collect();
-        if !mask.iter().any(|&m| m) {
+        let value = self.eval.logits_value_into(enc, &mut self.logits)?;
+        self.mask.clear();
+        self.mask.extend(enc.exec_mask.iter().map(|&m| m > 0.0));
+        if !self.mask.iter().any(|&m| m) {
             return Ok(None);
         }
-        let slot = rng.softmax_sample(&logits[..enc.variant.n], &mask[..enc.variant.n], temperature);
-        let _ = value;
+        let n = enc.variant.n;
+        let slot = rng.softmax_sample(&self.logits[..n], &self.mask[..n], temperature);
         Ok(Some((slot, value)))
     }
 }

@@ -6,6 +6,18 @@
 //! against the AOT artifact in `rust/tests/integration_runtime.rs`. It
 //! serves three purposes: a test oracle for the JAX model, a no-PJRT
 //! fallback backend, and the decision-latency baseline for §Perf.
+//!
+//! Two forward paths exist:
+//!
+//! * [`RustPolicy::forward_into`] — the production path: CSR-sparse
+//!   message passing and job pooling, O(K·|E|·E) instead of O(K·N²·E),
+//!   allocation-free after warmup (all buffers live in `Scratch`, logits
+//!   are written into a caller-owned buffer).
+//! * [`RustPolicy::forward_dense`] — the oracle: materializes the dense
+//!   adjacency/jobmat on demand and runs dense matmuls, exactly what the
+//!   PJRT artifact computes. The sparse path accumulates in the same
+//!   order (CSR rows are sorted ascending), so the two agree bitwise;
+//!   tests pin them within 1e-5.
 
 use super::encode::EncodedState;
 use super::{PolicyEval, E, F, H, K, Q1, Q2, Q3, V1, V2};
@@ -131,6 +143,14 @@ struct Scratch {
     q_h2: Vec<f32>,
     q_h3: Vec<f32>,
     logits: Vec<f32>,
+    // Value-head buffers (moved out of `forward` so the hot path does not
+    // allocate per decision).
+    vh1: Vec<f32>,
+    vh2: Vec<f32>,
+    vout: Vec<f32>,
+    // Dense-oracle staging for adj/jobmat (only sized by forward_dense).
+    dense_adj: Vec<f32>,
+    dense_jobmat: Vec<f32>,
 }
 
 impl Scratch {
@@ -156,6 +176,12 @@ impl Scratch {
         self.q_h2 = vec![0.0; n * Q2];
         self.q_h3 = vec![0.0; n * Q3];
         self.logits = vec![0.0; n];
+        self.vh1 = vec![0.0; V1];
+        self.vh2 = vec![0.0; V2];
+        self.vout = vec![0.0; 1];
+        // Dense staging keeps its old capacity; forward_dense resizes.
+        self.dense_adj.clear();
+        self.dense_jobmat.clear();
     }
 }
 
@@ -205,56 +231,14 @@ impl RustPolicy {
         &self.params[off..off + r * c]
     }
 
-    /// Full forward pass. Returns (logits[N], value). Padding slots carry
-    /// meaningless logits — mask before use.
-    pub fn forward(&mut self, enc: &EncodedState) -> (Vec<f32>, f32) {
+    /// Shared epilogue of both forward paths: node embeddings `s.e` and
+    /// job summaries `s.y` → global summary, per-node scores, value head.
+    /// `sparse_gather` controls how y_job(n) is looked up (slot→job index
+    /// vs dense row scan — identical results, kept separate so the oracle
+    /// exercises the dense layout end to end).
+    fn heads(&self, s: &mut Scratch, enc: &EncodedState, m: usize, sparse_gather: bool) -> f32 {
         let n = enc.variant.n;
         let jcap = enc.variant.j;
-        // Slots are packed [0, n_used): all row-wise work can stop there
-        // (padding rows are identically zero by construction).
-        let m = enc.n_used().max(1);
-        // Split scratch borrow from params borrow: copy param slices is
-        // avoided by indexing through raw offsets below.
-        let mut s = std::mem::take(&mut self.scratch);
-        s.ensure(n, jcap);
-
-        // e0 = tanh(x·W_in + b_in), masked.
-        s.e0.fill(0.0);
-        dense(&enc.x, self.p("w_in"), self.p("b_in"), &mut s.e0, m, F, E, true);
-        for i in 0..m {
-            if enc.node_mask[i] == 0.0 {
-                s.e0[i * E..(i + 1) * E].fill(0.0);
-            }
-        }
-        s.e.copy_from_slice(&s.e0);
-
-        // K message-passing iterations with shared g (Eq 5).
-        for _ in 0..K {
-            s.agg[..m * E].fill(0.0);
-            matmul_into(&enc.adj[..m * n], &s.e, &mut s.agg[..m * E], m, n, E);
-            dense(&s.agg, self.p("g1"), self.p("bg1"), &mut s.h, m, E, H, true);
-            dense(&s.h, self.p("g2"), self.p("bg2"), &mut s.m, m, H, E, true);
-            for i in 0..m {
-                let mask = enc.node_mask[i];
-                for d in 0..E {
-                    s.e[i * E + d] = (s.m[i * E + d] + s.e0[i * E + d]) * mask;
-                }
-            }
-        }
-
-        // Per-job summaries: jobsum = jobmat · e, y = f(jobsum).
-        s.jobsum.fill(0.0);
-        matmul_into(&enc.jobmat, &s.e, &mut s.jobsum, jcap, n, E);
-        dense(&s.jobsum, self.p("fj1"), self.p("bfj1"), &mut s.jh, jcap, E, H, true);
-        dense(&s.jh, self.p("fj2"), self.p("bfj2"), &mut s.y, jcap, H, E, true);
-        // Zero-out empty job slots (jobmat row all-zero ⇒ jobsum row zero,
-        // but tanh(bias) could leak — mask explicitly).
-        for j in 0..jcap {
-            let occupied = (0..n).any(|i| enc.jobmat[j * n + i] > 0.0);
-            if !occupied {
-                s.y[j * E..(j + 1) * E].fill(0.0);
-            }
-        }
 
         // Global summary: z = f(Σ_j y_j).
         s.gsum.fill(0.0);
@@ -267,15 +251,21 @@ impl RustPolicy {
         dense(&s.gh, self.p("fg2"), self.p("bfg2"), &mut s.z, 1, H, E, true);
 
         // Per-node score over [e_n ; y_job(n) ; z] (Eq 8's q).
-        // y_job(n) = jobmatᵀ gather.
         for i in 0..m {
             let cat = &mut s.cat[i * 3 * E..(i + 1) * 3 * E];
             cat[..E].copy_from_slice(&s.e[i * E..(i + 1) * E]);
             cat[E..2 * E].fill(0.0);
-            for j in 0..jcap {
-                if enc.jobmat[j * n + i] > 0.0 {
-                    cat[E..2 * E].copy_from_slice(&s.y[j * E..(j + 1) * E]);
-                    break;
+            if sparse_gather {
+                if let Some(&js) = enc.slot_job.get(i) {
+                    let js = js as usize;
+                    cat[E..2 * E].copy_from_slice(&s.y[js * E..(js + 1) * E]);
+                }
+            } else {
+                for j in 0..jcap {
+                    if s.dense_jobmat[j * n + i] > 0.0 {
+                        cat[E..2 * E].copy_from_slice(&s.y[j * E..(j + 1) * E]);
+                        break;
+                    }
                 }
             }
             cat[2 * E..].copy_from_slice(&s.z);
@@ -285,24 +275,159 @@ impl RustPolicy {
         dense(&s.q_h2, self.p("q3"), self.p("bq3"), &mut s.q_h3, m, Q2, Q3, true);
         s.logits.fill(0.0);
         dense(&s.q_h3, self.p("q4"), self.p("bq4"), &mut s.logits, m, Q3, 1, false);
-        let logits = s.logits.clone();
 
         // Value head over z.
-        let mut vh1 = vec![0.0f32; V1];
-        let mut vh2 = vec![0.0f32; V2];
-        let mut vout = vec![0.0f32; 1];
-        dense(&s.z, self.p("v1"), self.p("bv1"), &mut vh1, 1, E, V1, true);
-        dense(&vh1, self.p("v2"), self.p("bv2"), &mut vh2, 1, V1, V2, true);
-        dense(&vh2, self.p("v3"), self.p("bv3"), &mut vout, 1, V2, 1, false);
+        dense(&s.z, self.p("v1"), self.p("bv1"), &mut s.vh1, 1, E, V1, true);
+        dense(&s.vh1, self.p("v2"), self.p("bv2"), &mut s.vh2, 1, V1, V2, true);
+        dense(&s.vh2, self.p("v3"), self.p("bv3"), &mut s.vout, 1, V2, 1, false);
+        s.vout[0]
+    }
 
+    /// Input embedding shared by both paths: e0 = tanh(x·W_in + b_in),
+    /// masked, copied into the working embedding `e`.
+    fn embed(&self, s: &mut Scratch, enc: &EncodedState, m: usize) {
+        s.e0.fill(0.0);
+        dense(&enc.x, self.p("w_in"), self.p("b_in"), &mut s.e0, m, F, E, true);
+        for i in 0..m {
+            if enc.node_mask[i] == 0.0 {
+                s.e0[i * E..(i + 1) * E].fill(0.0);
+            }
+        }
+        s.e.copy_from_slice(&s.e0);
+    }
+
+    /// Sparse forward pass — the production path. Writes the per-slot
+    /// logits (all N, padding slots meaningless — mask before use) into
+    /// `logits` and returns the critic's value estimate. Allocation-free
+    /// once the scratch is warm for the variant.
+    pub fn forward_into(&mut self, enc: &EncodedState, logits: &mut Vec<f32>) -> f32 {
+        let n = enc.variant.n;
+        let jcap = enc.variant.j;
+        // Slots are packed [0, n_used): all row-wise work can stop there
+        // (padding rows are identically zero by construction).
+        let m = enc.n_used().max(1);
+        let mut s = std::mem::take(&mut self.scratch);
+        s.ensure(n, jcap);
+
+        self.embed(&mut s, enc, m);
+
+        // K message-passing iterations with shared g (Eq 5): CSR gather —
+        // O(|E|·E) per round. Children per row are sorted ascending, the
+        // same order the dense matmul visits nonzero columns, so the
+        // accumulation is bitwise identical to the dense oracle.
+        for _ in 0..K {
+            s.agg[..m * E].fill(0.0);
+            for i in 0..enc.n_used() {
+                for &c in enc.children_of(i) {
+                    let c = c as usize;
+                    let erow = &s.e[c * E..(c + 1) * E];
+                    let arow = &mut s.agg[i * E..(i + 1) * E];
+                    for (o, &ev) in arow.iter_mut().zip(erow) {
+                        *o += ev;
+                    }
+                }
+            }
+            dense(&s.agg, self.p("g1"), self.p("bg1"), &mut s.h, m, E, H, true);
+            dense(&s.h, self.p("g2"), self.p("bg2"), &mut s.m, m, H, E, true);
+            for i in 0..m {
+                let mask = enc.node_mask[i];
+                for d in 0..E {
+                    s.e[i * E + d] = (s.m[i * E + d] + s.e0[i * E + d]) * mask;
+                }
+            }
+        }
+
+        // Per-job summaries via the slot→job index (slots ascend, so each
+        // job row accumulates in the same order as the dense jobmat·e).
+        s.jobsum.fill(0.0);
+        for (i, &js) in enc.slot_job.iter().enumerate() {
+            let js = js as usize;
+            let erow = &s.e[i * E..(i + 1) * E];
+            let jrow = &mut s.jobsum[js * E..(js + 1) * E];
+            for (o, &ev) in jrow.iter_mut().zip(erow) {
+                *o += ev;
+            }
+        }
+        dense(&s.jobsum, self.p("fj1"), self.p("bfj1"), &mut s.jh, jcap, E, H, true);
+        dense(&s.jh, self.p("fj2"), self.p("bfj2"), &mut s.y, jcap, H, E, true);
+        // Zero-out empty job slots (tanh(bias) could leak). Per-job slot
+        // counts from the encoder replace the old O(J·N) occupancy scan.
+        for j in 0..jcap {
+            if j >= enc.job_counts.len() {
+                s.y[j * E..(j + 1) * E].fill(0.0);
+            }
+        }
+
+        let value = self.heads(&mut s, enc, m, true);
+        logits.clear();
+        logits.extend_from_slice(&s.logits);
         self.scratch = s;
-        (logits, vout[0])
+        value
+    }
+
+    /// Full sparse forward pass returning freshly allocated logits.
+    /// Convenience wrapper over [`RustPolicy::forward_into`].
+    pub fn forward(&mut self, enc: &EncodedState) -> (Vec<f32>, f32) {
+        let mut logits = Vec::new();
+        let value = self.forward_into(enc, &mut logits);
+        (logits, value)
+    }
+
+    /// Dense-oracle forward pass: materializes the dense adjacency and
+    /// job matrix from the CSR and runs the original O(K·N²·E) pipeline —
+    /// exactly the computation the PJRT artifact performs. Used for
+    /// cross-validation; the sparse path must match it within 1e-5.
+    pub fn forward_dense(&mut self, enc: &EncodedState) -> (Vec<f32>, f32) {
+        let n = enc.variant.n;
+        let jcap = enc.variant.j;
+        let m = enc.n_used().max(1);
+        let mut s = std::mem::take(&mut self.scratch);
+        s.ensure(n, jcap);
+        s.dense_adj.clear();
+        s.dense_adj.resize(n * n, 0.0);
+        enc.write_dense_adj(&mut s.dense_adj);
+        s.dense_jobmat.clear();
+        s.dense_jobmat.resize(jcap * n, 0.0);
+        enc.write_dense_jobmat(&mut s.dense_jobmat);
+
+        self.embed(&mut s, enc, m);
+
+        // K message-passing iterations — dense matmul against adj.
+        for _ in 0..K {
+            s.agg[..m * E].fill(0.0);
+            matmul_into(&s.dense_adj[..m * n], &s.e, &mut s.agg[..m * E], m, n, E);
+            dense(&s.agg, self.p("g1"), self.p("bg1"), &mut s.h, m, E, H, true);
+            dense(&s.h, self.p("g2"), self.p("bg2"), &mut s.m, m, H, E, true);
+            for i in 0..m {
+                let mask = enc.node_mask[i];
+                for d in 0..E {
+                    s.e[i * E + d] = (s.m[i * E + d] + s.e0[i * E + d]) * mask;
+                }
+            }
+        }
+
+        // Per-job summaries: jobsum = jobmat · e, y = f(jobsum).
+        s.jobsum.fill(0.0);
+        matmul_into(&s.dense_jobmat, &s.e, &mut s.jobsum, jcap, n, E);
+        dense(&s.jobsum, self.p("fj1"), self.p("bfj1"), &mut s.jh, jcap, E, H, true);
+        dense(&s.jh, self.p("fj2"), self.p("bfj2"), &mut s.y, jcap, H, E, true);
+        for j in 0..jcap {
+            let occupied = (0..n).any(|i| s.dense_jobmat[j * n + i] > 0.0);
+            if !occupied {
+                s.y[j * E..(j + 1) * E].fill(0.0);
+            }
+        }
+
+        let value = self.heads(&mut s, enc, m, false);
+        let logits = s.logits.clone();
+        self.scratch = s;
+        (logits, value)
     }
 }
 
 impl PolicyEval for RustPolicy {
-    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)> {
-        Ok(self.forward(enc))
+    fn logits_value_into(&mut self, enc: &EncodedState, logits: &mut Vec<f32>) -> Result<f32> {
+        Ok(self.forward_into(enc, logits))
     }
 
     fn backend_name(&self) -> &'static str {
@@ -367,6 +492,42 @@ mod tests {
     }
 
     #[test]
+    fn sparse_forward_matches_dense_oracle() {
+        for seed in 0..4u64 {
+            let mut net = RustPolicy::random(20 + seed);
+            // 2 jobs → N=64 variant; 12 jobs → N=256 variant.
+            for jobs in [2usize, 12] {
+                let e = enc(jobs, seed + 1);
+                let (ls, vs) = net.forward(&e);
+                let (ld, vd) = net.forward_dense(&e);
+                assert!((vs - vd).abs() <= 1e-5, "value {vs} vs {vd}");
+                for i in 0..e.n_used() {
+                    assert!(
+                        (ls[i] - ld[i]).abs() <= 1e-5,
+                        "slot {i}: sparse {} dense {}",
+                        ls[i],
+                        ld[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_into_reuses_buffer() {
+        let mut net = RustPolicy::random(3);
+        let e = enc(2, 5);
+        let mut buf = Vec::new();
+        let v1 = net.forward_into(&e, &mut buf);
+        let cap = buf.capacity();
+        let first = buf.clone();
+        let v2 = net.forward_into(&e, &mut buf);
+        assert_eq!(buf, first);
+        assert_eq!(v1, v2);
+        assert_eq!(buf.capacity(), cap, "steady state must not reallocate");
+    }
+
+    #[test]
     fn different_params_different_logits() {
         let e = enc(2, 3);
         let (l1, _) = RustPolicy::random(10).forward(&e);
@@ -390,6 +551,17 @@ mod tests {
         let _ = net.forward(&e_big);
         let (l2, _) = net.forward(&e_small);
         assert_eq!(l1, l2, "scratch reuse must not leak state");
+    }
+
+    #[test]
+    fn dense_oracle_does_not_poison_sparse_scratch() {
+        let mut net = RustPolicy::random(5);
+        let e = enc(2, 6);
+        let (l1, v1) = net.forward(&e);
+        let _ = net.forward_dense(&e);
+        let (l2, v2) = net.forward(&e);
+        assert_eq!(l1, l2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

@@ -116,8 +116,12 @@ impl TrainBackend for PjrtTrainBackend {
                 );
             }
             x[i * n * F..(i + 1) * n * F].copy_from_slice(&row.enc.x);
-            adj[i * n * n..(i + 1) * n * n].copy_from_slice(&row.enc.adj);
-            jobmat[i * j * n..(i + 1) * j * n].copy_from_slice(&row.enc.jobmat);
+            // Transitions carry the compact CSR encoding; the train_step
+            // artifact wants dense tensors — materialize into the
+            // (pre-zeroed) batch rows on demand.
+            row.enc.write_dense_adj(&mut adj[i * n * n..(i + 1) * n * n]);
+            row.enc
+                .write_dense_jobmat(&mut jobmat[i * j * n..(i + 1) * j * n]);
             node_mask[i * n..(i + 1) * n].copy_from_slice(&row.enc.node_mask);
             exec_mask[i * n..(i + 1) * n].copy_from_slice(&row.enc.exec_mask);
             action[i] = row.action;

@@ -202,6 +202,10 @@ impl Runtime {
 pub struct PjrtPolicy {
     runtime: Runtime,
     pub params: Vec<f32>,
+    /// Reused dense staging for the artifact's adj/jobmat inputs (the
+    /// encoding itself is CSR; the AOT graph wants dense tensors).
+    dense_adj: Vec<f32>,
+    dense_jobmat: Vec<f32>,
 }
 
 #[cfg(feature = "pjrt")]
@@ -213,7 +217,12 @@ impl PjrtPolicy {
         let default_params = format!("{artifact_dir}/params_init.bin");
         let path = params_path.unwrap_or(&default_params);
         let params = crate::policy::params::load_expected(path, runtime.meta.param_len)?;
-        Ok(PjrtPolicy { runtime, params })
+        Ok(PjrtPolicy {
+            runtime,
+            params,
+            dense_adj: Vec::new(),
+            dense_jobmat: Vec::new(),
+        })
     }
 
     pub fn with_params(artifact_dir: &str, params: Vec<f32>) -> Result<PjrtPolicy> {
@@ -221,7 +230,12 @@ impl PjrtPolicy {
         if params.len() != runtime.meta.param_len {
             bail!("params length {} != {}", params.len(), runtime.meta.param_len);
         }
-        Ok(PjrtPolicy { runtime, params })
+        Ok(PjrtPolicy {
+            runtime,
+            params,
+            dense_adj: Vec::new(),
+            dense_jobmat: Vec::new(),
+        })
     }
 
     /// The variant artifact stem for an encoded state; errors if the AOT
@@ -245,25 +259,39 @@ impl PjrtPolicy {
 
 #[cfg(feature = "pjrt")]
 impl PolicyEval for PjrtPolicy {
-    fn logits_value(&mut self, enc: &EncodedState) -> Result<(Vec<f32>, f32)> {
+    fn logits_value_into(&mut self, enc: &EncodedState, logits: &mut Vec<f32>) -> Result<f32> {
         let stem = self.stem_for(enc)?;
         let n = enc.variant.n as i64;
         let j = enc.variant.j as i64;
         let f = crate::policy::F as i64;
+        // The AOT artifact is compiled for dense inputs; materialize the
+        // dense adjacency/jobmat from the CSR encoding into reused
+        // staging buffers (no per-decision N²/J·N allocation).
+        self.dense_adj.clear();
+        self.dense_adj.resize(enc.variant.n * enc.variant.n, 0.0);
+        enc.write_dense_adj(&mut self.dense_adj);
+        self.dense_jobmat.clear();
+        self.dense_jobmat.resize(enc.variant.j * enc.variant.n, 0.0);
+        enc.write_dense_jobmat(&mut self.dense_jobmat);
         let inputs = [
             Runtime::lit_f32(&self.params, &[self.params.len() as i64])?,
             Runtime::lit_f32(&enc.x, &[n, f])?,
-            Runtime::lit_f32(&enc.adj, &[n, n])?,
-            Runtime::lit_f32(&enc.jobmat, &[j, n])?,
+            Runtime::lit_f32(&self.dense_adj, &[n, n])?,
+            Runtime::lit_f32(&self.dense_jobmat, &[j, n])?,
             Runtime::lit_f32(&enc.node_mask, &[n])?,
         ];
         let out = self.runtime.execute(&stem, &inputs)?;
         if out.len() != 2 {
             bail!("policy artifact returned {} outputs, expected 2", out.len());
         }
-        let logits = Runtime::read_f32(&out[0])?;
+        // Copy into the caller's buffer so its capacity survives across
+        // decisions (read_f32's own allocation is transient until the
+        // runtime grows a read-into API).
+        let l = Runtime::read_f32(&out[0])?;
+        logits.clear();
+        logits.extend_from_slice(&l);
         let value = Runtime::read_f32(&out[1])?;
-        Ok((logits, value.first().copied().unwrap_or(0.0)))
+        Ok(value.first().copied().unwrap_or(0.0))
     }
 
     fn backend_name(&self) -> &'static str {

@@ -11,9 +11,8 @@
 
 use super::{DeftAllocator, TaskSelector, TwoPhase};
 use crate::dag::TaskRef;
-use crate::policy::encode::encode;
 use crate::policy::features::FeatureMode;
-use crate::policy::{EncodedState, PolicyEval, PolicyNet};
+use crate::policy::{EncodedState, EncoderCache, PolicyEval, PolicyNet};
 use crate::sim::SimState;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -40,7 +39,11 @@ pub enum SelectMode {
     Sample { temperature: f64, rng: Rng },
 }
 
-/// Phase-1 selector driven by the policy network.
+/// Phase-1 selector driven by the policy network. Encoding rides the
+/// incremental [`EncoderCache`] — per decision the cache patches the
+/// previous encoding from the sim's dirty-tracking log instead of
+/// re-featurizing the whole state (bitwise-identical by the cache's
+/// contract, so cached and fresh selectors take identical decisions).
 pub struct PolicySelector {
     pub net: PolicyNet,
     pub feature_mode: FeatureMode,
@@ -48,6 +51,7 @@ pub struct PolicySelector {
     /// When true, record transitions for the trainer.
     pub record: bool,
     pub transitions: Vec<Transition>,
+    cache: EncoderCache,
     label: String,
 }
 
@@ -64,6 +68,7 @@ impl PolicySelector {
             mode,
             record: false,
             transitions: Vec::new(),
+            cache: EncoderCache::new(feature_mode),
             label: label.to_string(),
         }
     }
@@ -81,13 +86,14 @@ impl TaskSelector for PolicySelector {
 
     fn reset(&mut self) {
         self.transitions.clear();
+        self.cache.reset();
     }
 
     fn select(&mut self, state: &SimState) -> Result<Option<TaskRef>> {
         if state.executable().is_empty() {
             return Ok(None);
         }
-        let enc = encode(state, self.feature_mode);
+        let enc = self.cache.refresh(state);
         if enc.n_executable() == 0 {
             // All executable tasks were truncated out of the encoding —
             // fall back to the highest-rank_up executable task so the
@@ -107,7 +113,7 @@ impl TaskSelector for PolicySelector {
             SelectMode::Greedy => {
                 let slot = self
                     .net
-                    .argmax(&enc)?
+                    .argmax(enc)?
                     .ok_or_else(|| anyhow!("argmax over empty executable mask"))?;
                 (slot, 0.0)
             }
@@ -115,7 +121,7 @@ impl TaskSelector for PolicySelector {
                 let temp = *temperature;
                 let (slot, value) = self
                     .net
-                    .sample(&enc, rng, temp)?
+                    .sample(enc, rng, temp)?
                     .ok_or_else(|| anyhow!("sample over empty executable mask"))?;
                 (slot, value)
             }
@@ -125,8 +131,10 @@ impl TaskSelector for PolicySelector {
             .ok_or_else(|| anyhow!("selected padding slot {slot}"))?;
         debug_assert!(state.is_executable(task));
         if self.record {
+            // The CSR encoding is compact (one u32 per edge/slot instead
+            // of dense N²+J·N f32), so cloning it per transition is cheap.
             self.transitions.push(Transition {
-                enc,
+                enc: enc.clone(),
                 action_slot: slot,
                 value,
                 horizon_before: state.horizon,

@@ -25,5 +25,5 @@ pub mod timeline;
 pub use crate::config::SchedMode;
 pub use engine::Simulator;
 pub use frontier::Frontier;
-pub use state::{Allocation, Placement, SimState};
+pub use state::{Allocation, EncEvent, Placement, SimState, ENC_LOG_COMPACT_THRESHOLD};
 pub use timeline::Timeline;

@@ -44,6 +44,27 @@ impl Allocation {
     }
 }
 
+/// One encoder-visible state mutation, appended to the state's event
+/// log ([`SimState::enc_events_since`]) in order. These are the
+/// dirty-tracking hooks incremental consumers
+/// (e.g. [`crate::policy::EncoderCache`]) replay instead of re-deriving
+/// the whole encoding: an assignment removes exactly one slot and moves
+/// one job's counters, a booking schedules a future parent-finished flip,
+/// an arrival adds a job's tasks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EncEvent {
+    /// `task`'s primary copy was scheduled: it leaves the encoding, its
+    /// children's `executable` feature may flip, and its job's
+    /// `left_tasks`/`left_work` counters moved.
+    Assigned { task: TaskRef },
+    /// A copy of `task` (primary or DEFT duplicate) was booked finishing
+    /// at `finish`: children's finished-parent fraction flips once the
+    /// wall clock passes `finish`.
+    Booked { task: TaskRef, finish: f64 },
+    /// A job arrived: its unassigned tasks enter the encoding.
+    Arrived { job: usize },
+}
+
 /// Everything a scheduler may observe, plus assignment bookkeeping.
 #[derive(Debug, Clone)]
 pub struct SimState {
@@ -87,7 +108,21 @@ pub struct SimState {
     /// construction; `Cluster::v_avg` is an O(M) scan).
     v_avg: f64,
     c_avg: f64,
+    /// Log of encoder-visible mutations (see [`EncEvent`]). Consumers
+    /// keep an *absolute* cursor; the buffer auto-compacts beyond
+    /// [`ENC_LOG_COMPACT_THRESHOLD`] so a months-long service state stays
+    /// bounded — a consumer whose cursor predates the compacted range
+    /// gets `None` from [`SimState::enc_events_since`] and rebuilds.
+    enc_log: Vec<EncEvent>,
+    /// Absolute position of `enc_log[0]` (grows on compaction).
+    enc_log_start: u64,
 }
+
+/// Keep at most this many encoder events buffered; beyond it the oldest
+/// half is dropped. Large enough that a per-decision consumer (cursor at
+/// the tail) never rebuilds because of compaction, small enough to bound
+/// long-running service states.
+pub const ENC_LOG_COMPACT_THRESHOLD: usize = 4096;
 
 impl SimState {
     pub fn new(cluster: Cluster, workload: Workload) -> SimState {
@@ -126,9 +161,50 @@ impl SimState {
             left_work: jobs.iter().map(|j| j.total_work()).collect(),
             v_avg,
             c_avg,
+            enc_log: Vec::new(),
+            enc_log_start: 0,
             cluster,
             jobs,
         }
+    }
+
+    /// Absolute end position of the encoder-event log (the cursor a
+    /// fully caught-up consumer holds).
+    pub fn enc_log_end(&self) -> u64 {
+        self.enc_log_start + self.enc_log.len() as u64
+    }
+
+    /// The encoder-visible mutations at absolute positions
+    /// `[cursor, enc_log_end())` — the dirty-tracking hook driving
+    /// [`crate::policy::EncoderCache`]. Returns `None` when `cursor`
+    /// predates the compacted range (or belongs to a different state):
+    /// the consumer must rebuild from the live state instead of
+    /// replaying.
+    pub fn enc_events_since(&self, cursor: u64) -> Option<&[EncEvent]> {
+        if cursor < self.enc_log_start {
+            return None;
+        }
+        let rel = (cursor - self.enc_log_start) as usize;
+        if rel > self.enc_log.len() {
+            return None;
+        }
+        Some(&self.enc_log[rel..])
+    }
+
+    /// Drop the oldest half of the encoder-event buffer. Called
+    /// automatically past [`ENC_LOG_COMPACT_THRESHOLD`]; exposed for
+    /// long-running services that want tighter bounds.
+    pub fn compact_enc_log(&mut self) {
+        let drop = self.enc_log.len() / 2;
+        self.enc_log.drain(..drop);
+        self.enc_log_start += drop as u64;
+    }
+
+    fn push_enc_event(&mut self, ev: EncEvent) {
+        if self.enc_log.len() >= ENC_LOG_COMPACT_THRESHOLD {
+            self.compact_enc_log();
+        }
+        self.enc_log.push(ev);
     }
 
     pub fn n_tasks_total(&self) -> usize {
@@ -187,6 +263,7 @@ impl SimState {
         }
         self.arrived[job] = true;
         self.frontier.activate_job(job);
+        self.push_enc_event(EncEvent::Arrived { job });
     }
 
     /// The executable set `A_t` (paper notation): arrived, unassigned,
@@ -368,6 +445,7 @@ impl SimState {
         if duplicate {
             self.n_duplicates += 1;
         }
+        self.push_enc_event(EncEvent::Booked { task: t, finish });
     }
 
     /// Apply an allocation decision for `task`. Returns the task's finish
@@ -409,6 +487,7 @@ impl SimState {
         self.left_tasks[task.job] -= 1;
         self.left_work[task.job] -= self.task_compute(task);
         self.frontier.assign(&self.jobs[task.job], task);
+        self.push_enc_event(EncEvent::Assigned { task });
         finish
     }
 
@@ -633,6 +712,20 @@ mod tests {
         // Even though wall=0, start must respect arrival.
         let f = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
         assert!((f - 51.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enc_log_compacts_and_reports_absolute_positions() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        let end = st.enc_log_end();
+        assert!(end >= 3); // arrival + booked + assigned
+        assert_eq!(st.enc_events_since(end).unwrap().len(), 0);
+        assert!(st.enc_events_since(end + 1).is_none(), "future cursor");
+        st.compact_enc_log();
+        assert!(st.enc_events_since(0).is_none(), "compacted range gone");
+        assert_eq!(st.enc_log_end(), end, "absolute positions stable");
+        assert!(st.enc_events_since(end).unwrap().is_empty());
     }
 
     #[test]

@@ -345,3 +345,181 @@ fn prop_encoding_masks_consistent() {
         }
     }
 }
+
+/// The CSR-sparse forward pass must agree with the dense-from-scratch
+/// oracle (the computation the PJRT artifact performs) on random
+/// workloads, feature modes and shape variants, at every point of a
+/// partial schedule.
+#[test]
+fn prop_sparse_forward_matches_dense_oracle() {
+    use lachesis::policy::encode::encode;
+    use lachesis::policy::features::FeatureMode;
+    for case in 0..CASES {
+        let mut rng = Rng::new(6100 + case);
+        let n_jobs = 1 + (case as usize % 12); // spans the N=64 and N=256 variants
+        let w = random_workload(&mut rng, n_jobs, false);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+        }
+        let mut net = RustPolicy::random(6100 + case);
+        for _ in 0..5 {
+            for mode in [FeatureMode::Full, FeatureMode::HomogeneousBlind] {
+                let enc = encode(&st, mode);
+                let (ls, vs) = net.forward(&enc);
+                let (ld, vd) = net.forward_dense(&enc);
+                assert!(
+                    (vs - vd).abs() <= 1e-5,
+                    "case {case}: value sparse {vs} vs dense {vd}"
+                );
+                for i in 0..enc.n_used() {
+                    assert!(
+                        (ls[i] - ld[i]).abs() <= 1e-5,
+                        "case {case} slot {i}: sparse {} vs dense {}",
+                        ls[i],
+                        ld[i]
+                    );
+                }
+            }
+            if st.executable().is_empty() {
+                break;
+            }
+            let t = st.executable()[rng.below(st.executable().len())];
+            let exec = rng.below(st.cluster.len());
+            st.apply(t, Allocation::Direct { exec });
+        }
+    }
+}
+
+/// After an arbitrary replayable event sequence — assignments (direct and
+/// duplicating), monotone wall advances across copy-finish boundaries,
+/// staggered arrivals — the incremental `EncoderCache` must return an
+/// encoding bitwise identical to a from-scratch `encode()`.
+#[test]
+fn prop_encoder_cache_matches_fresh_encode() {
+    use lachesis::policy::encode::encode;
+    use lachesis::policy::features::FeatureMode;
+    use lachesis::policy::EncoderCache;
+    for case in 0..CASES {
+        let mut rng = Rng::new(6200 + case);
+        let n_jobs = 1 + (case as usize % 10); // > 8 jobs forces the N=256 variant
+        let continuous = case % 2 == 0;
+        let w = random_workload(&mut rng, n_jobs, continuous);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            if st.jobs[j].arrival <= st.wall {
+                st.mark_arrived(j);
+            }
+        }
+        let mut cache = EncoderCache::new(FeatureMode::Full);
+        let mut guard = 0;
+        loop {
+            let fresh = encode(&st, FeatureMode::Full);
+            let cached = cache.refresh(&st);
+            assert_eq!(cached, &fresh, "case {case} step {guard}");
+            if st.all_assigned() {
+                break;
+            }
+            if st.executable().is_empty() {
+                // Advance the wall to the next arrival (engine-style).
+                let next = (0..st.jobs.len())
+                    .filter(|&j| !st.arrived[j])
+                    .map(|j| st.jobs[j].arrival)
+                    .fold(f64::INFINITY, f64::min);
+                assert!(next.is_finite(), "case {case}: no runnable work left");
+                st.wall = st.wall.max(next);
+                for j in 0..st.jobs.len() {
+                    if !st.arrived[j] && st.jobs[j].arrival <= st.wall {
+                        st.mark_arrived(j);
+                    }
+                }
+                continue;
+            }
+            let t = st.executable()[rng.below(st.executable().len())];
+            let exec = rng.below(st.cluster.len());
+            let parents = &st.jobs[t.job].parents[t.node];
+            let finish = if !parents.is_empty() && rng.chance(0.3) {
+                let parent = parents[rng.below(parents.len())].other;
+                st.apply(t, Allocation::Duplicate { exec, parent })
+            } else {
+                st.apply(t, Allocation::Direct { exec })
+            };
+            if rng.chance(0.5) {
+                // Monotone wall advance: sometimes exactly onto a finish
+                // boundary, sometimes past it by a random amount.
+                let bump = if rng.chance(0.5) {
+                    finish
+                } else {
+                    st.wall + rng.range_f(0.0, 10.0)
+                };
+                if bump > st.wall {
+                    st.wall = bump;
+                }
+                for j in 0..st.jobs.len() {
+                    if !st.arrived[j] && st.jobs[j].arrival <= st.wall {
+                        st.mark_arrived(j);
+                    }
+                }
+            }
+            if rng.chance(0.1) {
+                // Compaction may drop events the cache has not replayed
+                // yet — it must detect the gap and rebuild, still bitwise.
+                st.compact_enc_log();
+            }
+            guard += 1;
+            assert!(guard < 10_000, "case {case}: runaway episode");
+        }
+    }
+}
+
+/// The CSR representation must round-trip to the dense adjacency and job
+/// membership matrices exactly (independently reconstructed from the DAG
+/// and the slot mapping).
+#[test]
+fn prop_csr_roundtrips_dense() {
+    use lachesis::policy::encode::encode;
+    use lachesis::policy::features::FeatureMode;
+    for case in 0..CASES {
+        let mut rng = Rng::new(6300 + case);
+        let n_jobs = 1 + (case as usize % 10);
+        let w = random_workload(&mut rng, n_jobs, false);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+        }
+        for _ in 0..4 {
+            let enc = encode(&st, FeatureMode::Full);
+            let n = enc.variant.n;
+            // Dense adjacency reconstructed from the DAG + slot mapping.
+            let mut want_adj = vec![0.0f32; n * n];
+            for i in 0..enc.n_used() {
+                let t = enc.slot_task(i).unwrap();
+                for e in &st.jobs[t.job].children[t.node] {
+                    if let Some(ci) = enc.task_slot(TaskRef::new(t.job, e.other)) {
+                        want_adj[i * n + ci] = 1.0;
+                    }
+                }
+            }
+            assert_eq!(enc.dense_adj(), want_adj, "case {case}: adjacency");
+            // Dense job membership: job slots in order of first appearance.
+            let mut want_job = vec![0.0f32; enc.variant.j * n];
+            let mut job_slot: std::collections::BTreeMap<usize, usize> = Default::default();
+            for i in 0..enc.n_used() {
+                let t = enc.slot_task(i).unwrap();
+                let next = job_slot.len();
+                let js = *job_slot.entry(t.job).or_insert(next);
+                want_job[js * n + i] = 1.0;
+            }
+            assert_eq!(enc.dense_jobmat(), want_job, "case {case}: jobmat");
+            if st.executable().is_empty() {
+                break;
+            }
+            let t = st.executable()[rng.below(st.executable().len())];
+            let exec = rng.below(st.cluster.len());
+            st.apply(t, Allocation::Direct { exec });
+        }
+    }
+}
