@@ -2,20 +2,21 @@
 //! scale): all batch baselines vs Lachesis over several seeds, printing
 //! the same four panels (makespan / speedup / SLR / decision time).
 //!
-//!     cargo run --release --example compare_baselines [-- --seeds 5]
+//!     cargo run --release --example compare_baselines [-- --seeds 5 --threads auto]
 
 use lachesis::exp::{self, PolicySource};
 
 fn main() -> anyhow::Result<()> {
     let args = lachesis::util::cli::Args::from_env()?;
     let seeds = args.usize_opt("seeds", 3)?;
+    let threads = args.threads_opt(1)?;
     let quick = !args.flag("full");
     let src = PolicySource {
         // Uses checkpoints/lachesis.bin if present, else the AOT init,
         // else random weights; PJRT backend if artifacts exist.
         ..Default::default()
     };
-    let out = exp::fig6(&src, quick, seeds)?;
+    let out = exp::fig6(&src, quick, seeds, threads)?;
     println!("{out}");
     println!("CSV written to results/fig6.csv");
     Ok(())

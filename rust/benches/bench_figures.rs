@@ -1,6 +1,7 @@
 //! Figure-regeneration benchmark: runs the quick variants of every figure
 //! sweep end-to-end (the same code path as `lachesis repro ...`) and
-//! reports their wall time. Keeping the full experiment harness inside
+//! reports their wall time, sequentially and with the sweep cells fanned
+//! out over worker threads. Keeping the full experiment harness inside
 //! `cargo bench` guarantees the reproduction pipeline never bit-rots.
 
 use lachesis::bench_util::Bench;
@@ -15,13 +16,21 @@ fn main() {
         ..Default::default()
     };
     b.case("fig5_quick_sweep", || {
-        exp::fig5(&src, true, 1).unwrap();
+        exp::fig5(&src, true, 1, 1).unwrap();
     });
     b.case("fig6_quick_sweep", || {
-        exp::fig6(&src, true, 1).unwrap();
+        exp::fig6(&src, true, 1, 1).unwrap();
     });
     b.case("fig7_quick_sweep", || {
-        exp::fig7(&src, true, 1).unwrap();
+        exp::fig7(&src, true, 1, 1).unwrap();
+    });
+    // The same fig6 sweep with parallel cells — the speedup over
+    // fig6_quick_sweep is the scaling headroom of the harness.
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(1);
+    b.case("fig6_quick_sweep_par", || {
+        exp::fig6(&src, true, 1, threads).unwrap();
     });
     b.finish("bench_figures");
 }

@@ -9,7 +9,7 @@
 
 use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, ExperimentConfig, TrainConfig, WorkloadConfig};
-use crate::metrics::SuiteReport;
+use crate::metrics::{ScheduleReport, SuiteReport};
 use crate::policy::features::FeatureMode;
 use crate::policy::{params, PolicyEval, RustPolicy};
 #[cfg(feature = "pjrt")]
@@ -114,27 +114,157 @@ pub fn build_scheduler(name: &str, src: &PolicySource, seed: u64) -> Result<Box<
     })
 }
 
-/// Run one figure sweep: job_counts × seeds × algorithms.
-pub fn sweep(cfg: &ExperimentConfig, algos: &[&str], src: &PolicySource) -> Result<SuiteReport> {
-    let mut suite = SuiteReport::new();
-    for &x in &cfg.job_counts {
-        for &seed in &cfg.seeds {
-            let mut wcfg = cfg.workload_base.clone();
-            wcfg.n_jobs = x;
-            let workload = WorkloadGenerator::new(wcfg, seed).generate();
-            for &algo in algos {
-                let cluster = Cluster::heterogeneous(&cfg.cluster, seed);
-                let mut sched = build_scheduler(algo, src, seed)?;
-                let mut sim = Simulator::new(cluster, workload.clone());
-                let report = sim
-                    .run(sched.as_mut())
-                    .with_context(|| format!("{algo} on {x} jobs, seed {seed}"))?;
-                suite.push(x, report);
-            }
-            crate::log_debug!("x={x} seed={seed} done");
-        }
-        crate::log_info!("sweep point x={x} complete");
+/// One (job_count, seed, algo) cell of a sweep — the unit of
+/// parallelism. Every cell owns its cluster, scheduler and simulator
+/// and clones its workload, so cells are embarrassingly parallel; only
+/// report collection is shared.
+struct SweepCell<'a> {
+    x: usize,
+    seed: u64,
+    algo: &'a str,
+    /// Index into the per-(x, seed) shared workload table (workloads are
+    /// generated once per (x, seed), not once per algorithm).
+    workload: usize,
+}
+
+/// Run one sweep cell in isolation. Fully deterministic in (x, seed,
+/// algo): the workload and cluster derive from the seed alone, so a
+/// cell computes the same schedule no matter which worker runs it.
+fn run_cell(
+    cfg: &ExperimentConfig,
+    x: usize,
+    seed: u64,
+    algo: &str,
+    workload: &crate::workload::Workload,
+    src: &PolicySource,
+) -> Result<(usize, ScheduleReport)> {
+    let cluster = Cluster::heterogeneous(&cfg.cluster, seed);
+    let mut sched = build_scheduler(algo, src, seed)?;
+    let mut sim = Simulator::new(cluster, workload.clone());
+    let report = sim
+        .run(sched.as_mut())
+        .with_context(|| format!("{algo} on {x} jobs, seed {seed}"))?;
+    crate::log_debug!("cell {algo} x={x} seed={seed} done");
+    Ok((x, report))
+}
+
+/// Run `f` over `items` with `threads` workers, collecting results in
+/// input order (pre-indexed slots, so output order never depends on
+/// worker interleaving). Fails fast: the first error stops workers from
+/// starting further items (in-flight ones finish) and is returned.
+fn par_indexed<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> Result<R> + Sync,
+) -> Result<Vec<R>> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
     }
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let slots: Vec<Mutex<Option<Result<R>>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                if r.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().expect("parallel slot lock poisoned") = Some(r);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(items.len());
+    let mut first_err = None;
+    let mut missing = 0usize;
+    for m in slots {
+        match m.into_inner().expect("parallel slot lock poisoned") {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            None => missing += 1,
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if missing > 0 {
+        bail!("parallel run aborted: {missing} items never ran");
+    }
+    Ok(out)
+}
+
+/// Run one figure sweep: job_counts × seeds × algorithms, sequentially.
+pub fn sweep(cfg: &ExperimentConfig, algos: &[&str], src: &PolicySource) -> Result<SuiteReport> {
+    sweep_threaded(cfg, algos, src, 1)
+}
+
+/// Run one figure sweep with `threads` workers fanning out over the
+/// (job_count, seed, algo) cells. Results are collected into
+/// pre-indexed slots, so the returned `SuiteReport` has exactly the
+/// sequential insertion order regardless of worker interleaving — every
+/// schedule-derived metric (and the CSV/table rendering) is identical to
+/// the `threads == 1` run. Only the measured decision *latencies*
+/// differ, since those are wall-clock timings.
+pub fn sweep_threaded(
+    cfg: &ExperimentConfig,
+    algos: &[&str],
+    src: &PolicySource,
+    threads: usize,
+) -> Result<SuiteReport> {
+    let threads = threads.max(1);
+    let n_cells = cfg.job_counts.len() * cfg.seeds.len() * algos.len();
+    let mut suite = SuiteReport::new();
+    if threads <= 1 || n_cells <= 1 {
+        // Sequential: one live workload at a time (generated per
+        // (x, seed), shared across algos), failing at the first error.
+        for &x in &cfg.job_counts {
+            for &seed in &cfg.seeds {
+                let mut wcfg = cfg.workload_base.clone();
+                wcfg.n_jobs = x;
+                let workload = WorkloadGenerator::new(wcfg, seed).generate();
+                for &algo in algos {
+                    let (x, report) = run_cell(cfg, x, seed, algo, &workload, src)?;
+                    suite.push(x, report);
+                }
+            }
+        }
+    } else {
+        // Pregenerate the shared per-(x, seed) workload table so worker
+        // threads only clone, never regenerate.
+        let mut workloads = Vec::new();
+        let mut cells = Vec::new();
+        for &x in &cfg.job_counts {
+            for &seed in &cfg.seeds {
+                let mut wcfg = cfg.workload_base.clone();
+                wcfg.n_jobs = x;
+                workloads.push(WorkloadGenerator::new(wcfg, seed).generate());
+                let workload = workloads.len() - 1;
+                for &algo in algos {
+                    cells.push(SweepCell { x, seed, algo, workload });
+                }
+            }
+        }
+        let workloads = &workloads[..];
+        let results = par_indexed(&cells, threads, |c| {
+            run_cell(cfg, c.x, c.seed, c.algo, &workloads[c.workload], src)
+        })?;
+        for (x, report) in results {
+            suite.push(x, report);
+        }
+    }
+    crate::log_info!("sweep complete: {n_cells} cells on {threads} thread(s)");
     Ok(suite)
 }
 
@@ -157,8 +287,9 @@ pub const CONT_ALGOS: [&str; 5] = [
     "Lachesis",
 ];
 
-/// Fig 5: batch mode, small scale. `quick` shrinks the sweep for CI.
-pub fn fig5(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
+/// Fig 5: batch mode, small scale. `quick` shrinks the sweep for CI;
+/// `threads` fans the sweep cells out over that many workers.
+pub fn fig5(src: &PolicySource, quick: bool, seeds: usize, threads: usize) -> Result<String> {
     let cfg = ExperimentConfig {
         cluster: ClusterConfig::default(),
         workload_base: WorkloadConfig::small_batch(1),
@@ -169,7 +300,7 @@ pub fn fig5(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
         },
         seeds: (0..seeds as u64).map(|s| 1000 + s).collect(),
     };
-    let suite = sweep(&cfg, &BATCH_ALGOS, src)?;
+    let suite = sweep_threaded(&cfg, &BATCH_ALGOS, src, threads)?;
     let mut out = String::from("# Fig 5 — batch mode, small scale\n\n");
     out.push_str(&suite.table("makespan", "Fig 5a: average makespan (s)"));
     out.push_str(&suite.table("speedup", "Fig 5b: speedup (Eq 13)"));
@@ -183,7 +314,7 @@ pub fn fig5(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
 
 /// Fig 6: batch mode, large scale (the −26.7% makespan / +35.2% speedup
 /// headline setting).
-pub fn fig6(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
+pub fn fig6(src: &PolicySource, quick: bool, seeds: usize, threads: usize) -> Result<String> {
     let cfg = ExperimentConfig {
         cluster: ClusterConfig::default(),
         workload_base: WorkloadConfig::large_batch(1),
@@ -194,7 +325,7 @@ pub fn fig6(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
         },
         seeds: (0..seeds as u64).map(|s| 2000 + s).collect(),
     };
-    let suite = sweep(&cfg, &BATCH_ALGOS, src)?;
+    let suite = sweep_threaded(&cfg, &BATCH_ALGOS, src, threads)?;
     let mut out = String::from("# Fig 6 — batch mode, large scale\n\n");
     out.push_str(&suite.table("makespan", "Fig 6a: average makespan (s)"));
     out.push_str(&suite.table("speedup", "Fig 6b: speedup (Eq 13)"));
@@ -208,7 +339,7 @@ pub fn fig6(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
 }
 
 /// Fig 7: continuous mode (Poisson arrivals, mean 45 s).
-pub fn fig7(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
+pub fn fig7(src: &PolicySource, quick: bool, seeds: usize, threads: usize) -> Result<String> {
     let cfg = ExperimentConfig {
         cluster: ClusterConfig::default(),
         workload_base: WorkloadConfig::continuous(1),
@@ -219,7 +350,7 @@ pub fn fig7(src: &PolicySource, quick: bool, seeds: usize) -> Result<String> {
         },
         seeds: (0..seeds as u64).map(|s| 3000 + s).collect(),
     };
-    let suite = sweep(&cfg, &CONT_ALGOS, src)?;
+    let suite = sweep_threaded(&cfg, &CONT_ALGOS, src, threads)?;
     let mut out = String::from("# Fig 7 — continuous mode (Poisson, mean 45 s)\n\n");
     out.push_str(&suite.table("makespan", "Fig 7a: average makespan (s)"));
     out.push_str(&suite.table(
@@ -301,39 +432,46 @@ pub fn fig4(_cfg: &TrainConfig, _artifact_dir: &str, _out_params: &str) -> Resul
 
 /// Ablations over the design choices DESIGN.md calls out: DEFT vs EFT in
 /// phase 2, and the value of duplication across network speeds.
-pub fn ablate(src: &PolicySource, seeds: usize) -> Result<String> {
+pub fn ablate(src: &PolicySource, seeds: usize, threads: usize) -> Result<String> {
     use crate::sched::selectors::RankUpSelector;
     use crate::sched::{EftAllocator, TwoPhase};
     let mut out = String::from("# Ablations\n\n");
 
     // (a) phase-2 allocator: rank_up selector with EFT vs DEFT, across
-    // communication speeds.
+    // communication speeds. The (comm, seed) cells are embarrassingly
+    // parallel, exactly like sweep cells; results reduce in input order
+    // so the table is identical at any thread count.
     out.push_str("## DEFT vs EFT (phase-2 allocator) across network speeds\n\n");
     out.push_str("| comm MB/s | EFT makespan | DEFT makespan | DEFT dup count | gain |\n|---|---|---|---|---|\n");
-    for &comm in &[10.0, 50.0, 100.0, 500.0] {
-        let mut eft_ms = Vec::new();
-        let mut deft_ms = Vec::new();
-        let mut dups = 0usize;
-        for seed in 0..seeds as u64 {
-            let mut ccfg = ClusterConfig::default();
-            ccfg.comm_mbps = comm;
-            let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 4000 + seed)
-                .generate();
-            let r1 = Simulator::new(Cluster::heterogeneous(&ccfg, seed), w.clone())
-                .run(&mut TwoPhase::named(RankUpSelector, EftAllocator::new(), "rankup-eft"))?;
-            let r2 = Simulator::new(Cluster::heterogeneous(&ccfg, seed), w)
-                .run(&mut HighRankUpScheduler::new())?;
-            eft_ms.push(r1.makespan);
-            dups += r2.n_duplicates;
-            deft_ms.push(r2.makespan);
-        }
+    const COMMS: [f64; 4] = [10.0, 50.0, 100.0, 500.0];
+    let cells: Vec<(f64, u64)> = COMMS
+        .iter()
+        .flat_map(|&comm| (0..seeds as u64).map(move |seed| (comm, seed)))
+        .collect();
+    let results = par_indexed(&cells, threads, |&(comm, seed)| {
+        let mut ccfg = ClusterConfig::default();
+        ccfg.comm_mbps = comm;
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 4000 + seed).generate();
+        let r1 = Simulator::new(Cluster::heterogeneous(&ccfg, seed), w.clone())
+            .run(&mut TwoPhase::named(RankUpSelector, EftAllocator::new(), "rankup-eft"))?;
+        let r2 = Simulator::new(Cluster::heterogeneous(&ccfg, seed), w)
+            .run(&mut HighRankUpScheduler::new())?;
+        Ok((r1.makespan, r2.makespan, r2.n_duplicates))
+    })?;
+    for (ci, &comm) in COMMS.iter().enumerate() {
+        let cell = &results[ci * seeds..(ci + 1) * seeds];
+        let eft_ms: Vec<f64> = cell.iter().map(|r| r.0).collect();
+        let deft_ms: Vec<f64> = cell.iter().map(|r| r.1).collect();
+        let dups: usize = cell.iter().map(|r| r.2).sum();
         let (e, d) = (
             crate::util::stats::mean(&eft_ms),
             crate::util::stats::mean(&deft_ms),
         );
         out.push_str(&format!(
-            "| {comm} | {e:.1} | {d:.1} | {} | {:.1}% |\n",
-            dups / seeds.max(1),
+            "| {comm} | {e:.1} | {d:.1} | {:.1} | {:.1}% |\n",
+            // Mean duplicate count across seeds; integer division would
+            // truncate (e.g. 5 dups over 3 seeds reported as 1).
+            dups as f64 / seeds.max(1) as f64,
             100.0 * (e - d) / e
         ));
     }
@@ -346,7 +484,7 @@ pub fn ablate(src: &PolicySource, seeds: usize) -> Result<String> {
         job_counts: vec![30],
         seeds: (0..seeds as u64).map(|s| 5000 + s).collect(),
     };
-    let suite = sweep(
+    let suite = sweep_threaded(
         &cfg,
         &[
             "Random-DEFT",
@@ -357,6 +495,7 @@ pub fn ablate(src: &PolicySource, seeds: usize) -> Result<String> {
             "Lachesis",
         ],
         src,
+        threads,
     )?;
     out.push_str(&suite.table("makespan", "makespan at 30 jobs"));
     write_results("ablations.md", &out)?;
@@ -404,13 +543,27 @@ fn headline_section(suite: &SuiteReport) -> String {
                 best_base_spd = best_base_spd.max(s.speedup);
             }
         }
+        // A sweep with no baseline cells at this x would otherwise leak
+        // ±inf into the headline percentages.
+        if !best_base_ms.is_finite() || !best_base_spd.is_finite() {
+            continue;
+        }
         best_red = best_red.max(100.0 * (best_base_ms - lach.makespan) / best_base_ms);
         best_spd = best_spd.max(100.0 * (lach.speedup - best_base_spd) / best_base_spd);
     }
+    let pct = |v: f64| {
+        if v.is_finite() {
+            format!("{v:.1}%")
+        } else {
+            "n/a (no baseline cells)".to_string()
+        }
+    };
     format!(
         "### Headline (paper: ≤26.7% makespan reduction, ≤35.2% speedup gain)\n\n\
-         max makespan reduction vs best baseline: {best_red:.1}%\n\
-         max speedup improvement vs best baseline: {best_spd:.1}%\n\n"
+         max makespan reduction vs best baseline: {}\n\
+         max speedup improvement vs best baseline: {}\n\n",
+        pct(best_red),
+        pct(best_spd)
     )
 }
 
@@ -463,5 +616,89 @@ mod tests {
                 assert!(s.makespan > 0.0);
             }
         }
+    }
+
+    /// Strip the trailing decision-latency column: it is wall-clock
+    /// measured, so it is the one CSV field that legitimately differs
+    /// between otherwise identical runs.
+    fn csv_without_timing(csv: &str) -> String {
+        csv.lines()
+            .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or(l))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    #[test]
+    fn threaded_sweep_matches_sequential_bitwise() {
+        let src = PolicySource {
+            backend: "rust".into(),
+            ..Default::default()
+        };
+        let cfg = ExperimentConfig {
+            cluster: ClusterConfig::with_executors(6),
+            workload_base: WorkloadConfig::small_batch(1),
+            job_counts: vec![2, 3],
+            seeds: vec![1, 2, 3],
+        };
+        let algos = ["FIFO-DEFT", "HEFT", "HighRankUp-DEFT"];
+        let seq = sweep_threaded(&cfg, &algos, &src, 1).unwrap();
+        let par = sweep_threaded(&cfg, &algos, &src, 4).unwrap();
+        assert_eq!(seq.algos(), par.algos(), "insertion order must match");
+        for algo in algos {
+            for x in [2, 3] {
+                let a = seq.summarize(algo, x).unwrap();
+                let b = par.summarize(algo, x).unwrap();
+                assert_eq!(a.n_seeds, b.n_seeds);
+                assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{algo} x={x}");
+                assert_eq!(a.speedup.to_bits(), b.speedup.to_bits(), "{algo} x={x}");
+                assert_eq!(a.slr.to_bits(), b.slr.to_bits(), "{algo} x={x}");
+                assert_eq!(a.jct.to_bits(), b.jct.to_bits(), "{algo} x={x}");
+            }
+        }
+        assert_eq!(
+            csv_without_timing(&seq.to_csv()),
+            csv_without_timing(&par.to_csv()),
+            "CSV must be byte-identical modulo the wall-clock timing column"
+        );
+    }
+
+    #[test]
+    fn threaded_sweep_surfaces_cell_errors() {
+        let src = PolicySource {
+            backend: "rust".into(),
+            ..Default::default()
+        };
+        let cfg = ExperimentConfig {
+            cluster: ClusterConfig::with_executors(4),
+            workload_base: WorkloadConfig::small_batch(1),
+            job_counts: vec![2],
+            seeds: vec![1, 2],
+        };
+        assert!(sweep_threaded(&cfg, &["no-such-algo"], &src, 3).is_err());
+    }
+
+    #[test]
+    fn headline_without_baselines_reports_na() {
+        // A suite holding only Lachesis cells has no baseline to compare
+        // against; the headline must say so instead of printing -inf%.
+        let mut suite = SuiteReport::new();
+        suite.push(
+            20,
+            ScheduleReport {
+                algo: "Lachesis".into(),
+                n_jobs: 20,
+                n_tasks: 100,
+                makespan: 50.0,
+                speedup: 2.0,
+                avg_slr: 1.5,
+                avg_jct: 40.0,
+                n_duplicates: 0,
+                utilization: 0.5,
+                decision_ms: crate::util::stats::Recorder::new(),
+            },
+        );
+        let out = headline_section(&suite);
+        assert!(out.contains("n/a"), "{out}");
+        assert!(!out.contains("inf"), "{out}");
     }
 }

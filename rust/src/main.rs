@@ -20,8 +20,9 @@ USAGE:
   lachesis train     [--episodes N] [--agents A] [--seed S] [--decima]
                      [--artifacts DIR] [--out checkpoints/lachesis.bin]
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
-  lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K] [--backend pjrt|rust]
-  lachesis ablate    [--seeds K]
+  lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K]
+                     [--threads N|auto] [--backend pjrt|rust]
+  lachesis ablate    [--seeds K] [--threads N|auto]
   lachesis info      [--artifacts DIR]
 
 Algorithms: FIFO-DEFT SJF-DEFT HRRN-DEFT HighRankUp-DEFT HEFT CPOP DLS TDCA
@@ -54,7 +55,8 @@ fn run() -> Result<()> {
         Some("repro") => cmd_repro(&args),
         Some("ablate") => {
             let seeds = args.usize_opt("seeds", 3)?;
-            let out = exp::ablate(&policy_source(&args), seeds)?;
+            let threads = args.threads_opt(1)?;
+            let out = exp::ablate(&policy_source(&args), seeds, threads)?;
             println!("{out}");
             Ok(())
         }
@@ -262,6 +264,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         .unwrap_or("all");
     let quick = args.flag("quick");
     let seeds = args.usize_opt("seeds", if quick { 2 } else { 10 })?;
+    let threads = args.threads_opt(1)?;
     let src = policy_source(args);
     match which {
         "fig4" => {
@@ -270,13 +273,13 @@ fn cmd_repro(args: &Args) -> Result<()> {
             let out = exp::fig4(&cfg, &src.artifact_dir, "checkpoints/lachesis.bin")?;
             println!("{out}");
         }
-        "fig5" => println!("{}", exp::fig5(&src, quick, seeds)?),
-        "fig6" => println!("{}", exp::fig6(&src, quick, seeds)?),
-        "fig7" => println!("{}", exp::fig7(&src, quick, seeds)?),
+        "fig5" => println!("{}", exp::fig5(&src, quick, seeds, threads)?),
+        "fig6" => println!("{}", exp::fig6(&src, quick, seeds, threads)?),
+        "fig7" => println!("{}", exp::fig7(&src, quick, seeds, threads)?),
         "all" => {
-            println!("{}", exp::fig5(&src, quick, seeds)?);
-            println!("{}", exp::fig6(&src, quick, seeds)?);
-            println!("{}", exp::fig7(&src, quick, seeds)?);
+            println!("{}", exp::fig5(&src, quick, seeds, threads)?);
+            println!("{}", exp::fig6(&src, quick, seeds, threads)?);
+            println!("{}", exp::fig7(&src, quick, seeds, threads)?);
         }
         other => bail!("unknown figure '{other}' (fig4|fig5|fig6|fig7|all)"),
     }

@@ -1,13 +1,22 @@
 //! Plug-and-play scheduling service (paper §5.1, Fig 3).
 //!
-//! The data-processing platform's resource manager connects over TCP and
-//! speaks a JSON-line protocol: it submits jobs, reports task completions
-//! via heartbeats, and asks the Lachesis agent for the next assignments.
-//! The agent holds the same [`SimState`] the simulator uses, so the
-//! decision logic is byte-for-byte the scheduler zoo of [`crate::sched`].
+//! Data-processing platform masters connect over TCP and speak a
+//! JSON-line protocol: they submit jobs, report task completions via
+//! heartbeats, and ask the Lachesis agent for the next assignments. The
+//! agent holds the same [`SimState`] the simulator uses, so the decision
+//! logic is byte-for-byte the scheduler zoo of [`crate::sched`].
+//!
+//! Many masters can be connected at once: [`AgentServer`] runs one
+//! thread per connection over a shared, mutex-guarded [`AgentCore`], so
+//! requests are serialized and decisions stay deterministic. Jobs
+//! submitted with a future `arrival` are deferred in a min-heap and
+//! activate only when the wall clock reaches them — matching the
+//! simulator's event-driven arrival semantics.
+//!
+//! [`SimState`]: crate::sim::SimState
 
 pub mod protocol;
 pub mod server;
 
-pub use protocol::{Request, Response};
-pub use server::{AgentServer, ServiceClient};
+pub use protocol::{Assignment, Request, Response};
+pub use server::{AgentCore, AgentServer, ServiceClient};

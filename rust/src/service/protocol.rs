@@ -3,12 +3,19 @@
 //!
 //! One JSON object per line. Requests:
 //!
-//! * `{"type":"submit_job", "job": {name, arrival, computes, edges}}`
+//! * `{"type":"submit_job", "job": {name, arrival, computes, edges}}` — a
+//!   job whose `arrival` lies in the future is queued, not activated: it
+//!   becomes schedulable only once a `schedule`/`task_complete` advances
+//!   the agent's wall clock past its arrival (the simulator's
+//!   event-driven semantics).
 //! * `{"type":"task_complete", "job": j, "node": n, "time": t}`  (heartbeat)
 //! * `{"type":"schedule", "time": t}` — ask for assignments at wall time t
 //! * `{"type":"status"}` / `{"type":"shutdown"}`
 //!
-//! Responses mirror them with `"ok"` / `"assignments"` / `"status"`.
+//! Responses mirror them with `"ok"` / `"assignments"` / `"status"`. The
+//! status response reports `"pending"`: the number of submitted jobs
+//! still waiting for their arrival time. `shutdown` stops the whole
+//! server — every master connection, not just the requesting one.
 
 use crate::dag::Job;
 use crate::sim::Allocation;
@@ -62,6 +69,8 @@ pub enum Response {
         horizon: f64,
         /// Size of the executable frontier (tasks ready to be scheduled).
         executable: usize,
+        /// Jobs submitted with a future arrival, not yet activated.
+        pending: usize,
     },
     Error(String),
 }
@@ -204,6 +213,7 @@ impl Response {
                 executors,
                 horizon,
                 executable,
+                pending,
             } => Json::from_pairs(vec![
                 ("type", Json::from("status")),
                 ("jobs", Json::from(*jobs)),
@@ -211,6 +221,7 @@ impl Response {
                 ("executors", Json::from(*executors)),
                 ("horizon", Json::from(*horizon)),
                 ("executable", Json::from(*executable)),
+                ("pending", Json::from(*pending)),
             ]),
             Response::Error(msg) => Json::from_pairs(vec![
                 ("type", Json::from("error")),
@@ -251,6 +262,8 @@ impl Response {
                 horizon: v.req_f64("horizon").map_err(|e| anyhow!("{e}"))?,
                 // Absent in pre-frontier peers: default 0 for compatibility.
                 executable: v.get("executable").and_then(Json::as_usize).unwrap_or(0),
+                // Absent in pre-deferred-arrival peers: default 0.
+                pending: v.get("pending").and_then(Json::as_usize).unwrap_or(0),
             }),
             "error" => Ok(Response::Error(
                 v.req_str("message").map_err(|e| anyhow!("{e}"))?.to_string(),
@@ -335,6 +348,7 @@ mod tests {
                 executors: 8,
                 horizon: 42.0,
                 executable: 3,
+                pending: 1,
             },
             Response::Error("boom".into()),
         ];

@@ -1,7 +1,20 @@
 //! The Lachesis agent as a network service, plus the resource-manager
 //! client used by examples and tests. std::net + threads (the offline
-//! registry has no tokio; the protocol is line-oriented and the master
-//! node is a single long-lived peer, so blocking I/O is the right tool).
+//! registry has no tokio; the protocol is line-oriented and blocking I/O
+//! per connection is the right tool).
+//!
+//! Concurrency model: every accepted master connection gets its own
+//! thread, and all of them share one [`AgentCore`] — the live `SimState`
+//! plus the scheduler — behind a mutex. Requests are therefore processed
+//! one at a time in arrival order at the lock, so decisions are exactly
+//! as deterministic as a single-connection session interleaved the same
+//! way; concurrency buys connection-level parallelism (parsing, I/O,
+//! slow peers) without ever racing the scheduler.
+//!
+//! Arrival semantics match the simulator's event loop (Algorithm 3): a
+//! `submit_job` whose `arrival` lies in the future is *queued*, not
+//! activated — it becomes schedulable only once a `schedule` or
+//! `task_complete` advances the agent's wall clock past its arrival time.
 
 use super::protocol::{assignment_from, Request, Response};
 use crate::cluster::Cluster;
@@ -9,22 +22,101 @@ use crate::sched::Scheduler;
 use crate::sim::SimState;
 use crate::util::json::Json;
 use crate::workload::Workload;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BinaryHeap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
 
-/// The scheduling agent: live state + a scheduler behind a TCP endpoint.
-pub struct AgentServer {
-    state: SimState,
-    scheduler: Box<dyn Scheduler + Send>,
+/// How often the accept loop polls the shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Read timeout per connection, so blocked readers notice shutdown.
+const READ_POLL: Duration = Duration::from_millis(25);
+/// Write timeout per connection: a peer that stops draining its socket
+/// must not pin its thread in `flush()` forever (that would block
+/// `serve()`'s scope join at shutdown). Generous enough that only a
+/// genuinely stalled peer gets dropped.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Largest accepted request line. A peer streaming bytes with no
+/// newline must not grow a connection buffer without bound; generous
+/// enough for very large submitted DAGs.
+const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// A job submitted with a future arrival time, waiting for the wall
+/// clock to reach it. Min-heap by `(arrival, job)`.
+#[derive(Debug, Clone, Copy)]
+struct PendingArrival {
+    arrival: f64,
+    job: usize,
 }
 
-impl AgentServer {
-    pub fn new(cluster: Cluster, scheduler: Box<dyn Scheduler + Send>) -> AgentServer {
-        AgentServer {
+impl PartialEq for PendingArrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.arrival == other.arrival && self.job == other.job
+    }
+}
+impl Eq for PendingArrival {}
+impl PartialOrd for PendingArrival {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingArrival {
+    // Reversed: BinaryHeap is a max-heap, we pop the earliest arrival.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .arrival
+            .total_cmp(&self.arrival)
+            .then(other.job.cmp(&self.job))
+    }
+}
+
+/// The scheduling agent's shared core: live state, the scheduler, and
+/// the deferred-arrival queue. One of these sits behind the server's
+/// mutex; it is also usable directly (no networking) in tests and
+/// embedding scenarios.
+pub struct AgentCore {
+    /// Private so the pending-heap invariant (every unarrived job has
+    /// exactly one heap entry) can't be broken from outside; read via
+    /// [`AgentCore::state`].
+    state: SimState,
+    scheduler: Box<dyn Scheduler + Send>,
+    pending: BinaryHeap<PendingArrival>,
+}
+
+impl AgentCore {
+    pub fn new(cluster: Cluster, scheduler: Box<dyn Scheduler + Send>) -> AgentCore {
+        AgentCore {
             state: SimState::new(cluster, Workload::new_empty()),
             scheduler,
+            pending: BinaryHeap::new(),
         }
+    }
+
+    /// Advance the wall clock monotonically and activate every deferred
+    /// job whose arrival time has come — the service-side equivalent of
+    /// the simulator popping arrival events.
+    pub fn advance_to(&mut self, time: f64) {
+        self.state.advance_wall(time);
+        while let Some(p) = self.pending.peek() {
+            if p.arrival > self.state.wall {
+                break;
+            }
+            let p = self.pending.pop().expect("peeked entry exists");
+            self.state.mark_arrived(p.job);
+        }
+    }
+
+    /// Jobs submitted but still waiting for their arrival time.
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Read-only view of the live scheduling state.
+    pub fn state(&self) -> &SimState {
+        &self.state
     }
 
     /// Handle one request against the live state.
@@ -32,31 +124,51 @@ impl AgentServer {
         match req {
             Request::SubmitJob { .. } => match req.build_job(0) {
                 Ok(job) => {
+                    let arrival = job.arrival;
+                    if !arrival.is_finite() {
+                        return Response::Error("invalid job: non-finite arrival".to_string());
+                    }
                     let id = self.state.add_job(job);
-                    self.state.mark_arrived(id);
+                    if arrival <= self.state.wall {
+                        self.state.mark_arrived(id);
+                    } else {
+                        self.pending.push(PendingArrival { arrival, job: id });
+                    }
                     Response::Ok { job_id: Some(id) }
                 }
                 Err(e) => Response::Error(format!("invalid job: {e}")),
             },
             Request::TaskComplete { time, .. } => {
                 // Heartbeat: completions advance the agent's wall clock
-                // (placements already fix AFTs deterministically).
-                if time > self.state.wall {
-                    self.state.wall = time;
-                }
+                // (placements already fix AFTs deterministically) and can
+                // release deferred arrivals.
+                self.advance_to(time);
                 Response::Ok { job_id: None }
             }
             Request::Schedule { time } => {
-                if time > self.state.wall {
-                    self.state.wall = time;
-                }
+                self.advance_to(time);
                 let mut out = Vec::new();
                 loop {
                     if self.state.executable().is_empty() {
                         break;
                     }
                     match self.scheduler.step(&self.state) {
-                        Err(e) => return Response::Error(format!("scheduler: {e}")),
+                        // Assignments applied before a scheduler error are
+                        // already committed to the state, so the master
+                        // must learn them or its view diverges from ours:
+                        // return the partial batch and let the next
+                        // (empty) drain surface the error itself.
+                        Err(e) => {
+                            if out.is_empty() {
+                                return Response::Error(format!("scheduler: {e}"));
+                            }
+                            crate::log_warn!(
+                                "scheduler error after {} applied assignments: {e} \
+                                 (returning the partial batch)",
+                                out.len()
+                            );
+                            return Response::Assignments(out);
+                        }
                         Ok(None) => break,
                         Ok(Some((task, alloc))) => {
                             let finish = self.state.apply(task, alloc);
@@ -78,48 +190,221 @@ impl AgentServer {
                 executors: self.state.cluster.len(),
                 horizon: self.state.horizon,
                 executable: self.state.executable().len(),
+                // O(1) from the heap; every unarrived job is exactly one
+                // pending entry (submit either marks arrived or pushes;
+                // advance_to pops and marks in lockstep).
+                pending: self.pending.len(),
             },
             Request::Shutdown => Response::Ok { job_id: None },
         }
     }
+}
 
-    /// Serve connections until a `shutdown` request arrives. Returns the
-    /// bound address through `on_bound` (use port 0 for ephemeral).
-    pub fn serve(mut self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+/// The scheduling agent behind a TCP endpoint: a shared [`AgentCore`]
+/// served by one thread per master connection.
+pub struct AgentServer {
+    core: Mutex<AgentCore>,
+    shutdown: AtomicBool,
+}
+
+impl AgentServer {
+    pub fn new(cluster: Cluster, scheduler: Box<dyn Scheduler + Send>) -> AgentServer {
+        AgentServer {
+            core: Mutex::new(AgentCore::new(cluster, scheduler)),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Handle one request against the shared core (serialized at the
+    /// lock). Exposed so embedders and tests can drive the agent without
+    /// networking.
+    pub fn handle(&self, req: Request) -> Response {
+        match self.core.lock() {
+            Ok(mut core) => core.handle(req),
+            // A panic mid-request may have left the state half-mutated:
+            // refuse new decisions instead of scheduling against it, but
+            // keep shutdown answerable so the server stays stoppable.
+            Err(_poisoned) => {
+                if matches!(req, Request::Shutdown) {
+                    Response::Ok { job_id: None }
+                } else {
+                    Response::Error(
+                        "agent core poisoned by a prior panic; refusing new requests \
+                         (send shutdown)"
+                            .to_string(),
+                    )
+                }
+            }
+        }
+    }
+
+    /// Serve connections until a `shutdown` request arrives on any of
+    /// them. Each accepted master gets its own thread; all of them share
+    /// the core. Returns the bound address through `on_bound` (use port 0
+    /// for ephemeral).
+    pub fn serve(self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         on_bound(listener.local_addr()?);
-        'outer: for stream in listener.incoming() {
-            let stream = stream?;
-            let mut reader = BufReader::new(stream.try_clone()?);
-            let mut writer = BufWriter::new(stream);
-            let mut line = String::new();
-            loop {
-                line.clear();
-                let n = reader.read_line(&mut line)?;
-                if n == 0 {
-                    break; // peer closed; accept the next master
+        // Non-blocking accepts so this loop can poll the shutdown flag
+        // set by whichever connection thread receives the request.
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let server = &self;
+        std::thread::scope(|s| {
+            let mut res: Result<()> = Ok(());
+            while !server.shutdown.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        s.spawn(move || {
+                            if let Err(e) = server.serve_conn(stream) {
+                                crate::log_warn!("connection dropped: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    // A peer aborting mid-handshake must not take down a
+                    // long-lived multi-master server.
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::Interrupted
+                                | std::io::ErrorKind::ConnectionAborted
+                                | std::io::ErrorKind::ConnectionReset
+                        ) =>
+                    {
+                        crate::log_warn!("transient accept error: {e}");
+                    }
+                    Err(e) => {
+                        res = Err(anyhow::Error::from(e).context("accepting connection"));
+                        break;
+                    }
                 }
-                let resp = match Json::parse(line.trim())
+            }
+            // Wake every connection thread (they poll the same flag)
+            // before the scope joins them.
+            server.shutdown.store(true, Ordering::SeqCst);
+            res
+        })
+    }
+
+    /// Serve one master connection until it closes, errors, or shutdown.
+    fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+        // Accepted sockets can inherit the listener's non-blocking flag
+        // on some platforms; we want blocking reads with a timeout so the
+        // thread notices shutdown without busy-waiting.
+        stream.set_nonblocking(false).context("blocking stream")?;
+        stream
+            .set_read_timeout(Some(READ_POLL))
+            .context("read timeout")?;
+        stream
+            .set_write_timeout(Some(WRITE_TIMEOUT))
+            .context("write timeout")?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        // Accumulate raw bytes, not a String: a read timeout can land
+        // mid-multibyte UTF-8 character, and `read_line` would drop the
+        // already-consumed invalid-prefix bytes on the error path.
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            buf.clear();
+            loop {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                match read_capped_line(&mut reader, &mut buf)? {
+                    LineRead::Line => break,
+                    LineRead::Timeout => continue, // poll the shutdown flag
+                    LineRead::Eof => return Ok(()), // peer closed
+                }
+            }
+            // Reject invalid UTF-8 outright: a lossy decode would accept
+            // the request with U+FFFD-mangled strings (e.g. a job name
+            // that no longer matches the master's).
+            let resp = match std::str::from_utf8(&buf) {
+                Err(_) => Response::Error("bad request: invalid utf-8".to_string()),
+                Ok(line) => match Json::parse(line.trim())
                     .map_err(|e| anyhow!("{e}"))
                     .and_then(|v| Request::from_json(&v))
                 {
                     Ok(req) => {
-                        let shutdown = matches!(req, Request::Shutdown);
+                        let is_shutdown = matches!(req, Request::Shutdown);
                         let resp = self.handle(req);
                         writeln!(writer, "{}", resp.to_json().to_string())?;
                         writer.flush()?;
-                        if shutdown {
-                            break 'outer;
+                        if is_shutdown {
+                            self.shutdown.store(true, Ordering::SeqCst);
+                            return Ok(());
                         }
                         continue;
                     }
                     Err(e) => Response::Error(format!("bad request: {e}")),
-                };
-                writeln!(writer, "{}", resp.to_json().to_string())?;
-                writer.flush()?;
-            }
+                },
+            };
+            writeln!(writer, "{}", resp.to_json().to_string())?;
+            writer.flush()?;
         }
-        Ok(())
+    }
+}
+
+/// Outcome of one capped line-read attempt.
+enum LineRead {
+    /// A complete line (or the final unterminated line at EOF) is in `buf`.
+    Line,
+    /// Read timeout with no complete line yet — poll shutdown and retry
+    /// (the partial line stays buffered).
+    Timeout,
+    /// Peer closed with nothing buffered.
+    Eof,
+}
+
+/// Append one `\n`-terminated request line to `buf`, enforcing
+/// [`MAX_LINE_BYTES`] per buffered chunk. `read_until` would only return
+/// at the delimiter, EOF, or error — a peer streaming a fast
+/// newline-free payload could grow the buffer unboundedly inside a
+/// single call, so the cap must be checked as each chunk lands.
+fn read_capped_line(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>) -> Result<LineRead> {
+    loop {
+        let (done, used) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    return Ok(LineRead::Timeout)
+                }
+                Err(e) => return Err(anyhow::Error::from(e).context("reading request")),
+            };
+            if chunk.is_empty() {
+                // EOF: a buffered partial line is the final message.
+                return Ok(if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    buf.extend_from_slice(&chunk[..=pos]);
+                    (true, pos + 1)
+                }
+                None => {
+                    buf.extend_from_slice(chunk);
+                    (false, chunk.len())
+                }
+            }
+        };
+        reader.consume(used);
+        if buf.len() > MAX_LINE_BYTES {
+            bail!("request line exceeds {MAX_LINE_BYTES} bytes");
+        }
+        if done {
+            return Ok(LineRead::Line);
+        }
     }
 }
 
@@ -164,7 +449,7 @@ mod tests {
     #[test]
     fn handle_submit_schedule_status() {
         let cluster = Cluster::homogeneous(2, 2.0, 100.0);
-        let mut agent = AgentServer::new(cluster, Box::new(FifoScheduler::new()));
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
         let resp = agent.handle(Request::SubmitJob {
             name: "j".into(),
             arrival: 0.0,
@@ -184,23 +469,109 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         match agent.handle(Request::Status) {
-            Response::Status { jobs, assigned, .. } => {
+            Response::Status { jobs, assigned, pending, .. } => {
                 assert_eq!(jobs, 1);
                 assert_eq!(assigned, 2);
+                assert_eq!(pending, 0);
             }
             other => panic!("unexpected {other:?}"),
         }
     }
 
+    /// Regression for the deferred-arrival bug: a future-dated submission
+    /// must not be schedulable before the wall clock reaches its arrival,
+    /// while an already-due job still schedules immediately.
+    #[test]
+    fn future_dated_job_defers_until_arrival() {
+        let cluster = Cluster::homogeneous(2, 1.0, 100.0);
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
+        agent.handle(Request::SubmitJob {
+            name: "due".into(),
+            arrival: 0.0,
+            computes: vec![2.0],
+            edges: vec![],
+        });
+        agent.handle(Request::SubmitJob {
+            name: "future".into(),
+            arrival: 50.0,
+            computes: vec![3.0],
+            edges: vec![],
+        });
+        assert_eq!(agent.pending_jobs(), 1);
+        match agent.handle(Request::Schedule { time: 0.0 }) {
+            Response::Assignments(asgs) => {
+                assert_eq!(asgs.len(), 1, "only the due job schedules at t=0");
+                assert_eq!(asgs[0].job, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match agent.handle(Request::Status) {
+            Response::Status { pending, executable, .. } => {
+                assert_eq!(pending, 1);
+                assert_eq!(executable, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A heartbeat short of the arrival releases nothing...
+        agent.handle(Request::TaskComplete {
+            job: 0,
+            node: 0,
+            time: 49.0,
+        });
+        assert_eq!(agent.pending_jobs(), 1);
+        // ...and a schedule at the arrival time releases and places it,
+        // never starting before the arrival.
+        match agent.handle(Request::Schedule { time: 50.0 }) {
+            Response::Assignments(asgs) => {
+                assert_eq!(asgs.len(), 1);
+                assert_eq!(asgs[0].job, 1);
+                assert!(asgs[0].start >= 50.0 - 1e-9, "start={}", asgs[0].start);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(agent.pending_jobs(), 0);
+    }
+
+    /// Deferred jobs activate in arrival order even when submitted out of
+    /// order, and ties break by job id (deterministic heap order).
+    #[test]
+    fn pending_heap_releases_in_arrival_order() {
+        let cluster = Cluster::homogeneous(1, 1.0, 100.0);
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
+        for (name, arrival) in [("c", 30.0), ("a", 10.0), ("b", 20.0)] {
+            agent.handle(Request::SubmitJob {
+                name: name.into(),
+                arrival,
+                computes: vec![1.0],
+                edges: vec![],
+            });
+        }
+        assert_eq!(agent.pending_jobs(), 3);
+        agent.advance_to(20.0);
+        assert_eq!(agent.pending_jobs(), 1);
+        assert!(agent.state().arrived[1] && agent.state().arrived[2]);
+        assert!(!agent.state().arrived[0]);
+        agent.advance_to(30.0);
+        assert_eq!(agent.pending_jobs(), 0);
+        assert_eq!(agent.state().n_unarrived(), 0);
+    }
+
     #[test]
     fn handle_rejects_bad_job() {
         let cluster = Cluster::homogeneous(1, 1.0, 10.0);
-        let mut agent = AgentServer::new(cluster, Box::new(FifoScheduler::new()));
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
         let resp = agent.handle(Request::SubmitJob {
             name: "cyclic".into(),
             arrival: 0.0,
             computes: vec![1.0, 1.0],
             edges: vec![(0, 1, 1.0), (1, 0, 1.0)],
+        });
+        assert!(matches!(resp, Response::Error(_)));
+        let resp = agent.handle(Request::SubmitJob {
+            name: "nan-arrival".into(),
+            arrival: f64::NAN,
+            computes: vec![1.0],
+            edges: vec![],
         });
         assert!(matches!(resp, Response::Error(_)));
     }

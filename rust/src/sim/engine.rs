@@ -105,9 +105,7 @@ impl Simulator {
         scheduler.reset();
         while let Some(ev) = self.events.pop() {
             // Advance wall time monotonically (events can tie).
-            if ev.time > self.state.wall {
-                self.state.wall = ev.time;
-            }
+            self.state.advance_wall(ev.time);
             if let EventKind::Arrival(job) = ev.kind {
                 self.state.mark_arrived(job);
             }

@@ -255,6 +255,22 @@ impl SimState {
         id
     }
 
+    /// Monotonically advance the wall clock: time never moves backwards,
+    /// even if a caller (service heartbeat, schedule poll, out-of-order
+    /// event) reports a stale timestamp.
+    pub fn advance_wall(&mut self, time: f64) {
+        if time > self.wall {
+            self.wall = time;
+        }
+    }
+
+    /// Number of jobs added but not yet arrived — in service mode, the
+    /// future-dated submissions still waiting for the wall clock to
+    /// reach their arrival time.
+    pub fn n_unarrived(&self) -> usize {
+        self.arrived.iter().filter(|&&a| !a).count()
+    }
+
     /// Mark a job as arrived and add its newly executable tasks to the
     /// frontier. Called by the engine on arrival events.
     pub fn mark_arrived(&mut self, job: usize) {
@@ -699,6 +715,30 @@ mod tests {
         );
         // Completion = child primary finish (5.0), not the dup copy's.
         assert!((st.job_completion(0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_wall_is_monotone() {
+        let mut st = two_exec_state();
+        st.advance_wall(5.0);
+        assert_eq!(st.wall, 5.0);
+        st.advance_wall(3.0); // stale timestamp: ignored
+        assert_eq!(st.wall, 5.0);
+        st.advance_wall(5.0);
+        assert_eq!(st.wall, 5.0);
+    }
+
+    #[test]
+    fn n_unarrived_counts_deferred_jobs() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let early = Job::new(0, "early", 0.0, vec![1.0], &[]);
+        let late = Job::new(1, "late", 50.0, vec![1.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![early, late]));
+        assert_eq!(st.n_unarrived(), 2);
+        st.mark_arrived(0);
+        assert_eq!(st.n_unarrived(), 1);
+        st.mark_arrived(1);
+        assert_eq!(st.n_unarrived(), 0);
     }
 
     #[test]

@@ -89,6 +89,26 @@ impl Args {
         }
     }
 
+    /// Worker-thread count for parallel sweeps: `--threads N`, where
+    /// `--threads auto` (or `0`) means one worker per available core.
+    pub fn threads_opt(&self, default: usize) -> Result<usize> {
+        let auto = || {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        match self.opt("threads") {
+            None => Ok(default.max(1)),
+            Some("auto") => Ok(auto()),
+            Some(v) => {
+                let n = v.parse::<usize>().map_err(|_| {
+                    anyhow!("--threads expects an integer or 'auto', got '{v}'")
+                })?;
+                Ok(if n == 0 { auto() } else { n })
+            }
+        }
+    }
+
     pub fn f64_opt(&self, name: &str, default: f64) -> Result<f64> {
         match self.opt(name) {
             None => Ok(default),
@@ -166,6 +186,16 @@ mod tests {
         let a = parse(&["x", "--good", "1", "--bad", "2"]);
         assert!(a.check_known(&["good"]).is_err());
         assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn threads_option() {
+        assert_eq!(parse(&["x", "--threads", "3"]).threads_opt(1).unwrap(), 3);
+        assert_eq!(parse(&["x"]).threads_opt(2).unwrap(), 2);
+        // 'auto' and 0 resolve to the machine's parallelism (≥ 1).
+        assert!(parse(&["x", "--threads", "auto"]).threads_opt(1).unwrap() >= 1);
+        assert!(parse(&["x", "--threads", "0"]).threads_opt(1).unwrap() >= 1);
+        assert!(parse(&["x", "--threads", "lots"]).threads_opt(1).is_err());
     }
 
     #[test]

@@ -82,11 +82,20 @@ impl Recorder {
         std_dev(&self.samples)
     }
 
+    /// Smallest sample; 0 for an empty recorder (like `mean`/`percentile`
+    /// — never ±inf, which would leak into reports).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0 for an empty recorder (like `mean`/`percentile`).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples
             .iter()
             .copied()
@@ -154,6 +163,21 @@ mod tests {
         assert_eq!(percentile(&[], 50.0), 0.0);
         let r = Recorder::new();
         assert!(r.is_empty());
+        // Empty recorders report 0 everywhere, never ±inf.
+        assert_eq!(r.min(), 0.0);
+        assert_eq!(r.max(), 0.0);
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.percentile(98.0), 0.0);
+    }
+
+    #[test]
+    fn recorder_min_max() {
+        let mut r = Recorder::new();
+        for x in [3.0, -1.0, 2.0] {
+            r.push(x);
+        }
+        assert_eq!(r.min(), -1.0);
+        assert_eq!(r.max(), 3.0);
     }
 
     #[test]

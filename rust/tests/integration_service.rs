@@ -1,12 +1,15 @@
-//! Service-layer integration: a resource-manager client drives the agent
-//! over real TCP, replaying a continuous workload and cross-checking the
-//! resulting schedule against an in-process simulator run.
+//! Service-layer integration: resource-manager clients drive the agent
+//! over real TCP — replaying workloads, exercising the deferred-arrival
+//! semantics, and checking that concurrent masters make progress and
+//! produce exactly the single-client schedule (determinism under the
+//! core lock).
 
 use lachesis::cluster::Cluster;
 use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::dag::Job;
 use lachesis::policy::RustPolicy;
 use lachesis::sched::{HighRankUpScheduler, LachesisScheduler};
-use lachesis::service::{AgentServer, Request, Response, ServiceClient};
+use lachesis::service::{AgentServer, Assignment, Request, Response, ServiceClient};
 use lachesis::workload::WorkloadGenerator;
 
 fn spawn_agent(
@@ -25,31 +28,42 @@ fn spawn_agent(
     (rx.recv().unwrap(), handle)
 }
 
+fn submit_job(client: &mut ServiceClient, job: &Job) {
+    let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
+    let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
+        .flat_map(|u| {
+            job.children[u]
+                .iter()
+                .map(move |e| (u, e.other, e.data))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let resp = client
+        .call(&Request::SubmitJob {
+            name: job.name.clone(),
+            arrival: job.arrival,
+            computes,
+            edges,
+        })
+        .unwrap();
+    assert!(matches!(resp, Response::Ok { job_id: Some(_) }));
+}
+
 fn submit_workload(client: &mut ServiceClient, seed: u64, n_jobs: usize) -> usize {
     let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
     let mut total_tasks = 0;
     for job in &w.jobs {
         total_tasks += job.n_tasks();
-        let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
-        let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
-            .flat_map(|u| {
-                job.children[u]
-                    .iter()
-                    .map(move |e| (u, e.other, e.data))
-                    .collect::<Vec<_>>()
-            })
-            .collect();
-        let resp = client
-            .call(&Request::SubmitJob {
-                name: job.name.clone(),
-                arrival: job.arrival,
-                computes,
-                edges,
-            })
-            .unwrap();
-        assert!(matches!(resp, Response::Ok { job_id: Some(_) }));
+        submit_job(client, job);
     }
     total_tasks
+}
+
+fn schedule_at(client: &mut ServiceClient, time: f64) -> Vec<Assignment> {
+    match client.call(&Request::Schedule { time }).unwrap() {
+        Response::Assignments(a) => a,
+        other => panic!("unexpected {other:?}"),
+    }
 }
 
 #[test]
@@ -57,11 +71,7 @@ fn agent_schedules_submitted_jobs_over_tcp() {
     let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 8, 1);
     let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
     let total = submit_workload(&mut client, 1, 3);
-    let resp = client.call(&Request::Schedule { time: 0.0 }).unwrap();
-    let assignments = match resp {
-        Response::Assignments(a) => a,
-        other => panic!("unexpected {other:?}"),
-    };
+    let assignments = schedule_at(&mut client, 0.0);
     assert_eq!(assignments.len(), total);
     // Assignments respect per-executor exclusivity: intervals on the same
     // executor (including duplicates' occupancy) must be disjoint — the
@@ -83,11 +93,7 @@ fn agent_with_learned_policy_over_tcp() {
     let (addr, handle) = spawn_agent(Box::new(sched), 6, 2);
     let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
     let total = submit_workload(&mut client, 2, 2);
-    let resp = client.call(&Request::Schedule { time: 0.0 }).unwrap();
-    match resp {
-        Response::Assignments(a) => assert_eq!(a.len(), total),
-        other => panic!("unexpected {other:?}"),
-    }
+    assert_eq!(schedule_at(&mut client, 0.0).len(), total);
     client.call(&Request::Shutdown).unwrap();
     handle.join().unwrap();
 }
@@ -108,11 +114,7 @@ fn incremental_submission_matches_arrivals() {
         })
         .unwrap();
     assert!(matches!(resp, Response::Ok { job_id: Some(0) }));
-    let n1 = match client.call(&Request::Schedule { time: 0.0 }).unwrap() {
-        Response::Assignments(a) => a.len(),
-        other => panic!("unexpected {other:?}"),
-    };
-    assert_eq!(n1, 2);
+    assert_eq!(schedule_at(&mut client, 0.0).len(), 2);
 
     // Heartbeat a completion, then a later job arrives.
     client
@@ -130,13 +132,159 @@ fn incremental_submission_matches_arrivals() {
             edges: vec![],
         })
         .unwrap();
-    let n2 = match client.call(&Request::Schedule { time: 2.0 }).unwrap() {
-        Response::Assignments(a) => a.len(),
-        other => panic!("unexpected {other:?}"),
-    };
+    let n2 = schedule_at(&mut client, 2.0).len();
     assert_eq!(n2, 1, "only the new job's task is assigned");
     // New job starts no earlier than its arrival / current wall.
     client.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+/// Regression (deferred arrivals over the wire): a future-dated
+/// submission must never be scheduled before its arrival time, while an
+/// already-due job still schedules immediately.
+#[test]
+fn future_dated_submission_defers_over_tcp() {
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 4, 6);
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    client
+        .call(&Request::SubmitJob {
+            name: "due".into(),
+            arrival: 0.0,
+            computes: vec![2.0, 1.0],
+            edges: vec![(0, 1, 3.0)],
+        })
+        .unwrap();
+    client
+        .call(&Request::SubmitJob {
+            name: "future".into(),
+            arrival: 1000.0,
+            computes: vec![5.0],
+            edges: vec![],
+        })
+        .unwrap();
+    let asgs = schedule_at(&mut client, 0.0);
+    assert_eq!(asgs.len(), 2, "only the due job's tasks schedule at t=0");
+    assert!(asgs.iter().all(|a| a.job == 0));
+    match client.call(&Request::Status).unwrap() {
+        Response::Status { pending, assigned, .. } => {
+            assert_eq!(pending, 1);
+            assert_eq!(assigned, 2);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // Advancing the wall clock past the arrival releases the job, and it
+    // never starts before its arrival time.
+    let asgs = schedule_at(&mut client, 1000.0);
+    assert_eq!(asgs.len(), 1);
+    assert_eq!(asgs[0].job, 1);
+    assert!(asgs[0].start >= 1000.0 - 1e-9, "start={}", asgs[0].start);
+    match client.call(&Request::Status).unwrap() {
+        Response::Status { pending, .. } => assert_eq!(pending, 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    client.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+/// Two clients connected simultaneously, interleaving submit/status/
+/// schedule in a fixed order, must produce exactly the assignments of a
+/// single client submitting the same jobs in the same order — the core
+/// lock serializes decisions, so the schedule depends only on request
+/// order, not on which connection carried each request.
+#[test]
+fn two_clients_interleaved_match_single_client_run() {
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), 9).generate();
+
+    // Reference: one client submits everything, then schedules.
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 6, 9);
+    let mut c = ServiceClient::connect(&addr.to_string()).unwrap();
+    for job in &w.jobs {
+        submit_job(&mut c, job);
+    }
+    let reference = schedule_at(&mut c, 0.0);
+    assert!(!reference.is_empty());
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+
+    // Same jobs, same order, but alternating between two live
+    // connections with status polls interleaved from the idle peer.
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 6, 9);
+    let mut c1 = ServiceClient::connect(&addr.to_string()).unwrap();
+    let mut c2 = ServiceClient::connect(&addr.to_string()).unwrap();
+    for (i, job) in w.jobs.iter().enumerate() {
+        let (submitter, idler) = if i % 2 == 0 {
+            (&mut c1, &mut c2)
+        } else {
+            (&mut c2, &mut c1)
+        };
+        submit_job(submitter, job);
+        assert!(matches!(
+            idler.call(&Request::Status).unwrap(),
+            Response::Status { .. }
+        ));
+    }
+    let concurrent = schedule_at(&mut c2, 0.0);
+    assert_eq!(reference, concurrent, "schedule must not depend on which connection asked");
+    c1.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+/// Two masters hammering the agent from real threads: both must make
+/// progress (no deadlock, every call answered) and every submitted task
+/// must be assigned exactly once across the two connections.
+#[test]
+fn concurrent_clients_make_progress() {
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 8, 11);
+    let addr = addr.to_string();
+    let jobs_per_client = 5usize;
+    let tasks_per_job = 2usize;
+
+    let worker = |name: char| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = ServiceClient::connect(&addr).unwrap();
+            let mut assigned = 0usize;
+            for k in 0..jobs_per_client {
+                let resp = c
+                    .call(&Request::SubmitJob {
+                        name: format!("{name}{k}"),
+                        arrival: 0.0,
+                        computes: vec![1.0, 2.0],
+                        edges: vec![(0, 1, 1.0)],
+                    })
+                    .unwrap();
+                assert!(matches!(resp, Response::Ok { job_id: Some(_) }));
+                // A schedule drains everything currently executable —
+                // possibly including the other client's tasks.
+                match c.call(&Request::Schedule { time: 0.0 }).unwrap() {
+                    Response::Assignments(a) => assigned += a.len(),
+                    other => panic!("unexpected {other:?}"),
+                }
+                assert!(matches!(
+                    c.call(&Request::Status).unwrap(),
+                    Response::Status { .. }
+                ));
+            }
+            assigned
+        })
+    };
+    let t1 = worker('a');
+    let t2 = worker('b');
+    let n1 = t1.join().unwrap();
+    let n2 = t2.join().unwrap();
+    let total = 2 * jobs_per_client * tasks_per_job;
+    assert_eq!(n1 + n2, total, "every task assigned exactly once");
+
+    let mut c = ServiceClient::connect(&addr).unwrap();
+    match c.call(&Request::Status).unwrap() {
+        Response::Status { jobs, assigned, pending, .. } => {
+            assert_eq!(jobs, 2 * jobs_per_client);
+            assert_eq!(assigned, total);
+            assert_eq!(pending, 0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    c.call(&Request::Shutdown).unwrap();
     handle.join().unwrap();
 }
 
