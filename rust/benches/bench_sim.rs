@@ -99,6 +99,49 @@ fn main() {
         b.note("makespan_gap_over_append_ratio", gap_total / append_total);
     }
 
+    // Fault-subsystem overhead: a zero-fault plan must be invisible —
+    // the acceptance gate is < 5% vs no plan at all. The two variants
+    // are interleaved iteration by iteration so runner noise and thermal
+    // drift hit both sides equally (separately-measured cases would make
+    // the ratio a coin flip at small budgets).
+    {
+        use lachesis::config::FaultConfig;
+        use lachesis::fault::FaultPlan;
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 4).generate();
+        let cluster = Cluster::heterogeneous(&cfg, 4);
+        let none = FaultPlan::none();
+        let t0 = Instant::now();
+        {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+        }
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        // Floor of 50 interleaved pairs: the CI gate on this ratio is
+        // hard, so short-sample variance must not dominate even when
+        // BENCH_BUDGET_SECS is tiny.
+        let iters = ((b.budget_secs / once).ceil() as usize).clamp(50, 10_000);
+        let (mut t_plain, mut t_fault) = (0.0f64, 0.0f64);
+        for _ in 0..iters {
+            let t = Instant::now();
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+            t_plain += t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let mut sim = Simulator::with_faults(cluster.clone(), w.clone(), &none);
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+            t_fault += t.elapsed().as_secs_f64();
+        }
+        b.note("fault_overhead_ratio", t_fault / t_plain);
+
+        // A live-fault run for the perf trajectory: recovery passes,
+        // blackout booking and rescheduling included.
+        let plan = FaultPlan::generate(&FaultConfig::with_rate(1e-3), cluster.len(), 4);
+        b.case("sim_heft_faulty_1e-3/batch20", || {
+            let mut sim = Simulator::with_faults(cluster.clone(), w.clone(), &plan);
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+        });
+    }
+
     // Learned policy (rust backend) at moderate scale.
     let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 3).generate();
     let cluster = Cluster::heterogeneous(&cfg, 3);

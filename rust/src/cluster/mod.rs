@@ -6,7 +6,7 @@
 //! transfers within one executor are free.
 
 use crate::config::{ClusterConfig, SchedMode};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, STREAM_CLUSTER};
 
 /// One computing executor.
 #[derive(Debug, Clone)]
@@ -14,6 +14,10 @@ pub struct Executor {
     pub id: usize,
     /// Processing speed `v_k` in GHz; task `n_i` takes `w_i / v_k` seconds.
     pub speed: f64,
+    /// Whether the executor is currently up. Flipped by the fault
+    /// subsystem (crash / recovery); allocators skip down executors and
+    /// the simulator refuses to book work onto them.
+    pub available: bool,
 }
 
 /// The cluster: executor set + communication model.
@@ -32,11 +36,12 @@ impl Cluster {
     /// from the config's frequency table.
     pub fn heterogeneous(cfg: &ClusterConfig, seed: u64) -> Cluster {
         cfg.validate().expect("invalid cluster config");
-        let mut rng = Rng::new(seed ^ 0xC1A5_7E85);
+        let mut rng = Rng::stream(seed, STREAM_CLUSTER);
         let executors = (0..cfg.n_executors)
             .map(|id| Executor {
                 id,
                 speed: *rng.choice(&cfg.freq_table),
+                available: true,
             })
             .collect();
         Cluster {
@@ -50,7 +55,13 @@ impl Cluster {
     pub fn homogeneous(n: usize, speed: f64, comm_mbps: f64) -> Cluster {
         assert!(n > 0 && speed > 0.0 && comm_mbps > 0.0);
         Cluster {
-            executors: (0..n).map(|id| Executor { id, speed }).collect(),
+            executors: (0..n)
+                .map(|id| Executor {
+                    id,
+                    speed,
+                    available: true,
+                })
+                .collect(),
             comm_mbps,
             sched_mode: SchedMode::Append,
         }
@@ -75,9 +86,41 @@ impl Cluster {
         self.executors[k].speed
     }
 
-    /// Mean executor speed `v̄` (used by rank_up/rank_down, Eq 6–7).
+    /// Whether executor `k` is currently up.
+    pub fn available(&self, k: usize) -> bool {
+        self.executors[k].available
+    }
+
+    /// Flip executor `k`'s availability (fault subsystem hook).
+    pub fn set_available(&mut self, k: usize, up: bool) {
+        self.executors[k].available = up;
+    }
+
+    /// Number of executors currently up.
+    pub fn n_available(&self) -> usize {
+        self.executors.iter().filter(|e| e.available).count()
+    }
+
+    /// Is at least one executor up?
+    pub fn any_available(&self) -> bool {
+        self.executors.iter().any(|e| e.available)
+    }
+
+    /// Mean executor speed `v̄` over the *available* executors (used by
+    /// rank_up/rank_down, Eq 6–7). Falls back to the all-executor mean if
+    /// every executor is down (so the ratio features never divide by
+    /// zero); with no faults this is the historical mean, bit-identical.
     pub fn v_avg(&self) -> f64 {
-        self.executors.iter().map(|e| e.speed).sum::<f64>() / self.len() as f64
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for e in self.executors.iter().filter(|e| e.available) {
+            sum += e.speed;
+            n += 1;
+        }
+        if n == 0 {
+            return self.executors.iter().map(|e| e.speed).sum::<f64>() / self.len() as f64;
+        }
+        sum / n as f64
     }
 
     /// Fastest executor speed (speedup numerator and SLR denominator use
@@ -89,11 +132,19 @@ impl Cluster {
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Index of the fastest executor.
+    /// Index of the fastest *available* executor (falls back to the
+    /// all-executor argmax when everything is down, matching `v_avg`).
+    /// Ties keep the historical resolution (last maximum wins), so the
+    /// zero-fault answer is unchanged.
     pub fn fastest(&self) -> usize {
         (0..self.len())
+            .filter(|&k| self.executors[k].available)
             .max_by(|&a, &b| self.speed(a).partial_cmp(&self.speed(b)).unwrap())
-            .unwrap()
+            .unwrap_or_else(|| {
+                (0..self.len())
+                    .max_by(|&a, &b| self.speed(a).partial_cmp(&self.speed(b)).unwrap())
+                    .unwrap()
+            })
     }
 
     /// Transmission speed `c_ij` between executors (MB/s); infinite within
@@ -175,5 +226,30 @@ mod tests {
         assert!((c.v_avg() - 3.0).abs() < 1e-12);
         assert_eq!(c.v_max(), 4.0);
         assert_eq!(c.fastest(), 1);
+    }
+
+    #[test]
+    fn availability_skews_aggregates_but_never_empties_them() {
+        let mut c = Cluster::homogeneous(3, 2.0, 10.0);
+        c.executors[1].speed = 4.0;
+        c.executors[2].speed = 3.0;
+        assert!(c.any_available());
+        assert_eq!(c.n_available(), 3);
+        // Down the fastest: fastest() moves to the next-best live one.
+        c.set_available(1, false);
+        assert!(!c.available(1));
+        assert_eq!(c.n_available(), 2);
+        assert_eq!(c.fastest(), 2);
+        assert!((c.v_avg() - 2.5).abs() < 1e-12);
+        // v_max stays the nameplate maximum (report metrics keep a
+        // stable denominator across fault runs).
+        assert_eq!(c.v_max(), 4.0);
+        // All down: aggregates fall back to the full set instead of
+        // panicking / dividing by zero.
+        c.set_available(0, false);
+        c.set_available(2, false);
+        assert!(!c.any_available());
+        assert_eq!(c.fastest(), 1);
+        assert!((c.v_avg() - 3.0).abs() < 1e-12);
     }
 }

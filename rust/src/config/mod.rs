@@ -256,6 +256,117 @@ impl WorkloadConfig {
     }
 }
 
+/// Fault-injection knobs (see `rust/src/fault/`). A `(FaultConfig, seed,
+/// n_executors)` triple fully determines a [`crate::fault::FaultPlan`],
+/// so fault runs are exactly as reproducible as fault-free ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-executor incident rate (incidents per simulated second,
+    /// exponential inter-incident times). `0.0` disables faults entirely
+    /// — the plan is empty and schedules are bit-identical to a run with
+    /// no plan at all.
+    pub crash_rate: f64,
+    /// Mean time to recovery for transient crashes, seconds
+    /// (exponential outage durations).
+    pub mttr: f64,
+    /// Probability a crash is permanent (the executor never recovers).
+    pub p_permanent: f64,
+    /// Probability an incident is a straggle rather than a crash.
+    pub straggler_prob: f64,
+    /// Straggle stretch factor (> 1): in-flight work on the executor
+    /// takes `slowdown ×` its remaining time.
+    pub slowdown: f64,
+    /// Incidents are pre-generated over `[0, horizon]` simulated seconds;
+    /// a schedule extending past the horizon sees no further faults.
+    pub horizon: f64,
+}
+
+impl Default for FaultConfig {
+    /// Defaults describe a *moderately* unreliable cluster; use
+    /// [`FaultConfig::none`] for the reliable baseline.
+    fn default() -> Self {
+        FaultConfig {
+            crash_rate: 1e-3,
+            mttr: 30.0,
+            p_permanent: 0.1,
+            straggler_prob: 0.25,
+            slowdown: 3.0,
+            horizon: 10_000.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// The reliable cluster: no incidents, empty plan, schedules
+    /// bit-identical to a simulator with no fault plan attached.
+    pub fn none() -> Self {
+        FaultConfig {
+            crash_rate: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// A config differing from the defaults only in the incident rate —
+    /// the x-axis of the robustness sweep.
+    pub fn with_rate(crash_rate: f64) -> Self {
+        FaultConfig {
+            crash_rate,
+            ..Default::default()
+        }
+    }
+
+    /// True when the plan this config generates is always empty.
+    pub fn is_none(&self) -> bool {
+        self.crash_rate <= 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.crash_rate.is_finite() || self.crash_rate < 0.0 {
+            bail!("crash_rate must be finite and non-negative");
+        }
+        if self.mttr <= 0.0 || !self.mttr.is_finite() {
+            bail!("mttr must be positive and finite");
+        }
+        if !(0.0..=1.0).contains(&self.p_permanent) {
+            bail!("p_permanent must be in [0, 1]");
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            bail!("straggler_prob must be in [0, 1]");
+        }
+        if self.slowdown < 1.0 || !self.slowdown.is_finite() {
+            bail!("slowdown must be a finite factor >= 1");
+        }
+        if self.horizon <= 0.0 || !self.horizon.is_finite() {
+            bail!("horizon must be positive and finite");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("crash_rate", Json::from(self.crash_rate)),
+            ("mttr", Json::from(self.mttr)),
+            ("p_permanent", Json::from(self.p_permanent)),
+            ("straggler_prob", Json::from(self.straggler_prob)),
+            ("slowdown", Json::from(self.slowdown)),
+            ("horizon", Json::from(self.horizon)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = FaultConfig {
+            crash_rate: v.req_f64("crash_rate")?,
+            mttr: v.req_f64("mttr")?,
+            p_permanent: v.req_f64("p_permanent")?,
+            straggler_prob: v.req_f64("straggler_prob")?,
+            slowdown: v.req_f64("slowdown")?,
+            horizon: v.req_f64("horizon")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// RL training configuration (paper §4.3 / Appendix C).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -422,6 +533,24 @@ mod tests {
         ]);
         let c3 = ClusterConfig::from_json(&legacy).unwrap();
         assert_eq!(c3.sched_mode, SchedMode::Append);
+    }
+
+    #[test]
+    fn fault_roundtrip_and_validation() {
+        let f = FaultConfig::with_rate(2e-3);
+        let f2 = FaultConfig::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, f2);
+        assert!(!f.is_none());
+        assert!(FaultConfig::none().is_none());
+        let mut bad = FaultConfig::default();
+        bad.p_permanent = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = FaultConfig::default();
+        bad.slowdown = 0.5;
+        assert!(bad.validate().is_err());
+        let mut bad = FaultConfig::default();
+        bad.mttr = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

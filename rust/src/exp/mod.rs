@@ -8,7 +8,8 @@
 //! * Ablations (DESIGN.md §Per-experiment index): [`ablate`]
 
 use crate::cluster::Cluster;
-use crate::config::{ClusterConfig, ExperimentConfig, TrainConfig, WorkloadConfig};
+use crate::config::{ClusterConfig, ExperimentConfig, FaultConfig, TrainConfig, WorkloadConfig};
+use crate::fault::FaultPlan;
 use crate::metrics::{ScheduleReport, SuiteReport};
 use crate::policy::features::FeatureMode;
 use crate::policy::{params, PolicyEval, RustPolicy};
@@ -502,6 +503,217 @@ pub fn ablate(src: &PolicySource, seeds: usize, threads: usize) -> Result<String
     Ok(out)
 }
 
+/// The robustness-sweep scheduler set: the zoo families that matter for
+/// fault tolerance (with and without duplication, learned and heuristic).
+pub const FAULT_ALGOS: [&str; 5] = [
+    "FIFO-DEFT",
+    "HighRankUp-DEFT",
+    "HEFT",
+    "TDCA",
+    "Lachesis",
+];
+
+/// The robustness sweep's default failure rates (per-executor incidents
+/// per second): a reliable baseline plus three escalating regimes.
+pub const FAULT_RATES: [f64; 4] = [0.0, 2e-4, 1e-3, 5e-3];
+
+/// Robustness sweep: run each scheduler under escalating failure rates
+/// and report makespan degradation plus recovery counters. Rides the
+/// same threaded cell fan-out as the figure sweeps; every cell is
+/// deterministic in `(rate, seed, algo)` (the fault plan derives from
+/// the config and seed alone), so the CSV is byte-identical at any
+/// thread count. Each cell also runs `validate()`, pinning the blackout
+/// and rollback invariants on every schedule the sweep produces.
+pub fn fault_sweep(
+    src: &PolicySource,
+    rates: &[f64],
+    jobs: usize,
+    seeds: usize,
+    threads: usize,
+) -> Result<String> {
+    if rates.is_empty() {
+        bail!("fault sweep needs at least one failure rate");
+    }
+    // Sort + dedup: a repeated rate would double-count every aggregate
+    // (same agg key, twice the cells) and print the inflated row twice.
+    let mut rates: Vec<f64> = rates.to_vec();
+    rates.sort_by(|a, b| a.total_cmp(b));
+    rates.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    let rates = &rates[..];
+    let ccfg = ClusterConfig::default();
+    let seed_list: Vec<u64> = (0..seeds as u64).map(|s| 6000 + s).collect();
+    // Workloads are shared per seed (the failure rate must not change
+    // the workload, or the degradation column would be confounded).
+    let workloads: Vec<crate::workload::Workload> = seed_list
+        .iter()
+        .map(|&seed| WorkloadGenerator::new(WorkloadConfig::large_batch(jobs), seed).generate())
+        .collect();
+    struct FaultCell<'a> {
+        rate: f64,
+        seed: u64,
+        algo: &'a str,
+        workload: usize,
+    }
+    let mut cells: Vec<FaultCell> = Vec::new();
+    for &rate in rates {
+        for (wi, &seed) in seed_list.iter().enumerate() {
+            for &algo in &FAULT_ALGOS {
+                cells.push(FaultCell {
+                    rate,
+                    seed,
+                    algo,
+                    workload: wi,
+                });
+            }
+        }
+    }
+    let workloads = &workloads[..];
+    let results = par_indexed(&cells, threads, |c| {
+        let cluster = Cluster::heterogeneous(&ccfg, c.seed);
+        let plan = FaultPlan::generate(&FaultConfig::with_rate(c.rate), cluster.len(), c.seed);
+        let mut sched = build_scheduler(c.algo, src, c.seed)?;
+        let mut sim = Simulator::with_faults(cluster, workloads[c.workload].clone(), &plan);
+        let report = sim
+            .run(sched.as_mut())
+            .with_context(|| format!("{} at rate {} seed {}", c.algo, c.rate, c.seed))?;
+        sim.state
+            .validate()
+            .with_context(|| format!("{} at rate {} seed {}", c.algo, c.rate, c.seed))?;
+        Ok(report)
+    })?;
+
+    // Aggregate per (algo, rate) in input order.
+    struct Agg {
+        makespan: Vec<f64>,
+        crashes: usize,
+        straggles: usize,
+        cancelled: usize,
+        requeued: usize,
+        dup_survived: usize,
+    }
+    let mut agg: Vec<((String, u64), Agg)> = Vec::new(); // rate keyed by bits for exact lookup
+    for (c, r) in cells.iter().zip(&results) {
+        let key = (c.algo.to_string(), c.rate.to_bits());
+        let idx = match agg.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                agg.push((
+                    key,
+                    Agg {
+                        makespan: Vec::new(),
+                        crashes: 0,
+                        straggles: 0,
+                        cancelled: 0,
+                        requeued: 0,
+                        dup_survived: 0,
+                    },
+                ));
+                agg.len() - 1
+            }
+        };
+        let slot = &mut agg[idx].1;
+        slot.makespan.push(r.makespan);
+        slot.crashes += r.faults.n_crashes;
+        slot.straggles += r.faults.n_straggles;
+        slot.cancelled += r.faults.n_cancelled;
+        slot.requeued += r.faults.n_requeued;
+        slot.dup_survived += r.faults.n_dup_survived;
+    }
+    let mean_of = |algo: &str, rate: f64| -> Option<f64> {
+        agg.iter()
+            .find(|(k, _)| k.0 == algo && k.1 == rate.to_bits())
+            .map(|(_, a)| crate::util::stats::mean(&a.makespan))
+    };
+    let baseline_rate = rates
+        .iter()
+        .copied()
+        .fold(f64::INFINITY, f64::min);
+
+    let mut out = String::from(
+        "# Fault robustness — makespan degradation & recovery vs failure rate\n\n",
+    );
+    out.push_str(&format!(
+        "{jobs} jobs (large-batch TPC-H), {} executors, {} seeds; rates are \
+         per-executor incidents/second\n\n",
+        ccfg.n_executors, seeds
+    ));
+    out.push_str("### Mean makespan (s)\n\n| rate |");
+    for a in FAULT_ALGOS {
+        out.push_str(&format!(" {a} |"));
+    }
+    out.push_str("\n|---|");
+    out.push_str(&"---|".repeat(FAULT_ALGOS.len()));
+    out.push('\n');
+    for &rate in rates {
+        out.push_str(&format!("| {rate} |"));
+        for a in FAULT_ALGOS {
+            match mean_of(a, rate) {
+                Some(m) => out.push_str(&format!(" {m:.1} |")),
+                None => out.push_str(" - |"),
+            }
+        }
+        out.push('\n');
+    }
+    out.push_str("\n### Degradation vs the most reliable rate (%)\n\n| rate |");
+    for a in FAULT_ALGOS {
+        out.push_str(&format!(" {a} |"));
+    }
+    out.push_str("\n|---|");
+    out.push_str(&"---|".repeat(FAULT_ALGOS.len()));
+    out.push('\n');
+    for &rate in rates {
+        out.push_str(&format!("| {rate} |"));
+        for a in FAULT_ALGOS {
+            match (mean_of(a, rate), mean_of(a, baseline_rate)) {
+                (Some(m), Some(b)) if b > 0.0 => {
+                    out.push_str(&format!(" {:+.1}% |", 100.0 * (m - b) / b))
+                }
+                _ => out.push_str(" - |"),
+            }
+        }
+        out.push('\n');
+    }
+    out.push_str(
+        "\n### Recovery counters (totals across seeds)\n\n\
+         | algo | rate | crashes | straggles | cancelled | requeued | saved-by-dup |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    let mut csv = String::from(
+        "algo,rate,n_seeds,makespan,degradation_pct,crashes,straggles,cancelled,\
+         requeued,dup_survived\n",
+    );
+    for a in FAULT_ALGOS {
+        for &rate in rates {
+            let Some((_, s)) = agg
+                .iter()
+                .find(|(k, _)| k.0 == a && k.1 == rate.to_bits())
+            else {
+                continue;
+            };
+            let m = crate::util::stats::mean(&s.makespan);
+            let b = mean_of(a, baseline_rate).unwrap_or(m);
+            let deg = if b > 0.0 { 100.0 * (m - b) / b } else { 0.0 };
+            out.push_str(&format!(
+                "| {a} | {rate} | {} | {} | {} | {} | {} |\n",
+                s.crashes, s.straggles, s.cancelled, s.requeued, s.dup_survived
+            ));
+            csv.push_str(&format!(
+                "{a},{rate},{},{m:.6},{deg:.6},{},{},{},{},{}\n",
+                s.makespan.len(),
+                s.crashes,
+                s.straggles,
+                s.cancelled,
+                s.requeued,
+                s.dup_survived
+            ));
+        }
+    }
+    out.push('\n');
+    write_results("fault_robustness.md", &out)?;
+    write_results("fault_robustness.csv", &csv)?;
+    Ok(out)
+}
+
 /// The decision-time CDF series the paper plots (Figs 5d/6d/7b).
 fn decision_cdf_section(suite: &SuiteReport, algos: &[&str]) -> String {
     let mut out = String::from("### Decision-time CDF (ms)\n\n| algo | p50 | p90 | p98 | p99.9 | max |\n|---|---|---|---|---|---|\n");
@@ -663,6 +875,23 @@ mod tests {
     }
 
     #[test]
+    fn fault_sweep_smoke() {
+        let src = PolicySource {
+            backend: "rust".into(),
+            ..Default::default()
+        };
+        // Tiny but real: a reliable baseline plus one faulty rate, one
+        // seed, 2 jobs — exercises plan generation, recovery, validation
+        // and the degradation table end to end.
+        let out = fault_sweep(&src, &[0.0, 2e-3], 2, 1, 2).unwrap();
+        assert!(out.contains("Mean makespan"), "{out}");
+        assert!(out.contains("Degradation"), "{out}");
+        for a in FAULT_ALGOS {
+            assert!(out.contains(a), "missing {a} in:\n{out}");
+        }
+    }
+
+    #[test]
     fn threaded_sweep_surfaces_cell_errors() {
         let src = PolicySource {
             backend: "rust".into(),
@@ -695,6 +924,7 @@ mod tests {
                 n_duplicates: 0,
                 utilization: 0.5,
                 decision_ms: crate::util::stats::Recorder::new(),
+                faults: Default::default(),
             },
         );
         let out = headline_section(&suite);

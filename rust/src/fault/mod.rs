@@ -1,0 +1,283 @@
+//! Deterministic fault injection: executor crashes, recoveries and
+//! stragglers, pre-generated from a `(FaultConfig, seed, n_executors)`
+//! triple so every fault run is exactly as reproducible as a fault-free
+//! one.
+//!
+//! The subsystem splits in two:
+//!
+//! * **Planning (this module)** — [`FaultPlan::generate`] draws, per
+//!   executor, a Poisson process of incidents over `[0, horizon]`. Each
+//!   incident is either a *straggle* (in-flight work on the executor
+//!   stretches by the config's slowdown factor, queued-but-unstarted
+//!   bookings are returned to the scheduler) or a *crash* (every
+//!   unfinished booking on the executor is lost; transient crashes
+//!   recover after an exponential outage, permanent ones never do). Each
+//!   executor draws from its own forked sub-stream of the master fault
+//!   stream, so plans are stable under changes to other executors' draws.
+//! * **Recovery (sim/state.rs)** — `SimState::apply_crash` /
+//!   `apply_straggle` cancel the affected bookings, roll back every
+//!   incremental cache, promote surviving duplicate copies to primary
+//!   (duplication-as-fault-tolerance: a task with a live copy elsewhere
+//!   needs no rescheduling), and re-enqueue truly lost tasks onto the
+//!   executable frontier for the scheduler to place again.
+//!
+//! Completed copies survive a crash: the model assumes task outputs are
+//! persisted off-executor once a copy finishes (the usual shuffle-to-
+//! distributed-store assumption), so only unfinished work is lost.
+
+use crate::config::FaultConfig;
+use crate::util::rng::{Rng, STREAM_FAULT};
+
+/// What happens to an executor at a fault event's time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The executor goes down, losing all unfinished bookings. `recovery`
+    /// is the absolute time it comes back up; `None` means permanent.
+    Crash { recovery: Option<f64> },
+    /// In-flight work on the executor stretches: its remaining duration
+    /// is multiplied by `factor`; queued bookings return to the frontier.
+    Straggle { factor: f64 },
+}
+
+/// One pre-generated fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub exec: usize,
+    pub time: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, time-sorted fault schedule for one simulation run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan — attaching it to a simulator is bit-identical to
+    /// attaching nothing.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Pre-generate the fault schedule for `n_exec` executors. Same
+    /// `(cfg, n_exec, seed)` → identical plan, regardless of what else
+    /// the simulation does. If the draw would leave *every* executor
+    /// permanently dead, the latest permanent crash is demoted to a
+    /// transient one (outage = `mttr`), so a workload always retains at
+    /// least one executor to finish on.
+    pub fn generate(cfg: &FaultConfig, n_exec: usize, seed: u64) -> FaultPlan {
+        cfg.validate().expect("invalid fault config");
+        if cfg.is_none() || n_exec == 0 {
+            return FaultPlan::none();
+        }
+        let mean_gap = 1.0 / cfg.crash_rate;
+        let mut root = Rng::stream(seed, STREAM_FAULT);
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut permanent: Vec<usize> = Vec::new(); // indices into `events`
+        for exec in 0..n_exec {
+            let mut rng = root.fork(exec as u64);
+            let mut t = rng.exponential(mean_gap);
+            while t < cfg.horizon {
+                if rng.chance(cfg.straggler_prob) {
+                    events.push(FaultEvent {
+                        exec,
+                        time: t,
+                        kind: FaultKind::Straggle {
+                            factor: cfg.slowdown,
+                        },
+                    });
+                    t += rng.exponential(mean_gap);
+                } else if rng.chance(cfg.p_permanent) {
+                    permanent.push(events.len());
+                    events.push(FaultEvent {
+                        exec,
+                        time: t,
+                        kind: FaultKind::Crash { recovery: None },
+                    });
+                    break; // nothing further can happen to a dead executor
+                } else {
+                    // Transient outage; the next incident can only occur
+                    // after the executor is back up.
+                    let up = t + rng.exponential(cfg.mttr).max(1e-3);
+                    events.push(FaultEvent {
+                        exec,
+                        time: t,
+                        kind: FaultKind::Crash { recovery: Some(up) },
+                    });
+                    t = up + rng.exponential(mean_gap);
+                }
+            }
+        }
+        // Keep the cluster schedulable: demote the latest permanent crash
+        // when every executor drew one.
+        if permanent.len() == n_exec && n_exec > 0 {
+            let &last = permanent
+                .iter()
+                .max_by(|&&a, &&b| {
+                    events[a]
+                        .time
+                        .total_cmp(&events[b].time)
+                        .then(events[a].exec.cmp(&events[b].exec))
+                })
+                .expect("non-empty permanent list");
+            let t = events[last].time;
+            events[last].kind = FaultKind::Crash {
+                recovery: Some(t + cfg.mttr),
+            };
+        }
+        // Time order with a deterministic executor tie-break — the order
+        // the simulator will inject them in.
+        events.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.exec.cmp(&b.exec)));
+        FaultPlan { events }
+    }
+
+    /// Crash count in the plan (transient + permanent).
+    pub fn n_crashes(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Crash { .. }))
+            .count()
+    }
+
+    /// Straggle count in the plan.
+    pub fn n_straggles(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Straggle { .. }))
+            .count()
+    }
+}
+
+/// Running totals of fault activity inside one `SimState`, for reports
+/// and the robustness sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Crash events processed (transient + permanent).
+    pub n_crashes: usize,
+    /// Straggle events processed.
+    pub n_straggles: usize,
+    /// Booked copies cancelled (directly lost + cascade-invalidated).
+    pub n_cancelled: usize,
+    /// Tasks that lost every copy and were re-enqueued for rescheduling.
+    pub n_requeued: usize,
+    /// Tasks whose primary copy was lost but a surviving duplicate copy
+    /// was promoted to primary — recovered without rescheduling.
+    pub n_dup_survived: usize,
+}
+
+/// Outcome of one recovery pass (one crash or straggle), echoed to
+/// service masters answering a `report_failure` request.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RecoveryOutcome {
+    /// Copies cancelled by this pass.
+    pub cancelled: usize,
+    /// Tasks returned to the executable frontier.
+    pub requeued: usize,
+    /// Tasks saved by promoting a surviving duplicate copy.
+    pub survived: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_plan_is_empty() {
+        let plan = FaultPlan::generate(&FaultConfig::none(), 8, 42);
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::none());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let cfg = FaultConfig::with_rate(5e-3);
+        let a = FaultPlan::generate(&cfg, 6, 7);
+        let b = FaultPlan::generate(&cfg, 6, 7);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "5e-3 over 10k s must draw incidents");
+        for w in a.events.windows(2) {
+            assert!(w[0].time <= w[1].time, "plan must be time-sorted");
+        }
+        let c = FaultPlan::generate(&cfg, 6, 8);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn transient_recovery_follows_the_crash() {
+        let mut cfg = FaultConfig::with_rate(1e-2);
+        cfg.p_permanent = 0.0;
+        cfg.straggler_prob = 0.0;
+        let plan = FaultPlan::generate(&cfg, 4, 3);
+        assert!(plan.n_crashes() > 0);
+        for e in &plan.events {
+            match e.kind {
+                FaultKind::Crash { recovery } => {
+                    let up = recovery.expect("p_permanent = 0 → transient");
+                    assert!(up > e.time);
+                }
+                FaultKind::Straggle { .. } => panic!("straggler_prob = 0"),
+            }
+        }
+    }
+
+    #[test]
+    fn per_executor_incidents_never_overlap_outages() {
+        let cfg = FaultConfig::with_rate(1e-2);
+        let plan = FaultPlan::generate(&cfg, 5, 11);
+        for exec in 0..5 {
+            let mut up_until = 0.0f64;
+            let mut dead = false;
+            for e in plan.events.iter().filter(|e| e.exec == exec) {
+                assert!(!dead, "events after a permanent crash on {exec}");
+                assert!(
+                    e.time >= up_until,
+                    "incident at {} inside outage ending {up_until}",
+                    e.time
+                );
+                if let FaultKind::Crash { recovery } = e.kind {
+                    match recovery {
+                        Some(up) => up_until = up,
+                        None => dead = true,
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn never_all_permanently_dead() {
+        // Force permanent crashes: with p_permanent = 1 every executor's
+        // first crash would be final; the demotion rule must keep one
+        // executor recoverable.
+        let mut cfg = FaultConfig::with_rate(1e-2);
+        cfg.p_permanent = 1.0;
+        cfg.straggler_prob = 0.0;
+        for seed in 0..10u64 {
+            let plan = FaultPlan::generate(&cfg, 4, seed);
+            let perm = plan
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, FaultKind::Crash { recovery: None }))
+                .count();
+            assert!(perm < 4, "seed {seed}: all executors permanently dead");
+        }
+    }
+
+    #[test]
+    fn straggles_carry_the_config_factor() {
+        let mut cfg = FaultConfig::with_rate(1e-2);
+        cfg.straggler_prob = 1.0;
+        cfg.slowdown = 2.5;
+        let plan = FaultPlan::generate(&cfg, 3, 5);
+        assert!(plan.n_straggles() > 0);
+        assert_eq!(plan.n_crashes(), 0);
+        for e in &plan.events {
+            assert_eq!(e.kind, FaultKind::Straggle { factor: 2.5 });
+        }
+    }
+}

@@ -50,6 +50,7 @@ pub mod cluster;
 pub mod config;
 pub mod dag;
 pub mod exp;
+pub mod fault;
 pub mod metrics;
 pub mod policy;
 pub mod rl;
@@ -64,9 +65,10 @@ pub mod workload;
 pub mod prelude {
     pub use crate::cluster::{Cluster, Executor};
     pub use crate::config::{
-        ClusterConfig, ExperimentConfig, SchedMode, TrainConfig, WorkloadConfig,
+        ClusterConfig, ExperimentConfig, FaultConfig, SchedMode, TrainConfig, WorkloadConfig,
     };
     pub use crate::dag::{Job, JobId, Task, TaskId, TaskRef};
+    pub use crate::fault::{FaultPlan, FaultStats};
     pub use crate::metrics::{ScheduleReport, SuiteReport};
     pub use crate::policy::{PolicyNet, RustPolicy};
     pub use crate::sched::{

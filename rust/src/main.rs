@@ -17,12 +17,15 @@ USAGE:
   lachesis workload  --jobs N [--mode batch|continuous] [--seed S] [--out trace.json]
   lachesis schedule  --algo NAME [--jobs N] [--trace trace.json] [--seed S]
                      [--executors M] [--validate] [--backend pjrt|rust]
+                     [--fault-rate R]   (inject crashes/stragglers at R per exec/s)
   lachesis train     [--episodes N] [--agents A] [--seed S] [--decima]
                      [--artifacts DIR] [--out checkpoints/lachesis.bin]
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
   lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K]
                      [--threads N|auto] [--backend pjrt|rust]
   lachesis ablate    [--seeds K] [--threads N|auto]
+  lachesis faults    [--rates R1,R2,..] [--jobs N] [--seeds K]
+                     [--threads N|auto]   (robustness sweep vs failure rate)
   lachesis info      [--artifacts DIR]
 
 Algorithms: FIFO-DEFT SJF-DEFT HRRN-DEFT HighRankUp-DEFT HEFT CPOP DLS TDCA
@@ -60,6 +63,7 @@ fn run() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        Some("faults") => cmd_faults(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print!("{USAGE}");
@@ -107,6 +111,21 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let src = policy_source(args);
     let mut sched = exp::build_scheduler(algo, &src, seed)?;
     let mut sim = Simulator::new(cluster, workload);
+    let fault_rate = args.f64_opt("fault-rate", 0.0)?;
+    if !fault_rate.is_finite() || fault_rate < 0.0 {
+        bail!("--fault-rate must be finite and non-negative, got {fault_rate}");
+    }
+    if fault_rate > 0.0 {
+        let fcfg = lachesis::config::FaultConfig::with_rate(fault_rate);
+        let plan =
+            lachesis::fault::FaultPlan::generate(&fcfg, sim.state.cluster.len(), seed);
+        println!(
+            "fault plan: {} crashes, {} straggles (rate {fault_rate}/exec/s, seed {seed})",
+            plan.n_crashes(),
+            plan.n_straggles()
+        );
+        sim.inject_faults(&plan);
+    }
     let report = sim.run(sched.as_mut())?;
     if args.flag("gantt") {
         println!("{}", lachesis::metrics::gantt::render(&sim.state, 100));
@@ -180,6 +199,33 @@ fn cmd_train(args: &Args) -> Result<()> {
         let summary = exp::fig4(&cfg, artifacts, out)?;
         println!("{summary}");
     }
+    Ok(())
+}
+
+/// The fault-robustness sweep (`exp::fault_sweep`): makespan degradation
+/// and recovery counts per scheduler per failure rate.
+fn cmd_faults(args: &Args) -> Result<()> {
+    let seeds = args.usize_opt("seeds", 5)?;
+    let jobs = args.usize_opt("jobs", 20)?;
+    let threads = args.threads_opt(1)?;
+    let rates: Vec<f64> = match args.opt("rates") {
+        None => exp::FAULT_RATES.to_vec(),
+        Some(spec) => spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--rates expects numbers, got '{s}'"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    // Reject bad rates here with a CLI error instead of panicking inside
+    // a sweep worker thread (FaultConfig::validate would `expect`).
+    if let Some(bad) = rates.iter().find(|r| !r.is_finite() || **r < 0.0) {
+        bail!("--rates must be finite and non-negative, got {bad}");
+    }
+    let out = exp::fault_sweep(&policy_source(args), &rates, jobs, seeds, threads)?;
+    println!("{out}");
     Ok(())
 }
 

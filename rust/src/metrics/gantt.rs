@@ -1,15 +1,19 @@
 //! ASCII Gantt-chart rendering of a completed schedule — invaluable when
-//! debugging duplication decisions and executor contention
-//! (`lachesis schedule --gantt`).
+//! debugging duplication decisions, executor contention, and fault
+//! recovery (`lachesis schedule --gantt`).
 
 use crate::sim::SimState;
 
 /// Render the executor timelines as an ASCII Gantt chart. `width` is the
 /// number of character columns for the time axis. Tasks are labeled
-//  `j<job>.<node>`; duplicated copies get a trailing `'`.
+//  `j<job>.<node>`; duplicated copies get a trailing `'`, requeued
+//  tasks (re-placed after losing all copies to a fault) a trailing `!`. Fault blackout
+//  windows render as `x` bands; a permanently-dead executor shows `x`
+//  from its crash to the horizon.
 pub fn render(state: &SimState, width: usize) -> String {
     let width = width.clamp(20, 400);
     let horizon = state.horizon.max(1e-9);
+    let any_faults = state.faults.n_crashes > 0 || state.faults.n_straggles > 0;
     let mut out = String::new();
     out.push_str(&format!(
         "schedule horizon {:.2}s — {} executors, {} tasks, {} duplicates, {} booking\n",
@@ -19,28 +23,60 @@ pub fn render(state: &SimState, width: usize) -> String {
         state.n_duplicates,
         state.sched_mode.as_str(),
     ));
+    if any_faults {
+        out.push_str(&format!(
+            "faults: {} crashes, {} straggles — {} copies cancelled, {} tasks \
+             requeued, {} saved by duplicates\n",
+            state.faults.n_crashes,
+            state.faults.n_straggles,
+            state.faults.n_cancelled,
+            state.faults.n_requeued,
+            state.faults.n_dup_survived,
+        ));
+    }
+    let col = |t: f64| ((t / horizon) * width as f64).floor() as usize;
     for (e, log) in state.exec_log.iter().enumerate() {
         let mut row = vec![b' '; width];
         let mut labels: Vec<(usize, String)> = Vec::new();
+        // Blackout bands first, so task glyphs (which never overlap a
+        // blackout) stay visible on top of adjacent cells.
+        let paint = |s: f64, f: f64, row: &mut Vec<u8>| {
+            let c0 = col(s);
+            let c1 = (((f / horizon) * width as f64).ceil() as usize).min(width);
+            for c in c0..c1.max(c0 + 1).min(width) {
+                row[c] = b'x';
+            }
+        };
+        for &(s, f) in state.blackouts(e) {
+            paint(s, f, &mut row);
+        }
+        if let Some(t_down) = state.down_since(e) {
+            // Still down: permanent crash (or unrecovered transient) —
+            // shade through the horizon.
+            paint(t_down, state.horizon.max(t_down), &mut row);
+        }
         let mut sorted = log.clone();
         sorted.sort_by(|a, b| a.1.start.total_cmp(&b.1.start));
         for (task, pl) in &sorted {
-            let c0 = ((pl.start / horizon) * width as f64).floor() as usize;
+            let c0 = col(pl.start);
             let c1 = (((pl.finish / horizon) * width as f64).ceil() as usize).min(width);
             for c in c0..c1.max(c0 + 1).min(width) {
                 row[c] = if pl.duplicate { b'+' } else { b'#' };
             }
             let tag = format!(
-                "j{}.{}{}",
+                "j{}.{}{}{}",
                 task.job,
                 task.node,
-                if pl.duplicate { "'" } else { "" }
+                if pl.duplicate { "'" } else { "" },
+                if state.was_requeued(*task) { "!" } else { "" }
             );
             labels.push((c0, tag));
         }
         let speed = state.cluster.speed(e);
-        // Per-executor busy share of the horizon, from the timeline.
-        let busy_pct = 100.0 * state.timeline(e).busy_time() / horizon;
+        // Per-executor busy share of the horizon, from the timeline
+        // (outage windows are not work).
+        let busy_pct =
+            100.0 * (state.timeline(e).busy_time() - state.blackout_time(e)) / horizon;
         out.push_str(&format!(
             "e{e:<3} {speed:.1}GHz {busy_pct:>3.0}% |{}|",
             String::from_utf8(row).unwrap()
@@ -64,6 +100,9 @@ pub fn render(state: &SimState, width: usize) -> String {
         state.horizon
     ));
     out.push_str("   ('#' primary copy, '+' duplicated copy)\n");
+    if any_faults {
+        out.push_str("   ('x' executor outage, '!' task requeued by a fault)\n");
+    }
     out
 }
 
@@ -110,6 +149,26 @@ mod tests {
         for line in narrow.lines().chain(wide.lines()) {
             assert!(line.len() < 500);
         }
+    }
+
+    #[test]
+    fn blackouts_and_reexecutions_are_marked() {
+        let cluster = Cluster::homogeneous(2, 1.0, 10.0);
+        let job = crate::dag::Job::new(0, "par", 0.0, vec![4.0, 4.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 });
+        // Executor 0 dies mid-flight; its task re-executes on executor 1.
+        st.apply_crash(0, 1.0, Some(6.0));
+        st.wall = 1.0;
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 1 });
+        st.validate().unwrap();
+        let g = render(&st, 60);
+        assert!(g.contains('x'), "blackout band rendered: {g}");
+        assert!(g.contains("j0.0!"), "requeued task marked: {g}");
+        assert!(g.contains("1 crashes"), "fault summary line: {g}");
+        assert!(g.contains("outage"), "fault legend: {g}");
     }
 
     #[test]

@@ -27,10 +27,13 @@ pub struct ScheduleReport {
     pub avg_jct: f64,
     /// Number of duplicated task copies DEFT created.
     pub n_duplicates: usize,
-    /// Busy time / (executors × makespan).
+    /// Busy time / (executors × makespan). Fault blackout windows are
+    /// not busy time.
     pub utilization: f64,
     /// Per-decision scheduler latency in milliseconds.
     pub decision_ms: Recorder,
+    /// Fault activity during the run (all zero on a reliable cluster).
+    pub faults: crate::fault::FaultStats,
 }
 
 impl ScheduleReport {
@@ -51,9 +54,11 @@ impl ScheduleReport {
             slrs.push(jct / cp.max(1e-12));
         }
         // Busy time straight off the executor timelines (identical to
-        // summing the schedule log — `validate` pins them together).
+        // summing the schedule log — `validate` pins them together),
+        // minus fault blackout windows, which occupy the timeline but do
+        // no work. Subtracting zero keeps fault-free runs bit-identical.
         let busy: f64 = (0..state.cluster.len())
-            .map(|e| state.timeline(e).busy_time())
+            .map(|e| state.timeline(e).busy_time() - state.blackout_time(e))
             .sum();
         let utilization = if makespan > 0.0 {
             busy / (state.cluster.len() as f64 * makespan)
@@ -71,6 +76,7 @@ impl ScheduleReport {
             n_duplicates: state.n_duplicates,
             utilization,
             decision_ms,
+            faults: state.faults,
         }
     }
 }

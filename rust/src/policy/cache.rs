@@ -137,6 +137,7 @@ impl EncoderCache {
         let mut removals: Vec<TaskRef> = Vec::new();
         let mut rebuild =
             self.enc.is_none() || self.enc.as_ref().map_or(false, |e| e.truncated);
+        let mut reseed = false;
         for ev in events {
             match *ev {
                 EncEvent::Assigned { task } => removals.push(task),
@@ -144,10 +145,22 @@ impl EncoderCache {
                     self.pending.push(PendingFinish { finish, task })
                 }
                 EncEvent::Arrived { .. } => rebuild = true,
+                EncEvent::Invalidated => {
+                    // A fault-recovery pass cancelled or re-timed
+                    // bookings: both the encoding and the pending
+                    // finish-heap may reference copies that no longer
+                    // exist (or finishes that moved). Re-derive both
+                    // from live state.
+                    rebuild = true;
+                    reseed = true;
+                }
             }
         }
         self.cursor = state.enc_log_end();
 
+        if reseed {
+            self.reseed_pending(state);
+        }
         if !rebuild {
             rebuild = !self.patch(state, &removals);
         }

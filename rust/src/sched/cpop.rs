@@ -63,6 +63,9 @@ impl Scheduler for CpopScheduler {
     }
 
     fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        if !state.any_executor_available() {
+            return Ok(None); // wait out the outage
+        }
         // Select by priority rank_up + rank_down.
         let mut best: Option<(f64, TaskRef)> = None;
         for &t in state.executable() {

@@ -42,6 +42,9 @@ pub fn deft(state: &SimState, task: TaskRef) -> (Allocation, f64) {
     let parents = &state.jobs[task.job].parents[task.node];
     if !parents.is_empty() {
         for e in 0..state.cluster.len() {
+            if !state.exec_available(e) {
+                continue; // never duplicate onto a down executor
+            }
             for edge in parents {
                 let f = cpeft(state, task, edge.other, e);
                 if f + 1e-12 < best {

@@ -63,6 +63,9 @@ impl Scheduler for DlsScheduler {
     }
 
     fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        if !state.any_executor_available() {
+            return Ok(None); // wait out the outage
+        }
         let v_avg = state.v_avg();
         let tasks: Vec<TaskRef> = state.executable().to_vec();
         let mut best: Option<(f64, TaskRef, usize)> = None;
@@ -71,6 +74,9 @@ impl Scheduler for DlsScheduler {
             let sl = self.sl[t.job].as_ref().unwrap()[t.node];
             let w = state.task_compute(t);
             for r in 0..state.cluster.len() {
+                if !state.exec_available(r) {
+                    continue;
+                }
                 // Achievable start on r under the state's booking mode
                 // (append tail or earliest feasible gap).
                 let start = state.plan_direct(t, r).0;

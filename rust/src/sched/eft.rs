@@ -23,11 +23,17 @@ pub fn eft(state: &SimState, task: TaskRef, exec: usize) -> f64 {
     state.plan_direct(task, exec).1
 }
 
-/// The executor minimizing EFT, with the winning finish time.
+/// The *available* executor minimizing EFT, with the winning finish
+/// time. Down executors (fault outages) are never candidates; with every
+/// executor down this returns `(0, ∞)` — callers guard on
+/// [`SimState::any_executor_available`] before booking.
 pub fn best_eft(state: &SimState, task: TaskRef) -> (usize, f64) {
     let mut best_exec = 0;
     let mut best = f64::INFINITY;
     for e in 0..state.cluster.len() {
+        if !state.exec_available(e) {
+            continue;
+        }
         let f = eft(state, task, e);
         if f < best {
             best = f;

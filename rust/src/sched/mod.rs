@@ -114,6 +114,11 @@ impl<S: TaskSelector, A: Allocator> Scheduler for TwoPhase<S, A> {
     }
 
     fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        // Every executor down (fault outage): pass and wait for a
+        // recovery event rather than booking onto a dead cluster.
+        if !state.any_executor_available() {
+            return Ok(None);
+        }
         match self.selector.select(state)? {
             None => Ok(None),
             Some(task) => {

@@ -19,7 +19,7 @@
 //! which matches how the paper could only run it in batch mode.
 
 use super::deft::cpeft;
-use super::eft::eft;
+use super::eft::{best_eft, eft};
 use super::Scheduler;
 use crate::dag::TaskRef;
 use crate::sim::{Allocation, SimState};
@@ -116,7 +116,10 @@ impl TdcaScheduler {
             let mut cluster_exec: Vec<usize> = vec![0; clusters.len()];
             for &cid in &order {
                 let w = work(&clusters[cid]);
+                // Down executors never receive a cluster; `step` guards
+                // against the all-down case before replanning.
                 let best = (0..n_exec)
+                    .filter(|&e| state.exec_available(e))
                     .min_by(|&a, &b| {
                         let la = exec_load[a] + w / state.cluster.speed(a);
                         let lb = exec_load[b] + w / state.cluster.speed(b);
@@ -156,6 +159,9 @@ impl Scheduler for TdcaScheduler {
     }
 
     fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        if !state.any_executor_available() {
+            return Ok(None); // wait out the outage before (re)planning
+        }
         self.replan(state);
         // Emit the first plan entry that is currently executable (plans are
         // topo-ordered per job, so the head is almost always executable;
@@ -167,7 +173,12 @@ impl Scheduler for TdcaScheduler {
         let Some(idx) = idx else {
             return Ok(None);
         };
-        let (task, exec) = self.plan.remove(idx).unwrap();
+        let (task, mut exec) = self.plan.remove(idx).unwrap();
+        // The planned executor may have crashed since the plan was made:
+        // fall back to the best available placement for this task.
+        if !state.exec_available(exec) {
+            exec = best_eft(state, task).0;
+        }
         // Phase 3: duplicate the critical parent onto `exec` if it beats
         // the plain placement (TDCA's duplication rule, via CPEFT).
         let direct = eft(state, task, exec);

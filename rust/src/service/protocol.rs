@@ -10,12 +10,21 @@
 //!   event-driven semantics).
 //! * `{"type":"task_complete", "job": j, "node": n, "time": t}`  (heartbeat)
 //! * `{"type":"schedule", "time": t}` — ask for assignments at wall time t
+//! * `{"type":"report_failure", "exec": k, "time": t[, "recovery": tr]}` —
+//!   the master observed executor `k` crash at `t`; unfinished
+//!   assignments on it are rolled back (tasks with a surviving duplicate
+//!   copy are promoted in place, the rest re-enter the frontier for the
+//!   next `schedule`). With `recovery` the executor rejoins once the
+//!   wall clock passes `tr`; without it the crash is permanent.
 //! * `{"type":"status"}` / `{"type":"shutdown"}`
 //!
-//! Responses mirror them with `"ok"` / `"assignments"` / `"status"`. The
-//! status response reports `"pending"`: the number of submitted jobs
-//! still waiting for their arrival time. `shutdown` stops the whole
-//! server — every master connection, not just the requesting one.
+//! Responses mirror them with `"ok"` / `"assignments"` / `"status"`;
+//! `report_failure` answers `"recovery"` with the rollback counts
+//! (`cancelled`/`requeued`/`survived`). The status response reports
+//! `"pending"`: the number of submitted jobs still waiting for their
+//! arrival time, and `"down"`: executors currently unavailable.
+//! `shutdown` stops the whole server — every master connection, not just
+//! the requesting one. See `docs/protocol.md` for the full wire contract.
 
 use crate::dag::Job;
 use crate::sim::Allocation;
@@ -38,6 +47,13 @@ pub enum Request {
     },
     Schedule {
         time: f64,
+    },
+    /// Executor `exec` crashed at `time`; `recovery` is when it rejoins
+    /// (`None` = permanent).
+    ReportFailure {
+        exec: usize,
+        time: f64,
+        recovery: Option<f64>,
     },
     Status,
     Shutdown,
@@ -71,6 +87,17 @@ pub enum Response {
         executable: usize,
         /// Jobs submitted with a future arrival, not yet activated.
         pending: usize,
+        /// Executors currently down (crashed, not yet recovered).
+        down: usize,
+    },
+    /// Rollback counts answering a `report_failure`.
+    Recovery {
+        /// Booked copies cancelled by the rollback.
+        cancelled: usize,
+        /// Tasks returned to the frontier for rescheduling.
+        requeued: usize,
+        /// Tasks saved by promoting a surviving duplicate copy.
+        survived: usize,
     },
     Error(String),
 }
@@ -108,6 +135,21 @@ impl Request {
                 ("type", Json::from("schedule")),
                 ("time", Json::from(*time)),
             ]),
+            Request::ReportFailure {
+                exec,
+                time,
+                recovery,
+            } => {
+                let mut o = Json::from_pairs(vec![
+                    ("type", Json::from("report_failure")),
+                    ("exec", Json::from(*exec)),
+                    ("time", Json::from(*time)),
+                ]);
+                if let Some(r) = recovery {
+                    o.set("recovery", Json::from(*r));
+                }
+                o
+            }
             Request::Status => Json::from_pairs(vec![("type", Json::from("status"))]),
             Request::Shutdown => Json::from_pairs(vec![("type", Json::from("shutdown"))]),
         }
@@ -155,6 +197,24 @@ impl Request {
             "schedule" => Ok(Request::Schedule {
                 time: v.req_f64("time").map_err(|e| anyhow!("{e}"))?,
             }),
+            "report_failure" => {
+                // Absent (or explicit null) means permanent; a present
+                // non-numeric value is a malformed request, not a
+                // permanent crash — silently dropping it would kill the
+                // executor forever on a client serialization bug.
+                let recovery = match v.get("recovery") {
+                    None | Some(Json::Null) => None,
+                    Some(r) => Some(
+                        r.as_f64()
+                            .ok_or_else(|| anyhow!("recovery must be a number"))?,
+                    ),
+                };
+                Ok(Request::ReportFailure {
+                    exec: v.req_usize("exec").map_err(|e| anyhow!("{e}"))?,
+                    time: v.req_f64("time").map_err(|e| anyhow!("{e}"))?,
+                    recovery,
+                })
+            }
             "status" => Ok(Request::Status),
             "shutdown" => Ok(Request::Shutdown),
             other => bail!("unknown request type '{other}'"),
@@ -214,6 +274,7 @@ impl Response {
                 horizon,
                 executable,
                 pending,
+                down,
             } => Json::from_pairs(vec![
                 ("type", Json::from("status")),
                 ("jobs", Json::from(*jobs)),
@@ -222,6 +283,17 @@ impl Response {
                 ("horizon", Json::from(*horizon)),
                 ("executable", Json::from(*executable)),
                 ("pending", Json::from(*pending)),
+                ("down", Json::from(*down)),
+            ]),
+            Response::Recovery {
+                cancelled,
+                requeued,
+                survived,
+            } => Json::from_pairs(vec![
+                ("type", Json::from("recovery")),
+                ("cancelled", Json::from(*cancelled)),
+                ("requeued", Json::from(*requeued)),
+                ("survived", Json::from(*survived)),
             ]),
             Response::Error(msg) => Json::from_pairs(vec![
                 ("type", Json::from("error")),
@@ -264,6 +336,13 @@ impl Response {
                 executable: v.get("executable").and_then(Json::as_usize).unwrap_or(0),
                 // Absent in pre-deferred-arrival peers: default 0.
                 pending: v.get("pending").and_then(Json::as_usize).unwrap_or(0),
+                // Absent in pre-fault peers: default 0 (all executors up).
+                down: v.get("down").and_then(Json::as_usize).unwrap_or(0),
+            }),
+            "recovery" => Ok(Response::Recovery {
+                cancelled: v.req_usize("cancelled").map_err(|e| anyhow!("{e}"))?,
+                requeued: v.req_usize("requeued").map_err(|e| anyhow!("{e}"))?,
+                survived: v.req_usize("survived").map_err(|e| anyhow!("{e}"))?,
             }),
             "error" => Ok(Response::Error(
                 v.req_str("message").map_err(|e| anyhow!("{e}"))?.to_string(),
@@ -320,6 +399,16 @@ mod tests {
                 time: 9.0,
             },
             Request::Schedule { time: 10.0 },
+            Request::ReportFailure {
+                exec: 3,
+                time: 12.5,
+                recovery: Some(40.0),
+            },
+            Request::ReportFailure {
+                exec: 1,
+                time: 2.0,
+                recovery: None,
+            },
             Request::Status,
             Request::Shutdown,
         ];
@@ -349,6 +438,12 @@ mod tests {
                 horizon: 42.0,
                 executable: 3,
                 pending: 1,
+                down: 2,
+            },
+            Response::Recovery {
+                cancelled: 4,
+                requeued: 2,
+                survived: 1,
             },
             Response::Error("boom".into()),
         ];
@@ -375,5 +470,25 @@ mod tests {
         let v = Json::parse(r#"{"type": "nope"}"#).unwrap();
         assert!(Request::from_json(&v).is_err());
         assert!(Response::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn report_failure_recovery_must_be_numeric_or_null() {
+        let bad = Json::parse(
+            r#"{"type":"report_failure","exec":3,"time":42.0,"recovery":"72.0"}"#,
+        )
+        .unwrap();
+        assert!(
+            Request::from_json(&bad).is_err(),
+            "stringly-typed recovery must not decode as permanent"
+        );
+        let null = Json::parse(
+            r#"{"type":"report_failure","exec":3,"time":42.0,"recovery":null}"#,
+        )
+        .unwrap();
+        match Request::from_json(&null).unwrap() {
+            Request::ReportFailure { recovery: None, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

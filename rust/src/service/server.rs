@@ -44,32 +44,33 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 /// enough for very large submitted DAGs.
 const MAX_LINE_BYTES: usize = 8 << 20;
 
-/// A job submitted with a future arrival time, waiting for the wall
-/// clock to reach it. Min-heap by `(arrival, job)`.
+/// An id waiting for the wall clock to reach `time` — a deferred job
+/// arrival (`id` = job) or a crashed executor's recovery (`id` = exec).
+/// Min-heap by `(time, id)`.
 #[derive(Debug, Clone, Copy)]
-struct PendingArrival {
-    arrival: f64,
-    job: usize,
+struct Pending {
+    time: f64,
+    id: usize,
 }
 
-impl PartialEq for PendingArrival {
+impl PartialEq for Pending {
     fn eq(&self, other: &Self) -> bool {
-        self.arrival == other.arrival && self.job == other.job
+        self.time == other.time && self.id == other.id
     }
 }
-impl Eq for PendingArrival {}
-impl PartialOrd for PendingArrival {
+impl Eq for Pending {}
+impl PartialOrd for Pending {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for PendingArrival {
-    // Reversed: BinaryHeap is a max-heap, we pop the earliest arrival.
+impl Ord for Pending {
+    // Reversed: BinaryHeap is a max-heap, we pop the earliest time.
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         other
-            .arrival
-            .total_cmp(&self.arrival)
-            .then(other.job.cmp(&self.job))
+            .time
+            .total_cmp(&self.time)
+            .then(other.id.cmp(&self.id))
     }
 }
 
@@ -83,7 +84,10 @@ pub struct AgentCore {
     /// [`AgentCore::state`].
     state: SimState,
     scheduler: Box<dyn Scheduler + Send>,
-    pending: BinaryHeap<PendingArrival>,
+    pending: BinaryHeap<Pending>,
+    /// Transient crashes reported via `report_failure`, waiting for the
+    /// wall clock to reach their recovery time (`id` = executor).
+    recoveries: BinaryHeap<Pending>,
 }
 
 impl AgentCore {
@@ -92,20 +96,29 @@ impl AgentCore {
             state: SimState::new(cluster, Workload::new_empty()),
             scheduler,
             pending: BinaryHeap::new(),
+            recoveries: BinaryHeap::new(),
         }
     }
 
-    /// Advance the wall clock monotonically and activate every deferred
-    /// job whose arrival time has come — the service-side equivalent of
-    /// the simulator popping arrival events.
+    /// Advance the wall clock monotonically, bring recovered executors
+    /// back up, and activate every deferred job whose arrival time has
+    /// come — the service-side equivalent of the simulator popping
+    /// recovery and arrival events.
     pub fn advance_to(&mut self, time: f64) {
         self.state.advance_wall(time);
+        while let Some(r) = self.recoveries.peek() {
+            if r.time > self.state.wall {
+                break;
+            }
+            let r = self.recoveries.pop().expect("peeked entry exists");
+            self.state.mark_executor_up(r.id);
+        }
         while let Some(p) = self.pending.peek() {
-            if p.arrival > self.state.wall {
+            if p.time > self.state.wall {
                 break;
             }
             let p = self.pending.pop().expect("peeked entry exists");
-            self.state.mark_arrived(p.job);
+            self.state.mark_arrived(p.id);
         }
     }
 
@@ -132,7 +145,7 @@ impl AgentCore {
                     if arrival <= self.state.wall {
                         self.state.mark_arrived(id);
                     } else {
-                        self.pending.push(PendingArrival { arrival, job: id });
+                        self.pending.push(Pending { time: arrival, id });
                     }
                     Response::Ok { job_id: Some(id) }
                 }
@@ -184,6 +197,59 @@ impl AgentCore {
                 }
                 Response::Assignments(out)
             }
+            Request::ReportFailure {
+                exec,
+                time,
+                recovery,
+            } => {
+                if exec >= self.state.cluster.len() {
+                    return Response::Error(format!("executor {exec} out of range"));
+                }
+                if !time.is_finite() {
+                    return Response::Error("non-finite failure time".to_string());
+                }
+                if let Some(r) = recovery {
+                    if !r.is_finite() || r < time {
+                        return Response::Error(
+                            "recovery must be finite and no earlier than the failure"
+                                .to_string(),
+                        );
+                    }
+                }
+                // A stale report (time < wall) still takes effect now:
+                // the wall never moves backwards, so the rollback runs
+                // at the current clock.
+                self.advance_to(time);
+                let at = self.state.wall;
+                let recovery = recovery.map(|r| r.max(at));
+                // A duplicate report on an already-down executor is a
+                // no-op and must not schedule a recovery (the original
+                // report may have been permanent).
+                let was_up = self.state.exec_available(exec);
+                let out = self.state.apply_crash(exec, at, recovery);
+                if was_up {
+                    if let Some(r) = recovery {
+                        self.recoveries.push(Pending { time: r, id: exec });
+                    }
+                } else if recovery.is_none() {
+                    // Escalation: the master learned a transiently-down
+                    // executor is actually gone for good — cancel its
+                    // scheduled resurrection so no future request books
+                    // work onto a dead machine. (A re-report with a new
+                    // recovery time remains a no-op.)
+                    let kept: Vec<Pending> = self
+                        .recoveries
+                        .drain()
+                        .filter(|p| p.id != exec)
+                        .collect();
+                    self.recoveries = kept.into_iter().collect();
+                }
+                Response::Recovery {
+                    cancelled: out.cancelled,
+                    requeued: out.requeued,
+                    survived: out.survived,
+                }
+            }
             Request::Status => Response::Status {
                 jobs: self.state.jobs.len(),
                 assigned: self.state.n_assigned,
@@ -194,6 +260,7 @@ impl AgentCore {
                 // pending entry (submit either marks arrived or pushes;
                 // advance_to pops and marks in lockstep).
                 pending: self.pending.len(),
+                down: self.state.cluster.len() - self.state.cluster.n_available(),
             },
             Request::Shutdown => Response::Ok { job_id: None },
         }
@@ -554,6 +621,113 @@ mod tests {
         agent.advance_to(30.0);
         assert_eq!(agent.pending_jobs(), 0);
         assert_eq!(agent.state().n_unarrived(), 0);
+    }
+
+    /// `report_failure` rolls back unfinished assignments, the next
+    /// `schedule` re-places them off the dead executor, and a transient
+    /// crash rejoins once the wall clock passes its recovery time.
+    #[test]
+    fn report_failure_requeues_and_recovers() {
+        let cluster = Cluster::homogeneous(2, 1.0, 100.0);
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
+        agent.handle(Request::SubmitJob {
+            name: "j".into(),
+            arrival: 0.0,
+            computes: vec![4.0, 4.0],
+            edges: vec![],
+        });
+        let (e0, e1) = match agent.handle(Request::Schedule { time: 0.0 }) {
+            Response::Assignments(asgs) => {
+                assert_eq!(asgs.len(), 2);
+                (asgs[0].exec, asgs[1].exec)
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_ne!(e0, e1, "independent equal tasks spread across executors");
+        // Executor e0 dies at t=1 (in-flight task lost), back at t=10.
+        match agent.handle(Request::ReportFailure {
+            exec: e0,
+            time: 1.0,
+            recovery: Some(10.0),
+        }) {
+            Response::Recovery {
+                cancelled,
+                requeued,
+                survived,
+            } => {
+                assert_eq!(cancelled, 1);
+                assert_eq!(requeued, 1);
+                assert_eq!(survived, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match agent.handle(Request::Status) {
+            Response::Status { assigned, down, executable, .. } => {
+                assert_eq!(assigned, 1);
+                assert_eq!(down, 1);
+                assert_eq!(executable, 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Rescheduling places the lost task on the surviving executor.
+        match agent.handle(Request::Schedule { time: 1.0 }) {
+            Response::Assignments(asgs) => {
+                assert_eq!(asgs.len(), 1);
+                assert_eq!(asgs[0].exec, e1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        agent.state().validate().unwrap();
+        // Past the recovery time the executor is back.
+        agent.handle(Request::Schedule { time: 11.0 });
+        match agent.handle(Request::Status) {
+            Response::Status { down, .. } => assert_eq!(down, 0),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Bad reports are rejected.
+        assert!(matches!(
+            agent.handle(Request::ReportFailure {
+                exec: 99,
+                time: 0.0,
+                recovery: None
+            }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            agent.handle(Request::ReportFailure {
+                exec: 0,
+                time: 5.0,
+                recovery: Some(1.0)
+            }),
+            Response::Error(_)
+        ));
+    }
+
+    /// Escalating a transient crash to permanent cancels the scheduled
+    /// resurrection: the executor must stay down past the original
+    /// recovery time.
+    #[test]
+    fn permanent_rereport_cancels_pending_recovery() {
+        let cluster = Cluster::homogeneous(2, 1.0, 100.0);
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
+        agent.handle(Request::ReportFailure {
+            exec: 0,
+            time: 1.0,
+            recovery: Some(10.0),
+        });
+        agent.handle(Request::ReportFailure {
+            exec: 0,
+            time: 2.0,
+            recovery: None,
+        });
+        agent.handle(Request::Schedule { time: 20.0 });
+        match agent.handle(Request::Status) {
+            Response::Status { down, .. } => {
+                assert_eq!(down, 1, "escalated executor must not resurrect");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(!agent.state().exec_available(0));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use super::state::SimState;
 use crate::cluster::Cluster;
 use crate::dag::TaskRef;
+use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::ScheduleReport;
 use crate::sched::Scheduler;
 use crate::util::stats::Recorder;
@@ -14,13 +15,22 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
-/// A scheduling event (Algorithm 3's event set `E`).
+/// A scheduling event (Algorithm 3's event set `E`, extended with the
+/// fault subsystem's disruptions).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EventKind {
     /// A job arrives at the system.
     Arrival(usize),
     /// A task copy completes on its executor.
     Completion(TaskRef),
+    /// Executor `k` crashes, losing its unfinished bookings; it recovers
+    /// at the given absolute time (`None` = permanent).
+    ExecutorDown(usize, Option<f64>),
+    /// Executor `k` recovers from a transient crash.
+    ExecutorUp(usize),
+    /// Executor `k` straggles: in-flight work stretches by the factor,
+    /// queued bookings return to the scheduler.
+    Straggle(usize, f64),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -83,6 +93,33 @@ impl Simulator {
         sim
     }
 
+    /// Build a simulator with a pre-generated fault schedule attached.
+    pub fn with_faults(cluster: Cluster, workload: Workload, plan: &FaultPlan) -> Simulator {
+        let mut sim = Simulator::new(cluster, workload);
+        sim.inject_faults(plan);
+        sim
+    }
+
+    /// Queue every event of a fault plan. An empty plan queues nothing,
+    /// so the run is bit-identical to one with no plan at all. Transient
+    /// crashes queue their recovery immediately (same event heap, later
+    /// time), so the scheduler is re-invoked the moment capacity returns.
+    pub fn inject_faults(&mut self, plan: &FaultPlan) {
+        for ev in &plan.events {
+            match ev.kind {
+                FaultKind::Crash { recovery } => {
+                    self.push_event(ev.time, EventKind::ExecutorDown(ev.exec, recovery));
+                    if let Some(up) = recovery {
+                        self.push_event(up, EventKind::ExecutorUp(ev.exec));
+                    }
+                }
+                FaultKind::Straggle { factor } => {
+                    self.push_event(ev.time, EventKind::Straggle(ev.exec, factor));
+                }
+            }
+        }
+    }
+
     fn push_event(&mut self, time: f64, kind: EventKind) {
         assert!(
             time.is_finite(),
@@ -106,8 +143,26 @@ impl Simulator {
         while let Some(ev) = self.events.pop() {
             // Advance wall time monotonically (events can tie).
             self.state.advance_wall(ev.time);
-            if let EventKind::Arrival(job) = ev.kind {
-                self.state.mark_arrived(job);
+            match ev.kind {
+                EventKind::Arrival(job) => self.state.mark_arrived(job),
+                EventKind::Completion(_) => {}
+                EventKind::ExecutorDown(k, recovery) => {
+                    // Recovery pass: cancel, cascade, promote duplicates,
+                    // requeue — then fall through to the scheduling loop
+                    // so lost tasks are replaced at this very event.
+                    self.state.apply_crash(k, ev.time, recovery);
+                }
+                EventKind::ExecutorUp(k) => self.state.mark_executor_up(k),
+                EventKind::Straggle(k, factor) => {
+                    for (task, finish) in self.state.apply_straggle(k, ev.time, factor) {
+                        // The stretched copy finishes later than its
+                        // original completion event; re-announce it so
+                        // the wall clock visits the new finish too (the
+                        // stale event only advances the wall early,
+                        // which is harmless).
+                        self.push_event(finish, EventKind::Completion(task));
+                    }
+                }
             }
             // Scheduling loop: one decision per iteration until the
             // scheduler passes (Algorithm 3 line 9).
@@ -128,8 +183,27 @@ impl Simulator {
             }
         }
         if !self.state.all_assigned() {
+            // Name the stranded jobs — a bare count is useless when
+            // debugging multi-job continuous workloads.
+            let mut stranded: Vec<String> = Vec::new();
+            let mut more = 0usize;
+            for (ji, job) in self.state.jobs.iter().enumerate() {
+                let left = self.state.job_left_tasks(ji);
+                if left == 0 {
+                    continue;
+                }
+                if stranded.len() < 8 {
+                    stranded.push(format!("job {ji} '{}': {left}", job.name));
+                } else {
+                    more += 1;
+                }
+            }
+            let mut detail = stranded.join(", ");
+            if more > 0 {
+                detail.push_str(&format!(", … {more} more jobs"));
+            }
             bail!(
-                "scheduler '{}' left {} tasks unassigned",
+                "scheduler '{}' left {} tasks unassigned ({detail})",
                 scheduler.name(),
                 self.state.n_tasks_total() - self.state.n_assigned
             );

@@ -76,6 +76,35 @@ impl Frontier {
         }
     }
 
+    /// A task's assignment was rolled back (fault recovery): the inverse
+    /// of [`Frontier::assign`]. Children's unassigned-parent counters
+    /// re-increment (any child sitting in the frontier leaves it), and
+    /// `t` itself re-enters the frontier if its own counter is zero —
+    /// the caller guarantees `t`'s job has arrived and `t` is marked
+    /// unassigned again. Safe under any cascade order: a task whose
+    /// parent is rolled back first simply never re-enters (counter > 0),
+    /// and one rolled back before its parent is removed again when the
+    /// parent's rollback increments its counter.
+    pub fn unassign(&mut self, dag: &Job, t: TaskRef) {
+        let mut seen: Vec<NodeId> = Vec::new();
+        for e in &dag.children[t.node] {
+            if seen.contains(&e.other) {
+                continue;
+            }
+            seen.push(e.other);
+            let c = &mut self.pending[t.job][e.other];
+            if *c == 0 {
+                // The child was executable (or assigned — then this
+                // remove is a no-op); it loses executability now.
+                self.remove(TaskRef::new(t.job, e.other));
+            }
+            *c += 1;
+        }
+        if self.pending[t.job][t.node] == 0 {
+            self.insert(t);
+        }
+    }
+
     /// The executable set, sorted.
     pub fn items(&self) -> &[TaskRef] {
         &self.items
@@ -145,6 +174,56 @@ mod tests {
         assert_eq!(f.items(), &[TaskRef::new(0, 3)]);
         f.assign(&job, TaskRef::new(0, 3));
         assert!(f.items().is_empty());
+    }
+
+    #[test]
+    fn unassign_reverses_assign() {
+        // A leaf rollback (node 1 lost its copies, its children were
+        // never assigned) and the forward re-run afterwards. The repair
+        // cascade guarantees no task stays assigned under an unassigned
+        // parent, so rollbacks always arrive leaf-first per chain.
+        let job = diamond();
+        let mut f = Frontier::new();
+        f.add_job(&job);
+        f.activate_job(0);
+        f.assign(&job, TaskRef::new(0, 0));
+        f.assign(&job, TaskRef::new(0, 1));
+        assert_eq!(f.items(), &[TaskRef::new(0, 2)]);
+        f.unassign(&job, TaskRef::new(0, 1));
+        assert_eq!(f.items(), &[TaskRef::new(0, 1), TaskRef::new(0, 2)]);
+        assert_eq!(f.unassigned_parents(TaskRef::new(0, 3)), 2);
+        // Re-assigning walks the same admission path as the fresh run.
+        f.assign(&job, TaskRef::new(0, 1));
+        f.assign(&job, TaskRef::new(0, 2));
+        assert_eq!(f.items(), &[TaskRef::new(0, 3)]);
+    }
+
+    #[test]
+    fn unassign_cascade_is_order_insensitive() {
+        // A chain rollback (0, 1, 3 roll back). The cascade may settle
+        // tasks parent-first or child-first; both orders must land on
+        // the same frontier.
+        let job = diamond();
+        let run = |order: &[usize]| {
+            let mut f = Frontier::new();
+            f.add_job(&job);
+            f.activate_job(0);
+            for n in [0usize, 1, 2, 3] {
+                f.assign(&job, TaskRef::new(0, n));
+            }
+            assert!(f.items().is_empty());
+            for &n in order {
+                f.unassign(&job, TaskRef::new(0, n));
+            }
+            (f.items().to_vec(), f.unassigned_parents(TaskRef::new(0, 3)))
+        };
+        let parent_first = run(&[0, 1, 3]);
+        let child_first = run(&[3, 1, 0]);
+        assert_eq!(parent_first, child_first);
+        // Only node 0 is executable (node 1 waits on it; node 3 waits on
+        // node 1; node 2 is still assigned).
+        assert_eq!(parent_first.0, vec![TaskRef::new(0, 0)]);
+        assert_eq!(parent_first.1, 1);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod state;
 pub mod timeline;
 
 pub use crate::config::SchedMode;
-pub use engine::Simulator;
+pub use engine::{EventKind, Simulator};
 pub use frontier::Frontier;
 pub use state::{Allocation, EncEvent, Placement, SimState, ENC_LOG_COMPACT_THRESHOLD};
 pub use timeline::Timeline;

@@ -7,10 +7,11 @@
 //! `left_tasks`/`left_work`, cluster-average transfer terms).
 
 use super::frontier::Frontier;
-use super::timeline::Timeline;
+use super::timeline::{Timeline, EPS};
 use crate::cluster::Cluster;
 use crate::config::SchedMode;
 use crate::dag::{ranks, Job, NodeId, TaskRef};
+use crate::fault::{FaultStats, RecoveryOutcome};
 use crate::workload::Workload;
 
 /// One scheduled copy of a task on an executor (a member of `R_{n_i}`).
@@ -23,6 +24,19 @@ pub struct Placement {
     pub finish: f64,
     /// True if this copy was created by DEFT's parent duplication.
     pub duplicate: bool,
+}
+
+impl Placement {
+    /// Booking identity: same executor, bit-exact same slot, same role.
+    /// Fault rollback uses this to locate the exact copy being
+    /// cancelled, re-timed, or promoted across the placement list and
+    /// the executor schedule log.
+    pub fn same_booking(&self, other: &Placement) -> bool {
+        self.exec == other.exec
+            && self.start.to_bits() == other.start.to_bits()
+            && self.finish.to_bits() == other.finish.to_bits()
+            && self.duplicate == other.duplicate
+    }
 }
 
 /// A scheduler's allocation decision for one selected task.
@@ -63,6 +77,11 @@ pub enum EncEvent {
     Booked { task: TaskRef, finish: f64 },
     /// A job arrived: its unassigned tasks enter the encoding.
     Arrived { job: usize },
+    /// A fault-recovery pass rolled state back (cancelled copies,
+    /// re-timed finishes, re-enqueued tasks) — mutations with no
+    /// incremental patch form. Consumers must rebuild from live state
+    /// and re-derive any future-finish bookkeeping.
+    Invalidated,
 }
 
 /// Everything a scheduler may observe, plus assignment bookkeeping.
@@ -108,6 +127,20 @@ pub struct SimState {
     /// construction; `Cluster::v_avg` is an O(M) scan).
     v_avg: f64,
     c_avg: f64,
+    /// Fault blackout intervals per executor: outage windows booked into
+    /// the timeline (so no task can ever be placed inside one) but not
+    /// task work — validation and utilization account for them
+    /// separately.
+    blackouts: Vec<Vec<(f64, f64)>>,
+    /// When each executor went down (`None` = up). Permanent crashes
+    /// stay `Some` forever; transient ones clear on recovery.
+    down_since: Vec<Option<f64>>,
+    /// `reexec[job][node]` — the task lost every copy to a fault at some
+    /// point and had to be rescheduled (gantt marks these).
+    reexec: Vec<Vec<bool>>,
+    /// Running fault-activity counters (crashes, cancellations,
+    /// requeues, duplication saves).
+    pub faults: FaultStats,
     /// Log of encoder-visible mutations (see [`EncEvent`]). Consumers
     /// keep an *absolute* cursor; the buffer auto-compacts beyond
     /// [`ENC_LOG_COMPACT_THRESHOLD`] so a months-long service state stays
@@ -161,6 +194,10 @@ impl SimState {
             left_work: jobs.iter().map(|j| j.total_work()).collect(),
             v_avg,
             c_avg,
+            blackouts: vec![Vec::new(); n_exec],
+            down_since: vec![None; n_exec],
+            reexec: jobs.iter().map(|j| vec![false; j.n_tasks()]).collect(),
+            faults: FaultStats::default(),
             enc_log: Vec::new(),
             enc_log_start: 0,
             cluster,
@@ -215,7 +252,11 @@ impl SimState {
         self.jobs[t.job].tasks[t.node].compute
     }
 
-    /// Memoized mean executor speed `v̄`.
+    /// Memoized mean executor speed `v̄` — the *construction-time* mean,
+    /// deliberately frozen so `rank_up`/`rank_down` caches, selector
+    /// scores and policy features stay mutually consistent across fault
+    /// outages (and so the zero-fault path is bit-identical). The
+    /// availability-aware live mean is [`Cluster::v_avg`].
     pub fn v_avg(&self) -> f64 {
         self.v_avg
     }
@@ -250,6 +291,7 @@ impl SimState {
         self.min_aft_cache.push(vec![f64::INFINITY; job.n_tasks()]);
         self.left_tasks.push(job.n_tasks());
         self.left_work.push(job.total_work());
+        self.reexec.push(vec![false; job.n_tasks()]);
         self.frontier.add_job(&job);
         self.jobs.push(job);
         id
@@ -475,6 +517,10 @@ impl SimState {
         );
         let exec = alloc.exec();
         assert!(exec < self.cluster.len(), "executor {exec} out of range");
+        assert!(
+            self.cluster.available(exec),
+            "scheduler booked task {task:?} onto down executor {exec}"
+        );
 
         let finish = match alloc {
             Allocation::Duplicate { parent, .. } => {
@@ -505,6 +551,313 @@ impl SimState {
         self.frontier.assign(&self.jobs[task.job], task);
         self.push_enc_event(EncEvent::Assigned { task });
         finish
+    }
+
+    // ------------------------------------------------------------------
+    // Fault recovery (see rust/src/fault/): crashes, stragglers, and the
+    // rollback cascade that keeps every incremental cache coherent.
+    // ------------------------------------------------------------------
+
+    /// Whether executor `k` is currently up.
+    pub fn exec_available(&self, k: usize) -> bool {
+        self.cluster.available(k)
+    }
+
+    /// Is at least one executor up? Schedulers pass (wait for a recovery
+    /// event) when this is false.
+    pub fn any_executor_available(&self) -> bool {
+        self.cluster.any_available()
+    }
+
+    /// Fault blackout (outage) windows booked on executor `k`.
+    pub fn blackouts(&self, k: usize) -> &[(f64, f64)] {
+        &self.blackouts[k]
+    }
+
+    /// Total outage time booked on executor `k` (subtracted from the
+    /// timeline's busy time when computing utilization).
+    pub fn blackout_time(&self, k: usize) -> f64 {
+        self.blackouts[k].iter().map(|&(s, f)| f - s).sum()
+    }
+
+    /// When executor `k` went down; `None` while it is up.
+    pub fn down_since(&self, k: usize) -> Option<f64> {
+        self.down_since[k]
+    }
+
+    /// Did this task ever lose all copies to a fault and return to the
+    /// frontier? (Counts never-started queued copies too — this is
+    /// "re-placed", not necessarily "work re-done".)
+    pub fn was_requeued(&self, t: TaskRef) -> bool {
+        self.reexec[t.job][t.node]
+    }
+
+    /// Executor `k` recovered from a transient crash.
+    pub fn mark_executor_up(&mut self, k: usize) {
+        self.cluster.set_available(k, true);
+        self.down_since[k] = None;
+    }
+
+    /// Executor `exec` crashes at `time`: every unfinished copy on it is
+    /// lost (finished copies persist their outputs off-executor), the
+    /// loss cascades to dependents booked against those copies, tasks
+    /// with a surviving duplicate copy are promoted in place
+    /// (duplication-as-fault-tolerance), and truly lost tasks return to
+    /// the executable frontier. For transient crashes (`recovery =
+    /// Some(t_up)`) the outage is booked into the timeline as a blackout
+    /// so no later booking can land inside it; the executor is marked
+    /// unavailable until [`SimState::mark_executor_up`].
+    pub fn apply_crash(
+        &mut self,
+        exec: usize,
+        time: f64,
+        recovery: Option<f64>,
+    ) -> RecoveryOutcome {
+        assert!(exec < self.cluster.len(), "executor {exec} out of range");
+        assert!(time.is_finite(), "non-finite crash time");
+        if let Some(up) = recovery {
+            assert!(up.is_finite() && up >= time, "recovery predates the crash");
+        }
+        if !self.cluster.available(exec) {
+            // Already down (duplicate report): nothing to recover.
+            return RecoveryOutcome::default();
+        }
+        let before = self.faults;
+        self.faults.n_crashes += 1;
+        let lost: Vec<(TaskRef, Placement)> = self.exec_log[exec]
+            .iter()
+            .filter(|(_, pl)| pl.finish > time + EPS)
+            .copied()
+            .collect();
+        for &(t, pl) in &lost {
+            self.cancel_copy(t, pl);
+        }
+        self.cluster.set_available(exec, false);
+        self.down_since[exec] = Some(time);
+        if let Some(up) = recovery {
+            // After cancellation every kept booking finishes by `time`,
+            // but an earlier, still-open blackout can extend past it
+            // (crash during a manually-cut-short outage): clamp so
+            // blackouts never overlap.
+            let from = time.max(self.timelines[exec].tail());
+            if up > from {
+                self.timelines[exec].book(from, up);
+                self.blackouts[exec].push((from, up));
+            }
+        }
+        // Availability and blackouts are not part of the encoding: only a
+        // pass that actually cancelled copies invalidates incremental
+        // consumers (an idle-executor crash stays encoder-invisible and
+        // costs the EncoderCache nothing).
+        if !lost.is_empty() {
+            let mut seeds: Vec<TaskRef> = lost.iter().map(|&(t, _)| t).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            self.repair_cascade(seeds);
+            self.recompute_horizon();
+            self.push_enc_event(EncEvent::Invalidated);
+        }
+        RecoveryOutcome {
+            cancelled: self.faults.n_cancelled - before.n_cancelled,
+            requeued: self.faults.n_requeued - before.n_requeued,
+            survived: self.faults.n_dup_survived - before.n_dup_survived,
+        }
+    }
+
+    /// Executor `exec` straggles at `time`: its in-flight copy (at most
+    /// one — intervals never overlap) keeps running with the remaining
+    /// duration stretched by `factor`, and queued-but-unstarted bookings
+    /// on it are cancelled back to the frontier so the scheduler can
+    /// reconsider them (possibly duplicating around the slow node).
+    /// Returns the re-timed `(task, new_finish)` completions so the
+    /// engine can re-schedule their completion events.
+    pub fn apply_straggle(&mut self, exec: usize, time: f64, factor: f64) -> Vec<(TaskRef, f64)> {
+        assert!(exec < self.cluster.len(), "executor {exec} out of range");
+        assert!(time.is_finite(), "non-finite straggle time");
+        assert!(factor >= 1.0 && factor.is_finite(), "slowdown must be >= 1");
+        if !self.cluster.available(exec) {
+            return Vec::new(); // nothing runs on a down executor
+        }
+        self.faults.n_straggles += 1;
+        let queued: Vec<(TaskRef, Placement)> = self.exec_log[exec]
+            .iter()
+            .filter(|(_, pl)| pl.start > time + EPS)
+            .copied()
+            .collect();
+        for &(t, pl) in &queued {
+            self.cancel_copy(t, pl);
+        }
+        let inflight: Vec<(TaskRef, Placement)> = self.exec_log[exec]
+            .iter()
+            .filter(|(_, pl)| pl.start <= time + EPS && pl.finish > time + EPS)
+            .copied()
+            .collect();
+        let mut retimed: Vec<(TaskRef, f64)> = Vec::new();
+        for &(t, pl) in &inflight {
+            let new_finish = time + (pl.finish - time) * factor;
+            assert!(new_finish.is_finite());
+            for c in self.placements[t.job][t.node].iter_mut() {
+                if c.same_booking(&pl) {
+                    c.finish = new_finish;
+                    break;
+                }
+            }
+            for (lt, lp) in self.exec_log[exec].iter_mut() {
+                if *lt == t && lp.same_booking(&pl) {
+                    lp.finish = new_finish;
+                    break;
+                }
+            }
+            assert!(
+                self.timelines[exec].unbook(pl.start, pl.finish),
+                "stretched copy missing from timeline"
+            );
+            self.timelines[exec].book(pl.start, new_finish);
+            self.min_aft_cache[t.job][t.node] = self.min_aft_scan(t);
+            retimed.push((t, new_finish));
+        }
+        // As in `apply_crash`: an empty pass (idle executor) is
+        // encoder-invisible and triggers no rebuild.
+        if !queued.is_empty() || !retimed.is_empty() {
+            let mut seeds: Vec<TaskRef> = queued
+                .iter()
+                .map(|&(t, _)| t)
+                .chain(retimed.iter().map(|&(t, _)| t))
+                .collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            self.repair_cascade(seeds);
+            self.recompute_horizon();
+            self.push_enc_event(EncEvent::Invalidated);
+        }
+        retimed
+    }
+
+    /// Remove one booked copy of `t` from the placement list, the
+    /// executor timeline, and the schedule log (exact endpoint match —
+    /// callers pass back the values they booked).
+    fn cancel_copy(&mut self, t: TaskRef, pl: Placement) {
+        let copies = &mut self.placements[t.job][t.node];
+        let idx = copies
+            .iter()
+            .position(|c| c.same_booking(&pl))
+            .expect("cancelled copy present in placements");
+        copies.remove(idx);
+        assert!(
+            self.timelines[pl.exec].unbook(pl.start, pl.finish),
+            "cancelled copy missing from timeline"
+        );
+        let log = &mut self.exec_log[pl.exec];
+        let li = log
+            .iter()
+            .position(|(lt, lp)| *lt == t && lp.same_booking(&pl))
+            .expect("cancelled copy present in exec log");
+        log.remove(li);
+        if pl.duplicate {
+            self.n_duplicates -= 1;
+        }
+        self.faults.n_cancelled += 1;
+    }
+
+    /// Settle a task whose copy set shrank: refresh its `min_aft`,
+    /// promote the earliest surviving copy to primary if the primary was
+    /// lost, or — when nothing survives — roll the assignment back and
+    /// return the task to the executable frontier.
+    fn settle_task(&mut self, t: TaskRef) {
+        self.min_aft_cache[t.job][t.node] = self.min_aft_scan(t);
+        if self.placements[t.job][t.node].is_empty() {
+            if self.assigned[t.job][t.node] {
+                self.assigned[t.job][t.node] = false;
+                self.n_assigned -= 1;
+                self.left_tasks[t.job] += 1;
+                self.left_work[t.job] += self.task_compute(t);
+                self.frontier.unassign(&self.jobs[t.job], t);
+                self.reexec[t.job][t.node] = true;
+                self.faults.n_requeued += 1;
+            }
+            return;
+        }
+        if self.assigned[t.job][t.node]
+            && !self.placements[t.job][t.node].iter().any(|c| !c.duplicate)
+        {
+            // Primary lost but a duplicate survives: the earliest copy
+            // becomes the new authoritative finish — no rescheduling.
+            let best = self.placements[t.job][t.node]
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    a.finish.total_cmp(&b.finish).then(a.exec.cmp(&b.exec))
+                })
+                .map(|(i, _)| i)
+                .expect("non-empty copy list");
+            // `pl` is copied before the flag flips, so `same_booking`
+            // still matches the log entry's duplicate=true role.
+            let pl = self.placements[t.job][t.node][best];
+            self.placements[t.job][t.node][best].duplicate = false;
+            let log = &mut self.exec_log[pl.exec];
+            let li = log
+                .iter()
+                .position(|(lt, lp)| *lt == t && lp.same_booking(&pl))
+                .expect("promoted copy present in exec log");
+            log[li].1.duplicate = false;
+            self.n_duplicates -= 1;
+            self.faults.n_dup_survived += 1;
+        }
+    }
+
+    /// Propagate cancellations downstream: any copy whose start is no
+    /// longer supported by its parents' (shrunken or re-timed) copy sets
+    /// is cancelled too, and tasks that lose every copy roll back to the
+    /// frontier. `seeds` are the tasks whose copy sets the caller already
+    /// changed. Terminates because every round strictly removes copies.
+    fn repair_cascade(&mut self, seeds: Vec<TaskRef>) {
+        use std::collections::VecDeque;
+        let mut queue: VecDeque<TaskRef> = VecDeque::new();
+        for &t in &seeds {
+            self.settle_task(t);
+        }
+        for &t in &seeds {
+            for e in &self.jobs[t.job].children[t.node] {
+                queue.push_back(TaskRef::new(t.job, e.other));
+            }
+        }
+        while let Some(c) = queue.pop_front() {
+            let mut drop: Vec<Placement> = Vec::new();
+            for pl in &self.placements[c.job][c.node] {
+                for e in &self.jobs[c.job].parents[c.node] {
+                    let avail = self.parent_data_at(c, e.other, pl.exec);
+                    // Same tolerance as `validate`'s data-readiness check.
+                    if pl.start + 1e-6 < avail {
+                        drop.push(*pl);
+                        break;
+                    }
+                }
+            }
+            if drop.is_empty() {
+                continue;
+            }
+            for pl in drop {
+                self.cancel_copy(c, pl);
+            }
+            self.settle_task(c);
+            for e in &self.jobs[c.job].children[c.node] {
+                queue.push_back(TaskRef::new(c.job, e.other));
+            }
+        }
+    }
+
+    /// Re-derive the horizon after cancellations (it can shrink — the
+    /// incremental max no longer upper-bounds the live bookings).
+    fn recompute_horizon(&mut self) {
+        let mut h = 0.0f64;
+        for log in &self.exec_log {
+            for (_, pl) in log {
+                if pl.finish > h {
+                    h = pl.finish;
+                }
+            }
+        }
+        self.horizon = h;
     }
 
     /// Completion time of a job: max AFT over primary copies (∞ until all
@@ -551,24 +904,56 @@ impl SimState {
                     );
                 }
             }
-            // The timeline must be exactly the sorted log intervals.
+            // The timeline must be exactly the sorted log intervals plus
+            // the fault blackout windows — and no booking may overlap a
+            // blackout (the executor was down then).
+            let mut entries: Vec<(f64, f64, bool)> = sorted
+                .iter()
+                .map(|(_, pl)| (pl.start, pl.finish, false))
+                .collect();
+            entries.extend(self.blackouts[e].iter().map(|&(s, f)| (s, f, true)));
+            entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in entries.windows(2) {
+                if (w[0].2 || w[1].2) && w[1].0 < w[0].1 - 1e-9 {
+                    bail!(
+                        "executor {e}: booking overlaps blackout ({:.3}-{:.3} vs {:.3}-{:.3})",
+                        w[0].0,
+                        w[0].1,
+                        w[1].0,
+                        w[1].1
+                    );
+                }
+            }
             let tl = self.timelines[e].intervals();
-            if tl.len() != sorted.len() {
+            if tl.len() != entries.len() {
                 bail!(
-                    "executor {e}: timeline has {} intervals, log has {}",
+                    "executor {e}: timeline has {} intervals, log + blackouts have {}",
                     tl.len(),
-                    sorted.len()
+                    entries.len()
                 );
             }
-            for (iv, (_, pl)) in tl.iter().zip(&sorted) {
-                if (iv.0 - pl.start).abs() > 1e-9 || (iv.1 - pl.finish).abs() > 1e-9 {
+            for (iv, en) in tl.iter().zip(&entries) {
+                if (iv.0 - en.0).abs() > 1e-9 || (iv.1 - en.1).abs() > 1e-9 {
                     bail!(
-                        "executor {e}: timeline interval {:.4}-{:.4} != log {:.4}-{:.4}",
+                        "executor {e}: timeline interval {:.4}-{:.4} != {} {:.4}-{:.4}",
                         iv.0,
                         iv.1,
-                        pl.start,
-                        pl.finish
+                        if en.2 { "blackout" } else { "log" },
+                        en.0,
+                        en.1
                     );
+                }
+            }
+            // A down executor hosts no unfinished work.
+            if let Some(t_down) = self.down_since[e] {
+                for (t, pl) in log {
+                    if pl.finish > t_down + 1e-9 {
+                        bail!(
+                            "executor {e} down since {t_down:.3} but hosts {t:?} \
+                             finishing {:.3}",
+                            pl.finish
+                        );
+                    }
                 }
             }
         }
@@ -599,6 +984,15 @@ impl SimState {
                 let scanned = self.min_aft_scan(t);
                 if cached != scanned && !(cached.is_infinite() && scanned.is_infinite()) {
                     bail!("task ({ji},{node}): min_aft cache {cached} != scan {scanned}");
+                }
+                // Assignment ↔ copy-set consistency (fault rollbacks must
+                // never leave a half-cancelled task behind).
+                if self.assigned[ji][node] {
+                    if !self.placements[ji][node].iter().any(|p| !p.duplicate) {
+                        bail!("task ({ji},{node}) assigned but has no primary copy");
+                    }
+                } else if !self.placements[ji][node].is_empty() {
+                    bail!("task ({ji},{node}) unassigned but retains booked copies");
                 }
             }
             if self.job_left_tasks(ji) != self.job_left_tasks_scan(ji) {
@@ -824,6 +1218,157 @@ mod tests {
         let f_early = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
         assert!((f_early - 15.0).abs() < 1e-12, "f_early={f_early}");
         st.validate().unwrap();
+    }
+
+    // ---- fault recovery ------------------------------------------------
+
+    /// A crash cancels the in-flight copy, rolls every cache back, and
+    /// returns the task to the frontier; a transient blackout keeps the
+    /// outage window unbookable after recovery.
+    #[test]
+    fn crash_requeues_lost_task_and_books_blackout() {
+        let mut st = two_exec_state();
+        let t0 = TaskRef::new(0, 0);
+        st.apply(t0, Allocation::Direct { exec: 0 }); // [0, 4] on e0
+        let out = st.apply_crash(0, 1.0, Some(10.0));
+        assert_eq!((out.cancelled, out.requeued, out.survived), (1, 1, 0));
+        assert!(!st.exec_available(0));
+        assert_eq!(st.down_since(0), Some(1.0));
+        assert_eq!(st.blackouts(0), &[(1.0, 10.0)]);
+        assert!((st.blackout_time(0) - 9.0).abs() < 1e-12);
+        assert_eq!(st.n_assigned, 0);
+        assert_eq!(st.job_left_tasks(0), 2);
+        assert!((st.job_left_work(0) - 10.0).abs() < 1e-12);
+        assert!(st.min_aft(t0).is_infinite());
+        assert!(st.is_executable(t0));
+        assert!(st.was_requeued(t0));
+        st.validate().unwrap();
+        // Recovery reopens the executor, but the blackout window stays
+        // booked: the next append lands after it.
+        st.mark_executor_up(0);
+        assert!(st.exec_available(0));
+        st.advance_wall(1.0);
+        let f = st.apply(t0, Allocation::Direct { exec: 0 });
+        assert!((f - 14.0).abs() < 1e-12, "10 + 4/1.0, got {f}");
+        st.validate().unwrap();
+    }
+
+    /// Duplication as fault tolerance: the primary dies but a duplicate
+    /// copy survives elsewhere — the task is promoted in place, nothing
+    /// is rescheduled, and dependents booked against the surviving copy
+    /// are untouched.
+    #[test]
+    fn crash_promotes_surviving_duplicate() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // [0,4] e0
+        st.apply(
+            TaskRef::new(0, 1),
+            Allocation::Duplicate { exec: 1, parent: 0 },
+        ); // dup of 0 on e1 [0,2], child [2,5]
+        assert_eq!(st.n_duplicates, 1);
+        let out = st.apply_crash(0, 1.0, None);
+        assert_eq!((out.cancelled, out.requeued, out.survived), (1, 0, 1));
+        assert_eq!(st.faults.n_dup_survived, 1);
+        // Both tasks remain assigned; the surviving copy is now primary.
+        assert!(st.all_assigned());
+        assert_eq!(st.placements[0][0].len(), 1);
+        assert!(!st.placements[0][0][0].duplicate);
+        assert_eq!(st.n_duplicates, 0);
+        assert_eq!(st.min_aft(TaskRef::new(0, 0)), 2.0);
+        assert!((st.job_completion(0) - 5.0).abs() < 1e-12);
+        // Permanent crash: no blackout interval, down forever.
+        assert!(st.blackouts(0).is_empty());
+        assert_eq!(st.down_since(0), Some(1.0));
+        st.validate().unwrap();
+    }
+
+    /// Losing a parent's only copy cascades: the child's booking (placed
+    /// against the lost copy's data) is invalid and rolls back too.
+    #[test]
+    fn crash_cascades_to_dependent_bookings() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // [0,4] e0
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 }); // data 6, [6,9] e1
+        let out = st.apply_crash(0, 1.0, Some(20.0));
+        assert_eq!((out.cancelled, out.requeued, out.survived), (2, 2, 0));
+        assert_eq!(st.n_assigned, 0);
+        assert!(st.placements[0][1].is_empty());
+        assert_eq!(st.exec_ready(1), 0.0, "e1 freed by the cascade");
+        assert_eq!(st.executable(), &[TaskRef::new(0, 0)]);
+        st.validate().unwrap();
+        // Rescheduling on the survivor completes the job.
+        st.advance_wall(1.0);
+        let f0 = st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 1 });
+        assert!((f0 - 3.0).abs() < 1e-12); // 1 + 4/2
+        let f1 = st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 });
+        assert!((f1 - 6.0).abs() < 1e-12); // local data, 3 + 6/2
+        assert!(st.all_assigned());
+        st.validate().unwrap();
+    }
+
+    /// A straggle stretches the in-flight copy's remaining time and
+    /// returns queued (unstarted) bookings to the frontier.
+    #[test]
+    fn straggle_stretches_inflight_and_requeues_queued() {
+        let cluster = Cluster::homogeneous(1, 1.0, 10.0);
+        let job = Job::new(0, "par", 0.0, vec![4.0, 4.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 }); // [0,4]
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 0 }); // [4,8]
+        st.advance_wall(2.0);
+        let retimed = st.apply_straggle(0, 2.0, 2.0);
+        // In-flight [0,4] at t=2: remaining 2 s doubles → finish 6.
+        assert_eq!(retimed, vec![(TaskRef::new(0, 0), 6.0)]);
+        assert_eq!(st.min_aft(TaskRef::new(0, 0)), 6.0);
+        assert_eq!(st.faults.n_straggles, 1);
+        // The queued task rolled back...
+        assert_eq!(st.faults.n_requeued, 1);
+        assert!(st.is_executable(TaskRef::new(0, 1)));
+        assert_eq!(st.exec_ready(0), 6.0);
+        st.validate().unwrap();
+        // ...and re-books behind the stretched copy.
+        let f = st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 0 });
+        assert!((f - 10.0).abs() < 1e-12);
+        st.validate().unwrap();
+    }
+
+    /// Faults on an already-down executor are no-ops, and booking onto a
+    /// down executor is a hard programming error.
+    #[test]
+    fn faults_on_down_executor_are_noops() {
+        let mut st = two_exec_state();
+        st.apply_crash(0, 1.0, Some(5.0));
+        assert_eq!(st.faults.n_crashes, 1);
+        let out = st.apply_crash(0, 2.0, None);
+        assert_eq!(out, crate::fault::RecoveryOutcome::default());
+        assert_eq!(st.faults.n_crashes, 1, "duplicate crash ignored");
+        assert!(st.apply_straggle(0, 3.0, 2.0).is_empty());
+        assert_eq!(st.faults.n_straggles, 0);
+        assert_eq!(st.down_since(0), Some(1.0), "original outage preserved");
+    }
+
+    #[test]
+    #[should_panic(expected = "down executor")]
+    fn apply_rejects_down_executor() {
+        let mut st = two_exec_state();
+        st.apply_crash(0, 0.5, None);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+    }
+
+    /// The enc-event log announces fault rollbacks so incremental
+    /// consumers rebuild instead of patching stale state.
+    #[test]
+    fn recovery_pass_logs_invalidation() {
+        let mut st = two_exec_state();
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        let cursor = st.enc_log_end();
+        st.apply_crash(0, 1.0, Some(3.0));
+        let evs = st.enc_events_since(cursor).unwrap();
+        assert!(
+            evs.iter().any(|e| matches!(e, EncEvent::Invalidated)),
+            "{evs:?}"
+        );
     }
 
     #[test]

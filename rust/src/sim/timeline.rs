@@ -105,6 +105,23 @@ impl Timeline {
         debug_assert!(finish <= self.busy[idx].0 + EPS);
         self.busy.insert(idx, (start, finish));
     }
+
+    /// Remove the booked interval matching `(start, finish)` (fault
+    /// cancellation / re-timing). Returns `false` if no such interval is
+    /// booked. Located by binary search on the sorted starts; the
+    /// endpoints must match to within [`EPS`] — callers pass back the
+    /// exact values they booked.
+    pub fn unbook(&mut self, start: f64, finish: f64) -> bool {
+        let idx = self.busy.partition_point(|&(s, _)| s < start - EPS);
+        if idx < self.busy.len()
+            && (self.busy[idx].0 - start).abs() <= EPS
+            && (self.busy[idx].1 - finish).abs() <= EPS
+        {
+            self.busy.remove(idx);
+            return true;
+        }
+        false
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +190,20 @@ mod tests {
         assert_eq!(tl.intervals(), &[(0.0, 2.0), (2.0, 5.0), (8.0, 10.0)]);
         assert_eq!(tl.tail(), 10.0);
         assert!((tl.busy_time() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unbook_removes_exact_interval_only() {
+        let mut tl = booked(&[(0.0, 2.0), (5.0, 7.0), (10.0, 12.0)]);
+        assert!(!tl.unbook(5.0, 6.0), "finish mismatch");
+        assert!(!tl.unbook(4.0, 7.0), "start mismatch");
+        assert!(tl.unbook(5.0, 7.0));
+        assert_eq!(tl.intervals(), &[(0.0, 2.0), (10.0, 12.0)]);
+        // The freed window is bookable again.
+        assert_eq!(tl.earliest_gap(0.0, 5.0), 2.0);
+        assert!(tl.unbook(10.0, 12.0));
+        assert_eq!(tl.tail(), 2.0);
+        assert!(!tl.unbook(10.0, 12.0), "double unbook");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use super::tpch;
 use super::Workload;
 use crate::config::{Arrival, WorkloadConfig};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, STREAM_WORKLOAD};
 
 /// Deterministic workload generator: (config, seed) → workload.
 #[derive(Debug, Clone)]
@@ -28,7 +28,7 @@ impl WorkloadGenerator {
 
     /// Generate the workload. Same (config, seed) → identical jobs.
     pub fn generate(&self) -> Workload {
-        let mut rng = Rng::new(self.seed ^ 0x7C9C_0FFE);
+        let mut rng = Rng::stream(self.seed, STREAM_WORKLOAD);
         let shapes: Vec<tpch::Shape> = if self.cfg.query_ids.is_empty() {
             tpch::all_shapes()
         } else {

@@ -226,6 +226,46 @@ fn golden_zoo_continuous_matches_pre_refactor_semantics() {
     }
 }
 
+/// Zero-fault mode of the fault subsystem: a simulator carrying an empty
+/// `FaultPlan` must still match the pre-refactor reference bit-for-bit
+/// for the whole zoo — the fault machinery may not perturb the reliable
+/// path in any way.
+#[test]
+fn golden_zoo_with_empty_fault_plan_matches_reference() {
+    use lachesis::fault::FaultPlan;
+    let seed = 42u64;
+    let cfg = ClusterConfig::with_executors(10);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), seed).generate();
+    for mut sched in zoo(seed) {
+        let cluster = Cluster::heterogeneous(&cfg, seed);
+        let refmodel_jobs = w.jobs.clone();
+        let mut sim = Simulator::with_faults(cluster.clone(), w.clone(), &FaultPlan::none());
+        let report = sim.run(&mut sched).unwrap();
+        let name = sched.name();
+        let mut reference = RefModel::new(cluster, refmodel_jobs);
+        for &(wall, task, alloc) in &sched.log {
+            reference.apply(wall, task, alloc);
+        }
+        for (e, log) in sim.state.exec_log.iter().enumerate() {
+            assert_eq!(log.len(), reference.log[e].len(), "{name}: exec {e} count");
+            for ((t, pl), &(rt, rs, rf, rd)) in log.iter().zip(&reference.log[e]) {
+                assert_eq!(*t, rt, "{name}: task order");
+                assert_eq!(pl.duplicate, rd, "{name}: dup flag");
+                assert_eq!(pl.start.to_bits(), rs.to_bits(), "{name}: start");
+                assert_eq!(pl.finish.to_bits(), rf.to_bits(), "{name}: finish");
+            }
+        }
+        let ref_makespan = reference
+            .log
+            .iter()
+            .flatten()
+            .filter(|&&(_, _, _, dup)| !dup)
+            .map(|&(_, _, f, _)| f)
+            .fold(0.0f64, f64::max);
+        assert_eq!(report.makespan.to_bits(), ref_makespan.to_bits(), "{name}");
+    }
+}
+
 /// Gap-aware booking can only move per-decision finishes earlier than the
 /// append booking for the same (task, executor) probe; end-to-end it must
 /// still produce valid schedules for the whole zoo.

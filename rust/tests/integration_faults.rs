@@ -1,0 +1,216 @@
+//! Fault-injection integration suite: determinism of faulty runs, the
+//! zero-fault == no-plan equivalence, crash survival across the zoo, and
+//! the robustness sweep's thread-count invariance.
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, FaultConfig, WorkloadConfig};
+use lachesis::exp::{self, PolicySource};
+use lachesis::fault::FaultPlan;
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{
+    FifoScheduler, HeftScheduler, HighRankUpScheduler, LachesisScheduler, Scheduler,
+    TdcaScheduler,
+};
+use lachesis::sim::{Placement, Simulator};
+use lachesis::workload::WorkloadGenerator;
+
+/// The fault-relevant scheduler sample: heuristic with and without
+/// duplication, whole-DAG, and learned.
+fn zoo(seed: u64) -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(FifoScheduler::new()),
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(HeftScheduler::new()),
+        Box::new(TdcaScheduler::new()),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::random(seed)))),
+    ]
+}
+
+fn exec_log_bits(sim: &Simulator) -> Vec<Vec<(usize, usize, u64, u64, bool)>> {
+    sim.state
+        .exec_log
+        .iter()
+        .map(|log| {
+            log.iter()
+                .map(|(t, pl): &(lachesis::dag::TaskRef, Placement)| {
+                    (
+                        t.job,
+                        t.node,
+                        pl.start.to_bits(),
+                        pl.finish.to_bits(),
+                        pl.duplicate,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Same `(FaultConfig, seed)` → bit-identical schedules, run after run.
+#[test]
+fn faulty_runs_are_bit_deterministic() {
+    let fcfg = FaultConfig::with_rate(2e-3);
+    for seed in [3u64, 19] {
+        let ccfg = ClusterConfig::with_executors(10);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), seed).generate();
+        for mk in 0..zoo(seed).len() {
+            let run = || {
+                let cluster = Cluster::heterogeneous(&ccfg, seed);
+                let plan = FaultPlan::generate(&fcfg, cluster.len(), seed);
+                let mut sched = zoo(seed).remove(mk);
+                let mut sim = Simulator::with_faults(cluster, w.clone(), &plan);
+                let report = sim.run(sched.as_mut()).unwrap_or_else(|e| {
+                    panic!("seed {seed} {}: {e}", sched.name())
+                });
+                (exec_log_bits(&sim), report.makespan.to_bits())
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "seed {seed} scheduler #{mk} diverged");
+        }
+    }
+}
+
+/// Attaching `FaultPlan::none()` (or a `FaultConfig::none()`-generated
+/// plan) must be bit-identical to attaching no plan at all — the
+/// zero-fault acceptance gate for the whole subsystem.
+#[test]
+fn zero_fault_plan_is_bit_identical_to_no_plan() {
+    for seed in [11u64, 42] {
+        let ccfg = ClusterConfig::with_executors(8);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), seed).generate();
+        for mk in 0..zoo(seed).len() {
+            let plain = {
+                let mut sched = zoo(seed).remove(mk);
+                let mut sim =
+                    Simulator::new(Cluster::heterogeneous(&ccfg, seed), w.clone());
+                let r = sim.run(sched.as_mut()).unwrap();
+                (exec_log_bits(&sim), r.makespan.to_bits(), r.speedup.to_bits())
+            };
+            for plan in [
+                FaultPlan::none(),
+                FaultPlan::generate(&FaultConfig::none(), 8, seed),
+            ] {
+                let mut sched = zoo(seed).remove(mk);
+                let mut sim = Simulator::with_faults(
+                    Cluster::heterogeneous(&ccfg, seed),
+                    w.clone(),
+                    &plan,
+                );
+                let r = sim.run(sched.as_mut()).unwrap();
+                let got =
+                    (exec_log_bits(&sim), r.makespan.to_bits(), r.speedup.to_bits());
+                assert_eq!(plain, got, "seed {seed} scheduler #{mk}: zero-fault drift");
+            }
+        }
+    }
+}
+
+/// Injected crashes are survived: no unassigned tasks, every job
+/// completes, and the composed state (blackouts included) validates.
+#[test]
+fn crashes_are_survived_across_the_zoo() {
+    for &rate in &[1e-3, 5e-3] {
+        let fcfg = FaultConfig::with_rate(rate);
+        for seed in [2u64, 7, 13] {
+            let ccfg = ClusterConfig::with_executors(8);
+            let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), seed).generate();
+            for mk in 0..zoo(seed).len() {
+                let cluster = Cluster::heterogeneous(&ccfg, seed);
+                let plan = FaultPlan::generate(&fcfg, cluster.len(), seed);
+                let mut sched = zoo(seed).remove(mk);
+                let mut sim = Simulator::with_faults(cluster, w.clone(), &plan);
+                let report = sim.run(sched.as_mut()).unwrap_or_else(|e| {
+                    panic!("rate {rate} seed {seed} {}: {e}", sched.name())
+                });
+                assert!(sim.state.all_assigned());
+                assert!(report.makespan.is_finite() && report.makespan > 0.0);
+                for ji in 0..sim.state.jobs.len() {
+                    assert!(
+                        sim.state.job_completion(ji).is_finite(),
+                        "rate {rate} seed {seed} {}: job {ji} incomplete",
+                        sched.name()
+                    );
+                }
+                sim.state.validate().unwrap_or_else(|e| {
+                    panic!("rate {rate} seed {seed} {}: {e}", sched.name())
+                });
+            }
+        }
+    }
+}
+
+/// At least one of the survival scenarios actually exercises faults (the
+/// rates above are high enough that silence would mean a plumbing bug),
+/// and both recovery paths — duplication promotion and requeue — occur
+/// somewhere in the sample.
+#[test]
+fn fault_machinery_actually_fires() {
+    let fcfg = FaultConfig::with_rate(5e-3);
+    let mut crashes = 0usize;
+    let mut requeued = 0usize;
+    let mut survived = 0usize;
+    for seed in 0..8u64 {
+        let ccfg = ClusterConfig::with_executors(8);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), seed).generate();
+        let cluster = Cluster::heterogeneous(&ccfg, seed);
+        let plan = FaultPlan::generate(&fcfg, cluster.len(), seed);
+        let mut sched = FifoScheduler::new();
+        let mut sim = Simulator::with_faults(cluster, w, &plan);
+        sim.run(&mut sched).unwrap();
+        crashes += sim.state.faults.n_crashes;
+        requeued += sim.state.faults.n_requeued;
+        survived += sim.state.faults.n_dup_survived;
+    }
+    assert!(crashes > 0, "no crash ever processed");
+    assert!(
+        requeued + survived > 0,
+        "no task was ever disrupted across 8 seeds at rate 5e-3"
+    );
+}
+
+/// The robustness sweep is thread-count invariant (schedules and all
+/// derived columns are deterministic; the sweep records no wall-clock
+/// column).
+#[test]
+fn fault_sweep_is_thread_invariant() {
+    let src = PolicySource {
+        backend: "rust".into(),
+        ..Default::default()
+    };
+    let rates = [0.0, 2e-3];
+    let seq = exp::fault_sweep(&src, &rates, 2, 2, 1).unwrap();
+    let par = exp::fault_sweep(&src, &rates, 2, 2, 4).unwrap();
+    assert_eq!(seq, par, "fault sweep must not depend on thread count");
+}
+
+/// The engine's unassigned-task error names the stranded jobs (not just
+/// a count).
+#[test]
+fn unassigned_error_names_stranded_jobs() {
+    struct Refuser;
+    impl Scheduler for Refuser {
+        fn name(&self) -> String {
+            "refuser".into()
+        }
+        fn step(
+            &mut self,
+            _state: &lachesis::sim::SimState,
+        ) -> anyhow::Result<Option<(lachesis::dag::TaskRef, lachesis::sim::Allocation)>>
+        {
+            Ok(None)
+        }
+    }
+    let cluster = Cluster::homogeneous(2, 1.0, 10.0);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 1).generate();
+    let names: Vec<String> = w.jobs.iter().map(|j| j.name.clone()).collect();
+    let mut sim = Simulator::new(cluster, w);
+    let err = sim.run(&mut Refuser).unwrap_err().to_string();
+    assert!(err.contains("unassigned"), "{err}");
+    for (ji, name) in names.iter().enumerate() {
+        assert!(
+            err.contains(&format!("job {ji} '{name}'")),
+            "error must name job {ji} '{name}': {err}"
+        );
+    }
+}

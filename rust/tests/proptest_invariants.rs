@@ -149,6 +149,70 @@ fn prop_child_starts_after_parent_data_arrives() {
     }
 }
 
+/// Random interleavings of scheduling decisions, crashes (transient and
+/// permanent), early recoveries, straggles and wall advances: after
+/// every single operation, each incremental cache (frontier, `min_aft`,
+/// per-job counters, timeline↔log agreement including blackouts) must
+/// equal its scan-based definition — `validate()` is the oracle.
+#[test]
+fn prop_fault_recovery_keeps_caches_coherent() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(4200 + case);
+        let w = random_workload(&mut rng, 2, false);
+        let cluster = random_cluster(&mut rng);
+        let mut st = SimState::new(cluster, w);
+        for j in 0..st.jobs.len() {
+            st.mark_arrived(j);
+        }
+        let mut wall = 0.0f64;
+        for step in 0..60 {
+            match rng.below(8) {
+                0..=4 => {
+                    // Book a random executable task on a random live
+                    // executor (the engine's legal-decision contract).
+                    let frontier = st.executable().to_vec();
+                    let avail: Vec<usize> = (0..st.cluster.len())
+                        .filter(|&e| st.exec_available(e))
+                        .collect();
+                    if frontier.is_empty() || avail.is_empty() {
+                        continue;
+                    }
+                    let t = frontier[rng.below(frontier.len())];
+                    let e = avail[rng.below(avail.len())];
+                    let f = st.apply(t, Allocation::Direct { exec: e });
+                    if rng.chance(0.3) {
+                        wall = wall.max(f);
+                        st.advance_wall(wall);
+                    }
+                }
+                5 => {
+                    let e = rng.below(st.cluster.len());
+                    if st.exec_available(e) {
+                        let recovery = if rng.chance(0.5) {
+                            Some(wall + rng.range_f(1.0, 20.0))
+                        } else {
+                            None
+                        };
+                        st.apply_crash(e, wall, recovery);
+                    } else if rng.chance(0.5) {
+                        st.mark_executor_up(e);
+                    }
+                }
+                6 => {
+                    let e = rng.below(st.cluster.len());
+                    st.apply_straggle(e, wall, rng.range_f(1.0, 4.0));
+                }
+                _ => {
+                    wall += rng.range_f(0.0, 5.0);
+                    st.advance_wall(wall);
+                }
+            }
+            st.validate()
+                .unwrap_or_else(|e| panic!("case {case} step {step}: {e}"));
+        }
+    }
+}
+
 #[test]
 fn prop_speedup_bounded_by_cluster_capacity() {
     // speedup = seq_time / makespan ≤ Σ v_k / v_max (work conservation).
