@@ -20,7 +20,7 @@ fn make_scheds() -> Vec<Box<dyn Scheduler>> {
         "checkpoints/lachesis.bin",
         lachesis::policy::net::param_len(),
     )
-    .unwrap_or_else(|_| RustPolicy::random(3).params);
+    .unwrap_or_else(|_| RustPolicy::random_params(3));
     vec![
         Box::new(SjfScheduler::new()),
         Box::new(HrrnScheduler::new()),

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
             lachesis::policy::net::param_len(),
         )
     })
-    .unwrap_or_else(|_| RustPolicy::random(1).params);
+    .unwrap_or_else(|_| RustPolicy::random_params(1));
     let sched = LachesisScheduler::greedy(Box::new(RustPolicy::new(params)));
     let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(20), 5);
     let agent = AgentServer::new(cluster, Box::new(sched));

@@ -1,21 +1,24 @@
 //! END-TO-END DRIVER (DESIGN.md §End-to-end validation): trains the
 //! Lachesis policy with the full three-layer stack —
 //!
-//!   rust simulator rollouts → encoded transitions → AOT `train_step`
-//!   (JAX fwd/bwd through the Pallas GCN kernel + Adam, executed via
-//!   PJRT from rust) → updated flat parameters → next rollouts —
+//!   rust simulator rollouts (parallel actors) → encoded transitions →
+//!   gradient step (AOT `train_step` via PJRT when built with
+//!   `--features pjrt` and artifacts exist, otherwise the native CPU
+//!   backend — analytic backprop, no python anywhere) → updated flat
+//!   parameters → next rollouts —
 //!
 //! then evaluates the trained policy against HEFT/FIFO/Decima-DEFT on
 //! held-out workloads and prints the learning curve (the paper's Fig 4).
 //!
-//!     make artifacts && cargo run --release --example train_lachesis
-//!     (options: -- --episodes 200 --agents 4 --seed 1)
+//!     cargo run --release --example train_lachesis
+//!     (options: -- --episodes 200 --agents 4 --seed 1 --threads auto)
 
 use lachesis::cluster::Cluster;
 use lachesis::config::{ClusterConfig, TrainConfig, WorkloadConfig};
 use lachesis::policy::features::FeatureMode;
 use lachesis::policy::{params, RustPolicy};
-use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+use lachesis::rl::cpu_backend::{CpuTrainBackend, CPU_TRAIN_BATCH};
+use lachesis::rl::trainer::{TrainBackend, Trainer};
 use lachesis::sched::{
     DecimaScheduler, FifoScheduler, HeftScheduler, LachesisScheduler, Scheduler,
 };
@@ -30,18 +33,36 @@ fn main() -> anyhow::Result<()> {
     cfg.seed = args.u64_opt("seed", 20210001)?;
     cfg.jobs_per_episode = args.usize_opt("jobs-per-episode", 4)?;
     cfg.executors = args.usize_opt("executors", 10)?;
+    cfg.threads = args.threads_opt(0)?;
 
-    // ---- Train --------------------------------------------------------
     let init = params::load_expected(
         "artifacts/params_init.bin",
         lachesis::policy::net::param_len(),
-    )?;
-    let backend = PjrtTrainBackend::new("artifacts", init)?;
-    let batch = backend.batch_size();
+    )
+    .unwrap_or_else(|_| RustPolicy::random_params(cfg.seed));
+
+    #[cfg(feature = "pjrt")]
+    {
+        use lachesis::rl::trainer::PjrtTrainBackend;
+        match PjrtTrainBackend::new("artifacts", init.clone()) {
+            Ok(backend) => {
+                let batch = backend.batch_size();
+                return run(cfg, backend, batch);
+            }
+            Err(e) => eprintln!("PJRT backend unavailable ({e}); using the CPU backend"),
+        }
+    }
+    run(cfg, CpuTrainBackend::new(init), CPU_TRAIN_BATCH)
+}
+
+fn run<B: TrainBackend>(cfg: TrainConfig, backend: B, batch: usize) -> anyhow::Result<()> {
     let mut trainer = Trainer::new(cfg.clone(), backend, FeatureMode::Full);
     println!(
-        "training Lachesis: {} episodes × {} agents (imitation warm start: {} epochs)",
-        cfg.episodes, cfg.agents, cfg.imitation_epochs
+        "training Lachesis [{} backend]: {} episodes × {} agents (imitation warm start: {} epochs)",
+        trainer.backend.name(),
+        cfg.episodes,
+        cfg.agents,
+        cfg.imitation_epochs
     );
     let t0 = std::time::Instant::now();
     let stats = trainer.train(batch)?;

@@ -11,23 +11,46 @@
 
 use lachesis::bench_util::{black_box, Bench};
 use lachesis::cluster::Cluster;
-use lachesis::config::{ClusterConfig, WorkloadConfig};
-use lachesis::policy::encode::encode;
+use lachesis::config::{ClusterConfig, TrainConfig, WorkloadConfig};
+use lachesis::policy::encode::{encode, EncodedState};
 use lachesis::policy::features::{node_features, FeatureMode, NODE_FEATURES};
-use lachesis::policy::{EncoderCache, PolicyEval, RustPolicy};
+use lachesis::policy::{EncoderCache, PackedBatch, PolicyEval, RustPolicy};
+use lachesis::rl::cpu_backend::{CpuTrainBackend, CPU_TRAIN_BATCH};
+use lachesis::rl::trainer::{Row, TrainBackend, Trainer};
 #[cfg(feature = "pjrt")]
 use lachesis::runtime::PjrtPolicy;
 use lachesis::sim::{Allocation, SimState};
 use lachesis::workload::WorkloadGenerator;
 
-fn state(jobs: usize) -> SimState {
-    let cluster = Cluster::heterogeneous(&ClusterConfig::default(), 1);
-    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(jobs), 1).generate();
+fn state_seeded(jobs: usize, seed: u64) -> SimState {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::default(), seed);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(jobs), seed).generate();
     let mut st = SimState::new(cluster, w);
     for j in 0..jobs {
         st.mark_arrived(j);
     }
     st
+}
+
+fn state(jobs: usize) -> SimState {
+    state_seeded(jobs, 1)
+}
+
+/// Synthetic training rows over the given encodings (first executable
+/// slot as the action, alternating advantages) — the train_step bench's
+/// batch payload.
+fn rows_for(encs: &[EncodedState], n: usize) -> Vec<Row> {
+    encs.iter()
+        .cycle()
+        .take(n)
+        .enumerate()
+        .map(|(i, e)| Row {
+            enc: e.clone(),
+            action: e.exec_mask.iter().position(|&m| m > 0.0).unwrap_or(0) as i32,
+            adv: if i % 2 == 0 { 1.0 } else { -0.7 },
+            ret: 0.5,
+        })
+        .collect()
 }
 
 /// Per-decision encoding cost along an identical evolving episode: apply
@@ -118,6 +141,51 @@ fn main() {
         black_box(rust.forward_dense(&enc256));
     });
 
+    // Batched forward: B states through one block-CSR graph vs a loop of
+    // per-state forwards over the same states. The batch case includes
+    // the pack cost (that is what the training loop pays per step).
+    let encs64: Vec<EncodedState> = (0..16)
+        .map(|s| encode(&state_seeded(3, 1 + s), FeatureMode::Full))
+        .collect();
+    let encs256: Vec<EncodedState> = (0..8)
+        .map(|s| encode(&state_seeded(14, 1 + s), FeatureMode::Full))
+        .collect();
+    let mut values = Vec::new();
+    b.case("forward_single_loop/n64", || {
+        for e in &encs64 {
+            black_box(rust.forward_into(e, &mut logits));
+        }
+    });
+    b.case("forward_batch/n64", || {
+        let refs: Vec<&EncodedState> = encs64.iter().collect();
+        let batch = PackedBatch::pack(&refs);
+        rust.forward_batch(&batch, &mut logits, &mut values);
+        black_box(&values);
+    });
+    b.case("forward_single_loop/n256", || {
+        for e in &encs256 {
+            black_box(rust.forward_into(e, &mut logits));
+        }
+    });
+    b.case("forward_batch/n256", || {
+        let refs: Vec<&EncodedState> = encs256.iter().collect();
+        let batch = PackedBatch::pack(&refs);
+        rust.forward_batch(&batch, &mut logits, &mut values);
+        black_box(&values);
+    });
+
+    // One full gradient step through the native CPU backend: batched
+    // forward tape + analytic backward + global-norm clip + Adam.
+    let rows64 = rows_for(&encs64, 32);
+    let rows256 = rows_for(&encs256, 8);
+    let mut cpu = CpuTrainBackend::new(RustPolicy::random_params(2));
+    b.case("train_step/n64", || {
+        black_box(cpu.update(&rows64, 1e-3, 0.01, 0.5).unwrap());
+    });
+    b.case("train_step/n256", || {
+        black_box(cpu.update(&rows256, 1e-3, 0.01, 0.5).unwrap());
+    });
+
     // Side-by-side speedups for the JSON report (CI asserts sparse/cached
     // beat their dense/fresh counterparts).
     let mean = |b: &Bench, name: &str| {
@@ -131,10 +199,37 @@ fn main() {
     let speedup_fwd256 = mean(&b, "forward_dense/n256") / mean(&b, "forward_rust/n256");
     let speedup_enc64 = mean(&b, "encode/n64") / mean(&b, "encode_cached/n64");
     let speedup_enc256 = mean(&b, "encode/n256") / mean(&b, "encode_cached/n256");
+    let speedup_batch64 = mean(&b, "forward_single_loop/n64") / mean(&b, "forward_batch/n64");
+    let speedup_batch256 = mean(&b, "forward_single_loop/n256") / mean(&b, "forward_batch/n256");
     b.note("forward_sparse_speedup_n64", speedup_fwd64);
     b.note("forward_sparse_speedup_n256", speedup_fwd256);
     b.note("encode_cached_speedup_n64", speedup_enc64);
     b.note("encode_cached_speedup_n256", speedup_enc256);
+    b.note("forward_batch_speedup_n64", speedup_batch64);
+    b.note("forward_batch_speedup_n256", speedup_batch256);
+
+    // Tiny end-to-end training-epoch A/B: sequential actors vs a worker
+    // pool, same seeds (so identical trajectories — only wall-clock
+    // differs). Recorded as notes, not CI-gated: single-core runners
+    // legitimately see threaded ≈ sequential.
+    let train_wallclock_ms = |threads: usize| -> f64 {
+        let cfg = TrainConfig {
+            episodes: 2,
+            agents: 4,
+            jobs_per_episode: 2,
+            executors: 6,
+            imitation_epochs: 0,
+            threads,
+            ..Default::default()
+        };
+        let backend = CpuTrainBackend::new(RustPolicy::random_params(7));
+        let mut trainer = Trainer::new(cfg, backend, FeatureMode::Full);
+        let t0 = std::time::Instant::now();
+        trainer.train(CPU_TRAIN_BATCH).unwrap();
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    b.note("train_epoch_wallclock_seq_ms", train_wallclock_ms(1));
+    b.note("train_epoch_wallclock_threaded_ms", train_wallclock_ms(4));
 
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/meta.json").exists() {

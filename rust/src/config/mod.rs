@@ -391,6 +391,9 @@ pub struct TrainConfig {
     pub imitation_epochs: usize,
     /// Base RNG seed.
     pub seed: u64,
+    /// Worker threads for rollout actors and evaluation (0 = all cores).
+    /// The training trajectory is identical for every value.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -406,6 +409,7 @@ impl Default for TrainConfig {
             executors: 10,
             imitation_epochs: 2,
             seed: 20210001,
+            threads: 0,
         }
     }
 }
@@ -423,6 +427,7 @@ impl TrainConfig {
             ("executors", Json::from(self.executors)),
             ("imitation_epochs", Json::from(self.imitation_epochs)),
             ("seed", Json::from(self.seed)),
+            ("threads", Json::from(self.threads)),
         ])
     }
 
@@ -438,6 +443,8 @@ impl TrainConfig {
             executors: v.req_usize("executors")?,
             imitation_epochs: v.req_usize("imitation_epochs")?,
             seed: v.req("seed")?.as_u64().context("seed")?,
+            // Absent in configs written before the threaded engine.
+            threads: v.req_usize("threads").unwrap_or(0),
         })
     }
 }

@@ -13,10 +13,13 @@ use crate::fault::FaultPlan;
 use crate::metrics::{ScheduleReport, SuiteReport};
 use crate::policy::features::FeatureMode;
 use crate::policy::{params, PolicyEval, RustPolicy};
+use crate::rl::cpu_backend::{CpuTrainBackend, CPU_TRAIN_BATCH};
 #[cfg(feature = "pjrt")]
-use crate::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
+use crate::rl::trainer::PjrtTrainBackend;
+use crate::rl::trainer::{TrainBackend, Trainer};
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjrtPolicy;
+use crate::util::par::par_indexed;
 use crate::sched::{
     CpopScheduler, DecimaScheduler, DlsScheduler, FifoScheduler, HeftScheduler,
     HighRankUpScheduler, HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler,
@@ -77,7 +80,7 @@ impl PolicySource {
                     "no parameter file found (tried {:?}); using random init",
                     candidates
                 );
-                RustPolicy::random(12345).params
+                RustPolicy::random_params(12345)
             }
         };
         if self.backend == "pjrt" {
@@ -147,63 +150,6 @@ fn run_cell(
         .with_context(|| format!("{algo} on {x} jobs, seed {seed}"))?;
     crate::log_debug!("cell {algo} x={x} seed={seed} done");
     Ok((x, report))
-}
-
-/// Run `f` over `items` with `threads` workers, collecting results in
-/// input order (pre-indexed slots, so output order never depends on
-/// worker interleaving). Fails fast: the first error stops workers from
-/// starting further items (in-flight ones finish) and is returned.
-fn par_indexed<T: Sync, R: Send>(
-    items: &[T],
-    threads: usize,
-    f: impl Fn(&T) -> Result<R> + Sync,
-) -> Result<Vec<R>> {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-    use std::sync::Mutex;
-    let slots: Vec<Mutex<Option<Result<R>>>> = items.iter().map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
-    let abort = AtomicBool::new(false);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                if abort.load(Ordering::Relaxed) {
-                    break;
-                }
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                if r.is_err() {
-                    abort.store(true, Ordering::Relaxed);
-                }
-                *slots[i].lock().expect("parallel slot lock poisoned") = Some(r);
-            });
-        }
-    });
-    let mut out = Vec::with_capacity(items.len());
-    let mut first_err = None;
-    let mut missing = 0usize;
-    for m in slots {
-        match m.into_inner().expect("parallel slot lock poisoned") {
-            Some(Ok(r)) => out.push(r),
-            Some(Err(e)) => {
-                first_err.get_or_insert(e);
-            }
-            None => missing += 1,
-        }
-    }
-    if let Some(e) = first_err {
-        return Err(e);
-    }
-    if missing > 0 {
-        bail!("parallel run aborted: {missing} items never ran");
-    }
-    Ok(out)
 }
 
 /// Run one figure sweep: job_counts × seeds × algorithms, sequentially.
@@ -367,17 +313,40 @@ total makespan is arrival-dominated and JCT is the discriminating metric",
     Ok(out)
 }
 
-/// Fig 4: the learning curve. Trains Lachesis from the AOT init through
-/// the AOT train_step and dumps the per-episode series. Requires the
-/// `pjrt` cargo feature (gradients run inside the AOT artifact).
-#[cfg(feature = "pjrt")]
+/// Fig 4: the learning curve. Prefers the AOT `train_step` artifact
+/// (`pjrt` feature + artifacts on disk); otherwise trains through the
+/// native CPU gradient backend — same loss, clip and Adam numerics — so
+/// the figure reproduces on a plain `cargo build`. Initial parameters
+/// come from `params_init.bin` when present, else a seeded random init.
 pub fn fig4(cfg: &TrainConfig, artifact_dir: &str, out_params: &str) -> Result<String> {
-    let init = params::load_expected(
-        &format!("{artifact_dir}/params_init.bin"),
-        crate::policy::net::param_len(),
-    )?;
-    let backend = PjrtTrainBackend::new(artifact_dir, init)?;
-    let batch = backend.batch_size();
+    let init_path = format!("{artifact_dir}/params_init.bin");
+    #[cfg(feature = "pjrt")]
+    {
+        let pjrt = params::load_expected(&init_path, crate::policy::net::param_len())
+            .and_then(|init| PjrtTrainBackend::new(artifact_dir, init));
+        match pjrt {
+            Ok(backend) => {
+                let batch = backend.batch_size();
+                return fig4_run(cfg, backend, batch, out_params);
+            }
+            Err(e) => {
+                crate::log_warn!("PJRT train backend unavailable ({e}); using the CPU backend");
+            }
+        }
+    }
+    let init = params::load_expected(&init_path, crate::policy::net::param_len())
+        .unwrap_or_else(|_| RustPolicy::random_params(cfg.seed));
+    fig4_run(cfg, CpuTrainBackend::new(init), CPU_TRAIN_BATCH, out_params)
+}
+
+/// The backend-generic fig4 body: train, dump the per-episode CSV, save
+/// the trained parameters, render the text chart.
+fn fig4_run<B: TrainBackend>(
+    cfg: &TrainConfig,
+    backend: B,
+    batch: usize,
+    out_params: &str,
+) -> Result<String> {
     let mut trainer = Trainer::new(cfg.clone(), backend, FeatureMode::Full);
     let stats = trainer.train(batch)?;
     let mut csv = String::from(crate::rl::trainer::EpisodeStat::csv_header());
@@ -405,7 +374,10 @@ pub fn fig4(cfg: &TrainConfig, artifact_dir: &str, out_params: &str) -> Result<S
         70,
         14,
     );
-    let mut out = String::from("# Fig 4 — learning curve\n\nepisode  avg-makespan  loss\n");
+    let mut out = format!(
+        "# Fig 4 — learning curve ({} backend)\n\nepisode  avg-makespan  loss\n",
+        trainer.backend.name()
+    );
     let stride = (stats.len() / 20).max(1);
     for s in stats.iter().step_by(stride) {
         out.push_str(&format!(
@@ -422,13 +394,6 @@ pub fn fig4(cfg: &TrainConfig, artifact_dir: &str, out_params: &str) -> Result<S
     out.push_str(&chart);
     write_results("fig4.md", &out)?;
     Ok(out)
-}
-
-/// Offline builds cannot run the AOT `train_step`; fail with a pointer to
-/// the feature instead of panicking deep inside the runtime.
-#[cfg(not(feature = "pjrt"))]
-pub fn fig4(_cfg: &TrainConfig, _artifact_dir: &str, _out_params: &str) -> Result<String> {
-    bail!("fig4 training requires building with `--features pjrt` (AOT train_step artifact)")
 }
 
 /// Ablations over the design choices DESIGN.md calls out: DEFT vs EFT in

@@ -19,7 +19,11 @@ USAGE:
                      [--executors M] [--validate] [--backend pjrt|rust]
                      [--fault-rate R]   (inject crashes/stragglers at R per exec/s)
   lachesis train     [--episodes N] [--agents A] [--seed S] [--decima]
-                     [--artifacts DIR] [--out checkpoints/lachesis.bin]
+                     [--threads N|auto] [--artifacts DIR]
+                     [--out checkpoints/lachesis.bin]
+                     (uses the AOT train_step when built with --features
+                      pjrt and artifacts exist; otherwise the native CPU
+                      gradient backend — no artifacts needed)
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
   lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K]
                      [--threads N|auto] [--backend pjrt|rust]
@@ -159,6 +163,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.jobs_per_episode = args.usize_opt("jobs-per-episode", cfg.jobs_per_episode)?;
     cfg.executors = args.usize_opt("executors", cfg.executors)?;
     cfg.imitation_epochs = args.usize_opt("imitation-epochs", cfg.imitation_epochs)?;
+    cfg.threads = args.threads_opt(1)?;
     let artifacts = args.opt_or("artifacts", "artifacts");
     let default_out = if args.flag("decima") {
         "checkpoints/decima.bin"
@@ -167,38 +172,57 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let out = args.opt_or("out", default_out);
     if args.flag("decima") {
-        // Train the Decima-DEFT baseline (blind features).
+        // Train the Decima-DEFT baseline (blind features). Prefers the
+        // AOT train_step artifact; otherwise the native CPU backend.
+        use lachesis::policy::features::FeatureMode;
+        use lachesis::rl::trainer::Trainer;
+        let init = lachesis::policy::params::load_expected(
+            &format!("{artifacts}/params_init.bin"),
+            lachesis::policy::net::param_len(),
+        )
+        .unwrap_or_else(|_| lachesis::policy::RustPolicy::random_params(cfg.seed));
         #[cfg(feature = "pjrt")]
         {
-            use lachesis::policy::features::FeatureMode;
-            use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
-            let init = lachesis::policy::params::load_expected(
-                &format!("{artifacts}/params_init.bin"),
-                lachesis::policy::net::param_len(),
-            )?;
-            let backend = PjrtTrainBackend::new(artifacts, init)?;
-            let batch = backend.batch_size();
-            let mut trainer = Trainer::new(cfg, backend, FeatureMode::HomogeneousBlind);
-            let stats = trainer.train(batch)?;
-            if let Some(dir) = std::path::Path::new(out).parent() {
-                std::fs::create_dir_all(dir).ok();
+            use lachesis::rl::trainer::PjrtTrainBackend;
+            match PjrtTrainBackend::new(artifacts, init.clone()) {
+                Ok(backend) => {
+                    let batch = backend.batch_size();
+                    let trainer = Trainer::new(cfg, backend, FeatureMode::HomogeneousBlind);
+                    return finish_decima_train(trainer, batch, out);
+                }
+                Err(e) => {
+                    eprintln!("PJRT train backend unavailable ({e}); using the CPU backend")
+                }
             }
-            lachesis::policy::params::save_f32(out, trainer.backend.params())?;
-            println!(
-                "decima training done: {} episodes, final makespan {:.1}s → {out}",
-                stats.len(),
-                stats.last().map(|s| s.makespan).unwrap_or(0.0)
-            );
         }
-        #[cfg(not(feature = "pjrt"))]
-        {
-            let _ = (&cfg, &artifacts, &out);
-            bail!("`train --decima` requires building with `--features pjrt`");
-        }
+        let backend = lachesis::rl::CpuTrainBackend::new(init);
+        let trainer = Trainer::new(cfg, backend, FeatureMode::HomogeneousBlind);
+        finish_decima_train(trainer, lachesis::rl::cpu_backend::CPU_TRAIN_BATCH, out)
     } else {
         let summary = exp::fig4(&cfg, artifacts, out)?;
         println!("{summary}");
+        Ok(())
     }
+}
+
+/// Shared tail of `train --decima`: run the loop, save the checkpoint,
+/// print the summary. Generic over the gradient backend.
+fn finish_decima_train<B: lachesis::rl::TrainBackend>(
+    mut trainer: lachesis::rl::Trainer<B>,
+    batch: usize,
+    out: &str,
+) -> Result<()> {
+    let stats = trainer.train(batch)?;
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    lachesis::policy::params::save_f32(out, trainer.backend.params())?;
+    println!(
+        "decima training done ({} backend): {} episodes, final makespan {:.1}s → {out}",
+        trainer.backend.name(),
+        stats.len(),
+        stats.last().map(|s| s.makespan).unwrap_or(0.0)
+    );
     Ok(())
 }
 
@@ -298,7 +322,7 @@ fn serve_policy(
         .find_map(|p| {
             lachesis::policy::params::load_expected(p, lachesis::policy::net::param_len()).ok()
         })
-        .unwrap_or_else(|| lachesis::policy::RustPolicy::random(12345).params);
+        .unwrap_or_else(|| lachesis::policy::RustPolicy::random_params(12345));
     lachesis::policy::RustPolicy::new(params)
 }
 
@@ -316,6 +340,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "fig4" => {
             let mut cfg = TrainConfig::default();
             cfg.episodes = args.usize_opt("episodes", if quick { 30 } else { cfg.episodes })?;
+            cfg.threads = threads;
             let out = exp::fig4(&cfg, &src.artifact_dir, "checkpoints/lachesis.bin")?;
             println!("{out}");
         }

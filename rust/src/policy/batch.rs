@@ -1,0 +1,446 @@
+//! Batched CSR forward pass: pack B encoded states into one block-CSR
+//! graph and run the whole MGNet pipeline over the concatenated rows.
+//!
+//! The single-state path ([`RustPolicy::forward_into`]) pays the fixed
+//! cost of every dense layer once per state — at training batch sizes
+//! that is B passes over the same weight matrices with tiny row counts.
+//! [`PackedBatch`] concatenates only the *used* rows of each state
+//! (padding slots are dropped entirely, M = Σ n_used) with the CSR
+//! column indices rebased into the global row space, so one K-step
+//! propagation loop and one trip through each MLP covers the batch.
+//! Per-row math is identical to the per-state path — same accumulation
+//! order everywhere — so batched and single-state outputs agree
+//! bitwise; tests pin them within 1e-5.
+//!
+//! States of *different shape variants* can share a batch: nothing here
+//! depends on the N/J capacities, only on used rows. (The PJRT
+//! `train_step` artifact keeps its single-variant restriction — that is
+//! a property of the compiled dense shapes, not of this packing.)
+
+use super::encode::EncodedState;
+use super::net::{dense, RustPolicy};
+use super::{E, F, H, K, Q1, Q2, Q3, V1, V2};
+use anyhow::{bail, Result};
+
+/// B encoded states packed into one graph over M = Σ n_used rows.
+#[derive(Debug, Clone, Default)]
+pub struct PackedBatch {
+    /// Number of packed states B.
+    pub n_states: usize,
+    /// Per-state node-row offsets (len B+1): state `b` owns packed rows
+    /// `row_base[b]..row_base[b+1]`, in its own slot order.
+    pub row_base: Vec<usize>,
+    /// Per-state job-row offsets (len B+1), same convention.
+    pub job_base: Vec<usize>,
+    /// Concatenated used-row features [M, F].
+    pub x: Vec<f32>,
+    /// Block CSR over all M rows (len M+1): children of global row `i`
+    /// are `col_indices[row_offsets[i]..row_offsets[i+1]]`, already
+    /// rebased into global row indices.
+    pub row_offsets: Vec<u32>,
+    pub col_indices: Vec<u32>,
+    /// Global job row of each packed node row (len M).
+    pub slot_job: Vec<u32>,
+    /// Executable mask over packed rows (len M).
+    pub exec_mask: Vec<f32>,
+}
+
+impl PackedBatch {
+    /// Pack a batch of encoded states. States may mix shape variants;
+    /// per-state padding never enters the packed buffers.
+    pub fn pack(encs: &[&EncodedState]) -> PackedBatch {
+        let b = encs.len();
+        let m: usize = encs.iter().map(|e| e.n_used()).sum();
+        let edges: usize = encs.iter().map(|e| e.n_edges()).sum();
+        let jobs: usize = encs.iter().map(|e| e.n_jobs_used()).sum();
+        let mut out = PackedBatch {
+            n_states: b,
+            row_base: Vec::with_capacity(b + 1),
+            job_base: Vec::with_capacity(b + 1),
+            x: Vec::with_capacity(m * F),
+            row_offsets: Vec::with_capacity(m + 1),
+            col_indices: Vec::with_capacity(edges),
+            slot_job: Vec::with_capacity(m),
+            exec_mask: Vec::with_capacity(m),
+        };
+        out.row_offsets.push(0);
+        let mut row0 = 0u32;
+        let mut job0 = 0u32;
+        for enc in encs {
+            let used = enc.n_used();
+            out.row_base.push(row0 as usize);
+            out.job_base.push(job0 as usize);
+            out.x.extend_from_slice(&enc.x[..used * F]);
+            out.exec_mask.extend_from_slice(&enc.exec_mask[..used]);
+            for i in 0..used {
+                for &c in enc.children_of(i) {
+                    out.col_indices.push(row0 + c);
+                }
+                out.row_offsets.push(out.col_indices.len() as u32);
+            }
+            out.slot_job.extend(enc.slot_job.iter().map(|&j| job0 + j));
+            row0 += used as u32;
+            job0 += enc.n_jobs_used() as u32;
+        }
+        out.row_base.push(row0 as usize);
+        out.job_base.push(job0 as usize);
+        debug_assert_eq!(row0 as usize, m);
+        debug_assert_eq!(job0 as usize, jobs);
+        out
+    }
+
+    /// Total packed node rows M.
+    pub fn n_rows(&self) -> usize {
+        self.slot_job.len()
+    }
+
+    /// Total packed job rows.
+    pub fn n_job_rows(&self) -> usize {
+        *self.job_base.last().unwrap_or(&0)
+    }
+
+    /// State `b`'s slice of a per-row vector (its logits segment).
+    pub fn state_rows<'a, T>(&self, xs: &'a [T], b: usize) -> &'a [T] {
+        &xs[self.row_base[b]..self.row_base[b + 1]]
+    }
+}
+
+/// Write B encoded states into the dense `train_step` batch tensors in
+/// one pass — the PJRT path's batch packer (buffers are the artifact's
+/// B-major layouts and must be pre-zeroed). All states must match the
+/// compiled variant (N, J).
+pub fn write_dense_batch(
+    encs: &[&EncodedState],
+    n: usize,
+    j: usize,
+    x: &mut [f32],
+    adj: &mut [f32],
+    jobmat: &mut [f32],
+    node_mask: &mut [f32],
+    exec_mask: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(x.len(), encs.len() * n * F);
+    debug_assert_eq!(adj.len(), encs.len() * n * n);
+    debug_assert_eq!(jobmat.len(), encs.len() * j * n);
+    for (i, enc) in encs.iter().enumerate() {
+        if enc.variant.n != n || enc.variant.j != j {
+            bail!(
+                "transition encoded at variant N={} J={}, train_step wants N={n} J={j} \
+                 (train with workloads that fit the training variant)",
+                enc.variant.n,
+                enc.variant.j
+            );
+        }
+        x[i * n * F..(i + 1) * n * F].copy_from_slice(&enc.x);
+        enc.write_dense_adj(&mut adj[i * n * n..(i + 1) * n * n]);
+        enc.write_dense_jobmat(&mut jobmat[i * j * n..(i + 1) * j * n]);
+        node_mask[i * n..(i + 1) * n].copy_from_slice(&enc.node_mask);
+        exec_mask[i * n..(i + 1) * n].copy_from_slice(&enc.exec_mask);
+    }
+    Ok(())
+}
+
+/// Reusable buffers for [`RustPolicy::forward_batch`] (sized lazily per
+/// packed batch; `Vec::resize` keeps capacity, so steady-state training
+/// batches stop allocating after warmup).
+#[derive(Default)]
+pub(crate) struct BatchScratch {
+    pub e0: Vec<f32>,
+    pub e: Vec<f32>,
+    pub agg: Vec<f32>,
+    pub h: Vec<f32>,
+    pub msg: Vec<f32>,
+    pub jobsum: Vec<f32>,
+    pub jh: Vec<f32>,
+    pub y: Vec<f32>,
+    pub gsum: Vec<f32>,
+    pub gh: Vec<f32>,
+    pub z: Vec<f32>,
+    pub cat: Vec<f32>,
+    pub q_h1: Vec<f32>,
+    pub q_h2: Vec<f32>,
+    pub q_h3: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub vh1: Vec<f32>,
+    pub vh2: Vec<f32>,
+    pub vout: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub(crate) fn ensure(&mut self, m: usize, jobs: usize, b: usize) {
+        self.e0.resize(m * E, 0.0);
+        self.e.resize(m * E, 0.0);
+        self.agg.resize(m * E, 0.0);
+        self.h.resize(m * H, 0.0);
+        self.msg.resize(m * E, 0.0);
+        self.jobsum.resize(jobs * E, 0.0);
+        self.jh.resize(jobs * H, 0.0);
+        self.y.resize(jobs * E, 0.0);
+        self.gsum.resize(b * E, 0.0);
+        self.gh.resize(b * H, 0.0);
+        self.z.resize(b * E, 0.0);
+        self.cat.resize(m * 3 * E, 0.0);
+        self.q_h1.resize(m * Q1, 0.0);
+        self.q_h2.resize(m * Q2, 0.0);
+        self.q_h3.resize(m * Q3, 0.0);
+        self.logits.resize(m, 0.0);
+        self.vh1.resize(b * V1, 0.0);
+        self.vh2.resize(b * V2, 0.0);
+        self.vout.resize(b, 0.0);
+    }
+}
+
+impl RustPolicy {
+    /// Batched forward pass over a [`PackedBatch`]. Writes the M packed
+    /// per-slot logits into `logits` (state `b`'s segment is
+    /// `batch.state_rows(&logits, b)`, in its own slot order — only used
+    /// slots, no padding) and the B critic values into `values`.
+    /// Per-row accumulation order matches [`RustPolicy::forward_into`]
+    /// exactly, so outputs agree with per-state forwards bitwise.
+    pub fn forward_batch(
+        &mut self,
+        batch: &PackedBatch,
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) {
+        let m = batch.n_rows();
+        let jobs = batch.n_job_rows();
+        let b = batch.n_states;
+        let mut s = std::mem::take(&mut self.batch_scratch);
+        s.ensure(m, jobs, b);
+
+        // e0 = tanh(x·W_in + b_in). Every packed row is a real slot
+        // (node_mask ≡ 1 on used slots), so no masking is needed.
+        dense(&batch.x, self.p("w_in"), self.p("b_in"), &mut s.e0, m, F, E, true);
+        s.e[..m * E].copy_from_slice(&s.e0[..m * E]);
+
+        // K message-passing iterations over the block CSR — one shared
+        // loop for the whole batch; cross-state edges cannot exist by
+        // construction (column indices are rebased per state block).
+        for _ in 0..K {
+            s.agg[..m * E].fill(0.0);
+            for i in 0..m {
+                let lo = batch.row_offsets[i] as usize;
+                let hi = batch.row_offsets[i + 1] as usize;
+                for &c in &batch.col_indices[lo..hi] {
+                    let c = c as usize;
+                    let erow = &s.e[c * E..(c + 1) * E];
+                    let arow = &mut s.agg[i * E..(i + 1) * E];
+                    for (o, &ev) in arow.iter_mut().zip(erow) {
+                        *o += ev;
+                    }
+                }
+            }
+            dense(&s.agg, self.p("g1"), self.p("bg1"), &mut s.h, m, E, H, true);
+            dense(&s.h, self.p("g2"), self.p("bg2"), &mut s.msg, m, H, E, true);
+            for d in 0..m * E {
+                s.e[d] = s.msg[d] + s.e0[d];
+            }
+        }
+
+        // Per-job summaries over global job rows (all occupied — empty
+        // job slots never enter the packing, so no zeroing either).
+        s.jobsum[..jobs * E].fill(0.0);
+        for (i, &js) in batch.slot_job.iter().enumerate() {
+            let js = js as usize;
+            let erow = &s.e[i * E..(i + 1) * E];
+            let jrow = &mut s.jobsum[js * E..(js + 1) * E];
+            for (o, &ev) in jrow.iter_mut().zip(erow) {
+                *o += ev;
+            }
+        }
+        dense(&s.jobsum, self.p("fj1"), self.p("bfj1"), &mut s.jh, jobs, E, H, true);
+        dense(&s.jh, self.p("fj2"), self.p("bfj2"), &mut s.y, jobs, H, E, true);
+
+        // Global summaries: one z row per state from its job segment.
+        s.gsum[..b * E].fill(0.0);
+        for bi in 0..b {
+            let grow = &mut s.gsum[bi * E..(bi + 1) * E];
+            for j in batch.job_base[bi]..batch.job_base[bi + 1] {
+                let yrow = &s.y[j * E..(j + 1) * E];
+                for (o, &yv) in grow.iter_mut().zip(yrow) {
+                    *o += yv;
+                }
+            }
+        }
+        dense(&s.gsum, self.p("fg1"), self.p("bfg1"), &mut s.gh, b, E, H, true);
+        dense(&s.gh, self.p("fg2"), self.p("bfg2"), &mut s.z, b, H, E, true);
+
+        // Per-node score input [e_i ; y_job(i) ; z_state(i)].
+        for bi in 0..b {
+            let zrow = &s.z[bi * E..(bi + 1) * E];
+            for i in batch.row_base[bi]..batch.row_base[bi + 1] {
+                let js = batch.slot_job[i] as usize;
+                let cat = &mut s.cat[i * 3 * E..(i + 1) * 3 * E];
+                cat[..E].copy_from_slice(&s.e[i * E..(i + 1) * E]);
+                cat[E..2 * E].copy_from_slice(&s.y[js * E..(js + 1) * E]);
+                cat[2 * E..].copy_from_slice(zrow);
+            }
+        }
+        dense(&s.cat, self.p("q1"), self.p("bq1"), &mut s.q_h1, m, 3 * E, Q1, true);
+        dense(&s.q_h1, self.p("q2"), self.p("bq2"), &mut s.q_h2, m, Q1, Q2, true);
+        dense(&s.q_h2, self.p("q3"), self.p("bq3"), &mut s.q_h3, m, Q2, Q3, true);
+        dense(&s.q_h3, self.p("q4"), self.p("bq4"), &mut s.logits, m, Q3, 1, false);
+
+        // Value head, batched over the B z rows.
+        dense(&s.z, self.p("v1"), self.p("bv1"), &mut s.vh1, b, E, V1, true);
+        dense(&s.vh1, self.p("v2"), self.p("bv2"), &mut s.vh2, b, V1, V2, true);
+        dense(&s.vh2, self.p("v3"), self.p("bv3"), &mut s.vout, b, V2, 1, false);
+
+        logits.clear();
+        logits.extend_from_slice(&s.logits[..m]);
+        values.clear();
+        values.extend_from_slice(&s.vout[..b]);
+        self.batch_scratch = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::WorkloadConfig;
+    use crate::policy::encode::encode;
+    use crate::policy::features::FeatureMode;
+    use crate::sim::SimState;
+    use crate::workload::WorkloadGenerator;
+
+    fn enc(n_jobs: usize, seed: u64) -> EncodedState {
+        let cluster = Cluster::homogeneous(4, 2.5, 100.0);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
+        let mut st = SimState::new(cluster, w);
+        for j in 0..n_jobs {
+            st.mark_arrived(j);
+        }
+        encode(&st, FeatureMode::Full)
+    }
+
+    #[test]
+    fn pack_shape_invariants() {
+        let encs = [enc(2, 1), enc(3, 2), enc(1, 3)];
+        let refs: Vec<&EncodedState> = encs.iter().collect();
+        let p = PackedBatch::pack(&refs);
+        assert_eq!(p.n_states, 3);
+        let m: usize = encs.iter().map(|e| e.n_used()).sum();
+        assert_eq!(p.n_rows(), m);
+        assert_eq!(p.x.len(), m * F);
+        assert_eq!(p.row_offsets.len(), m + 1);
+        assert_eq!(p.slot_job.len(), m);
+        assert_eq!(p.exec_mask.len(), m);
+        assert_eq!(p.row_base, {
+            let mut rb = vec![0usize];
+            for e in &encs {
+                rb.push(rb.last().unwrap() + e.n_used());
+            }
+            rb
+        });
+        // Every CSR column stays inside its owning state's block.
+        for b in 0..3 {
+            for i in p.row_base[b]..p.row_base[b + 1] {
+                let lo = p.row_offsets[i] as usize;
+                let hi = p.row_offsets[i + 1] as usize;
+                for &c in &p.col_indices[lo..hi] {
+                    assert!((c as usize) >= p.row_base[b] && (c as usize) < p.row_base[b + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_into() {
+        let encs = [enc(2, 5), enc(3, 6), enc(2, 7)];
+        let refs: Vec<&EncodedState> = encs.iter().collect();
+        let batch = PackedBatch::pack(&refs);
+        let mut net = RustPolicy::random(42);
+        let (mut blogits, mut bvalues) = (Vec::new(), Vec::new());
+        net.forward_batch(&batch, &mut blogits, &mut bvalues);
+        assert_eq!(bvalues.len(), 3);
+        let mut single = Vec::new();
+        for (b, e) in encs.iter().enumerate() {
+            let v = net.forward_into(e, &mut single);
+            assert!(
+                (v - bvalues[b]).abs() <= 1e-5,
+                "state {b} value {v} vs batched {}",
+                bvalues[b]
+            );
+            let seg = batch.state_rows(&blogits, b);
+            assert_eq!(seg.len(), e.n_used());
+            for (i, (&bl, &sl)) in seg.iter().zip(single.iter()).enumerate() {
+                assert!((bl - sl).abs() <= 1e-5, "state {b} slot {i}: {bl} vs {sl}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_variant_batch_works() {
+        let small = enc(2, 8); // N=64 variant
+        let big = enc(12, 9); // N=256 variant
+        assert_ne!(small.variant.n, big.variant.n);
+        let refs = [&small, &big];
+        let batch = PackedBatch::pack(&refs);
+        let mut net = RustPolicy::random(4);
+        let (mut l, mut v) = (Vec::new(), Vec::new());
+        net.forward_batch(&batch, &mut l, &mut v);
+        assert_eq!(v.len(), 2);
+        let mut single = Vec::new();
+        for (b, e) in refs.iter().enumerate() {
+            let sv = net.forward_into(e, &mut single);
+            assert!((sv - v[b]).abs() <= 1e-5);
+            for (i, (&bl, &sl)) in batch.state_rows(&l, b).iter().zip(&single).enumerate() {
+                assert!((bl - sl).abs() <= 1e-5, "state {b} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_scratch_reuse() {
+        let mut net = RustPolicy::random(5);
+        let (mut l, mut v) = (Vec::new(), Vec::new());
+        net.forward_batch(&PackedBatch::pack(&[]), &mut l, &mut v);
+        assert!(l.is_empty() && v.is_empty());
+        // A big batch then a small one: stale buffer tails must not leak.
+        let encs = [enc(3, 10), enc(3, 11)];
+        let refs: Vec<&EncodedState> = encs.iter().collect();
+        net.forward_batch(&PackedBatch::pack(&refs), &mut l, &mut v);
+        let both = (l.clone(), v.clone());
+        let one = PackedBatch::pack(&refs[..1]);
+        net.forward_batch(&one, &mut l, &mut v);
+        assert_eq!(v[0], both.1[0]);
+        assert_eq!(l[..one.n_rows()], both.0[..one.n_rows()]);
+    }
+
+    #[test]
+    fn write_dense_batch_matches_row_writers() {
+        let encs = [enc(2, 12), enc(2, 13)];
+        let refs: Vec<&EncodedState> = encs.iter().collect();
+        let (n, j) = (encs[0].variant.n, encs[0].variant.j);
+        let b = refs.len();
+        let mut x = vec![0.0; b * n * F];
+        let mut adj = vec![0.0; b * n * n];
+        let mut jobmat = vec![0.0; b * j * n];
+        let mut nm = vec![0.0; b * n];
+        let mut em = vec![0.0; b * n];
+        write_dense_batch(&refs, n, j, &mut x, &mut adj, &mut jobmat, &mut nm, &mut em)
+            .unwrap();
+        for (i, e) in encs.iter().enumerate() {
+            assert_eq!(x[i * n * F..(i + 1) * n * F], e.x[..]);
+            assert_eq!(adj[i * n * n..(i + 1) * n * n], e.dense_adj()[..]);
+            assert_eq!(jobmat[i * j * n..(i + 1) * j * n], e.dense_jobmat()[..]);
+            assert_eq!(nm[i * n..(i + 1) * n], e.node_mask[..]);
+            assert_eq!(em[i * n..(i + 1) * n], e.exec_mask[..]);
+        }
+        // Variant mismatch is rejected.
+        let big = enc(12, 14);
+        assert!(write_dense_batch(
+            &[&big],
+            n,
+            j,
+            &mut x[..n * F],
+            &mut adj[..n * n],
+            &mut jobmat[..j * n],
+            &mut nm[..n],
+            &mut em[..n],
+        )
+        .is_err());
+    }
+}

@@ -24,12 +24,14 @@
 //! [`EncodedState::dense_jobmat`]) for the PJRT artifact and the
 //! dense-oracle cross-validation tests.
 
+pub mod batch;
 pub mod cache;
 pub mod encode;
 pub mod features;
 pub mod net;
 pub mod params;
 
+pub use batch::PackedBatch;
 pub use cache::EncoderCache;
 pub use encode::{EncodedState, ShapeVariant};
 pub use features::{FeatureMode, NODE_FEATURES};

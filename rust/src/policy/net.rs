@@ -22,6 +22,7 @@
 use super::encode::EncodedState;
 use super::{PolicyEval, E, F, H, K, Q1, Q2, Q3, V1, V2};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// The flat parameter layout: (name, rows, cols). Biases are 1×cols.
 /// THIS IS THE MODEL CONTRACT — `python/compile/model.py::LAYOUT` must
@@ -75,7 +76,7 @@ pub fn param_offset(name: &str) -> usize {
 }
 
 /// out[m,n] += a[m,k] · b[k,n] — row-major, allocation-free.
-fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+pub(crate) fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -96,7 +97,7 @@ fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usi
 }
 
 /// Dense layer: out = act(x·w + b) for a batch of m rows.
-fn dense(
+pub(crate) fn dense(
     x: &[f32],
     w: &[f32],
     b: &[f32],
@@ -116,11 +117,16 @@ fn dense(
     }
 }
 
-/// A pure-rust policy: flat parameters + scratch buffers.
+/// A pure-rust policy: flat parameters + scratch buffers. Parameters sit
+/// behind an `Arc` so one trained snapshot can be shared across parallel
+/// rollout actors (and the trainer's eval runs) without cloning the full
+/// vector per policy instance.
 pub struct RustPolicy {
-    pub params: Vec<f32>,
+    pub params: Arc<Vec<f32>>,
     // Scratch (sized lazily for the variant in use).
     scratch: Scratch,
+    // Batched-forward scratch (sized lazily per packed batch).
+    pub(crate) batch_scratch: super::batch::BatchScratch,
 }
 
 #[derive(Default)]
@@ -187,6 +193,12 @@ impl Scratch {
 
 impl RustPolicy {
     pub fn new(params: Vec<f32>) -> RustPolicy {
+        RustPolicy::shared(Arc::new(params))
+    }
+
+    /// Build a policy over an existing shared parameter snapshot — no
+    /// copy; every actor holding the same `Arc` reads the same weights.
+    pub fn shared(params: Arc<Vec<f32>>) -> RustPolicy {
         assert_eq!(
             params.len(),
             param_len(),
@@ -197,6 +209,7 @@ impl RustPolicy {
         RustPolicy {
             params,
             scratch: Scratch::default(),
+            batch_scratch: super::batch::BatchScratch::default(),
         }
     }
 
@@ -204,6 +217,13 @@ impl RustPolicy {
     /// side's `init_params` (not bit-identical, used when artifacts are
     /// unavailable, e.g. pure-rust tests).
     pub fn random(seed: u64) -> RustPolicy {
+        RustPolicy::new(RustPolicy::random_params(seed))
+    }
+
+    /// The flat parameter vector [`RustPolicy::random`] wraps — for
+    /// callers that need owned weights (backends, checkpoints) rather
+    /// than a policy instance.
+    pub fn random_params(seed: u64) -> Vec<f32> {
         let mut rng = crate::util::rng::Rng::new(seed ^ 0x9017_11E7);
         let mut params = vec![0.0f32; param_len()];
         let mut off = 0;
@@ -219,10 +239,10 @@ impl RustPolicy {
             }
             off += r * c;
         }
-        RustPolicy::new(params)
+        params
     }
 
-    fn p(&self, name: &str) -> &[f32] {
+    pub(crate) fn p(&self, name: &str) -> &[f32] {
         let off = param_offset(name);
         let (_, r, c) = LAYOUT
             .iter()

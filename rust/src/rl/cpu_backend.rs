@@ -1,0 +1,856 @@
+//! Native CPU gradient backend: analytic backprop through the sparse
+//! MGNet kernels, so `lachesis train` / `repro fig4` work without the
+//! `pjrt` feature (no XLA, no artifacts).
+//!
+//! The forward pass rides [`PackedBatch`] — the whole batch is one
+//! block-CSR graph, every dense layer runs once over the concatenated
+//! rows. The loss mirrors `python/compile/model.py::_loss` exactly with
+//! unit sample weights (no padding rows exist in the packed form):
+//!
+//! ```text
+//! wsum    = B + 1e-8
+//! pg      =  Σ_b −adv_b · logπ(a_b | s_b)            / wsum
+//! entropy =  Σ_b −Σ_{i∈A_b} π_i logπ_i              / wsum
+//! vloss   =  Σ_b (v_b − ret_b)²                      / wsum
+//! total   = pg + vw·vloss − ew·entropy
+//! ```
+//!
+//! followed by the same global-norm clip (‖g‖ capped at 5) and Adam step
+//! (β₁ 0.9, β₂ 0.999, ε 1e-8, bias correction) the AOT `train_step`
+//! applies. The backward pass is exact — gradient-checked against
+//! central finite differences in the tests below — and reuses its tape
+//! buffers across updates, so steady-state training does not allocate.
+//!
+//! Unlike the PJRT path this backend accepts batches that mix shape
+//! variants (packing ignores the N/J capacities), which matters late in
+//! an episode when states shrink from the n256 into the n64 variant.
+
+use crate::policy::batch::PackedBatch;
+use crate::policy::encode::EncodedState;
+use crate::policy::net::{dense, param_len, LAYOUT};
+use crate::policy::{E, F, H, K, Q1, Q2, Q3, V1, V2};
+use crate::rl::trainer::{Row, TrainBackend};
+use anyhow::Result;
+
+/// Default minibatch size for CPU training (the PJRT artifact's compiled
+/// B is fixed at build time; the CPU path is shape-free, this is just a
+/// sensible throughput/variance trade-off).
+pub const CPU_TRAIN_BATCH: usize = 64;
+
+/// Offset and length of a named tensor in the flat vector.
+fn span(name: &str) -> (usize, usize) {
+    let mut off = 0;
+    for (n, r, c) in LAYOUT {
+        if *n == name {
+            return (off, r * c);
+        }
+        off += r * c;
+    }
+    panic!("unknown parameter '{name}'");
+}
+
+/// A named tensor of a flat parameter (or gradient) vector.
+fn ten<'a>(v: &'a [f32], name: &str) -> &'a [f32] {
+    let (off, len) = span(name);
+    &v[off..off + len]
+}
+
+/// Mutable (weight, bias) gradient pair. Relies on the LAYOUT invariant
+/// that each bias immediately follows its weight tensor.
+fn wb_mut<'a>(g: &'a mut [f32], w: &str, b: &str) -> (&'a mut [f32], &'a mut [f32]) {
+    let (wo, wl) = span(w);
+    let (bo, bl) = span(b);
+    debug_assert_eq!(wo + wl, bo, "{b} must directly follow {w} in LAYOUT");
+    let (ws, bs) = g[wo..bo + bl].split_at_mut(wl);
+    (ws, bs)
+}
+
+/// Backward through one dense layer `out = act(input·W + b)` over m rows.
+/// On entry `d_out` holds ∂L/∂out; it is rewritten in place to the
+/// pre-activation gradient. Weight/bias gradients accumulate into
+/// `dw`/`db`; ∂L/∂input is written (overwritten, not accumulated) into
+/// `d_in` when given.
+#[allow(clippy::too_many_arguments)]
+fn dense_bwd(
+    input: &[f32],
+    out: &[f32],
+    d_out: &mut [f32],
+    w: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    mut d_in: Option<&mut [f32]>,
+    m: usize,
+    din: usize,
+    dout: usize,
+    tanh: bool,
+) {
+    if tanh {
+        for (d, &o) in d_out[..m * dout].iter_mut().zip(&out[..m * dout]) {
+            *d *= 1.0 - o * o;
+        }
+    }
+    for r in 0..m {
+        let irow = &input[r * din..(r + 1) * din];
+        let drow = &d_out[r * dout..(r + 1) * dout];
+        for (k, &iv) in irow.iter().enumerate() {
+            if iv != 0.0 {
+                let wrow = &mut dw[k * dout..(k + 1) * dout];
+                for (o, &dv) in wrow.iter_mut().zip(drow) {
+                    *o += iv * dv;
+                }
+            }
+        }
+        for (o, &dv) in db.iter_mut().zip(drow) {
+            *o += dv;
+        }
+    }
+    if let Some(d_in) = d_in.as_deref_mut() {
+        for r in 0..m {
+            let drow = &d_out[r * dout..(r + 1) * dout];
+            let irow = &mut d_in[r * din..(r + 1) * din];
+            for (k, o) in irow.iter_mut().enumerate() {
+                let wrow = &w[k * dout..(k + 1) * dout];
+                let mut acc = 0.0f32;
+                for (&dv, &wv) in drow.iter().zip(wrow) {
+                    acc += dv * wv;
+                }
+                *o = acc;
+            }
+        }
+    }
+}
+
+/// Forward activations + backward scratch, reused across updates.
+#[derive(Default)]
+struct Tape {
+    pack: PackedBatch,
+    // Forward activations (aggregation inputs per K iteration kept for
+    // the shared-weight g1/g2 gradients).
+    e0: Vec<f32>,
+    e: Vec<f32>,
+    agg: Vec<f32>, // K × m × E
+    h: Vec<f32>,   // K × m × H
+    msg: Vec<f32>, // K × m × E
+    jobsum: Vec<f32>,
+    jh: Vec<f32>,
+    y: Vec<f32>,
+    gsum: Vec<f32>,
+    gh: Vec<f32>,
+    z: Vec<f32>,
+    cat: Vec<f32>,
+    q1: Vec<f32>,
+    q2: Vec<f32>,
+    q3: Vec<f32>,
+    logits: Vec<f32>,
+    vh1: Vec<f32>,
+    vh2: Vec<f32>,
+    values: Vec<f32>,
+    logp: Vec<f32>,
+    prob: Vec<f32>,
+    // Backward scratch.
+    d_e: Vec<f32>,
+    d_e0: Vec<f32>,
+    d_agg: Vec<f32>,
+    d_h: Vec<f32>,
+    d_jh: Vec<f32>,
+    d_jobsum: Vec<f32>,
+    d_y: Vec<f32>,
+    d_gh: Vec<f32>,
+    d_gsum: Vec<f32>,
+    d_z: Vec<f32>,
+    d_cat: Vec<f32>,
+    d_q1: Vec<f32>,
+    d_q2: Vec<f32>,
+    d_q3: Vec<f32>,
+    d_logits: Vec<f32>,
+    d_vh1: Vec<f32>,
+    d_vh2: Vec<f32>,
+    d_values: Vec<f32>,
+}
+
+impl Tape {
+    fn ensure(&mut self, m: usize, jobs: usize, b: usize) {
+        self.e0.resize(m * E, 0.0);
+        self.e.resize(m * E, 0.0);
+        self.agg.resize(K * m * E, 0.0);
+        self.h.resize(K * m * H, 0.0);
+        self.msg.resize(K * m * E, 0.0);
+        self.jobsum.resize(jobs * E, 0.0);
+        self.jh.resize(jobs * H, 0.0);
+        self.y.resize(jobs * E, 0.0);
+        self.gsum.resize(b * E, 0.0);
+        self.gh.resize(b * H, 0.0);
+        self.z.resize(b * E, 0.0);
+        self.cat.resize(m * 3 * E, 0.0);
+        self.q1.resize(m * Q1, 0.0);
+        self.q2.resize(m * Q2, 0.0);
+        self.q3.resize(m * Q3, 0.0);
+        self.logits.resize(m, 0.0);
+        self.vh1.resize(b * V1, 0.0);
+        self.vh2.resize(b * V2, 0.0);
+        self.values.resize(b, 0.0);
+        self.logp.resize(m, 0.0);
+        self.prob.resize(m, 0.0);
+        self.d_e.resize(m * E, 0.0);
+        self.d_e0.resize(m * E, 0.0);
+        self.d_agg.resize(m * E, 0.0);
+        self.d_h.resize(m * H, 0.0);
+        self.d_jh.resize(jobs * H, 0.0);
+        self.d_jobsum.resize(jobs * E, 0.0);
+        self.d_y.resize(jobs * E, 0.0);
+        self.d_gh.resize(b * H, 0.0);
+        self.d_gsum.resize(b * E, 0.0);
+        self.d_z.resize(b * E, 0.0);
+        self.d_cat.resize(m * 3 * E, 0.0);
+        self.d_q1.resize(m * Q1, 0.0);
+        self.d_q2.resize(m * Q2, 0.0);
+        self.d_q3.resize(m * Q3, 0.0);
+        self.d_logits.resize(m, 0.0);
+        self.d_vh1.resize(b * V1, 0.0);
+        self.d_vh2.resize(b * V2, 0.0);
+        self.d_values.resize(b, 0.0);
+    }
+}
+
+/// The CPU training backend: flat parameters + Adam moments + gradient
+/// and tape buffers.
+pub struct CpuTrainBackend {
+    params: Vec<f32>,
+    m_adam: Vec<f32>,
+    v_adam: Vec<f32>,
+    step: f32,
+    grads: Vec<f32>,
+    tape: Tape,
+}
+
+impl CpuTrainBackend {
+    pub fn new(init_params: Vec<f32>) -> CpuTrainBackend {
+        assert_eq!(
+            init_params.len(),
+            param_len(),
+            "parameter vector length mismatch: got {}, layout wants {}",
+            init_params.len(),
+            param_len()
+        );
+        let p = init_params.len();
+        CpuTrainBackend {
+            params: init_params,
+            m_adam: vec![0.0; p],
+            v_adam: vec![0.0; p],
+            step: 0.0,
+            grads: vec![0.0; p],
+            tape: Tape::default(),
+        }
+    }
+
+    /// Forward pass over the packed batch, recording every activation.
+    fn forward_tape(&self, t: &mut Tape, batch: &[Row]) {
+        let refs: Vec<&EncodedState> = batch.iter().map(|r| &r.enc).collect();
+        t.pack = PackedBatch::pack(&refs);
+        let m = t.pack.n_rows();
+        let jobs = t.pack.n_job_rows();
+        let b = t.pack.n_states;
+        t.ensure(m, jobs, b);
+        let pp = &self.params[..];
+
+        dense(&t.pack.x, ten(pp, "w_in"), ten(pp, "b_in"), &mut t.e0, m, F, E, true);
+        t.e[..m * E].copy_from_slice(&t.e0[..m * E]);
+        for k in 0..K {
+            let agg = &mut t.agg[k * m * E..(k + 1) * m * E];
+            agg.fill(0.0);
+            for i in 0..m {
+                let lo = t.pack.row_offsets[i] as usize;
+                let hi = t.pack.row_offsets[i + 1] as usize;
+                for &c in &t.pack.col_indices[lo..hi] {
+                    let c = c as usize;
+                    let erow = &t.e[c * E..(c + 1) * E];
+                    let arow = &mut agg[i * E..(i + 1) * E];
+                    for (o, &ev) in arow.iter_mut().zip(erow) {
+                        *o += ev;
+                    }
+                }
+            }
+            dense(
+                &t.agg[k * m * E..(k + 1) * m * E],
+                ten(pp, "g1"),
+                ten(pp, "bg1"),
+                &mut t.h[k * m * H..(k + 1) * m * H],
+                m,
+                E,
+                H,
+                true,
+            );
+            dense(
+                &t.h[k * m * H..(k + 1) * m * H],
+                ten(pp, "g2"),
+                ten(pp, "bg2"),
+                &mut t.msg[k * m * E..(k + 1) * m * E],
+                m,
+                H,
+                E,
+                true,
+            );
+            for d in 0..m * E {
+                t.e[d] = t.msg[k * m * E + d] + t.e0[d];
+            }
+        }
+
+        t.jobsum[..jobs * E].fill(0.0);
+        for (i, &js) in t.pack.slot_job.iter().enumerate() {
+            let js = js as usize;
+            for d in 0..E {
+                t.jobsum[js * E + d] += t.e[i * E + d];
+            }
+        }
+        dense(&t.jobsum, ten(pp, "fj1"), ten(pp, "bfj1"), &mut t.jh, jobs, E, H, true);
+        dense(&t.jh, ten(pp, "fj2"), ten(pp, "bfj2"), &mut t.y, jobs, H, E, true);
+
+        t.gsum[..b * E].fill(0.0);
+        for bi in 0..b {
+            for j in t.pack.job_base[bi]..t.pack.job_base[bi + 1] {
+                for d in 0..E {
+                    t.gsum[bi * E + d] += t.y[j * E + d];
+                }
+            }
+        }
+        dense(&t.gsum, ten(pp, "fg1"), ten(pp, "bfg1"), &mut t.gh, b, E, H, true);
+        dense(&t.gh, ten(pp, "fg2"), ten(pp, "bfg2"), &mut t.z, b, H, E, true);
+
+        for bi in 0..b {
+            let zrow = &t.z[bi * E..(bi + 1) * E];
+            for i in t.pack.row_base[bi]..t.pack.row_base[bi + 1] {
+                let js = t.pack.slot_job[i] as usize;
+                let cat = &mut t.cat[i * 3 * E..(i + 1) * 3 * E];
+                cat[..E].copy_from_slice(&t.e[i * E..(i + 1) * E]);
+                cat[E..2 * E].copy_from_slice(&t.y[js * E..(js + 1) * E]);
+                cat[2 * E..].copy_from_slice(zrow);
+            }
+        }
+        dense(&t.cat, ten(pp, "q1"), ten(pp, "bq1"), &mut t.q1, m, 3 * E, Q1, true);
+        dense(&t.q1, ten(pp, "q2"), ten(pp, "bq2"), &mut t.q2, m, Q1, Q2, true);
+        dense(&t.q2, ten(pp, "q3"), ten(pp, "bq3"), &mut t.q3, m, Q2, Q3, true);
+        dense(&t.q3, ten(pp, "q4"), ten(pp, "bq4"), &mut t.logits, m, Q3, 1, false);
+
+        dense(&t.z, ten(pp, "v1"), ten(pp, "bv1"), &mut t.vh1, b, E, V1, true);
+        dense(&t.vh1, ten(pp, "v2"), ten(pp, "bv2"), &mut t.vh2, b, V1, V2, true);
+        dense(&t.vh2, ten(pp, "v3"), ten(pp, "bv3"), &mut t.values, b, V2, 1, false);
+    }
+
+    /// Losses (total, pg, value, entropy) from the recorded tape; when
+    /// `want_grads`, also seeds ∂L/∂logits and ∂L/∂values.
+    fn losses_from_tape(t: &mut Tape, batch: &[Row], ew: f32, vw: f32, want_grads: bool) -> [f32; 4] {
+        let m = t.pack.n_rows();
+        let wsum = batch.len() as f32 + 1e-8;
+        let (mut pg, mut ent, mut vl) = (0.0f64, 0.0f64, 0.0f64);
+        if want_grads {
+            t.d_logits[..m].fill(0.0);
+        }
+        for (bi, row) in batch.iter().enumerate() {
+            let lo = t.pack.row_base[bi];
+            let hi = t.pack.row_base[bi + 1];
+            // Masked log-softmax over the state's executable slots —
+            // identical to the python reference's −1e9 masking in the
+            // limit (excluded slots simply don't enter the logsumexp).
+            let mut maxl = f32::NEG_INFINITY;
+            for i in lo..hi {
+                if t.pack.exec_mask[i] > 0.0 && t.logits[i] > maxl {
+                    maxl = t.logits[i];
+                }
+            }
+            let verr = t.values[bi] - row.ret;
+            vl += (verr * verr) as f64;
+            if want_grads {
+                t.d_values[bi] = 2.0 * vw * verr / wsum;
+            }
+            if !maxl.is_finite() {
+                // No executable slot survived encoding; the row carries
+                // no policy-gradient signal (cannot happen for sampled
+                // transitions, guarded for arbitrary callers).
+                continue;
+            }
+            let mut sum = 0.0f32;
+            for i in lo..hi {
+                if t.pack.exec_mask[i] > 0.0 {
+                    sum += (t.logits[i] - maxl).exp();
+                }
+            }
+            let lse = maxl + sum.ln();
+            let mut hent = 0.0f32;
+            for i in lo..hi {
+                if t.pack.exec_mask[i] > 0.0 {
+                    let lp = t.logits[i] - lse;
+                    let p = lp.exp();
+                    t.logp[i] = lp;
+                    t.prob[i] = p;
+                    hent -= p * lp;
+                } else {
+                    t.logp[i] = 0.0;
+                    t.prob[i] = 0.0;
+                }
+            }
+            let a = lo + row.action as usize;
+            debug_assert!(
+                a < hi && t.pack.exec_mask[a] > 0.0,
+                "action {} not executable in its state",
+                row.action
+            );
+            pg += (-row.adv * t.logp[a]) as f64;
+            ent += hent as f64;
+            if want_grads {
+                for i in lo..hi {
+                    if t.pack.exec_mask[i] > 0.0 {
+                        let delta = if i == a { 1.0 } else { 0.0 };
+                        // d pg/dl + d(−ew·entropy)/dl, both already /wsum.
+                        t.d_logits[i] = (row.adv / wsum) * (t.prob[i] - delta)
+                            + (ew / wsum) * t.prob[i] * (t.logp[i] + hent);
+                    }
+                }
+            }
+        }
+        let pg = (pg / wsum as f64) as f32;
+        let ent = (ent / wsum as f64) as f32;
+        let vl = (vl / wsum as f64) as f32;
+        [pg + vw * vl - ew * ent, pg, vl, ent]
+    }
+
+    /// Backward pass: tape + loss seeds → flat gradient vector.
+    fn backward_pass(params: &[f32], g: &mut [f32], t: &mut Tape) {
+        let m = t.pack.n_rows();
+        let jobs = t.pack.n_job_rows();
+        let b = t.pack.n_states;
+        g.fill(0.0);
+
+        // Policy head (q4 is linear, q1–q3 tanh).
+        {
+            let (dw, db) = wb_mut(g, "q4", "bq4");
+            dense_bwd(&t.q3, &t.logits, &mut t.d_logits, ten(params, "q4"), dw, db, Some(&mut t.d_q3), m, Q3, 1, false);
+        }
+        {
+            let (dw, db) = wb_mut(g, "q3", "bq3");
+            dense_bwd(&t.q2, &t.q3, &mut t.d_q3, ten(params, "q3"), dw, db, Some(&mut t.d_q2), m, Q2, Q3, true);
+        }
+        {
+            let (dw, db) = wb_mut(g, "q2", "bq2");
+            dense_bwd(&t.q1, &t.q2, &mut t.d_q2, ten(params, "q2"), dw, db, Some(&mut t.d_q1), m, Q1, Q2, true);
+        }
+        {
+            let (dw, db) = wb_mut(g, "q1", "bq1");
+            dense_bwd(&t.cat, &t.q1, &mut t.d_q1, ten(params, "q1"), dw, db, Some(&mut t.d_cat), m, 3 * E, Q1, true);
+        }
+
+        // Value head — lands its input gradient in d_z (overwritten, so
+        // run it before the cat-split accumulates into d_z).
+        {
+            let (dw, db) = wb_mut(g, "v3", "bv3");
+            dense_bwd(&t.vh2, &t.values, &mut t.d_values, ten(params, "v3"), dw, db, Some(&mut t.d_vh2), b, V2, 1, false);
+        }
+        {
+            let (dw, db) = wb_mut(g, "v2", "bv2");
+            dense_bwd(&t.vh1, &t.vh2, &mut t.d_vh2, ten(params, "v2"), dw, db, Some(&mut t.d_vh1), b, V1, V2, true);
+        }
+        {
+            let (dw, db) = wb_mut(g, "v1", "bv1");
+            dense_bwd(&t.z, &t.vh1, &mut t.d_vh1, ten(params, "v1"), dw, db, Some(&mut t.d_z), b, E, V1, true);
+        }
+
+        // Split the concat gradient: [e_i ; y_job(i) ; z_state(i)].
+        t.d_y[..jobs * E].fill(0.0);
+        for bi in 0..b {
+            for i in t.pack.row_base[bi]..t.pack.row_base[bi + 1] {
+                let js = t.pack.slot_job[i] as usize;
+                let dcat = &t.d_cat[i * 3 * E..(i + 1) * 3 * E];
+                t.d_e[i * E..(i + 1) * E].copy_from_slice(&dcat[..E]);
+                for d in 0..E {
+                    t.d_y[js * E + d] += dcat[E + d];
+                    t.d_z[bi * E + d] += dcat[2 * E + d];
+                }
+            }
+        }
+
+        // Global summary: z = f(gsum), gsum_b = Σ_{j∈b} y_j.
+        {
+            let (dw, db) = wb_mut(g, "fg2", "bfg2");
+            dense_bwd(&t.gh, &t.z, &mut t.d_z, ten(params, "fg2"), dw, db, Some(&mut t.d_gh), b, H, E, true);
+        }
+        {
+            let (dw, db) = wb_mut(g, "fg1", "bfg1");
+            dense_bwd(&t.gsum, &t.gh, &mut t.d_gh, ten(params, "fg1"), dw, db, Some(&mut t.d_gsum), b, E, H, true);
+        }
+        for bi in 0..b {
+            for j in t.pack.job_base[bi]..t.pack.job_base[bi + 1] {
+                for d in 0..E {
+                    t.d_y[j * E + d] += t.d_gsum[bi * E + d];
+                }
+            }
+        }
+
+        // Job summaries: y = f(jobsum), jobsum_j = Σ_{i∈j} e_i.
+        {
+            let (dw, db) = wb_mut(g, "fj2", "bfj2");
+            dense_bwd(&t.jh, &t.y, &mut t.d_y, ten(params, "fj2"), dw, db, Some(&mut t.d_jh), jobs, H, E, true);
+        }
+        {
+            let (dw, db) = wb_mut(g, "fj1", "bfj1");
+            dense_bwd(&t.jobsum, &t.jh, &mut t.d_jh, ten(params, "fj1"), dw, db, Some(&mut t.d_jobsum), jobs, E, H, true);
+        }
+        for (i, &js) in t.pack.slot_job.iter().enumerate() {
+            let js = js as usize;
+            for d in 0..E {
+                t.d_e[i * E + d] += t.d_jobsum[js * E + d];
+            }
+        }
+
+        // K message-passing iterations, reversed. Iteration k computed
+        // e_{k+1} = msg_k(agg(e_k)) + e0; d_e enters holding ∂L/∂e_{k+1}
+        // and leaves holding ∂L/∂e_k. The g1/g2 gradients accumulate
+        // across iterations (shared weights).
+        t.d_e0[..m * E].fill(0.0);
+        for k in (0..K).rev() {
+            for d in 0..m * E {
+                t.d_e0[d] += t.d_e[d]; // skip connection
+            }
+            {
+                let (dw, db) = wb_mut(g, "g2", "bg2");
+                dense_bwd(
+                    &t.h[k * m * H..(k + 1) * m * H],
+                    &t.msg[k * m * E..(k + 1) * m * E],
+                    &mut t.d_e,
+                    ten(params, "g2"),
+                    dw,
+                    db,
+                    Some(&mut t.d_h),
+                    m,
+                    H,
+                    E,
+                    true,
+                );
+            }
+            {
+                let (dw, db) = wb_mut(g, "g1", "bg1");
+                dense_bwd(
+                    &t.agg[k * m * E..(k + 1) * m * E],
+                    &t.h[k * m * H..(k + 1) * m * H],
+                    &mut t.d_h,
+                    ten(params, "g1"),
+                    dw,
+                    db,
+                    Some(&mut t.d_agg),
+                    m,
+                    E,
+                    H,
+                    true,
+                );
+            }
+            // agg_i = Σ_{c∈children(i)} e_c  →  d_e_c += d_agg_i.
+            t.d_e[..m * E].fill(0.0);
+            for i in 0..m {
+                let lo = t.pack.row_offsets[i] as usize;
+                let hi = t.pack.row_offsets[i + 1] as usize;
+                for &c in &t.pack.col_indices[lo..hi] {
+                    let c = c as usize;
+                    for d in 0..E {
+                        t.d_e[c * E + d] += t.d_agg[i * E + d];
+                    }
+                }
+            }
+        }
+
+        // Input embedding: e0 = tanh(x·W_in + b_in).
+        for d in 0..m * E {
+            t.d_e0[d] += t.d_e[d];
+        }
+        {
+            let (dw, db) = wb_mut(g, "w_in", "b_in");
+            dense_bwd(&t.pack.x, &t.e0, &mut t.d_e0, ten(params, "w_in"), dw, db, None, m, F, E, true);
+        }
+    }
+
+    /// Forward + loss only — no gradient, no optimizer-state mutation.
+    /// The finite-difference probe the gradient tests drive.
+    pub fn loss(&mut self, batch: &[Row], entropy_w: f32, vw: f32) -> [f32; 4] {
+        if batch.is_empty() {
+            return [0.0; 4];
+        }
+        let mut t = std::mem::take(&mut self.tape);
+        self.forward_tape(&mut t, batch);
+        let losses = Self::losses_from_tape(&mut t, batch, entropy_w, vw, false);
+        self.tape = t;
+        losses
+    }
+
+    /// Forward + backward: fills the internal (pre-clip) gradient buffer
+    /// and returns the losses. Does not touch parameters or Adam state.
+    pub fn backward(&mut self, batch: &[Row], entropy_w: f32, vw: f32) -> [f32; 4] {
+        let mut t = std::mem::take(&mut self.tape);
+        self.forward_tape(&mut t, batch);
+        let losses = Self::losses_from_tape(&mut t, batch, entropy_w, vw, true);
+        let mut g = std::mem::take(&mut self.grads);
+        Self::backward_pass(&self.params, &mut g, &mut t);
+        self.grads = g;
+        self.tape = t;
+        losses
+    }
+
+    /// The gradient buffer filled by the last [`CpuTrainBackend::backward`]
+    /// (pre-clip, flat LAYOUT order).
+    pub fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+}
+
+impl TrainBackend for CpuTrainBackend {
+    fn update(&mut self, batch: &[Row], lr: f32, entropy_w: f32, vw: f32) -> Result<[f32; 4]> {
+        if batch.is_empty() {
+            return Ok([0.0; 4]);
+        }
+        let losses = self.backward(batch, entropy_w, vw);
+        // Global-norm clip at 5.0 + Adam — the exact sequence (and
+        // constants) of python/compile/model.py::train_step.
+        let mut norm2 = 0.0f64;
+        for &gv in &self.grads {
+            norm2 += gv as f64 * gv as f64;
+        }
+        let gnorm = (norm2 + 1e-12).sqrt() as f32;
+        let clip = (5.0 / gnorm).min(1.0);
+        self.step += 1.0;
+        let bc1 = 1.0 - 0.9f32.powf(self.step);
+        let bc2 = 1.0 - 0.999f32.powf(self.step);
+        for i in 0..self.params.len() {
+            let gv = self.grads[i] * clip;
+            self.m_adam[i] = 0.9 * self.m_adam[i] + 0.1 * gv;
+            self.v_adam[i] = 0.999 * self.v_adam[i] + 0.001 * gv * gv;
+            let mhat = self.m_adam[i] / bc1;
+            let vhat = self.v_adam[i] / bc2;
+            self.params[i] -= lr * mhat / (vhat.sqrt() + 1e-8);
+        }
+        Ok(losses)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn params_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.params
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::{ClusterConfig, WorkloadConfig};
+    use crate::policy::features::FeatureMode;
+    use crate::policy::RustPolicy;
+    use crate::rl::trainer::RecordingExpert;
+    use crate::sched::HeftScheduler;
+    use crate::sim::Simulator;
+    use crate::workload::WorkloadGenerator;
+
+    /// Expert-collected rows with synthetic advantages/returns so every
+    /// loss term (pg, value, entropy) carries gradient.
+    fn test_batch(n_jobs: usize, seed: u64, take: usize) -> Vec<Row> {
+        let mut expert = RecordingExpert::new(HeftScheduler::new(), FeatureMode::Full);
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(5), seed);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(n_jobs), seed).generate();
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut expert).unwrap();
+        let advs = [1.0f32, -0.7, 0.4, -1.2, 0.9];
+        let rets = [0.3f32, -0.5, 0.8, 0.1, -0.9];
+        let mut rows: Vec<Row> = expert.rows.drain(..).collect();
+        rows.truncate(take);
+        for (i, r) in rows.iter_mut().enumerate() {
+            r.adv = advs[i % advs.len()];
+            r.ret = rets[i % rets.len()];
+        }
+        assert!(!rows.is_empty());
+        rows
+    }
+
+    #[test]
+    fn update_is_finite_and_moves_params() {
+        let batch = test_batch(2, 3, 8);
+        let init = RustPolicy::random_params(7);
+        let mut be = CpuTrainBackend::new(init.clone());
+        for _ in 0..3 {
+            let l = be.update(&batch, 1e-3, 0.01, 0.5).unwrap();
+            for v in l {
+                assert!(v.is_finite(), "{l:?}");
+            }
+        }
+        assert_ne!(be.params(), &init[..], "parameters must move");
+        assert!(be.params().iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn update_is_deterministic() {
+        let batch = test_batch(2, 4, 6);
+        let init = RustPolicy::random_params(8);
+        let mut a = CpuTrainBackend::new(init.clone());
+        let mut b = CpuTrainBackend::new(init);
+        for _ in 0..4 {
+            let la = a.update(&batch, 1e-3, 0.01, 0.5).unwrap();
+            let lb = b.update(&batch, 1e-3, 0.01, 0.5).unwrap();
+            assert_eq!(la, lb);
+        }
+        assert_eq!(a.params(), b.params());
+    }
+
+    #[test]
+    fn imitation_cross_entropy_decreases() {
+        // adv 1, vw 0, ew 0 → pure cross-entropy toward the expert's
+        // choices; 8 Adam steps on a fixed batch must reduce it.
+        let mut batch = test_batch(2, 5, 12);
+        for r in batch.iter_mut() {
+            r.adv = 1.0;
+            r.ret = 0.0;
+        }
+        let mut be = CpuTrainBackend::new(RustPolicy::random_params(9));
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            losses.push(be.update(&batch, 1e-3, 0.0, 0.0).unwrap()[0]);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "imitation CE should fall: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn value_loss_decreases_toward_targets() {
+        let mut batch = test_batch(2, 6, 6);
+        for r in batch.iter_mut() {
+            r.adv = 0.0;
+            r.ret = 0.5;
+        }
+        let mut be = CpuTrainBackend::new(RustPolicy::random_params(10));
+        let first = be.update(&batch, 1e-3, 0.0, 1.0).unwrap()[2];
+        for _ in 0..15 {
+            be.update(&batch, 1e-3, 0.0, 1.0).unwrap();
+        }
+        let last = be.update(&batch, 1e-3, 0.0, 1.0).unwrap()[2];
+        assert!(last < first, "value loss should fall: {first} → {last}");
+    }
+
+    #[test]
+    fn mixed_variant_batch_updates() {
+        use crate::policy::encode::encode;
+        use crate::sim::SimState;
+        let mut rows = test_batch(2, 11, 3); // n64 variant
+        // RecordingExpert only keeps n64-variant rows; build an n256 row
+        // directly from a large all-arrived state (14 jobs overflow the
+        // n64 variant — same setup the policy bench uses).
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(5), 12);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(14), 12).generate();
+        let mut st = SimState::new(cluster, w);
+        for j in 0..14 {
+            st.mark_arrived(j);
+        }
+        let enc = encode(&st, FeatureMode::Full);
+        let slot = (0..enc.n_used())
+            .find(|&i| enc.exec_mask[i] > 0.0)
+            .expect("some executable slot");
+        rows.push(Row {
+            enc,
+            action: slot as i32,
+            adv: -0.3,
+            ret: 0.2,
+        });
+        let variants: std::collections::HashSet<usize> =
+            rows.iter().map(|r| r.enc.variant.n).collect();
+        assert!(variants.len() > 1, "batch must mix variants");
+        let mut be = CpuTrainBackend::new(RustPolicy::random_params(13));
+        let l = be.update(&rows, 1e-3, 0.01, 0.5).unwrap();
+        for v in l {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let init = RustPolicy::random_params(14);
+        let mut be = CpuTrainBackend::new(init.clone());
+        let l = be.update(&[], 1e-3, 0.01, 0.5).unwrap();
+        assert_eq!(l, [0.0; 4]);
+        assert_eq!(be.params(), &init[..]);
+    }
+
+    #[test]
+    fn analytic_gradient_matches_finite_differences() {
+        // Central finite differences in f32 carry ~1e-3 absolute noise at
+        // h=1e-3 (loss is O(1) with ~1e-6 rounding), so the checks are
+        // (a) a directional derivative along sign(g) — large signal, all
+        // parameters at once — and (b) per-tensor spot checks at each
+        // tensor's largest-|g| coordinate, skipping coordinates whose
+        // gradient is too small to measure above the noise floor.
+        let batch = test_batch(2, 20, 6);
+        let (ew, vw) = (0.01f32, 0.5f32);
+        let mut be = CpuTrainBackend::new(RustPolicy::random_params(21));
+        be.backward(&batch, ew, vw);
+        let g = be.grads().to_vec();
+        assert!(g.iter().all(|v| v.is_finite()));
+        assert!(g.iter().any(|&v| v != 0.0), "gradient must be nonzero");
+
+        // (a) directional: d/dh L(p + h·sign(g)) = Σ|g| = ‖g‖₁.
+        let h = 1e-3f32;
+        let base = be.params().to_vec();
+        let l1: f64 = g.iter().map(|&v| v.abs() as f64).sum();
+        let probe = |delta: f32, be: &mut CpuTrainBackend| -> f64 {
+            for (p, &gv) in be.params_mut().iter_mut().zip(&g) {
+                *p += delta * gv.signum();
+            }
+            let l = be.loss(&batch, ew, vw)[0] as f64;
+            be.params_mut().copy_from_slice(&base);
+            l
+        };
+        let lp = probe(h, &mut be);
+        let lm = probe(-h, &mut be);
+        let fd = (lp - lm) / (2.0 * h as f64);
+        let rel = (fd - l1).abs() / l1.max(1e-6);
+        assert!(
+            rel < 2e-2,
+            "directional derivative mismatch: fd={fd:.6} analytic={l1:.6} rel={rel:.4}"
+        );
+
+        // (b) per-tensor spot checks at the largest-|g| coordinate.
+        let mut checked = 0;
+        for name in ["w_in", "g1", "g2", "fj1", "fj2", "fg1", "fg2", "q1", "q4", "v1", "v3"] {
+            let (off, len) = super::span(name);
+            let (best, mag) = (off..off + len)
+                .map(|i| (i, g[i].abs()))
+                .fold((off, 0.0f32), |acc, x| if x.1 > acc.1 { x } else { acc });
+            if mag < 5e-3 {
+                continue; // below the FD noise floor at this h
+            }
+            let hc = 2.5e-3f32;
+            be.params_mut()[best] = base[best] + hc;
+            let lp = be.loss(&batch, ew, vw)[0] as f64;
+            be.params_mut()[best] = base[best] - hc;
+            let lm = be.loss(&batch, ew, vw)[0] as f64;
+            be.params_mut()[best] = base[best];
+            let fd = ((lp - lm) / (2.0 * hc as f64)) as f32;
+            let err = (fd - g[best]).abs();
+            assert!(
+                err <= 1e-3 + 0.15 * g[best].abs(),
+                "{name}[{}]: fd={fd:.6} analytic={:.6}",
+                best - off,
+                g[best]
+            );
+            checked += 1;
+        }
+        assert!(checked >= 3, "too few tensors above the FD noise floor ({checked})");
+    }
+
+    #[test]
+    fn loss_matches_backward_losses() {
+        let batch = test_batch(2, 22, 5);
+        let mut be = CpuTrainBackend::new(RustPolicy::random_params(23));
+        let a = be.loss(&batch, 0.01, 0.5);
+        let b = be.backward(&batch, 0.01, 0.5);
+        assert_eq!(a, b);
+    }
+}

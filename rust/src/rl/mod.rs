@@ -1,11 +1,15 @@
 //! Reinforcement-learning training (paper §4.3, Algorithm 2): episode
 //! collection in the simulator, makespan-increment rewards, discounted
 //! returns with a learned value baseline, and parameter updates through
-//! the AOT-compiled `train_step` artifact (forward + backward + Adam, all
-//! inside one XLA program — python is only involved at build time).
+//! either the native CPU backend ([`CpuTrainBackend`] — analytic backprop
+//! through the sparse kernels, no python anywhere) or the AOT-compiled
+//! `train_step` artifact (forward + backward + Adam inside one XLA
+//! program — python is only involved at build time).
 
+pub mod cpu_backend;
 pub mod episode;
 pub mod trainer;
 
+pub use cpu_backend::CpuTrainBackend;
 pub use episode::{advantages, returns, rewards_from_transitions};
 pub use trainer::{EpisodeStat, TrainBackend, Trainer};

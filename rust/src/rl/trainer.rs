@@ -1,7 +1,9 @@
 //! The training loop (Algorithm 2): synchronous actor–critic with parallel
-//! reward-collection agents, curriculum over workload size, an optional
-//! imitation warm start toward HEFT, and Adam updates executed inside the
-//! AOT `train_step` artifact.
+//! reward-collection agents (fanned over scoped worker threads, bit-
+//! deterministic w.r.t. thread count), curriculum over workload size, an
+//! optional imitation warm start toward HEFT, and Adam updates executed by
+//! a [`TrainBackend`] — the native CPU backprop backend or the AOT
+//! `train_step` artifact.
 
 use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, TrainConfig, WorkloadConfig};
@@ -16,11 +18,13 @@ use crate::runtime::Runtime;
 use crate::sched::lachesis::{LachesisScheduler, Transition};
 use crate::sched::{HeftScheduler, Scheduler};
 use crate::sim::Simulator;
-use crate::util::rng::Rng;
+use crate::util::par;
+use crate::util::rng::{Rng, STREAM_AGENT};
 use crate::workload::WorkloadGenerator;
 #[cfg(feature = "pjrt")]
 use anyhow::{bail, Context};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// One batch row fed to train_step.
 pub struct Row {
@@ -38,12 +42,16 @@ pub trait TrainBackend {
     fn update(&mut self, batch: &[Row], lr: f32, entropy_w: f32, vw: f32) -> Result<[f32; 4]>;
     fn params(&self) -> &[f32];
     fn params_mut(&mut self) -> &mut Vec<f32>;
+    /// Short tag for logs and result files ("cpu", "pjrt", "fake").
+    fn name(&self) -> &'static str {
+        "backend"
+    }
 }
 
 /// PJRT-backed trainer state: parameters + Adam moments + step counter.
 /// Requires the `pjrt` cargo feature (drives the AOT `train_step`
-/// artifact); offline builds train only through [`FakeBackend`]-style
-/// test backends.
+/// artifact); offline builds train through the native
+/// [`crate::rl::CpuTrainBackend`] instead.
 #[cfg(feature = "pjrt")]
 pub struct PjrtTrainBackend {
     runtime: Runtime,
@@ -93,13 +101,29 @@ impl TrainBackend for PjrtTrainBackend {
     fn update(&mut self, batch: &[Row], lr: f32, entropy_w: f32, vw: f32) -> Result<[f32; 4]> {
         let (b, n, j) = (self.b, self.n, self.j);
         assert!(batch.len() <= b, "batch of {} exceeds compiled B={b}", batch.len());
-        // Pack (pad by repeating the last row with zero advantage so padding
-        // rows produce zero policy gradient; sample_w masks value loss too).
+        // Pad by repeating the last row (with zero advantage and zero
+        // sample weight below, so padding rows produce zero gradient) and
+        // materialize the whole batch's dense tensors in a single pass —
+        // transitions carry the compact CSR encoding, the train_step
+        // artifact wants dense [B, …] tensors.
+        let padded: Vec<&EncodedState> = (0..b)
+            .map(|i| &batch[i.min(batch.len() - 1)].enc)
+            .collect();
         let mut x = vec![0.0f32; b * n * F];
         let mut adj = vec![0.0f32; b * n * n];
         let mut jobmat = vec![0.0f32; b * j * n];
         let mut node_mask = vec![0.0f32; b * n];
         let mut exec_mask = vec![0.0f32; b * n];
+        crate::policy::batch::write_dense_batch(
+            &padded,
+            n,
+            j,
+            &mut x,
+            &mut adj,
+            &mut jobmat,
+            &mut node_mask,
+            &mut exec_mask,
+        )?;
         let mut action = vec![0i32; b];
         let mut adv = vec![0.0f32; b];
         let mut ret = vec![0.0f32; b];
@@ -107,23 +131,6 @@ impl TrainBackend for PjrtTrainBackend {
         for i in 0..b {
             let row = &batch[i.min(batch.len() - 1)];
             let pad = i >= batch.len();
-            if row.enc.variant.n != n || row.enc.variant.j != j {
-                bail!(
-                    "transition encoded at variant N={} J={}, train_step wants N={n} J={j} \
-                     (train with workloads that fit the training variant)",
-                    row.enc.variant.n,
-                    row.enc.variant.j
-                );
-            }
-            x[i * n * F..(i + 1) * n * F].copy_from_slice(&row.enc.x);
-            // Transitions carry the compact CSR encoding; the train_step
-            // artifact wants dense tensors — materialize into the
-            // (pre-zeroed) batch rows on demand.
-            row.enc.write_dense_adj(&mut adj[i * n * n..(i + 1) * n * n]);
-            row.enc
-                .write_dense_jobmat(&mut jobmat[i * j * n..(i + 1) * j * n]);
-            node_mask[i * n..(i + 1) * n].copy_from_slice(&row.enc.node_mask);
-            exec_mask[i * n..(i + 1) * n].copy_from_slice(&row.enc.exec_mask);
             action[i] = row.action;
             adv[i] = if pad { 0.0 } else { row.adv };
             ret[i] = row.ret;
@@ -169,6 +176,10 @@ impl TrainBackend for PjrtTrainBackend {
 
     fn params_mut(&mut self) -> &mut Vec<f32> {
         &mut self.params
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 }
 
@@ -247,45 +258,6 @@ impl<B: TrainBackend> Trainer<B> {
         (1 + ep * (max - 1) / ramp).min(max)
     }
 
-    fn training_workload_cfg(&self, n_jobs: usize) -> WorkloadConfig {
-        // Small scale factors keep the per-episode task count within the
-        // N=64 training variant.
-        let mut cfg = WorkloadConfig::small_batch(n_jobs);
-        cfg.sizes_gb = vec![2.0, 5.0, 10.0];
-        cfg
-    }
-
-    /// Roll out one sampled episode; returns (transitions, makespan).
-    fn rollout(
-        &self,
-        workload_seed: u64,
-        sample_seed: u64,
-        n_jobs: usize,
-    ) -> Result<(Vec<Transition>, f64)> {
-        let cluster = Cluster::heterogeneous(
-            &ClusterConfig::with_executors(self.cfg.executors),
-            workload_seed,
-        );
-        let w =
-            WorkloadGenerator::new(self.training_workload_cfg(n_jobs), workload_seed).generate();
-        let policy = RustPolicy::new(self.backend.params().to_vec());
-        let mut sched = match self.feature_mode {
-            FeatureMode::Full => {
-                LachesisScheduler::training(Box::new(policy), self.cfg.temperature, sample_seed)
-            }
-            FeatureMode::HomogeneousBlind => {
-                crate::sched::DecimaScheduler::training_decima(
-                    Box::new(policy),
-                    self.cfg.temperature,
-                    sample_seed,
-                )
-            }
-        };
-        let mut sim = Simulator::new(cluster, w);
-        let report = sim.run(&mut sched)?;
-        Ok((sched.selector.take_transitions(), report.makespan))
-    }
-
     /// Convert one episode into batch rows with advantages and targets.
     fn episode_rows(&mut self, transitions: Vec<Transition>, makespan: f64) -> Vec<Row> {
         let rewards = episode::rewards_from_transitions(&transitions, makespan);
@@ -336,29 +308,28 @@ impl<B: TrainBackend> Trainer<B> {
     }
 
     /// Greedy evaluation on a fixed held-out workload set (3 seeds × the
-    /// full jobs_per_episode) — the Fig 4 y-axis.
-    fn eval_greedy(&self) -> Result<f64> {
-        let mut makespans = Vec::new();
-        for seed in [990_001u64, 990_002, 990_003] {
-            let cluster = Cluster::heterogeneous(
-                &ClusterConfig::with_executors(self.cfg.executors),
-                seed,
-            );
-            let w = WorkloadGenerator::new(
-                self.training_workload_cfg(self.cfg.jobs_per_episode),
-                seed,
-            )
-            .generate();
-            let policy = RustPolicy::new(self.backend.params().to_vec());
-            let mut sched = match self.feature_mode {
+    /// full jobs_per_episode) — the Fig 4 y-axis. One parameter snapshot
+    /// is shared by all evaluation actors.
+    fn eval_greedy(&self, threads: usize) -> Result<f64> {
+        let seeds = [990_001u64, 990_002, 990_003];
+        let params = Arc::new(self.backend.params().to_vec());
+        let executors = self.cfg.executors;
+        let n_jobs = self.cfg.jobs_per_episode;
+        let mode = self.feature_mode;
+        let makespans = par::par_indexed(&seeds, threads, |&seed| {
+            let cluster =
+                Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+            let w = WorkloadGenerator::new(training_workload_cfg(n_jobs), seed).generate();
+            let policy = RustPolicy::shared(params.clone());
+            let mut sched = match mode {
                 FeatureMode::Full => LachesisScheduler::greedy(Box::new(policy)),
                 FeatureMode::HomogeneousBlind => {
                     crate::sched::DecimaScheduler::greedy_decima(Box::new(policy))
                 }
             };
             let mut sim = Simulator::new(cluster, w);
-            makespans.push(sim.run(&mut sched)?.makespan);
-        }
+            Ok(sim.run(&mut sched)?.makespan)
+        })?;
         Ok(crate::util::stats::mean(&makespans))
     }
 
@@ -375,8 +346,7 @@ impl<B: TrainBackend> Trainer<B> {
                     &ClusterConfig::with_executors(self.cfg.executors),
                     seed,
                 );
-                let w = WorkloadGenerator::new(self.training_workload_cfg(n_jobs), seed)
-                    .generate();
+                let w = WorkloadGenerator::new(training_workload_cfg(n_jobs), seed).generate();
                 let mut expert = RecordingExpert::new(HeftScheduler::new(), self.feature_mode);
                 let mut sim = Simulator::new(cluster, w);
                 sim.run(&mut expert)?;
@@ -387,25 +357,55 @@ impl<B: TrainBackend> Trainer<B> {
         Ok(())
     }
 
-    /// The main loop: `episodes` iterations × `agents` parallel rollouts.
+    /// The main loop: `episodes` iterations × `agents` parallel rollouts,
+    /// fanned over `cfg.threads` scoped worker threads (0 = all cores).
     /// Returns the learning-curve series (Fig 4).
+    ///
+    /// The trajectory is bit-deterministic w.r.t. the thread count: the
+    /// driver rng is drawn exactly twice per episode regardless of agent
+    /// or thread count, each agent's sampling stream is derived purely
+    /// from (sample master, agent index), the actors only *read* the
+    /// shared parameter snapshot, and rollout results come back in agent
+    /// order (so the order-sensitive return-scale EMA sees the same
+    /// sequence a sequential run produces).
     pub fn train(&mut self, batch: usize) -> Result<Vec<EpisodeStat>> {
         if self.cfg.imitation_epochs > 0 {
             self.imitation_warmstart(batch)?;
         }
+        let threads = par::effective_threads(self.cfg.threads);
         let mut rng = Rng::new(self.cfg.seed);
         let mut stats = Vec::with_capacity(self.cfg.episodes);
         for ep in 0..self.cfg.episodes {
             let n_jobs = self.jobs_for_episode(ep);
-            let workload_seed = rng.next_u64();
             // All agents share the job sequence (paper Appendix C) and
-            // differ only in sampling seed.
+            // differ only in sampling seed, each on its own named stream
+            // of the per-episode master draw.
+            let workload_seed = rng.next_u64();
+            let sample_master = rng.next_u64();
+            let agents = self.cfg.agents.max(1);
+            let seeds: Vec<u64> = (0..agents)
+                .map(|a| Rng::stream_seed(sample_master, STREAM_AGENT, a as u64))
+                .collect();
+            // One parameter snapshot per episode, shared by every actor.
+            let params = Arc::new(self.backend.params().to_vec());
+            let executors = self.cfg.executors;
+            let temperature = self.cfg.temperature;
+            let mode = self.feature_mode;
+            let rollouts = par::par_indexed(&seeds, threads, |&sample_seed| {
+                rollout_once(
+                    executors,
+                    temperature,
+                    mode,
+                    params.clone(),
+                    workload_seed,
+                    sample_seed,
+                    n_jobs,
+                )
+            })?;
             let mut all_rows: Vec<Row> = Vec::new();
             let mut makespans = Vec::new();
             let mut n_trans = 0;
-            for agent in 0..self.cfg.agents.max(1) {
-                let (transitions, makespan) =
-                    self.rollout(workload_seed, rng.next_u64() ^ agent as u64, n_jobs)?;
+            for (transitions, makespan) in rollouts {
                 makespans.push(makespan);
                 n_trans += transitions.len();
                 all_rows.extend(self.episode_rows(transitions, makespan));
@@ -413,7 +413,7 @@ impl<B: TrainBackend> Trainer<B> {
             let ep_return = -crate::util::stats::mean(&makespans);
             let losses = self.update_batches(all_rows, &mut rng, batch, VALUE_W)?;
             let eval_makespan = if ep % 5 == 0 || ep + 1 == self.cfg.episodes {
-                self.eval_greedy()?
+                self.eval_greedy(threads)?
             } else {
                 f64::NAN
             };
@@ -440,6 +440,48 @@ impl<B: TrainBackend> Trainer<B> {
         }
         Ok(stats)
     }
+}
+
+/// Workload used for training episodes and held-out evaluation: small
+/// scale factors keep the per-episode task count within the N=64
+/// training variant.
+pub(crate) fn training_workload_cfg(n_jobs: usize) -> WorkloadConfig {
+    let mut cfg = WorkloadConfig::small_batch(n_jobs);
+    cfg.sizes_gb = vec![2.0, 5.0, 10.0];
+    cfg
+}
+
+/// Roll out one sampled episode against a shared parameter snapshot;
+/// returns (transitions, makespan). A free function (no trainer borrow)
+/// so parallel actors can run it on scoped worker threads.
+fn rollout_once(
+    executors: usize,
+    temperature: f64,
+    feature_mode: FeatureMode,
+    params: Arc<Vec<f32>>,
+    workload_seed: u64,
+    sample_seed: u64,
+    n_jobs: usize,
+) -> Result<(Vec<Transition>, f64)> {
+    let cluster =
+        Cluster::heterogeneous(&ClusterConfig::with_executors(executors), workload_seed);
+    let w = WorkloadGenerator::new(training_workload_cfg(n_jobs), workload_seed).generate();
+    let policy = RustPolicy::shared(params);
+    let mut sched = match feature_mode {
+        FeatureMode::Full => {
+            LachesisScheduler::training(Box::new(policy), temperature, sample_seed)
+        }
+        FeatureMode::HomogeneousBlind => {
+            crate::sched::DecimaScheduler::training_decima(
+                Box::new(policy),
+                temperature,
+                sample_seed,
+            )
+        }
+    };
+    let mut sim = Simulator::new(cluster, w);
+    let report = sim.run(&mut sched)?;
+    Ok((sched.selector.take_transitions(), report.makespan))
 }
 
 /// Wraps any scheduler and records (encoding, chosen slot) pairs — the
@@ -503,7 +545,7 @@ pub struct FakeBackend {
 impl FakeBackend {
     pub fn new(seed: u64) -> FakeBackend {
         FakeBackend {
-            params: RustPolicy::random(seed).params,
+            params: RustPolicy::random_params(seed),
             updates: 0,
         }
     }
@@ -525,6 +567,10 @@ impl TrainBackend for FakeBackend {
 
     fn params_mut(&mut self) -> &mut Vec<f32> {
         &mut self.params
+    }
+
+    fn name(&self) -> &'static str {
+        "fake"
     }
 }
 
@@ -581,6 +627,28 @@ mod tests {
             // The recorded action must have been executable in its state.
             assert!(r.enc.exec_mask[r.action as usize] > 0.0, "{t:?}");
         }
+    }
+
+    #[test]
+    fn train_is_thread_count_invariant() {
+        // Same config, different thread counts → identical stat series
+        // and parameters (the full-fidelity CpuTrainBackend variant lives
+        // in tests/integration_train.rs; this pins the engine plumbing).
+        let run = |threads: usize| {
+            let mut cfg = quick_cfg();
+            cfg.threads = threads;
+            let mut tr = Trainer::new(cfg, FakeBackend::new(7), FeatureMode::Full);
+            let stats = tr.train(8).unwrap();
+            let series: Vec<(f64, f64, usize)> = stats
+                .iter()
+                .map(|s| (s.makespan, s.ep_return, s.n_transitions))
+                .collect();
+            (series, tr.backend.params().to_vec())
+        };
+        let (s1, p1) = run(1);
+        let (s4, p4) = run(4);
+        assert_eq!(s1, s4);
+        assert_eq!(p1, p4);
     }
 
     #[test]

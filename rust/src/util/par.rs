@@ -1,0 +1,122 @@
+//! Deterministic fork–join parallelism over pre-indexed result slots.
+//!
+//! One helper, [`par_indexed`], shared by the experiment sweeps (PR 4's
+//! `sweep_threaded`) and the trainer's rollout actors: run a closure over
+//! a slice of work items with a bounded worker pool, collecting results
+//! **in input order** so the caller's downstream reduction is identical
+//! at any thread count. Workers pull items off a shared atomic cursor
+//! (work stealing without queues) and write into their item's dedicated
+//! slot, so no ordering ever depends on scheduling interleavings.
+
+use anyhow::{bail, Result};
+
+/// Run `f` over `items` with `threads` workers, collecting results in
+/// input order (pre-indexed slots, so output order never depends on
+/// worker interleaving). Fails fast: the first error stops workers from
+/// starting further items (in-flight ones finish) and is returned.
+///
+/// `threads <= 1` (or a single item) degrades to a plain sequential map
+/// on the calling thread — same results, no spawn overhead.
+pub fn par_indexed<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> Result<R> + Sync,
+) -> Result<Vec<R>> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let slots: Vec<Mutex<Option<Result<R>>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                if r.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().expect("parallel slot lock poisoned") = Some(r);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(items.len());
+    let mut first_err = None;
+    let mut missing = 0usize;
+    for m in slots {
+        match m.into_inner().expect("parallel slot lock poisoned") {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            None => missing += 1,
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if missing > 0 {
+        bail!("parallel run aborted: {missing} items never ran");
+    }
+    Ok(out)
+}
+
+/// Resolve a thread-count setting: `0` means "all available cores".
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_input_order() {
+        let items: Vec<usize> = (0..64).collect();
+        for threads in [1, 2, 8] {
+            let out = par_indexed(&items, threads, |&i| Ok(i * 3)).unwrap();
+            assert_eq!(out, items.iter().map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn first_error_is_surfaced() {
+        let items: Vec<usize> = (0..32).collect();
+        let r = par_indexed(&items, 4, |&i| {
+            if i == 7 {
+                bail!("boom at {i}")
+            }
+            Ok(i)
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sequential_and_threaded_agree() {
+        let items: Vec<u64> = (0..40).collect();
+        let seq = par_indexed(&items, 1, |&i| Ok(i.wrapping_mul(0x9e37))).unwrap();
+        let par = par_indexed(&items, 6, |&i| Ok(i.wrapping_mul(0x9e37))).unwrap();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

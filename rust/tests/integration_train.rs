@@ -1,24 +1,19 @@
-//! RL training integration through the AOT train_step artifact: the full
-//! loop (rollout → returns → Adam update inside XLA) must run, change
-//! parameters, and reduce the imitation loss. Requires `make artifacts`
-//! and the `pjrt` cargo feature; without the feature this whole test
-//! target compiles to nothing.
-#![cfg(feature = "pjrt")]
+//! RL training integration. The CPU tests run on every build — the full
+//! loop (parallel rollouts → returns → analytic backprop + Adam) must
+//! run, change parameters, reduce the imitation loss, and produce the
+//! same trajectory for every worker-thread count. The `pjrt` module
+//! additionally exercises the AOT train_step artifact; it needs
+//! `make artifacts` and the `pjrt` cargo feature.
 
-use lachesis::config::TrainConfig;
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, TrainConfig, WorkloadConfig};
 use lachesis::policy::features::FeatureMode;
-use lachesis::policy::{net, params};
-use lachesis::rl::trainer::{PjrtTrainBackend, TrainBackend, Trainer};
-
-const ART: &str = "artifacts";
-
-fn artifacts_available() -> bool {
-    std::path::Path::new(&format!("{ART}/meta.json")).exists()
-}
-
-fn init_params() -> Vec<f32> {
-    params::load_expected(&format!("{ART}/params_init.bin"), net::param_len()).unwrap()
-}
+use lachesis::policy::{params, RustPolicy};
+use lachesis::rl::cpu_backend::{CpuTrainBackend, CPU_TRAIN_BATCH};
+use lachesis::rl::trainer::{RecordingExpert, TrainBackend, Trainer};
+use lachesis::sched::{HeftScheduler, LachesisScheduler};
+use lachesis::sim::Simulator;
+use lachesis::workload::WorkloadGenerator;
 
 fn quick_cfg() -> TrainConfig {
     TrainConfig {
@@ -32,16 +27,11 @@ fn quick_cfg() -> TrainConfig {
 }
 
 #[test]
-fn train_step_artifact_updates_parameters() {
-    if !artifacts_available() {
-        eprintln!("skipping: no artifacts");
-        return;
-    }
-    let init = init_params();
-    let backend = PjrtTrainBackend::new(ART, init.clone()).unwrap();
-    let batch = backend.batch_size();
+fn cpu_train_updates_parameters() {
+    let init = RustPolicy::random_params(41);
+    let backend = CpuTrainBackend::new(init.clone());
     let mut trainer = Trainer::new(quick_cfg(), backend, FeatureMode::Full);
-    let stats = trainer.train(batch).unwrap();
+    let stats = trainer.train(CPU_TRAIN_BATCH).unwrap();
     assert_eq!(stats.len(), 3);
     for s in &stats {
         assert!(s.loss.is_finite());
@@ -56,20 +46,9 @@ fn train_step_artifact_updates_parameters() {
 }
 
 #[test]
-fn imitation_warmstart_reduces_cross_entropy() {
-    if !artifacts_available() {
-        eprintln!("skipping: no artifacts");
-        return;
-    }
+fn cpu_imitation_warmstart_reduces_cross_entropy() {
     // Collect a fixed expert batch, measure CE before/after several
     // imitation updates on that batch: it must go down.
-    use lachesis::cluster::Cluster;
-    use lachesis::config::{ClusterConfig, WorkloadConfig};
-    use lachesis::rl::trainer::RecordingExpert;
-    use lachesis::sched::HeftScheduler;
-    use lachesis::sim::Simulator;
-    use lachesis::workload::WorkloadGenerator;
-
     let mut expert = RecordingExpert::new(HeftScheduler::new(), FeatureMode::Full);
     let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(6), 11);
     let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 11).generate();
@@ -77,10 +56,9 @@ fn imitation_warmstart_reduces_cross_entropy() {
     sim.run(&mut expert).unwrap();
     assert!(!expert.rows.is_empty());
 
-    let mut backend = PjrtTrainBackend::new(ART, init_params()).unwrap();
-    let b = backend.batch_size();
+    let mut backend = CpuTrainBackend::new(RustPolicy::random_params(42));
     let rows: Vec<_> = expert.rows.drain(..).collect();
-    let chunk = &rows[..rows.len().min(b)];
+    let chunk = &rows[..rows.len().min(CPU_TRAIN_BATCH)];
     let mut losses = Vec::new();
     for _ in 0..8 {
         let l = backend.update(chunk, 1e-3, 0.0, 0.0).unwrap();
@@ -93,32 +71,21 @@ fn imitation_warmstart_reduces_cross_entropy() {
 }
 
 #[test]
-fn training_then_inference_roundtrip_via_files() {
-    if !artifacts_available() {
-        eprintln!("skipping: no artifacts");
-        return;
-    }
+fn cpu_training_then_inference_roundtrip_via_files() {
     // Train a couple of episodes, checkpoint, reload into a greedy
     // Lachesis scheduler, and run a schedule.
-    let backend = PjrtTrainBackend::new(ART, init_params()).unwrap();
-    let batch = backend.batch_size();
+    let backend = CpuTrainBackend::new(RustPolicy::random_params(43));
     let mut cfg = quick_cfg();
     cfg.episodes = 2;
     let mut trainer = Trainer::new(cfg, backend, FeatureMode::Full);
-    trainer.train(batch).unwrap();
-    let dir = "/tmp/lachesis_train_roundtrip";
+    trainer.train(CPU_TRAIN_BATCH).unwrap();
+    let dir = "/tmp/lachesis_cpu_train_roundtrip";
     std::fs::create_dir_all(dir).unwrap();
     let path = format!("{dir}/p.bin");
     params::save_f32(&path, trainer.backend.params()).unwrap();
 
-    use lachesis::cluster::Cluster;
-    use lachesis::config::{ClusterConfig, WorkloadConfig};
-    use lachesis::runtime::PjrtPolicy;
-    use lachesis::sched::LachesisScheduler;
-    use lachesis::sim::Simulator;
-    use lachesis::workload::WorkloadGenerator;
-    let policy = PjrtPolicy::new(ART, Some(&path)).unwrap();
-    let mut sched = LachesisScheduler::greedy(Box::new(policy));
+    let loaded = params::load_expected(&path, lachesis::policy::net::param_len()).unwrap();
+    let mut sched = LachesisScheduler::greedy(Box::new(RustPolicy::new(loaded)));
     let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(8), 13);
     let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 13).generate();
     let mut sim = Simulator::new(cluster, w);
@@ -126,4 +93,127 @@ fn training_then_inference_roundtrip_via_files() {
     assert!(report.makespan > 0.0);
     sim.state.validate().unwrap();
     std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn threaded_train_matches_sequential() {
+    // The training trajectory must be bit-identical for every worker
+    // thread count: agent sample streams are derived from the episode
+    // master seed, not from which thread runs which rollout.
+    let run = |threads: usize| {
+        let mut cfg = quick_cfg();
+        cfg.threads = threads;
+        let backend = CpuTrainBackend::new(RustPolicy::random_params(44));
+        let mut trainer = Trainer::new(cfg, backend, FeatureMode::Full);
+        let stats = trainer.train(CPU_TRAIN_BATCH).unwrap();
+        (stats, trainer.backend.params().to_vec())
+    };
+    let (seq_stats, seq_params) = run(1);
+    let (par_stats, par_params) = run(4);
+    assert_eq!(seq_stats.len(), par_stats.len());
+    for (a, b) in seq_stats.iter().zip(&par_stats) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "ep {}", a.episode);
+        assert_eq!(a.ep_return.to_bits(), b.ep_return.to_bits(), "ep {}", a.episode);
+        assert_eq!(a.n_transitions, b.n_transitions, "ep {}", a.episode);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "ep {}", a.episode);
+    }
+    assert_eq!(seq_params, par_params, "final parameters must be bit-identical");
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use lachesis::policy::net;
+    use lachesis::rl::trainer::PjrtTrainBackend;
+
+    const ART: &str = "artifacts";
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new(&format!("{ART}/meta.json")).exists()
+    }
+
+    fn init_params() -> Vec<f32> {
+        params::load_expected(&format!("{ART}/params_init.bin"), net::param_len()).unwrap()
+    }
+
+    #[test]
+    fn train_step_artifact_updates_parameters() {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let init = init_params();
+        let backend = PjrtTrainBackend::new(ART, init.clone()).unwrap();
+        let batch = backend.batch_size();
+        let mut trainer = Trainer::new(quick_cfg(), backend, FeatureMode::Full);
+        let stats = trainer.train(batch).unwrap();
+        assert_eq!(stats.len(), 3);
+        for s in &stats {
+            assert!(s.loss.is_finite());
+            assert!(s.entropy.is_finite());
+            assert!(s.makespan > 0.0);
+        }
+        assert_ne!(
+            trainer.backend.params(),
+            &init[..],
+            "parameters must move after updates"
+        );
+    }
+
+    #[test]
+    fn imitation_warmstart_reduces_cross_entropy() {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut expert = RecordingExpert::new(HeftScheduler::new(), FeatureMode::Full);
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(6), 11);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 11).generate();
+        let mut sim = Simulator::new(cluster, w);
+        sim.run(&mut expert).unwrap();
+        assert!(!expert.rows.is_empty());
+
+        let mut backend = PjrtTrainBackend::new(ART, init_params()).unwrap();
+        let b = backend.batch_size();
+        let rows: Vec<_> = expert.rows.drain(..).collect();
+        let chunk = &rows[..rows.len().min(b)];
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            let l = backend.update(chunk, 1e-3, 0.0, 0.0).unwrap();
+            losses.push(l[0]);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "imitation CE should fall: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn training_then_inference_roundtrip_via_files() {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let backend = PjrtTrainBackend::new(ART, init_params()).unwrap();
+        let batch = backend.batch_size();
+        let mut cfg = quick_cfg();
+        cfg.episodes = 2;
+        let mut trainer = Trainer::new(cfg, backend, FeatureMode::Full);
+        trainer.train(batch).unwrap();
+        let dir = "/tmp/lachesis_train_roundtrip";
+        std::fs::create_dir_all(dir).unwrap();
+        let path = format!("{dir}/p.bin");
+        params::save_f32(&path, trainer.backend.params()).unwrap();
+
+        use lachesis::runtime::PjrtPolicy;
+        let policy = PjrtPolicy::new(ART, Some(&path)).unwrap();
+        let mut sched = LachesisScheduler::greedy(Box::new(policy));
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(8), 13);
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), 13).generate();
+        let mut sim = Simulator::new(cluster, w);
+        let report = sim.run(&mut sched).unwrap();
+        assert!(report.makespan > 0.0);
+        sim.state.validate().unwrap();
+        std::fs::remove_dir_all(dir).ok();
+    }
 }

@@ -538,6 +538,73 @@ fn prop_encoder_cache_matches_fresh_encode() {
     }
 }
 
+/// The batched block-CSR forward must agree with the per-state sparse
+/// forward on every packed state — across random workloads, partial
+/// schedules, both feature modes, and mixed shape variants inside one
+/// batch (the packer keeps only used rows, so N=64 and N=256 states can
+/// share a batch).
+#[test]
+fn prop_forward_batch_matches_single_state() {
+    use lachesis::policy::encode::encode;
+    use lachesis::policy::features::FeatureMode;
+    use lachesis::policy::PackedBatch;
+    for case in 0..CASES {
+        let mut rng = Rng::new(9400 + case);
+        for mode in [FeatureMode::Full, FeatureMode::HomogeneousBlind] {
+            // Collect snapshots of several independent partial schedules,
+            // deliberately spanning both shape variants.
+            let mut encs = Vec::new();
+            for s in 0..3u64 {
+                let n_jobs = 1 + ((case + s) as usize % 12);
+                let w = random_workload(&mut rng, n_jobs, false);
+                let cluster = random_cluster(&mut rng);
+                let mut st = SimState::new(cluster, w);
+                for j in 0..st.jobs.len() {
+                    st.mark_arrived(j);
+                }
+                encs.push(encode(&st, mode));
+                for _ in 0..3 {
+                    if st.executable().is_empty() {
+                        break;
+                    }
+                    let t = st.executable()[rng.below(st.executable().len())];
+                    let exec = rng.below(st.cluster.len());
+                    st.apply(t, Allocation::Direct { exec });
+                    let enc = encode(&st, mode);
+                    if enc.n_used() > 0 {
+                        encs.push(enc);
+                    }
+                }
+            }
+            let mut net = RustPolicy::random(9400 + case);
+            let refs: Vec<&_> = encs.iter().collect();
+            let batch = PackedBatch::pack(&refs);
+            let (mut logits, mut values) = (Vec::new(), Vec::new());
+            net.forward_batch(&batch, &mut logits, &mut values);
+            assert_eq!(values.len(), encs.len(), "case {case}");
+            let mut single = Vec::new();
+            for (bi, enc) in encs.iter().enumerate() {
+                let v = net.forward_into(enc, &mut single);
+                assert!(
+                    (values[bi] - v).abs() <= 1e-5,
+                    "case {case} state {bi}: batched value {} vs single {v}",
+                    values[bi]
+                );
+                let rows = batch.state_rows(&logits, bi);
+                assert_eq!(rows.len(), enc.n_used(), "case {case} state {bi}");
+                for i in 0..enc.n_used() {
+                    assert!(
+                        (rows[i] - single[i]).abs() <= 1e-5,
+                        "case {case} state {bi} slot {i}: batched {} vs single {}",
+                        rows[i],
+                        single[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// The CSR representation must round-trip to the dense adjacency and job
 /// membership matrices exactly (independently reconstructed from the DAG
 /// and the slot mapping).
