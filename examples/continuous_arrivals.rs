@@ -15,27 +15,35 @@ use lachesis::sim::Simulator;
 use lachesis::util::stats::mean;
 use lachesis::workload::WorkloadGenerator;
 
-fn make_scheds() -> Vec<Box<dyn Scheduler>> {
-    let params = lachesis::policy::params::load_expected(
+/// Load the Lachesis weights once; every scheduler built from them
+/// clones the vector instead of re-reading the checkpoint.
+fn lachesis_params() -> Vec<f32> {
+    lachesis::policy::params::load_expected(
         "checkpoints/lachesis.bin",
         lachesis::policy::net::param_len(),
     )
-    .unwrap_or_else(|_| RustPolicy::random_params(3));
+    .unwrap_or_else(|_| RustPolicy::random_params(3))
+}
+
+fn make_scheds(params: &[f32]) -> Vec<Box<dyn Scheduler>> {
     vec![
         Box::new(SjfScheduler::new()),
         Box::new(HrrnScheduler::new()),
         Box::new(HighRankUpScheduler::new()),
-        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::new(params)))),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::new(
+            params.to_vec(),
+        )))),
     ]
 }
 
 fn main() -> anyhow::Result<()> {
     let cfg = ClusterConfig::default();
     let seeds: Vec<u64> = (0..4).collect();
+    let params = lachesis_params();
 
     println!("== Fig 7a slice: makespan at mean inter-arrival 45 s ==");
     println!("{:<18} {:>12} {:>10}", "algorithm", "avg makespan", "avg JCT");
-    for mut sched in make_scheds() {
+    for mut sched in make_scheds(&params) {
         let mut ms = Vec::new();
         let mut jct = Vec::new();
         for &seed in &seeds {
@@ -56,12 +64,17 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== extension: sensitivity to arrival rate (HighRankUp-DEFT vs Lachesis) ==");
     println!("{:<14} {:>16} {:>16}", "mean interval", "HighRankUp-DEFT", "Lachesis");
+    // Exactly the two compared schedulers, built once for the whole
+    // sweep — not all four (plus a checkpoint reload) per interval.
+    let mut pair: [Box<dyn Scheduler>; 2] = [
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::new(
+            params.clone(),
+        )))),
+    ];
     for &interval in &[15.0, 30.0, 45.0, 90.0] {
         let mut cols = Vec::new();
-        for mut sched in [
-            Box::new(HighRankUpScheduler::new()) as Box<dyn Scheduler>,
-            make_scheds().pop().unwrap(),
-        ] {
+        for sched in pair.iter_mut() {
             let mut ms = Vec::new();
             for &seed in &seeds {
                 let mut wc = WorkloadConfig::continuous(16);

@@ -6,6 +6,9 @@
 //! * Fig 6a–d — batch mode, large scale (20–100 jobs): [`fig6`]
 //! * Fig 7a–b — continuous mode (Poisson 45 s arrivals): [`fig7`]
 //! * Ablations (DESIGN.md §Per-experiment index): [`ablate`]
+//! * Service soak (sustained Poisson arrivals over TCP): [`soak`]
+
+pub mod soak;
 
 use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, ExperimentConfig, FaultConfig, TrainConfig, WorkloadConfig};
@@ -54,13 +57,15 @@ impl Default for PolicySource {
 }
 
 impl PolicySource {
-    fn eval_for(&self, which: FeatureMode) -> Box<dyn PolicyEval> {
+    /// Resolve the parameter vector for one policy flavor. Preference
+    /// order: explicit checkpoint → trained default location →
+    /// `params_init.bin` → random init (with a warning) so runs never
+    /// block on a missing file.
+    fn load_params(&self, which: FeatureMode) -> Vec<f32> {
         let explicit = match which {
             FeatureMode::Full => self.lachesis_params.as_deref(),
             FeatureMode::HomogeneousBlind => self.decima_params.as_deref(),
         };
-        // Preference order: explicit checkpoint → trained default location
-        // → params_init.bin → random.
         let default_ckpt = match which {
             FeatureMode::Full => "checkpoints/lachesis.bin",
             FeatureMode::HomogeneousBlind => "checkpoints/decima.bin",
@@ -73,7 +78,7 @@ impl PolicySource {
         let params = candidates.iter().find_map(|p| {
             params::load_expected(p, crate::policy::net::param_len()).ok()
         });
-        let params = match params {
+        match params {
             Some(p) => p,
             None => {
                 crate::log_warn!(
@@ -82,7 +87,11 @@ impl PolicySource {
                 );
                 RustPolicy::random_params(12345)
             }
-        };
+        }
+    }
+
+    fn eval_for(&self, which: FeatureMode) -> Box<dyn PolicyEval> {
+        let params = self.load_params(which);
         if self.backend == "pjrt" {
             #[cfg(feature = "pjrt")]
             match PjrtPolicy::with_params(&self.artifact_dir, params.clone()) {
@@ -95,6 +104,13 @@ impl PolicySource {
             crate::log_warn!("built without the `pjrt` feature; using rust forward");
         }
         Box::new(RustPolicy::new(params))
+    }
+
+    /// The rust-side forward for `which`, regardless of the configured
+    /// backend — what the long-lived service uses (the PJRT runtime is
+    /// not `Send`, and a server moves its scheduler across threads).
+    pub fn rust_eval_for(&self, which: FeatureMode) -> RustPolicy {
+        RustPolicy::new(self.load_params(which))
     }
 }
 
@@ -114,6 +130,35 @@ pub fn build_scheduler(name: &str, src: &PolicySource, seed: u64) -> Result<Box<
             src.eval_for(FeatureMode::HomogeneousBlind),
         )),
         "Lachesis" => Box::new(LachesisScheduler::greedy(src.eval_for(FeatureMode::Full))),
+        other => bail!("unknown scheduler '{other}'"),
+    })
+}
+
+/// Build a scheduler by name as a `Send` box — what the service and the
+/// soak harness need (the scheduler lives behind the server's mutex and
+/// moves across threads). Learned policies always use the rust forward:
+/// the PJRT runtime is not `Send`.
+pub fn build_send_scheduler(
+    name: &str,
+    src: &PolicySource,
+    seed: u64,
+) -> Result<Box<dyn Scheduler + Send>> {
+    Ok(match name {
+        "FIFO-DEFT" => Box::new(FifoScheduler::new()),
+        "SJF-DEFT" => Box::new(SjfScheduler::new()),
+        "HRRN-DEFT" => Box::new(HrrnScheduler::new()),
+        "HighRankUp-DEFT" => Box::new(HighRankUpScheduler::new()),
+        "HEFT" => Box::new(HeftScheduler::new()),
+        "CPOP" => Box::new(CpopScheduler::new()),
+        "DLS" => Box::new(DlsScheduler::new()),
+        "TDCA" => Box::new(TdcaScheduler::new()),
+        "Random-DEFT" => Box::new(RandomScheduler::new(seed)),
+        "Decima-DEFT" => Box::new(DecimaScheduler::greedy_decima(Box::new(
+            src.rust_eval_for(FeatureMode::HomogeneousBlind),
+        ))),
+        "Lachesis" => Box::new(LachesisScheduler::greedy(Box::new(
+            src.rust_eval_for(FeatureMode::Full),
+        ))),
         other => bail!("unknown scheduler '{other}'"),
     })
 }
@@ -215,7 +260,7 @@ pub fn sweep_threaded(
     Ok(suite)
 }
 
-fn write_results(name: &str, content: &str) -> Result<()> {
+pub(crate) fn write_results(name: &str, content: &str) -> Result<()> {
     std::fs::create_dir_all("results").context("mkdir results")?;
     let path = format!("results/{name}");
     std::fs::write(&path, content).with_context(|| format!("writing {path}"))?;
@@ -687,12 +732,13 @@ fn decision_cdf_section(suite: &SuiteReport, algos: &[&str]) -> String {
         if rec.is_empty() {
             continue;
         }
+        let ps = rec.percentiles(&[50.0, 90.0, 98.0, 99.9]);
         out.push_str(&format!(
             "| {a} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
-            rec.percentile(50.0),
-            rec.percentile(90.0),
-            rec.percentile(98.0),
-            rec.percentile(99.9),
+            ps[0],
+            ps[1],
+            ps[2],
+            ps[3],
             rec.max()
         ));
     }

@@ -1,0 +1,470 @@
+//! Sustained-load soak harness for the scheduling service: an open-loop
+//! Poisson arrival process (Decima's continuous evaluation regime, §5.3.3)
+//! over streaming TPC-H jobs, driven by N concurrent master connections
+//! against a live [`AgentServer`] — once per [`ServiceMode`], so the
+//! batched engine's throughput is measured against the single-lock
+//! baseline in the same run, on the same machine.
+//!
+//! Each master walks its own simulated clock (`t += Exp(mean_interval)`),
+//! submits the next TPC-H job at that arrival, heartbeats the previous
+//! job, and asks for a schedule — recording wall-clock submit/decision
+//! latency per request. Dedicated monitor threads hammer `status`
+//! concurrently (the read path the batched engine serves lock-free).
+//! Results land in `results/soak.md` and a `BENCH_service.json` with the
+//! same shape as the other committed bench snapshots.
+//!
+//! [`AgentServer`]: crate::service::AgentServer
+//! [`ServiceMode`]: crate::service::ServiceMode
+
+use super::{build_send_scheduler, write_results, PolicySource};
+use crate::cluster::Cluster;
+use crate::config::ClusterConfig;
+use crate::service::{AgentServer, Request, Response, ServiceClient, ServiceMode};
+use crate::util::json::Json;
+use crate::util::rng::{Rng, STREAM_SOAK};
+use crate::util::stats::Recorder;
+use crate::workload::tpch;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Soak profile. Defaults are the CI smoke scale; `lachesis soak` flags
+/// override each field.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Concurrent master connections.
+    pub masters: usize,
+    /// Total jobs across all masters.
+    pub jobs: usize,
+    /// Mean simulated inter-arrival time per master (seconds, Poisson).
+    pub mean_interval: f64,
+    /// Cluster size (heterogeneous, seeded).
+    pub executors: usize,
+    /// Scheduler under load (any zoo name).
+    pub algo: String,
+    pub seed: u64,
+    /// Issue a timed `status` every this many jobs per master (0 = never).
+    pub status_every: usize,
+    /// Dedicated threads polling `status` for the whole run.
+    pub monitors: usize,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            masters: 8,
+            jobs: 200,
+            mean_interval: 5.0,
+            executors: 50,
+            algo: "HighRankUp-DEFT".to_string(),
+            seed: 7,
+            status_every: 1,
+            monitors: 2,
+        }
+    }
+}
+
+/// Aggregated measurements of one soak run (one service mode).
+pub struct SoakReport {
+    pub mode: ServiceMode,
+    /// `schedule` round-trip latency, ms.
+    pub decision: Recorder,
+    /// `submit_job` round-trip latency, ms.
+    pub submit: Recorder,
+    /// `status` round-trip latency, ms (masters + monitors).
+    pub status: Recorder,
+    pub jobs: usize,
+    pub assignments: usize,
+    pub wall_secs: f64,
+    pub jobs_per_sec: f64,
+    /// (batches, requests through batches, coalesced heartbeats) — zeros
+    /// in serial mode.
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub coalesced_heartbeats: u64,
+}
+
+#[derive(Default)]
+struct MasterStats {
+    submit: Recorder,
+    decision: Recorder,
+    status: Recorder,
+    jobs: usize,
+    assignments: usize,
+}
+
+fn ms_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// One master connection: stream `jobs_m` TPC-H jobs along a private
+/// simulated Poisson clock, timing every submit/schedule round trip.
+fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
+    let mut client =
+        ServiceClient::connect(addr).with_context(|| format!("master {m} connecting"))?;
+    let shapes = tpch::all_shapes();
+    let mut rng = Rng::stream_n(cfg.seed, STREAM_SOAK, m as u64);
+    let jobs_m = cfg.jobs / cfg.masters + usize::from(m < cfg.jobs % cfg.masters);
+    let mut stats = MasterStats::default();
+    let mut sim_t = 0.0;
+    let mut prev_job: Option<usize> = None;
+    for k in 0..jobs_m {
+        sim_t += rng.exponential(cfg.mean_interval);
+        // Round-robin the 22 query shapes, offset per master; input
+        // scale drawn from the paper's 10/50/100 GB set.
+        let shape = &shapes[(m + k) % shapes.len()];
+        let size = [10.0, 50.0, 100.0][rng.below(3)];
+        let job = shape.instantiate(0, size, sim_t);
+        let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
+        let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
+            .flat_map(|u| {
+                job.children[u]
+                    .iter()
+                    .map(move |e| (u, e.other, e.data))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let t0 = Instant::now();
+        let resp = client.call(&Request::SubmitJob {
+            name: job.name.clone(),
+            arrival: job.arrival,
+            computes,
+            edges,
+        })?;
+        stats.submit.push(ms_since(t0));
+        let job_id = match resp {
+            Response::Ok { job_id: Some(id) } => id,
+            other => bail!("master {m}: unexpected submit response {other:?}"),
+        };
+        // Heartbeat the previous job: advances the agent's wall clock the
+        // way a live resource manager's completion reports would.
+        if let Some(prev) = prev_job {
+            client.call(&Request::TaskComplete {
+                job: prev,
+                node: 0,
+                time: sim_t,
+            })?;
+        }
+        prev_job = Some(job_id);
+        let t0 = Instant::now();
+        let resp = client.call(&Request::Schedule { time: sim_t })?;
+        stats.decision.push(ms_since(t0));
+        match resp {
+            Response::Assignments(a) => stats.assignments += a.len(),
+            other => bail!("master {m}: unexpected schedule response {other:?}"),
+        }
+        if cfg.status_every > 0 && k % cfg.status_every == 0 {
+            let t0 = Instant::now();
+            client.call(&Request::Status)?;
+            stats.status.push(ms_since(t0));
+        }
+        stats.jobs += 1;
+    }
+    Ok(stats)
+}
+
+/// Run one soak profile against a fresh server in `mode`.
+pub fn run_soak_mode(
+    cfg: &SoakConfig,
+    src: &PolicySource,
+    mode: ServiceMode,
+) -> Result<SoakReport> {
+    if cfg.masters == 0 || cfg.jobs == 0 {
+        bail!("soak needs at least one master and one job");
+    }
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(cfg.executors), cfg.seed);
+    let scheduler = build_send_scheduler(&cfg.algo, src, cfg.seed)?;
+    let server = Arc::new(AgentServer::with_mode(cluster, scheduler, mode));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |a| {
+                let _ = tx.send(a);
+            })
+        })
+    };
+    let addr = rx
+        .recv_timeout(Duration::from_secs(10))
+        .context("soak server did not bind")?
+        .to_string();
+
+    let stop = AtomicBool::new(false);
+    let mut master_results: Vec<std::thread::Result<Result<MasterStats>>> = Vec::new();
+    let mut status = Recorder::new();
+    let t_start = Instant::now();
+    let mut wall_secs = 0.0;
+    std::thread::scope(|s| {
+        let monitors: Vec<_> = (0..cfg.monitors)
+            .map(|_| {
+                let addr = addr.clone();
+                let stop = &stop;
+                s.spawn(move || -> Result<Recorder> {
+                    let mut client = ServiceClient::connect(&addr)?;
+                    let mut rec = Recorder::new();
+                    while !stop.load(Ordering::SeqCst) {
+                        let t0 = Instant::now();
+                        match client.call(&Request::Status)? {
+                            Response::Status { .. } => rec.push(ms_since(t0)),
+                            other => bail!("unexpected status response {other:?}"),
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Ok(rec)
+                })
+            })
+            .collect();
+        let masters: Vec<_> = (0..cfg.masters)
+            .map(|m| {
+                let addr = addr.clone();
+                s.spawn(move || run_master(m, &addr, cfg))
+            })
+            .collect();
+        for h in masters {
+            master_results.push(h.join());
+        }
+        // Only the request-serving window counts toward throughput; the
+        // monitor drain and shutdown below are bookkeeping.
+        wall_secs = t_start.elapsed().as_secs_f64();
+        stop.store(true, Ordering::SeqCst);
+        for h in monitors {
+            match h.join() {
+                Ok(Ok(rec)) => status.extend_from(&rec),
+                Ok(Err(e)) => crate::log_warn!("status monitor failed: {e:#}"),
+                Err(_) => crate::log_warn!("status monitor panicked"),
+            }
+        }
+    });
+
+    // Stop the server before surfacing any master error, so a failed run
+    // never leaks a bound listener thread.
+    let mut client = ServiceClient::connect(&addr).context("connecting for shutdown")?;
+    client.call(&Request::Shutdown)?;
+    srv.join().map_err(|_| anyhow!("server thread panicked"))??;
+
+    let mut report = SoakReport {
+        mode,
+        decision: Recorder::new(),
+        submit: Recorder::new(),
+        status,
+        jobs: 0,
+        assignments: 0,
+        wall_secs,
+        jobs_per_sec: 0.0,
+        batches: 0,
+        batched_requests: 0,
+        coalesced_heartbeats: 0,
+    };
+    for r in master_results {
+        let stats = r.map_err(|_| anyhow!("master thread panicked"))??;
+        report.decision.extend_from(&stats.decision);
+        report.submit.extend_from(&stats.submit);
+        report.status.extend_from(&stats.status);
+        report.jobs += stats.jobs;
+        report.assignments += stats.assignments;
+    }
+    report.jobs_per_sec = report.jobs as f64 / wall_secs.max(1e-9);
+    let (batches, batched_requests, coalesced) = server.batch_stats();
+    report.batches = batches;
+    report.batched_requests = batched_requests;
+    report.coalesced_heartbeats = coalesced;
+    crate::log_info!(
+        "soak [{}]: {} jobs in {:.2}s ({:.1} jobs/s), {} assignments",
+        mode.name(),
+        report.jobs,
+        wall_secs,
+        report.jobs_per_sec,
+        report.assignments
+    );
+    Ok(report)
+}
+
+fn latency_row(name: &str, rec: &Recorder) -> String {
+    let ps = rec.percentiles(&[50.0, 95.0, 99.0]);
+    format!(
+        "| {name} | {} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
+        rec.len(),
+        rec.mean(),
+        ps[0],
+        ps[1],
+        ps[2]
+    )
+}
+
+fn bench_case(name: &str, rec: &Recorder) -> Json {
+    // ms → ns, matching the other BENCH_*.json snapshots.
+    let ps = rec.percentiles(&[50.0, 95.0, 99.0]);
+    Json::from_pairs(vec![
+        ("name", Json::from(name)),
+        ("iters", Json::from(rec.len())),
+        ("mean_ns", Json::from(rec.mean() * 1e6)),
+        ("std_ns", Json::from(rec.std_dev() * 1e6)),
+        ("p50_ns", Json::from(ps[0] * 1e6)),
+        ("p95_ns", Json::from(ps[1] * 1e6)),
+        ("p99_ns", Json::from(ps[2] * 1e6)),
+    ])
+}
+
+/// Run the full serial-vs-batched soak comparison, write
+/// `results/soak.md` + the bench JSON at `out_json`, and return the
+/// rendered markdown.
+pub fn soak(cfg: &SoakConfig, src: &PolicySource, out_json: &str) -> Result<String> {
+    let serial = run_soak_mode(cfg, src, ServiceMode::Serial)?;
+    let batched = run_soak_mode(cfg, src, ServiceMode::Batched)?;
+
+    let mut out = String::from("## Service soak: serial vs batched engine\n\n");
+    out.push_str(&format!(
+        "{} masters x {} jobs total, mean inter-arrival {}s, {} executors, \
+         algo {}, seed {}, {} status monitors\n\n",
+        cfg.masters,
+        cfg.jobs,
+        cfg.mean_interval,
+        cfg.executors,
+        cfg.algo,
+        cfg.seed,
+        cfg.monitors
+    ));
+    out.push_str("| metric | samples | mean ms | p50 | p95 | p99 |\n|---|---|---|---|---|---|\n");
+    for rep in [&serial, &batched] {
+        let m = rep.mode.name();
+        out.push_str(&latency_row(&format!("decision/{m}"), &rep.decision));
+        out.push_str(&latency_row(&format!("submit/{m}"), &rep.submit));
+        out.push_str(&latency_row(&format!("status/{m}"), &rep.status));
+    }
+    out.push_str(&format!(
+        "\njobs/sec: serial {:.1}, batched {:.1} ({:.2}x); \
+         batched engine formed {} batches over {} requests \
+         (avg {:.2}/batch), coalesced {} heartbeats\n",
+        serial.jobs_per_sec,
+        batched.jobs_per_sec,
+        batched.jobs_per_sec / serial.jobs_per_sec.max(1e-9),
+        batched.batches,
+        batched.batched_requests,
+        batched.batched_requests as f64 / batched.batches.max(1) as f64,
+        batched.coalesced_heartbeats
+    ));
+    write_results("soak.md", &out)?;
+
+    let mut cases = Vec::new();
+    for rep in [&serial, &batched] {
+        let m = rep.mode.name();
+        cases.push(bench_case(&format!("decision/{m}"), &rep.decision));
+        cases.push(bench_case(&format!("submit/{m}"), &rep.submit));
+        cases.push(bench_case(&format!("status/{m}"), &rep.status));
+    }
+    let decision_s = serial.decision.percentiles(&[50.0, 95.0, 99.0]);
+    let decision_b = batched.decision.percentiles(&[50.0, 95.0, 99.0]);
+    let json = Json::from_pairs(vec![
+        ("bench", Json::from("service_soak")),
+        (
+            "config",
+            Json::from_pairs(vec![
+                ("masters", Json::from(cfg.masters)),
+                ("jobs", Json::from(cfg.jobs)),
+                ("mean_interval", Json::from(cfg.mean_interval)),
+                ("executors", Json::from(cfg.executors)),
+                ("algo", Json::from(cfg.algo.clone())),
+                ("seed", Json::from(cfg.seed as usize)),
+                ("status_every", Json::from(cfg.status_every)),
+                ("monitors", Json::from(cfg.monitors)),
+            ]),
+        ),
+        ("cases", Json::Arr(cases)),
+        (
+            "notes",
+            Json::from_pairs(vec![
+                ("jobs_per_sec_serial", Json::from(serial.jobs_per_sec)),
+                ("jobs_per_sec_batched", Json::from(batched.jobs_per_sec)),
+                (
+                    "batched_speedup",
+                    Json::from(batched.jobs_per_sec / serial.jobs_per_sec.max(1e-9)),
+                ),
+                ("decision_p50_ms_serial", Json::from(decision_s[0])),
+                ("decision_p95_ms_serial", Json::from(decision_s[1])),
+                ("decision_p99_ms_serial", Json::from(decision_s[2])),
+                ("decision_p50_ms_batched", Json::from(decision_b[0])),
+                ("decision_p95_ms_batched", Json::from(decision_b[1])),
+                ("decision_p99_ms_batched", Json::from(decision_b[2])),
+                (
+                    "avg_batch_size",
+                    Json::from(
+                        batched.batched_requests as f64 / batched.batches.max(1) as f64,
+                    ),
+                ),
+                (
+                    "coalesced_heartbeats",
+                    Json::from(batched.coalesced_heartbeats as f64),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write(out_json, format!("{}\n", json.to_string()))
+        .with_context(|| format!("writing {out_json}"))?;
+    crate::log_info!("wrote {out_json}");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end smoke at toy scale: both modes complete, every job is
+    /// acknowledged, latencies are recorded, and the bench JSON lands.
+    #[test]
+    fn soak_smoke_both_modes() {
+        let cfg = SoakConfig {
+            masters: 2,
+            jobs: 8,
+            mean_interval: 1.0,
+            executors: 6,
+            algo: "FIFO-DEFT".to_string(),
+            seed: 11,
+            status_every: 1,
+            monitors: 1,
+        };
+        let src = PolicySource {
+            backend: "rust".to_string(),
+            ..PolicySource::default()
+        };
+        let out = std::env::temp_dir().join(format!(
+            "lachesis_soak_test_{}.json",
+            std::process::id()
+        ));
+        let out_path = out.to_str().unwrap().to_string();
+        let md = soak(&cfg, &src, &out_path).unwrap();
+        assert!(md.contains("decision/serial"));
+        assert!(md.contains("decision/batched"));
+        let raw = std::fs::read_to_string(&out_path).unwrap();
+        assert!(raw.contains("jobs_per_sec_serial"));
+        assert!(raw.contains("jobs_per_sec_batched"));
+        std::fs::remove_file(&out_path).ok();
+    }
+
+    /// The per-mode runner reports every submitted job and a decision
+    /// sample per job.
+    #[test]
+    fn soak_mode_accounts_every_job() {
+        let cfg = SoakConfig {
+            masters: 3,
+            jobs: 7, // deliberately not divisible by masters
+            mean_interval: 1.0,
+            executors: 4,
+            algo: "FIFO-DEFT".to_string(),
+            seed: 5,
+            status_every: 2,
+            monitors: 0,
+        };
+        let src = PolicySource {
+            backend: "rust".to_string(),
+            ..PolicySource::default()
+        };
+        let rep = run_soak_mode(&cfg, &src, ServiceMode::Batched).unwrap();
+        assert_eq!(rep.jobs, 7);
+        assert_eq!(rep.decision.len(), 7);
+        assert_eq!(rep.submit.len(), 7);
+        assert!(rep.assignments > 0);
+        assert!(rep.batches > 0);
+        assert!(rep.jobs_per_sec > 0.0);
+    }
+}

@@ -25,6 +25,13 @@ USAGE:
                       pjrt and artifacts exist; otherwise the native CPU
                       gradient backend — no artifacts needed)
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
+                     [--mode serial|batched]   (batched: mailbox core loop
+                      + lock-free status snapshots — the default)
+  lachesis soak      [--masters N] [--jobs J] [--mean-interval S]
+                     [--executors M] [--algo NAME] [--seed S]
+                     [--status-every K] [--monitors N]
+                     [--out BENCH_service.json]
+                     (sustained Poisson load over TCP, serial vs batched)
   lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K]
                      [--threads N|auto] [--backend pjrt|rust]
   lachesis ablate    [--seeds K] [--threads N|auto]
@@ -59,6 +66,7 @@ fn run() -> Result<()> {
         Some("schedule") => cmd_schedule(&args),
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
+        Some("soak") => cmd_soak(&args),
         Some("repro") => cmd_repro(&args),
         Some("ablate") => {
             let seeds = args.usize_opt("seeds", 3)?;
@@ -254,76 +262,47 @@ fn cmd_faults(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use lachesis::service::AgentServer;
+    use lachesis::service::{AgentServer, ServiceMode};
     let addr = args.opt_or("addr", "127.0.0.1:7654");
     let algo = args.opt_or("algo", "HighRankUp-DEFT");
     let executors = args.usize_opt("executors", 50)?;
     let seed = args.u64_opt("seed", 1)?;
+    let mode = ServiceMode::parse(args.opt_or("mode", "batched"))?;
     let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
     let src = policy_source(args);
-    let sched = build_send_scheduler(algo, &src, seed)?;
-    let agent = AgentServer::new(cluster, sched);
-    println!("lachesis agent ({algo}) listening on {addr} — ctrl-c to stop");
+    let sched = exp::build_send_scheduler(algo, &src, seed)?;
+    let agent = AgentServer::with_mode(cluster, sched, mode);
+    println!(
+        "lachesis agent ({algo}, {} engine) listening on {addr} — ctrl-c to stop",
+        mode.name()
+    );
     agent.serve(addr, |bound| println!("bound {bound}"))?;
     Ok(())
 }
 
-/// Like [`exp::build_scheduler`] but with a `Send` bound (the service
-/// moves its scheduler into the accept thread).
-fn build_send_scheduler(
-    name: &str,
-    src: &PolicySource,
-    seed: u64,
-) -> Result<Box<dyn lachesis::sched::Scheduler + Send>> {
-    use lachesis::policy::features::FeatureMode;
-    use lachesis::sched::{
-        CpopScheduler, DecimaScheduler, FifoScheduler, HeftScheduler, HighRankUpScheduler,
-        HrrnScheduler, LachesisScheduler, RandomScheduler, SjfScheduler, TdcaScheduler,
-    };
-    Ok(match name {
-        "FIFO-DEFT" => Box::new(FifoScheduler::new()),
-        "SJF-DEFT" => Box::new(SjfScheduler::new()),
-        "HRRN-DEFT" => Box::new(HrrnScheduler::new()),
-        "HighRankUp-DEFT" => Box::new(HighRankUpScheduler::new()),
-        "HEFT" => Box::new(HeftScheduler::new()),
-        "CPOP" => Box::new(CpopScheduler::new()),
-        "TDCA" => Box::new(TdcaScheduler::new()),
-        "Random-DEFT" => Box::new(RandomScheduler::new(seed)),
-        // The service thread needs Send; PJRT clients are Rc-based, so the
-        // served policy always uses the (numerically identical) rust
-        // forward pass.
-        "Decima-DEFT" => Box::new(DecimaScheduler::greedy_decima(Box::new(serve_policy(
-            src,
-            FeatureMode::HomogeneousBlind,
-        )))),
-        "Lachesis" => Box::new(LachesisScheduler::greedy(Box::new(serve_policy(
-            src,
-            FeatureMode::Full,
-        )))),
-        other => bail!("unknown scheduler '{other}'"),
-    })
-}
-
-fn serve_policy(
-    src: &PolicySource,
-    mode: lachesis::policy::features::FeatureMode,
-) -> lachesis::policy::RustPolicy {
-    let init = format!("{}/params_init.bin", src.artifact_dir);
-    let explicit = match mode {
-        lachesis::policy::features::FeatureMode::Full => src.lachesis_params.as_deref(),
-        _ => src.decima_params.as_deref(),
-    };
-    let candidates: Vec<&str> = match explicit {
-        Some(p) => vec![p],
-        None => vec!["checkpoints/lachesis.bin", &init],
-    };
-    let params = candidates
-        .iter()
-        .find_map(|p| {
-            lachesis::policy::params::load_expected(p, lachesis::policy::net::param_len()).ok()
-        })
-        .unwrap_or_else(|| lachesis::policy::RustPolicy::random_params(12345));
-    lachesis::policy::RustPolicy::new(params)
+/// Sustained-load soak: open-loop Poisson arrivals over N concurrent
+/// master connections, run once per service engine (serial, batched) and
+/// reported side by side (`results/soak.md` + a bench JSON).
+fn cmd_soak(args: &Args) -> Result<()> {
+    let mut cfg = lachesis::exp::soak::SoakConfig::default();
+    cfg.masters = args.usize_opt("masters", cfg.masters)?;
+    cfg.jobs = args.usize_opt("jobs", cfg.jobs)?;
+    cfg.mean_interval = args.f64_opt("mean-interval", cfg.mean_interval)?;
+    cfg.executors = args.usize_opt("executors", cfg.executors)?;
+    if let Some(algo) = args.opt("algo") {
+        cfg.algo = algo.to_string();
+    }
+    cfg.seed = args.u64_opt("seed", cfg.seed)?;
+    cfg.status_every = args.usize_opt("status-every", cfg.status_every)?;
+    cfg.monitors = args.usize_opt("monitors", cfg.monitors)?;
+    if !cfg.mean_interval.is_finite() || cfg.mean_interval <= 0.0 {
+        bail!("--mean-interval must be finite and positive");
+    }
+    let out = args.opt_or("out", "BENCH_service.json");
+    let src = policy_source(args);
+    let report = lachesis::exp::soak::soak(&cfg, &src, out)?;
+    println!("{report}");
+    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {

@@ -7,8 +7,14 @@
 //! logic is byte-for-byte the scheduler zoo of [`crate::sched`].
 //!
 //! Many masters can be connected at once: [`AgentServer`] runs one
-//! thread per connection over a shared, mutex-guarded [`AgentCore`], so
-//! requests are serialized and decisions stay deterministic. Jobs
+//! thread per connection over a shared [`AgentCore`]. In the default
+//! batched [`ServiceMode`], mutating requests flow through a mailbox
+//! drained by a dedicated core loop (one lock acquisition per batch,
+//! consecutive heartbeats coalesced) and `status` is served from a
+//! lock-free seqlock snapshot; the serial mode keeps the original
+//! one-lock-per-request engine as the golden baseline. Both process
+//! requests in a single total order, so decisions stay deterministic
+//! and byte-identical across modes for the same request stream. Jobs
 //! submitted with a future `arrival` are deferred in a min-heap and
 //! activate only when the wall clock reaches them — matching the
 //! simulator's event-driven arrival semantics.
@@ -19,4 +25,4 @@ pub mod protocol;
 pub mod server;
 
 pub use protocol::{Assignment, Request, Response};
-pub use server::{AgentCore, AgentServer, ServiceClient};
+pub use server::{AgentCore, AgentServer, ServiceClient, ServiceMode, StatusSnapshot};

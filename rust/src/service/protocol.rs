@@ -25,6 +25,14 @@
 //! arrival time, and `"down"`: executors currently unavailable.
 //! `shutdown` stops the whole server — every master connection, not just
 //! the requesting one. See `docs/protocol.md` for the full wire contract.
+//!
+//! Pipelining: a master may send many request lines without waiting for
+//! responses; the agent answers every line, strictly in the order sent.
+//! In the server's batched mode, mutating requests pipelined this way
+//! are applied as one batch under a single core-lock acquisition, and
+//! `status` is answered from a lock-free snapshot refreshed after every
+//! batch — at most one batch stale, never torn, and always at least as
+//! fresh as the last response the same connection has already received.
 
 use crate::dag::Job;
 use crate::sim::Allocation;
@@ -103,6 +111,14 @@ pub enum Response {
 }
 
 impl Request {
+    /// Whether this request may change the agent's state. Mutating
+    /// requests go through the batched core loop; `status` is answered
+    /// from the lock-free snapshot and `shutdown` by the connection
+    /// thread itself.
+    pub fn is_mutating(&self) -> bool {
+        !matches!(self, Request::Status | Request::Shutdown)
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             Request::SubmitJob {

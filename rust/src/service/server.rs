@@ -5,11 +5,29 @@
 //!
 //! Concurrency model: every accepted master connection gets its own
 //! thread, and all of them share one [`AgentCore`] — the live `SimState`
-//! plus the scheduler — behind a mutex. Requests are therefore processed
-//! one at a time in arrival order at the lock, so decisions are exactly
-//! as deterministic as a single-connection session interleaved the same
-//! way; concurrency buys connection-level parallelism (parsing, I/O,
-//! slow peers) without ever racing the scheduler.
+//! plus the scheduler — behind a mutex. The server runs in one of two
+//! [`ServiceMode`]s:
+//!
+//! * **Serial** — every request (including `status`) acquires the core
+//!   lock, is applied, and is answered before the lock is released. One
+//!   lock acquisition per request; the original single-lock engine, kept
+//!   as the correctness reference and throughput baseline.
+//! * **Batched** (default) — connection threads enqueue mutating
+//!   requests into a mailbox drained by a dedicated core-loop thread
+//!   that applies a whole batch per lock acquisition, coalescing
+//!   consecutive `task_complete` heartbeats into a single wall-clock
+//!   advance. `status` never touches the core lock at all: it is
+//!   answered from a seqlock-published [`StatusSnapshot`] refreshed
+//!   after every batch (bounded staleness, never torn). Batch
+//!   application preserves mailbox FIFO order, so an identical request
+//!   stream produces the byte-identical schedule the serial engine
+//!   would — golden tests pin this.
+//!
+//! In both modes requests are processed in a single total order, so
+//! decisions are exactly as deterministic as a single-connection session
+//! interleaved the same way; concurrency buys connection-level
+//! parallelism (parsing, I/O, slow peers) without ever racing the
+//! scheduler.
 //!
 //! Arrival semantics match the simulator's event loop (Algorithm 3): a
 //! `submit_job` whose `arrival` lies in the future is *queued*, not
@@ -23,11 +41,11 @@ use crate::sim::SimState;
 use crate::util::json::Json;
 use crate::workload::Workload;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
 use std::time::Duration;
 
 /// How often the accept loop polls the shutdown flag.
@@ -43,6 +61,9 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 /// newline must not grow a connection buffer without bound; generous
 /// enough for very large submitted DAGs.
 const MAX_LINE_BYTES: usize = 8 << 20;
+/// Largest number of pipelined requests pulled into one burst per
+/// connection read (bounds the responses held in flight per burst).
+const MAX_BURST: usize = 128;
 
 /// An id waiting for the wall clock to reach `time` — a deferred job
 /// arrival (`id` = job) or a crashed executor's recovery (`id` = exec).
@@ -71,6 +92,186 @@ impl Ord for Pending {
             .time
             .total_cmp(&self.time)
             .then(other.id.cmp(&self.id))
+    }
+}
+
+/// How the server applies requests to the shared core. See the module
+/// docs for the two engines' contracts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceMode {
+    /// One core-lock acquisition per request; `status` also locks.
+    Serial,
+    /// Mailbox + dedicated core loop: one lock acquisition per *batch*,
+    /// heartbeat coalescing, and lock-free snapshot `status`.
+    Batched,
+}
+
+impl ServiceMode {
+    pub fn parse(s: &str) -> Result<ServiceMode> {
+        match s {
+            "serial" => Ok(ServiceMode::Serial),
+            "batched" => Ok(ServiceMode::Batched),
+            other => bail!("unknown service mode '{other}' (serial|batched)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceMode::Serial => "serial",
+            ServiceMode::Batched => "batched",
+        }
+    }
+}
+
+/// The status fields as a plain value: what a `status` request reports,
+/// and what the batched server publishes into its lock-free cell.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StatusSnapshot {
+    pub jobs: usize,
+    pub assigned: usize,
+    pub executors: usize,
+    pub horizon: f64,
+    /// Size of the executable frontier (tasks ready to be scheduled).
+    pub executable: usize,
+    /// Jobs submitted with a future arrival, not yet activated.
+    pub pending: usize,
+    /// Executors currently down (crashed, not yet recovered).
+    pub down: usize,
+}
+
+impl StatusSnapshot {
+    pub fn to_response(&self) -> Response {
+        Response::Status {
+            jobs: self.jobs,
+            assigned: self.assigned,
+            executors: self.executors,
+            horizon: self.horizon,
+            executable: self.executable,
+            pending: self.pending,
+            down: self.down,
+        }
+    }
+}
+
+/// Seqlock-published [`StatusSnapshot`]: a single writer (the core loop)
+/// bumps `seq` to odd, stores the fields, bumps back to even; readers
+/// retry until they observe the same even `seq` on both sides of their
+/// field loads. Readers therefore never block on the writer, never see a
+/// torn snapshot, and never touch the core mutex — the whole point of
+/// the batched `status` path. Every field is an individual atomic, so
+/// the retry loop is a consistency protocol, not a safety requirement.
+struct StatusCell {
+    seq: AtomicU64,
+    jobs: AtomicUsize,
+    assigned: AtomicUsize,
+    executors: AtomicUsize,
+    /// `f64` horizon stored as raw bits (atomics are integer-only).
+    horizon_bits: AtomicU64,
+    executable: AtomicUsize,
+    pending: AtomicUsize,
+    down: AtomicUsize,
+}
+
+impl StatusCell {
+    fn new() -> StatusCell {
+        StatusCell {
+            seq: AtomicU64::new(0),
+            jobs: AtomicUsize::new(0),
+            assigned: AtomicUsize::new(0),
+            executors: AtomicUsize::new(0),
+            horizon_bits: AtomicU64::new(0f64.to_bits()),
+            executable: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            down: AtomicUsize::new(0),
+        }
+    }
+
+    /// Publish a new snapshot. Single-writer: only the core loop (and
+    /// `serve()` once, before the core loop starts) may call this.
+    fn publish(&self, s: &StatusSnapshot) {
+        // Odd = write in progress. The acquire ordering on the RMW keeps
+        // the field stores below it; the closing release keeps them above
+        // the final (even) value readers validate against.
+        self.seq.fetch_add(1, Ordering::Acquire);
+        self.jobs.store(s.jobs, Ordering::Relaxed);
+        self.assigned.store(s.assigned, Ordering::Relaxed);
+        self.executors.store(s.executors, Ordering::Relaxed);
+        self.horizon_bits.store(s.horizon.to_bits(), Ordering::Relaxed);
+        self.executable.store(s.executable, Ordering::Relaxed);
+        self.pending.store(s.pending, Ordering::Relaxed);
+        self.down.store(s.down, Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+    }
+
+    /// Read a consistent snapshot without ever blocking the writer.
+    fn read(&self) -> StatusSnapshot {
+        let mut spins = 0u32;
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 0 {
+                let snap = StatusSnapshot {
+                    jobs: self.jobs.load(Ordering::Relaxed),
+                    assigned: self.assigned.load(Ordering::Relaxed),
+                    executors: self.executors.load(Ordering::Relaxed),
+                    horizon: f64::from_bits(self.horizon_bits.load(Ordering::Relaxed)),
+                    executable: self.executable.load(Ordering::Relaxed),
+                    pending: self.pending.load(Ordering::Relaxed),
+                    down: self.down.load(Ordering::Relaxed),
+                };
+                std::sync::atomic::fence(Ordering::Acquire);
+                if self.seq.load(Ordering::Relaxed) == s1 {
+                    return snap;
+                }
+            }
+            // Publishes are a handful of stores; a reader only spins
+            // here if it raced one. Yield periodically so a preempted
+            // writer on a loaded box can finish.
+            spins += 1;
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+/// One mutating request parked in the mailbox, with the channel its
+/// connection thread is blocked on. Dropping an envelope unanswered
+/// disconnects the channel, which the waiter surfaces as an error — so
+/// a panicking core loop can never strand a connection forever.
+struct Envelope {
+    req: Request,
+    resp_tx: mpsc::Sender<Response>,
+}
+
+#[derive(Default)]
+struct MailboxQueue {
+    queue: VecDeque<Envelope>,
+    /// Set when the core loop exits (cleanly or by panic): no envelope
+    /// will ever be drained again, so enqueues must be refused.
+    closed: bool,
+}
+
+/// The connection-threads → core-loop handoff: a FIFO of envelopes plus
+/// the condvar the core loop sleeps on.
+struct Mailbox {
+    q: Mutex<MailboxQueue>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox {
+            q: Mutex::new(MailboxQueue::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The mailbox mutex guards a plain queue with no invariants a
+    /// panic could break, so a poisoned guard is still usable.
+    fn lock(&self) -> std::sync::MutexGuard<'_, MailboxQueue> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -130,6 +331,23 @@ impl AgentCore {
     /// Read-only view of the live scheduling state.
     pub fn state(&self) -> &SimState {
         &self.state
+    }
+
+    /// The status fields as a value — what a `status` request answers,
+    /// and what the batched server publishes after each batch. `pending`
+    /// is O(1) from the heap; every unarrived job is exactly one entry
+    /// (submit either marks arrived or pushes; `advance_to` pops and
+    /// marks in lockstep).
+    pub fn status_snapshot(&self) -> StatusSnapshot {
+        StatusSnapshot {
+            jobs: self.state.jobs.len(),
+            assigned: self.state.n_assigned,
+            executors: self.state.cluster.len(),
+            horizon: self.state.horizon,
+            executable: self.state.executable().len(),
+            pending: self.pending.len(),
+            down: self.state.cluster.len() - self.state.cluster.n_available(),
+        }
     }
 
     /// Handle one request against the live state.
@@ -250,41 +468,70 @@ impl AgentCore {
                     survived: out.survived,
                 }
             }
-            Request::Status => Response::Status {
-                jobs: self.state.jobs.len(),
-                assigned: self.state.n_assigned,
-                executors: self.state.cluster.len(),
-                horizon: self.state.horizon,
-                executable: self.state.executable().len(),
-                // O(1) from the heap; every unarrived job is exactly one
-                // pending entry (submit either marks arrived or pushes;
-                // advance_to pops and marks in lockstep).
-                pending: self.pending.len(),
-                down: self.state.cluster.len() - self.state.cluster.n_available(),
-            },
+            Request::Status => self.status_snapshot().to_response(),
             Request::Shutdown => Response::Ok { job_id: None },
         }
     }
 }
 
 /// The scheduling agent behind a TCP endpoint: a shared [`AgentCore`]
-/// served by one thread per master connection.
+/// served by one thread per master connection, applied either serially
+/// or through the batched core loop (see [`ServiceMode`]).
 pub struct AgentServer {
     core: Mutex<AgentCore>,
     shutdown: AtomicBool,
+    mode: ServiceMode,
+    mailbox: Mailbox,
+    status: StatusCell,
+    // Batch-formation counters (telemetry for the soak harness).
+    n_batches: AtomicU64,
+    n_batched_requests: AtomicU64,
+    n_coalesced_heartbeats: AtomicU64,
 }
 
 impl AgentServer {
+    /// A server in the default (batched) mode.
     pub fn new(cluster: Cluster, scheduler: Box<dyn Scheduler + Send>) -> AgentServer {
+        AgentServer::with_mode(cluster, scheduler, ServiceMode::Batched)
+    }
+
+    pub fn with_mode(
+        cluster: Cluster,
+        scheduler: Box<dyn Scheduler + Send>,
+        mode: ServiceMode,
+    ) -> AgentServer {
         AgentServer {
             core: Mutex::new(AgentCore::new(cluster, scheduler)),
             shutdown: AtomicBool::new(false),
+            mode,
+            mailbox: Mailbox::new(),
+            status: StatusCell::new(),
+            n_batches: AtomicU64::new(0),
+            n_batched_requests: AtomicU64::new(0),
+            n_coalesced_heartbeats: AtomicU64::new(0),
         }
+    }
+
+    pub fn mode(&self) -> ServiceMode {
+        self.mode
+    }
+
+    /// `(batches, requests applied through batches, heartbeats coalesced
+    /// away)` — requests/batches is the mean batch size the mailbox
+    /// actually formed under load.
+    pub fn batch_stats(&self) -> (u64, u64, u64) {
+        (
+            self.n_batches.load(Ordering::Relaxed),
+            self.n_batched_requests.load(Ordering::Relaxed),
+            self.n_coalesced_heartbeats.load(Ordering::Relaxed),
+        )
     }
 
     /// Handle one request against the shared core (serialized at the
     /// lock). Exposed so embedders and tests can drive the agent without
-    /// networking.
+    /// networking. Bypasses the mailbox — in batched mode, mutations
+    /// made this way are reflected in `status` snapshots only after the
+    /// next batch publishes.
     pub fn handle(&self, req: Request) -> Response {
         match self.core.lock() {
             Ok(mut core) => core.handle(req),
@@ -305,11 +552,24 @@ impl AgentServer {
         }
     }
 
+    /// Run `f` with the core mutex held — the embedder's escape hatch
+    /// for direct state inspection, and what the snapshot-isolation test
+    /// uses to prove `status` never acquires this lock. Mutations made
+    /// here do not refresh the status snapshot (prefer requests).
+    pub fn with_core<R>(&self, f: impl FnOnce(&mut AgentCore) -> R) -> R {
+        let mut core = self.core.lock().expect("agent core poisoned");
+        f(&mut core)
+    }
+
+    fn publish_status(&self, core: &AgentCore) {
+        self.status.publish(&core.status_snapshot());
+    }
+
     /// Serve connections until a `shutdown` request arrives on any of
     /// them. Each accepted master gets its own thread; all of them share
     /// the core. Returns the bound address through `on_bound` (use port 0
     /// for ephemeral).
-    pub fn serve(self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         on_bound(listener.local_addr()?);
         // Non-blocking accepts so this loop can poll the shutdown flag
@@ -317,8 +577,17 @@ impl AgentServer {
         listener
             .set_nonblocking(true)
             .context("setting listener non-blocking")?;
-        let server = &self;
+        // Seed the snapshot so `status` is answerable before the first
+        // batch (single-writer discipline: the core loop has not started
+        // yet).
+        if let Ok(core) = self.core.lock() {
+            self.publish_status(&core);
+        }
+        let server = &*self;
         std::thread::scope(|s| {
+            if server.mode == ServiceMode::Batched {
+                s.spawn(move || server.core_loop());
+            }
             let mut res: Result<()> = Ok(());
             while !server.shutdown.load(Ordering::SeqCst) {
                 match listener.accept() {
@@ -350,11 +619,161 @@ impl AgentServer {
                     }
                 }
             }
-            // Wake every connection thread (they poll the same flag)
-            // before the scope joins them.
+            // Wake every connection thread (they poll the same flag) and
+            // the core loop (it sleeps on the mailbox condvar) before
+            // the scope joins them.
             server.shutdown.store(true, Ordering::SeqCst);
+            server.mailbox.cv.notify_all();
             res
         })
+    }
+
+    /// The batched engine's only consumer of the core lock: sleep until
+    /// the mailbox holds work, drain *everything* queued, apply it in
+    /// FIFO order under one lock acquisition, refresh the status
+    /// snapshot, then release the replies. Exits once shutdown is set
+    /// and the mailbox has been drained dry.
+    fn core_loop(&self) {
+        // On any exit — including a panic inside a scheduler — close the
+        // mailbox and drop queued envelopes so blocked connection
+        // threads observe disconnected channels instead of hanging.
+        struct MailboxCloser<'a>(&'a AgentServer);
+        impl Drop for MailboxCloser<'_> {
+            fn drop(&mut self) {
+                let mut q = self.0.mailbox.lock();
+                q.closed = true;
+                q.queue.clear();
+            }
+        }
+        let _closer = MailboxCloser(self);
+        while let Some(batch) = self.next_batch() {
+            self.apply_batch(batch);
+        }
+    }
+
+    /// Block until the mailbox is non-empty (drain it whole) or shutdown
+    /// is set with nothing queued (return `None`).
+    fn next_batch(&self) -> Option<Vec<Envelope>> {
+        let mut q = self.mailbox.lock();
+        loop {
+            if !q.queue.is_empty() {
+                self.n_batches.fetch_add(1, Ordering::Relaxed);
+                self.n_batched_requests
+                    .fetch_add(q.queue.len() as u64, Ordering::Relaxed);
+                return Some(q.queue.drain(..).collect());
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            // The timeout is a backstop: shutdown is normally followed
+            // by a notify, but a racing missed wakeup must not leave the
+            // core loop (and the serve scope join) sleeping forever.
+            q = self
+                .mailbox
+                .cv
+                .wait_timeout(q, ACCEPT_POLL)
+                .map(|(g, _t)| g)
+                .unwrap_or_else(|e| e.into_inner().0);
+        }
+    }
+
+    /// Apply one drained batch in FIFO order under a single core-lock
+    /// acquisition. Consecutive `task_complete` heartbeats collapse into
+    /// one `advance_to(max time)` — `advance_to` is monotone, so the run
+    /// activates exactly the arrivals/recoveries the per-request
+    /// advances would, and each heartbeat's response is the same plain
+    /// `ok` either way. The snapshot refresh happens *before* replies
+    /// are released, so a client that saw its mutation acknowledged
+    /// reads a snapshot at least that fresh (read-your-writes).
+    fn apply_batch(&self, batch: Vec<Envelope>) {
+        let mut replies: Vec<(mpsc::Sender<Response>, Response)> =
+            Vec::with_capacity(batch.len());
+        match self.core.lock() {
+            Ok(mut core) => {
+                let mut it = batch.into_iter().peekable();
+                while let Some(env) = it.next() {
+                    if let Request::TaskComplete { time, .. } = env.req {
+                        let mut max_t = time;
+                        let mut acks = vec![env.resp_tx];
+                        while matches!(
+                            it.peek().map(|e| &e.req),
+                            Some(Request::TaskComplete { .. })
+                        ) {
+                            let e = it.next().expect("peeked entry exists");
+                            if let Request::TaskComplete { time, .. } = e.req {
+                                // f64::max ignores NaN operands, exactly
+                                // like the serial path's advance_wall
+                                // no-op on a NaN heartbeat.
+                                max_t = max_t.max(time);
+                            }
+                            acks.push(e.resp_tx);
+                        }
+                        core.advance_to(max_t);
+                        self.n_coalesced_heartbeats
+                            .fetch_add(acks.len() as u64 - 1, Ordering::Relaxed);
+                        for tx in acks {
+                            replies.push((tx, Response::Ok { job_id: None }));
+                        }
+                    } else {
+                        let Envelope { req, resp_tx } = env;
+                        let resp = core.handle(req);
+                        replies.push((resp_tx, resp));
+                    }
+                }
+                self.publish_status(&core);
+            }
+            Err(_poisoned) => {
+                for env in batch {
+                    replies.push((
+                        env.resp_tx,
+                        Response::Error(
+                            "agent core poisoned by a prior panic; refusing new requests \
+                             (send shutdown)"
+                                .to_string(),
+                        ),
+                    ));
+                }
+            }
+        }
+        for (tx, resp) in replies {
+            // A connection that died while waiting dropped its receiver;
+            // nothing to do.
+            let _ = tx.send(resp);
+        }
+    }
+
+    /// Park a mutating request in the mailbox; `None` when the core loop
+    /// is gone (shutdown or panic).
+    fn enqueue(&self, req: Request) -> Option<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.mailbox.lock();
+            if q.closed {
+                return None;
+            }
+            q.queue.push_back(Envelope { req, resp_tx: tx });
+        }
+        self.mailbox.cv.notify_one();
+        Some(rx)
+    }
+
+    /// Block until the core loop answers the envelope. A disconnected
+    /// channel means the core loop dropped it (panic or shutdown race) —
+    /// surfaced as an error response, never a hang.
+    fn await_response(&self, rx: &mpsc::Receiver<Response>) -> Response {
+        loop {
+            match rx.recv_timeout(READ_POLL) {
+                Ok(resp) => return resp,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Response::Error(
+                        "agent core unavailable (shutdown or panic before the request \
+                         was applied)"
+                            .to_string(),
+                    )
+                }
+            }
+        }
     }
 
     /// Serve one master connection until it closes, errors, or shutdown.
@@ -371,6 +790,19 @@ impl AgentServer {
             .context("write timeout")?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = BufWriter::new(stream);
+        match self.mode {
+            ServiceMode::Serial => self.serve_conn_serial(&mut reader, &mut writer),
+            ServiceMode::Batched => self.serve_conn_batched(&mut reader, &mut writer),
+        }
+    }
+
+    /// The single-lock engine: read a line, apply it under the core
+    /// lock, answer, repeat.
+    fn serve_conn_serial(
+        &self,
+        reader: &mut BufReader<TcpStream>,
+        writer: &mut BufWriter<TcpStream>,
+    ) -> Result<()> {
         // Accumulate raw bytes, not a String: a read timeout can land
         // mid-multibyte UTF-8 character, and `read_line` would drop the
         // already-consumed invalid-prefix bytes on the error path.
@@ -381,7 +813,7 @@ impl AgentServer {
                 if self.shutdown.load(Ordering::SeqCst) {
                     return Ok(());
                 }
-                match read_capped_line(&mut reader, &mut buf)? {
+                match read_capped_line(reader, &mut buf)? {
                     LineRead::Line => break,
                     LineRead::Timeout => continue, // poll the shutdown flag
                     LineRead::Eof => return Ok(()), // peer closed
@@ -411,6 +843,94 @@ impl AgentServer {
                 },
             };
             writeln!(writer, "{}", resp.to_json().to_string())?;
+            writer.flush()?;
+        }
+    }
+
+    /// The batched engine's connection loop. One *burst* = the line the
+    /// blocking read produced plus every complete line the client had
+    /// already pipelined into our buffer. Every mutating request of the
+    /// burst enters the mailbox before any response is awaited, so a
+    /// pipelining client forms whole batches instead of lockstep round
+    /// trips; responses are written back strictly in request order with
+    /// one flush per burst.
+    fn serve_conn_batched(
+        &self,
+        reader: &mut BufReader<TcpStream>,
+        writer: &mut BufWriter<TcpStream>,
+    ) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            buf.clear();
+            loop {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                match read_capped_line(reader, &mut buf)? {
+                    LineRead::Line => break,
+                    LineRead::Timeout => continue,
+                    LineRead::Eof => return Ok(()),
+                }
+            }
+            let mut lines: Vec<Vec<u8>> = vec![std::mem::take(&mut buf)];
+            while lines.len() < MAX_BURST {
+                match take_buffered_line(reader) {
+                    Some(line) => lines.push(line),
+                    None => break,
+                }
+            }
+            // Per-line dispatch plan. Parse failures answer immediately;
+            // `status` resolves from the snapshot at write time (after
+            // every earlier response of the burst arrived, so it already
+            // reflects this connection's own earlier requests);
+            // `shutdown` is handled by the connection itself.
+            enum Slot {
+                Ready(Response),
+                Waiting(mpsc::Receiver<Response>),
+                Snapshot,
+                Shutdown,
+            }
+            let mut plan: Vec<Slot> = Vec::with_capacity(lines.len());
+            for line in &lines {
+                let slot = match std::str::from_utf8(line) {
+                    Err(_) => {
+                        Slot::Ready(Response::Error("bad request: invalid utf-8".to_string()))
+                    }
+                    Ok(text) => match Json::parse(text.trim())
+                        .map_err(|e| anyhow!("{e}"))
+                        .and_then(|v| Request::from_json(&v))
+                    {
+                        Err(e) => Slot::Ready(Response::Error(format!("bad request: {e}"))),
+                        Ok(Request::Status) => Slot::Snapshot,
+                        Ok(Request::Shutdown) => Slot::Shutdown,
+                        Ok(req) => {
+                            debug_assert!(req.is_mutating());
+                            match self.enqueue(req) {
+                                Some(rx) => Slot::Waiting(rx),
+                                None => Slot::Ready(Response::Error(
+                                    "server shutting down".to_string(),
+                                )),
+                            }
+                        }
+                    },
+                };
+                plan.push(slot);
+            }
+            for slot in plan {
+                let (resp, is_shutdown) = match slot {
+                    Slot::Ready(r) => (r, false),
+                    Slot::Waiting(rx) => (self.await_response(&rx), false),
+                    Slot::Snapshot => (self.status.read().to_response(), false),
+                    Slot::Shutdown => (Response::Ok { job_id: None }, true),
+                };
+                writeln!(writer, "{}", resp.to_json().to_string())?;
+                if is_shutdown {
+                    writer.flush()?;
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    self.mailbox.cv.notify_all();
+                    return Ok(());
+                }
+            }
             writer.flush()?;
         }
     }
@@ -473,6 +993,22 @@ fn read_capped_line(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>) -> Res
             return Ok(LineRead::Line);
         }
     }
+}
+
+/// Pop one complete line already sitting in the reader's internal buffer
+/// without touching the socket — how a burst harvests the requests a
+/// pipelining client sent ahead. `None` when the buffer holds no full
+/// line; a buffered partial stays put for the next blocking read (which
+/// also enforces the line cap — one buffered chunk is bounded by
+/// `BufReader`'s capacity, far below it).
+fn take_buffered_line(reader: &mut BufReader<TcpStream>) -> Option<Vec<u8>> {
+    let (line, used) = {
+        let buffered = reader.buffer();
+        let pos = buffered.iter().position(|&b| b == b'\n')?;
+        (buffered[..=pos].to_vec(), pos + 1)
+    };
+    reader.consume(used);
+    Some(line)
 }
 
 /// Blocking client for the agent protocol (what the resource manager — or
@@ -543,6 +1079,13 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+        // The handle() path and the snapshot the batched server would
+        // publish agree field for field.
+        let snap = agent.status_snapshot();
+        assert_eq!(
+            snap.to_response().to_json().to_string(),
+            agent.handle(Request::Status).to_json().to_string()
+        );
     }
 
     /// Regression for the deferred-arrival bug: a future-dated submission
@@ -754,6 +1297,7 @@ mod tests {
     fn end_to_end_over_tcp() {
         let cluster = Cluster::homogeneous(2, 2.0, 100.0);
         let agent = AgentServer::new(cluster, Box::new(FifoScheduler::new()));
+        assert_eq!(agent.mode(), ServiceMode::Batched);
         let (tx, rx) = std::sync::mpsc::channel();
         let handle = std::thread::spawn(move || {
             agent
@@ -778,5 +1322,94 @@ mod tests {
         }
         client.call(&Request::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    /// The serial engine stays fully functional (it is the golden
+    /// baseline the batched path is pinned against).
+    #[test]
+    fn serial_mode_end_to_end_over_tcp() {
+        let cluster = Cluster::homogeneous(2, 2.0, 100.0);
+        let agent = AgentServer::with_mode(
+            cluster,
+            Box::new(FifoScheduler::new()),
+            ServiceMode::Serial,
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            agent
+                .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+        client
+            .call(&Request::SubmitJob {
+                name: "q".into(),
+                arrival: 0.0,
+                computes: vec![1.0, 1.0],
+                edges: vec![],
+            })
+            .unwrap();
+        match client.call(&Request::Schedule { time: 0.0 }).unwrap() {
+            Response::Assignments(a) => assert_eq!(a.len(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        match client.call(&Request::Status).unwrap() {
+            Response::Status { jobs, assigned, .. } => {
+                assert_eq!(jobs, 1);
+                assert_eq!(assigned, 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        client.call(&Request::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn service_mode_parses() {
+        assert_eq!(ServiceMode::parse("serial").unwrap(), ServiceMode::Serial);
+        assert_eq!(ServiceMode::parse("batched").unwrap(), ServiceMode::Batched);
+        assert!(ServiceMode::parse("async").is_err());
+        assert_eq!(ServiceMode::Batched.name(), "batched");
+    }
+
+    /// Hammer the seqlock from concurrent readers while a writer
+    /// publishes correlated snapshots: a reader must never observe a
+    /// mix of two publishes (the invariants tie every field to `jobs`).
+    #[test]
+    fn status_cell_never_torn() {
+        let cell = StatusCell::new();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let cell = &cell;
+            let stop = &stop;
+            s.spawn(move || {
+                for k in 0..50_000usize {
+                    cell.publish(&StatusSnapshot {
+                        jobs: k,
+                        assigned: 2 * k,
+                        executors: 3 * k,
+                        horizon: k as f64,
+                        executable: k + 7,
+                        pending: k % 13,
+                        down: k % 5,
+                    });
+                }
+                stop.store(true, Ordering::SeqCst);
+            });
+            for _ in 0..2 {
+                s.spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        let snap = cell.read();
+                        assert_eq!(snap.assigned, 2 * snap.jobs, "torn snapshot");
+                        assert_eq!(snap.executors, 3 * snap.jobs, "torn snapshot");
+                        assert_eq!(snap.horizon, snap.jobs as f64, "torn snapshot");
+                        assert_eq!(snap.executable, snap.jobs + 7, "torn snapshot");
+                    }
+                });
+            }
+        });
+        // The final publish is visible once the writer is done.
+        assert_eq!(cell.read().jobs, 49_999);
     }
 }

@@ -18,6 +18,9 @@ pub const STREAM_FAULT: u64 = 0xFA01_7B1A_C00F_F17E;
 /// Per-agent exploration sampling inside one training episode (see
 /// [`Rng::stream_seed`] — member `i` is the agent index).
 pub const STREAM_AGENT: u64 = 0xA6E7_7A6E_5EED_0000;
+/// Per-master arrival/workload sampling in the service soak harness
+/// (member `i` is the master index).
+pub const STREAM_SOAK: u64 = 0x50AC_7E57_0000_0001;
 
 /// A small, fast, reproducible PRNG (PCG64-like: 128-bit LCG state with
 /// xorshift-rotate output). Not cryptographic.

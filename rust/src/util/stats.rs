@@ -106,6 +106,14 @@ impl Recorder {
         percentile(&self.samples, p)
     }
 
+    /// Several percentiles off a single sort — what latency reports
+    /// (p50/p95/p99) should use instead of re-sorting per call.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter().map(|&p| percentile_sorted(&sorted, p)).collect()
+    }
+
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -178,6 +186,37 @@ mod tests {
         }
         assert_eq!(r.min(), -1.0);
         assert_eq!(r.max(), 3.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_single_calls() {
+        let mut r = Recorder::new();
+        // Unsorted input with ties.
+        for x in [5.0, 1.0, 3.0, 3.0, 2.0, 5.0, 4.0] {
+            r.push(x);
+        }
+        let ps = [0.0, 25.0, 50.0, 95.0, 99.0, 100.0];
+        let batch = r.percentiles(&ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i], r.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentiles_edge_cases() {
+        // Empty: all zeros, like `percentile`.
+        let r = Recorder::new();
+        assert_eq!(r.percentiles(&[50.0, 95.0, 99.0]), vec![0.0, 0.0, 0.0]);
+        // Single sample: every percentile is that sample.
+        let mut r = Recorder::new();
+        r.push(42.0);
+        assert_eq!(r.percentiles(&[0.0, 50.0, 99.0]), vec![42.0, 42.0, 42.0]);
+        // All-tied input: interpolation between equal values stays exact.
+        let mut r = Recorder::new();
+        for _ in 0..10 {
+            r.push(7.0);
+        }
+        assert_eq!(r.percentiles(&[10.0, 50.0, 95.0]), vec![7.0, 7.0, 7.0]);
     }
 
     #[test]

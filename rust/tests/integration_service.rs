@@ -9,8 +9,12 @@ use lachesis::config::{ClusterConfig, WorkloadConfig};
 use lachesis::dag::Job;
 use lachesis::policy::RustPolicy;
 use lachesis::sched::{HighRankUpScheduler, LachesisScheduler};
-use lachesis::service::{AgentServer, Assignment, Request, Response, ServiceClient};
+use lachesis::service::{
+    AgentServer, Assignment, Request, Response, ServiceClient, ServiceMode,
+};
+use lachesis::util::json::Json;
 use lachesis::workload::WorkloadGenerator;
+use std::sync::Arc;
 
 fn spawn_agent(
     scheduler: Box<dyn lachesis::sched::Scheduler + Send>,
@@ -285,6 +289,258 @@ fn concurrent_clients_make_progress() {
         other => panic!("unexpected {other:?}"),
     }
     c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+}
+
+/// One connection, many requests in flight: a pipelining client writes a
+/// whole stream of requests before reading a single response. Every
+/// request must be answered, strictly in order — and the trailing
+/// `status` must already see all of its connection's acknowledged
+/// mutations (read-your-writes across the batched snapshot path).
+#[test]
+fn pipelined_client_many_in_flight() {
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 6, 13);
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let n = 40usize;
+    let mut payload = String::new();
+    for k in 0..n {
+        let req = Request::SubmitJob {
+            name: format!("p{k}"),
+            arrival: 0.0,
+            computes: vec![1.0],
+            edges: vec![],
+        };
+        payload.push_str(&req.to_json().to_string());
+        payload.push('\n');
+    }
+    payload.push_str(&Request::Schedule { time: 0.0 }.to_json().to_string());
+    payload.push('\n');
+    payload.push_str(&Request::Status.to_json().to_string());
+    payload.push('\n');
+    w.write_all(payload.as_bytes()).unwrap();
+    w.flush().unwrap();
+
+    let mut line = String::new();
+    let mut read_resp = |reader: &mut BufReader<std::net::TcpStream>| -> Response {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        Response::from_json(&Json::parse(line.trim()).unwrap()).unwrap()
+    };
+    for k in 0..n {
+        match read_resp(&mut reader) {
+            Response::Ok { job_id: Some(id) } => assert_eq!(id, k, "responses in order"),
+            other => panic!("submit {k}: unexpected {other:?}"),
+        }
+    }
+    match read_resp(&mut reader) {
+        Response::Assignments(a) => assert_eq!(a.len(), n),
+        other => panic!("unexpected {other:?}"),
+    }
+    match read_resp(&mut reader) {
+        Response::Status { jobs, assigned, pending, .. } => {
+            assert_eq!(jobs, n);
+            assert_eq!(assigned, n, "status sees its own pipelined schedule");
+            assert_eq!(pending, 0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    writeln!(w, "{}", Request::Shutdown.to_json().to_string()).unwrap();
+    w.flush().unwrap();
+    read_resp(&mut reader);
+    handle.join().unwrap();
+}
+
+/// A pipelined burst mixing heartbeats (candidates for coalescing, one
+/// out-of-order) with a future-dated submission: the max heartbeat time
+/// must release the deferred arrival, exactly as per-request advances
+/// would, and the trailing `status` must see it.
+#[test]
+fn pipelined_heartbeats_coalesce_and_release_arrivals() {
+    let (addr, handle) = spawn_agent(Box::new(HighRankUpScheduler::new()), 2, 17);
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let mut payload = String::new();
+    let submit = Request::SubmitJob {
+        name: "deferred".into(),
+        arrival: 50.0,
+        computes: vec![1.0],
+        edges: vec![],
+    };
+    payload.push_str(&submit.to_json().to_string());
+    payload.push('\n');
+    for t in [10.0, 5.0, 60.0] {
+        let hb = Request::TaskComplete { job: 0, node: 0, time: t };
+        payload.push_str(&hb.to_json().to_string());
+        payload.push('\n');
+    }
+    payload.push_str(&Request::Status.to_json().to_string());
+    payload.push('\n');
+    w.write_all(payload.as_bytes()).unwrap();
+    w.flush().unwrap();
+
+    let mut line = String::new();
+    let mut read_resp = |reader: &mut BufReader<std::net::TcpStream>| -> Response {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        Response::from_json(&Json::parse(line.trim()).unwrap()).unwrap()
+    };
+    assert!(matches!(
+        read_resp(&mut reader),
+        Response::Ok { job_id: Some(0) }
+    ));
+    for _ in 0..3 {
+        assert!(matches!(read_resp(&mut reader), Response::Ok { job_id: None }));
+    }
+    match read_resp(&mut reader) {
+        Response::Status { pending, executable, jobs, .. } => {
+            assert_eq!(jobs, 1);
+            assert_eq!(pending, 0, "heartbeat at t=60 releases the t=50 arrival");
+            assert_eq!(executable, 1);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    writeln!(w, "{}", Request::Shutdown.to_json().to_string()).unwrap();
+    w.flush().unwrap();
+    read_resp(&mut reader);
+    handle.join().unwrap();
+}
+
+/// Replay one request script against a fresh server in `mode`, two
+/// clients alternating per request, and return every response as its
+/// wire JSON (byte-comparable across modes).
+fn run_script(mode: ServiceMode, script: &[Request]) -> Vec<String> {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(4), 21);
+    let agent = AgentServer::with_mode(cluster, Box::new(HighRankUpScheduler::new()), mode);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        agent
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+    let mut clients = [
+        ServiceClient::connect(&addr).unwrap(),
+        ServiceClient::connect(&addr).unwrap(),
+    ];
+    let mut out = Vec::new();
+    for (i, req) in script.iter().enumerate() {
+        let resp = clients[i % 2].call(req).unwrap();
+        out.push(resp.to_json().to_string());
+    }
+    clients[0].call(&Request::Shutdown).unwrap();
+    handle.join().unwrap();
+    out
+}
+
+/// Golden contract of the batched engine: an identical request stream —
+/// submissions (one future-dated), schedules, heartbeats, a failure
+/// report with recovery, status polls — produces byte-identical
+/// responses under batching vs the serial reference, including the
+/// schedule assignments, the `Recovery` counts, and every `pending`
+/// field along the way.
+#[test]
+fn batched_matches_serial_golden_responses() {
+    let script = vec![
+        Request::Status,
+        Request::SubmitJob {
+            name: "a".into(),
+            arrival: 0.0,
+            computes: vec![3.0, 2.0],
+            edges: vec![(0, 1, 4.0)],
+        },
+        Request::SubmitJob {
+            name: "b".into(),
+            arrival: 25.0,
+            computes: vec![2.0],
+            edges: vec![],
+        },
+        Request::Status,
+        Request::Schedule { time: 0.0 },
+        Request::TaskComplete { job: 0, node: 0, time: 10.0 },
+        Request::Status,
+        Request::TaskComplete { job: 0, node: 1, time: 30.0 },
+        Request::Status,
+        Request::Schedule { time: 30.0 },
+        Request::ReportFailure {
+            exec: 0,
+            time: 31.0,
+            recovery: Some(40.0),
+        },
+        Request::Status,
+        Request::Schedule { time: 31.0 },
+        Request::SubmitJob {
+            name: "c".into(),
+            arrival: 32.0,
+            computes: vec![1.0, 1.0, 1.0],
+            edges: vec![(0, 2, 1.0), (1, 2, 2.0)],
+        },
+        Request::Schedule { time: 45.0 },
+        Request::Status,
+    ];
+    let serial = run_script(ServiceMode::Serial, &script);
+    let batched = run_script(ServiceMode::Batched, &script);
+    assert_eq!(serial.len(), batched.len());
+    for (i, (s, b)) in serial.iter().zip(&batched).enumerate() {
+        assert_eq!(s, b, "response {i} diverged for {:?}", script[i]);
+    }
+    // The script exercised the interesting responses, not just acks.
+    assert!(serial.iter().any(|r| r.contains("assignments")));
+    assert!(serial.iter().any(|r| r.contains("recovery")));
+    assert!(serial.iter().any(|r| r.contains("pending")));
+}
+
+/// The acceptance-criteria probe: `status` must be served without the
+/// core lock. Holding the lock (via `with_core`) while a fresh
+/// connection issues `status` would deadlock if the read path touched
+/// it; instead it must answer — and with the freshness the snapshot
+/// contract promises (everything acknowledged before the lock was
+/// taken).
+#[test]
+fn status_answers_while_core_lock_is_held() {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(4), 19);
+    let server = Arc::new(AgentServer::new(
+        cluster,
+        Box::new(HighRankUpScheduler::new()),
+    ));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                .unwrap();
+        })
+    };
+    let addr = rx.recv().unwrap().to_string();
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    let resp = client
+        .call(&Request::SubmitJob {
+            name: "locked-out".into(),
+            arrival: 0.0,
+            computes: vec![1.0, 2.0],
+            edges: vec![(0, 1, 1.0)],
+        })
+        .unwrap();
+    assert!(matches!(resp, Response::Ok { job_id: Some(0) }));
+
+    server.with_core(|core| {
+        // Core mutex held right here. A brand-new connection's status
+        // must still be answered, and must already reflect the
+        // acknowledged submission above.
+        let mut probe = ServiceClient::connect(&addr).unwrap();
+        match probe.call(&Request::Status).unwrap() {
+            Response::Status { jobs, .. } => assert_eq!(jobs, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(core.state().jobs.len(), 1);
+    });
+
+    client.call(&Request::Shutdown).unwrap();
     handle.join().unwrap();
 }
 
