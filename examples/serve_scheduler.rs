@@ -9,7 +9,8 @@ use lachesis::cluster::Cluster;
 use lachesis::config::{ClusterConfig, WorkloadConfig};
 use lachesis::policy::RustPolicy;
 use lachesis::sched::LachesisScheduler;
-use lachesis::service::{AgentServer, Request, Response, ServiceClient};
+use lachesis::service::{AgentServer, ClientConfig, Request, Response, ServiceClient};
+use std::time::Duration;
 use lachesis::util::stats::Recorder;
 use lachesis::workload::WorkloadGenerator;
 use std::time::Instant;
@@ -39,12 +40,22 @@ fn main() -> anyhow::Result<()> {
     let addr = rx.recv()?;
     println!("agent listening on {addr}");
 
-    // Resource-manager side: stream jobs in arrival order.
-    let mut client = ServiceClient::connect(&addr.to_string())?;
+    // Resource-manager side: stream jobs in arrival order. The client
+    // carries explicit I/O deadlines and retries with request ids, so a
+    // stalled or restarted agent never double-applies a submit.
+    let mut client = ServiceClient::connect_with(
+        &addr.to_string(),
+        ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(2),
+            ..ClientConfig::default()
+        },
+    )?;
     let workload = WorkloadGenerator::new(WorkloadConfig::continuous(12), 5).generate();
     let mut latency = Recorder::new();
     let mut total_assignments = 0;
-    for job in &workload.jobs {
+    for (j, job) in workload.jobs.iter().enumerate() {
         let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
         let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
             .flat_map(|u| {
@@ -55,13 +66,19 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         let t0 = Instant::now();
-        client.call(&Request::SubmitJob {
-            name: job.name.clone(),
-            arrival: job.arrival,
-            computes,
-            edges,
-        })?;
-        let resp = client.call(&Request::Schedule { time: job.arrival })?;
+        client.call_idempotent(
+            &format!("rm-{j}-submit"),
+            &Request::SubmitJob {
+                name: job.name.clone(),
+                arrival: job.arrival,
+                computes,
+                edges,
+            },
+        )?;
+        let resp = client.call_idempotent(
+            &format!("rm-{j}-sched"),
+            &Request::Schedule { time: job.arrival },
+        )?;
         latency.push(t0.elapsed().as_secs_f64() * 1e3);
         if let Response::Assignments(a) = resp {
             println!(

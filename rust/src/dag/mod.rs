@@ -125,6 +125,82 @@ impl Job {
         Ok(job)
     }
 
+    /// Rebuild a job from serialized adjacency lists (snapshot restore).
+    ///
+    /// [`Job::try_new`] takes a flat edge list, but a `Job` does not
+    /// retain the original interleaving of that list across source
+    /// nodes — only the per-node orders of `children[u]` and
+    /// `parents[v]`, which tie-breaking consumers (e.g. DEFT's
+    /// duplicate-parent scan) iterate in. Restoring through a
+    /// reconstructed edge list could therefore reorder `parents` and
+    /// change decisions; restoring the adjacency verbatim cannot. The
+    /// two lists are cross-checked against each other and the usual
+    /// structural validation (ranges, positivity, acyclicity) reruns.
+    pub fn from_adjacency(
+        id: JobId,
+        name: impl Into<String>,
+        arrival: f64,
+        computes: Vec<f64>,
+        children: Vec<Vec<Edge>>,
+        parents: Vec<Vec<Edge>>,
+    ) -> anyhow::Result<Job> {
+        use anyhow::bail;
+        let n = computes.len();
+        if n == 0 {
+            bail!("job must have at least one task");
+        }
+        if computes.iter().any(|&w| !(w > 0.0)) {
+            bail!("task compute sizes must be positive");
+        }
+        if children.len() != n || parents.len() != n {
+            bail!("adjacency lists must have one entry per task");
+        }
+        // The child and parent views must describe the same edge
+        // multiset: collect each as (parent, child, data-bits) and
+        // compare order-insensitively.
+        let mut from_children: Vec<(NodeId, NodeId, u64)> = Vec::new();
+        for (u, es) in children.iter().enumerate() {
+            for e in es {
+                if e.other >= n || e.other == u {
+                    bail!("edge ({u},{}) invalid for {n} tasks", e.other);
+                }
+                if !(e.data >= 0.0) {
+                    bail!("negative edge data size");
+                }
+                from_children.push((u, e.other, e.data.to_bits()));
+            }
+        }
+        let mut from_parents: Vec<(NodeId, NodeId, u64)> = Vec::new();
+        for (v, es) in parents.iter().enumerate() {
+            for e in es {
+                if e.other >= n || e.other == v {
+                    bail!("edge ({},{v}) invalid for {n} tasks", e.other);
+                }
+                from_parents.push((e.other, v, e.data.to_bits()));
+            }
+        }
+        from_children.sort_unstable();
+        from_parents.sort_unstable();
+        if from_children != from_parents {
+            bail!("children and parents adjacency disagree");
+        }
+        let tasks = computes.into_iter().map(|compute| Task { compute }).collect();
+        let mut job = Job {
+            id,
+            name: name.into(),
+            arrival,
+            tasks,
+            children,
+            parents,
+            topo: Vec::new(),
+        };
+        match graph::try_topo_order(&job) {
+            Some(order) => job.topo = order,
+            None => bail!("job '{}' contains a cycle", job.name),
+        }
+        Ok(job)
+    }
+
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
     }
@@ -224,6 +300,70 @@ mod tests {
         assert!(Job::try_new(0, "r", 0.0, vec![1.0], &[(0, 1, 1.0)]).is_err());
         assert!(Job::try_new(0, "s", 0.0, vec![1.0, 1.0], &[(0, 0, 1.0)]).is_err());
         assert!(Job::try_new(0, "d", 0.0, vec![1.0, 1.0], &[(0, 1, -1.0)]).is_err());
+    }
+
+    #[test]
+    fn from_adjacency_reproduces_job() {
+        let j = diamond();
+        let j2 = Job::from_adjacency(
+            j.id,
+            j.name.clone(),
+            j.arrival,
+            j.tasks.iter().map(|t| t.compute).collect(),
+            j.children.clone(),
+            j.parents.clone(),
+        )
+        .unwrap();
+        assert_eq!(j2.topo(), j.topo());
+        for n in 0..j.n_tasks() {
+            assert_eq!(j2.children[n].len(), j.children[n].len());
+            for (a, b) in j2.parents[n].iter().zip(&j.parents[n]) {
+                assert_eq!(a.other, b.other);
+                assert_eq!(a.data.to_bits(), b.data.to_bits());
+            }
+        }
+        // Non-u-major parent orders survive verbatim (an edge-list
+        // round-trip would have reordered them).
+        let j3 = Job::new(0, "rev", 0.0, vec![1.0, 1.0, 1.0], &[(1, 2, 5.0), (0, 2, 3.0)]);
+        assert_eq!(j3.parents[2][0].other, 1);
+        let j4 = Job::from_adjacency(
+            0,
+            "rev",
+            0.0,
+            vec![1.0, 1.0, 1.0],
+            j3.children.clone(),
+            j3.parents.clone(),
+        )
+        .unwrap();
+        assert_eq!(j4.parents[2][0].other, 1);
+        assert_eq!(j4.parents[2][1].other, 0);
+    }
+
+    #[test]
+    fn from_adjacency_rejects_mismatched_views() {
+        let j = diamond();
+        let mut bad_parents = j.parents.clone();
+        bad_parents[3][0].data += 1.0;
+        assert!(Job::from_adjacency(
+            0,
+            "bad",
+            0.0,
+            j.tasks.iter().map(|t| t.compute).collect(),
+            j.children.clone(),
+            bad_parents,
+        )
+        .is_err());
+        // A cycle hidden in consistent adjacency is still rejected.
+        let mk = |o, d| Edge { other: o, data: d };
+        assert!(Job::from_adjacency(
+            0,
+            "cyc",
+            0.0,
+            vec![1.0, 1.0],
+            vec![vec![mk(1, 1.0)], vec![mk(0, 1.0)]],
+            vec![vec![mk(1, 1.0)], vec![mk(0, 1.0)]],
+        )
+        .is_err());
     }
 
     #[test]

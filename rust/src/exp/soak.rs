@@ -8,10 +8,21 @@
 //! Each master walks its own simulated clock (`t += Exp(mean_interval)`),
 //! submits the next TPC-H job at that arrival, heartbeats the previous
 //! job, and asks for a schedule — recording wall-clock submit/decision
-//! latency per request. Dedicated monitor threads hammer `status`
-//! concurrently (the read path the batched engine serves lock-free).
-//! Results land in `results/soak.md` and a `BENCH_service.json` with the
-//! same shape as the other committed bench snapshots.
+//! latency per request. Every mutating request carries a `request_id`
+//! (exercising the dedup window at full load) and goes through the
+//! retrying client, so the soak measures the production request path.
+//! Dedicated monitor threads hammer `status` concurrently (the read
+//! path the batched engine serves lock-free). A third leg repeats the
+//! batched run with a write-ahead journal attached, yielding the
+//! journaling overhead ratio CI gates on. Results land in
+//! `results/soak.md` and a `BENCH_service.json` with the same shape as
+//! the other committed bench snapshots.
+//!
+//! `lachesis soak --chaos` runs the [`chaos`] harness instead: a
+//! journaled child server process is SIGKILLed mid-stream, restarted
+//! with `--restore`, re-driven by a retrying client through torn lines
+//! and duplicate requests — and the final status must be byte-identical
+//! to an in-process run of the same stream that never crashed.
 //!
 //! [`AgentServer`]: crate::service::AgentServer
 //! [`ServiceMode`]: crate::service::ServiceMode
@@ -19,12 +30,17 @@
 use super::{build_send_scheduler, write_results, PolicySource};
 use crate::cluster::Cluster;
 use crate::config::ClusterConfig;
-use crate::service::{AgentServer, Request, Response, ServiceClient, ServiceMode};
+use crate::service::{
+    AgentCore, AgentServer, ClientConfig, Durability, Request, Response, ServiceClient,
+    ServiceMode,
+};
 use crate::util::json::Json;
 use crate::util::rng::{Rng, STREAM_SOAK};
 use crate::util::stats::Recorder;
 use crate::workload::tpch;
 use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -48,6 +64,14 @@ pub struct SoakConfig {
     pub status_every: usize,
     /// Dedicated threads polling `status` for the whole run.
     pub monitors: usize,
+    /// Directory for the journaled leg's write-ahead journal. `None`
+    /// uses (and cleans up) a per-process temp directory.
+    pub journal: Option<PathBuf>,
+    /// Snapshot cadence for the journaled leg (records between
+    /// snapshots; 0 = journal only, never snapshot).
+    pub snapshot_every: u64,
+    /// Mailbox bound for all legs (0 = unbounded).
+    pub max_queue: usize,
 }
 
 impl Default for SoakConfig {
@@ -61,6 +85,9 @@ impl Default for SoakConfig {
             seed: 7,
             status_every: 1,
             monitors: 2,
+            journal: None,
+            snapshot_every: 256,
+            max_queue: 0,
         }
     }
 }
@@ -68,6 +95,9 @@ impl Default for SoakConfig {
 /// Aggregated measurements of one soak run (one service mode).
 pub struct SoakReport {
     pub mode: ServiceMode,
+    /// Row label: the mode name, with `+journal` when a write-ahead
+    /// journal was attached.
+    pub label: String,
     /// `schedule` round-trip latency, ms.
     pub decision: Recorder,
     /// `submit_job` round-trip latency, ms.
@@ -83,6 +113,11 @@ pub struct SoakReport {
     pub batches: u64,
     pub batched_requests: u64,
     pub coalesced_heartbeats: u64,
+    /// Requests refused with `overloaded` (every one was retried to
+    /// completion by the client).
+    pub shed: u64,
+    /// Duplicate `request_id`s answered from the dedup window.
+    pub deduped: usize,
 }
 
 #[derive(Default)]
@@ -100,9 +135,12 @@ fn ms_since(t0: Instant) -> f64 {
 
 /// One master connection: stream `jobs_m` TPC-H jobs along a private
 /// simulated Poisson clock, timing every submit/schedule round trip.
+/// Mutating requests carry `m{m}-{k}-*` request ids and go through the
+/// retrying path, so a shed (`overloaded`) or dropped connection is
+/// retried without ever double-applying.
 fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
-    let mut client =
-        ServiceClient::connect(addr).with_context(|| format!("master {m} connecting"))?;
+    let mut client = ServiceClient::connect_with(addr, ClientConfig::default())
+        .with_context(|| format!("master {m} connecting"))?;
     let shapes = tpch::all_shapes();
     let mut rng = Rng::stream_n(cfg.seed, STREAM_SOAK, m as u64);
     let jobs_m = cfg.jobs / cfg.masters + usize::from(m < cfg.jobs % cfg.masters);
@@ -126,12 +164,15 @@ fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
             })
             .collect();
         let t0 = Instant::now();
-        let resp = client.call(&Request::SubmitJob {
-            name: job.name.clone(),
-            arrival: job.arrival,
-            computes,
-            edges,
-        })?;
+        let resp = client.call_idempotent(
+            &format!("m{m}-{k}-submit"),
+            &Request::SubmitJob {
+                name: job.name.clone(),
+                arrival: job.arrival,
+                computes,
+                edges,
+            },
+        )?;
         stats.submit.push(ms_since(t0));
         let job_id = match resp {
             Response::Ok { job_id: Some(id) } => id,
@@ -140,15 +181,19 @@ fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
         // Heartbeat the previous job: advances the agent's wall clock the
         // way a live resource manager's completion reports would.
         if let Some(prev) = prev_job {
-            client.call(&Request::TaskComplete {
-                job: prev,
-                node: 0,
-                time: sim_t,
-            })?;
+            client.call_idempotent(
+                &format!("m{m}-{k}-hb"),
+                &Request::TaskComplete {
+                    job: prev,
+                    node: 0,
+                    time: sim_t,
+                },
+            )?;
         }
         prev_job = Some(job_id);
         let t0 = Instant::now();
-        let resp = client.call(&Request::Schedule { time: sim_t })?;
+        let resp =
+            client.call_idempotent(&format!("m{m}-{k}-sched"), &Request::Schedule { time: sim_t })?;
         stats.decision.push(ms_since(t0));
         match resp {
             Response::Assignments(a) => stats.assignments += a.len(),
@@ -175,7 +220,20 @@ pub fn run_soak_mode(
     }
     let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(cfg.executors), cfg.seed);
     let scheduler = build_send_scheduler(&cfg.algo, src, cfg.seed)?;
-    let server = Arc::new(AgentServer::with_mode(cluster, scheduler, mode));
+    let mut server = AgentServer::with_mode(cluster, scheduler, mode);
+    if cfg.max_queue > 0 {
+        // Shed + retrying clients: the overload path the service runs in
+        // production, so its cost shows up in the measured latencies.
+        server = server.with_admission(cfg.max_queue, crate::service::AdmissionPolicy::Shed);
+    }
+    if let Some(dir) = &cfg.journal {
+        server = server.with_durability(Durability {
+            dir: dir.clone(),
+            snapshot_every: cfg.snapshot_every,
+            restore: false,
+        })?;
+    }
+    let server = Arc::new(server);
     let (tx, rx) = std::sync::mpsc::channel();
     let srv = {
         let server = Arc::clone(&server);
@@ -238,13 +296,24 @@ pub fn run_soak_mode(
     });
 
     // Stop the server before surfacing any master error, so a failed run
-    // never leaks a bound listener thread.
+    // never leaks a bound listener thread. The final status carries the
+    // run's operational counters (shed, deduped).
     let mut client = ServiceClient::connect(&addr).context("connecting for shutdown")?;
+    let (shed, deduped) = match client.call(&Request::Status)? {
+        Response::Status { shed, deduped, .. } => (shed as u64, deduped),
+        other => bail!("unexpected final status response {other:?}"),
+    };
     client.call(&Request::Shutdown)?;
     srv.join().map_err(|_| anyhow!("server thread panicked"))??;
 
+    let label = if cfg.journal.is_some() {
+        format!("{}+journal", mode.name())
+    } else {
+        mode.name().to_string()
+    };
     let mut report = SoakReport {
         mode,
+        label,
         decision: Recorder::new(),
         submit: Recorder::new(),
         status,
@@ -255,6 +324,8 @@ pub fn run_soak_mode(
         batches: 0,
         batched_requests: 0,
         coalesced_heartbeats: 0,
+        shed,
+        deduped,
     };
     for r in master_results {
         let stats = r.map_err(|_| anyhow!("master thread panicked"))??;
@@ -270,12 +341,14 @@ pub fn run_soak_mode(
     report.batched_requests = batched_requests;
     report.coalesced_heartbeats = coalesced;
     crate::log_info!(
-        "soak [{}]: {} jobs in {:.2}s ({:.1} jobs/s), {} assignments",
-        mode.name(),
+        "soak [{}]: {} jobs in {:.2}s ({:.1} jobs/s), {} assignments, {} shed, {} deduped",
+        report.label,
         report.jobs,
         wall_secs,
         report.jobs_per_sec,
-        report.assignments
+        report.assignments,
+        report.shed,
+        report.deduped
     );
     Ok(report)
 }
@@ -306,49 +379,68 @@ fn bench_case(name: &str, rec: &Recorder) -> Json {
     ])
 }
 
-/// Run the full serial-vs-batched soak comparison, write
-/// `results/soak.md` + the bench JSON at `out_json`, and return the
-/// rendered markdown.
+/// Run the full soak comparison — serial, batched, and batched with a
+/// write-ahead journal attached — write `results/soak.md` + the bench
+/// JSON at `out_json`, and return the rendered markdown. The journaled
+/// leg yields `journal_overhead_ratio` (journal-off / journal-on
+/// jobs/sec), which CI gates at ≤ 1.10.
 pub fn soak(cfg: &SoakConfig, src: &PolicySource, out_json: &str) -> Result<String> {
     let serial = run_soak_mode(cfg, src, ServiceMode::Serial)?;
     let batched = run_soak_mode(cfg, src, ServiceMode::Batched)?;
+    let jdir = cfg.journal.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("lachesis-soak-journal-{}", std::process::id()))
+    });
+    let _ = std::fs::remove_dir_all(&jdir);
+    let mut jcfg = cfg.clone();
+    jcfg.journal = Some(jdir.clone());
+    let journaled = run_soak_mode(&jcfg, src, ServiceMode::Batched)?;
+    if cfg.journal.is_none() {
+        let _ = std::fs::remove_dir_all(&jdir);
+    }
 
-    let mut out = String::from("## Service soak: serial vs batched engine\n\n");
+    let mut out = String::from("## Service soak: serial vs batched vs journaled engine\n\n");
     out.push_str(&format!(
         "{} masters x {} jobs total, mean inter-arrival {}s, {} executors, \
-         algo {}, seed {}, {} status monitors\n\n",
+         algo {}, seed {}, {} status monitors, max queue {}\n\n",
         cfg.masters,
         cfg.jobs,
         cfg.mean_interval,
         cfg.executors,
         cfg.algo,
         cfg.seed,
-        cfg.monitors
+        cfg.monitors,
+        cfg.max_queue
     ));
     out.push_str("| metric | samples | mean ms | p50 | p95 | p99 |\n|---|---|---|---|---|---|\n");
-    for rep in [&serial, &batched] {
-        let m = rep.mode.name();
+    for rep in [&serial, &batched, &journaled] {
+        let m = &rep.label;
         out.push_str(&latency_row(&format!("decision/{m}"), &rep.decision));
         out.push_str(&latency_row(&format!("submit/{m}"), &rep.submit));
         out.push_str(&latency_row(&format!("status/{m}"), &rep.status));
     }
+    let journal_overhead = batched.jobs_per_sec / journaled.jobs_per_sec.max(1e-9);
     out.push_str(&format!(
-        "\njobs/sec: serial {:.1}, batched {:.1} ({:.2}x); \
-         batched engine formed {} batches over {} requests \
-         (avg {:.2}/batch), coalesced {} heartbeats\n",
+        "\njobs/sec: serial {:.1}, batched {:.1} ({:.2}x), batched+journal {:.1} \
+         (journal overhead {:.3}x); batched engine formed {} batches over {} requests \
+         (avg {:.2}/batch), coalesced {} heartbeats; shed {} requests, \
+         suppressed {} duplicates\n",
         serial.jobs_per_sec,
         batched.jobs_per_sec,
         batched.jobs_per_sec / serial.jobs_per_sec.max(1e-9),
+        journaled.jobs_per_sec,
+        journal_overhead,
         batched.batches,
         batched.batched_requests,
         batched.batched_requests as f64 / batched.batches.max(1) as f64,
-        batched.coalesced_heartbeats
+        batched.coalesced_heartbeats,
+        serial.shed + batched.shed + journaled.shed,
+        serial.deduped + batched.deduped + journaled.deduped
     ));
     write_results("soak.md", &out)?;
 
     let mut cases = Vec::new();
-    for rep in [&serial, &batched] {
-        let m = rep.mode.name();
+    for rep in [&serial, &batched, &journaled] {
+        let m = &rep.label;
         cases.push(bench_case(&format!("decision/{m}"), &rep.decision));
         cases.push(bench_case(&format!("submit/{m}"), &rep.submit));
         cases.push(bench_case(&format!("status/{m}"), &rep.status));
@@ -396,6 +488,374 @@ pub fn soak(cfg: &SoakConfig, src: &PolicySource, out_json: &str) -> Result<Stri
                     "coalesced_heartbeats",
                     Json::from(batched.coalesced_heartbeats as f64),
                 ),
+                ("jobs_per_sec_journal", Json::from(journaled.jobs_per_sec)),
+                ("journal_overhead_ratio", Json::from(journal_overhead)),
+                (
+                    "shed_total",
+                    Json::from((serial.shed + batched.shed + journaled.shed) as f64),
+                ),
+                (
+                    "deduped_total",
+                    Json::from(serial.deduped + batched.deduped + journaled.deduped),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write(out_json, format!("{}\n", json.to_string()))
+        .with_context(|| format!("writing {out_json}"))?;
+    crate::log_info!("wrote {out_json}");
+    Ok(out)
+}
+
+// ------------------------------------------------------------------ chaos
+
+/// Profile for the kill-and-restore chaos drill (`lachesis soak --chaos`).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Jobs in the deterministic driver stream (each contributes a
+    /// submit, a heartbeat for its predecessor, and a schedule request).
+    pub jobs: usize,
+    /// SIGKILL the server after this many acknowledged requests; must
+    /// fall strictly mid-stream.
+    pub kill_after: usize,
+    pub executors: usize,
+    pub algo: String,
+    pub seed: u64,
+    /// Journal directory for the child servers (wiped at the start).
+    pub dir: PathBuf,
+    pub snapshot_every: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            jobs: 40,
+            kill_after: 60,
+            executors: 12,
+            algo: "HighRankUp-DEFT".to_string(),
+            seed: 7,
+            dir: std::env::temp_dir().join(format!("lachesis-chaos-{}", std::process::id())),
+            snapshot_every: 16,
+        }
+    }
+}
+
+/// The single deterministic request stream both the chaos run and the
+/// uninterrupted reference replay. One driver, fixed ids — concurrent
+/// masters would interleave nondeterministically and make the
+/// byte-identical final-status comparison meaningless.
+fn chaos_stream(cfg: &ChaosConfig) -> Vec<(String, Request)> {
+    let shapes = tpch::all_shapes();
+    let mut rng = Rng::stream_n(cfg.seed, STREAM_SOAK, 0);
+    let mut reqs = Vec::new();
+    let mut sim_t = 0.0;
+    for k in 0..cfg.jobs {
+        sim_t += rng.exponential(1.0);
+        let shape = &shapes[k % shapes.len()];
+        let size = [10.0, 50.0, 100.0][rng.below(3)];
+        let job = shape.instantiate(0, size, sim_t);
+        let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
+        let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
+            .flat_map(|u| {
+                job.children[u]
+                    .iter()
+                    .map(move |e| (u, e.other, e.data))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        reqs.push((
+            format!("c{k}-submit"),
+            Request::SubmitJob {
+                name: job.name.clone(),
+                arrival: job.arrival,
+                computes,
+                edges,
+            },
+        ));
+        if k > 0 {
+            // Job ids are assigned densely in submit order by the server,
+            // so the predecessor's id is statically k-1.
+            reqs.push((
+                format!("c{k}-hb"),
+                Request::TaskComplete {
+                    job: k - 1,
+                    node: 0,
+                    time: sim_t,
+                },
+            ));
+        }
+        reqs.push((format!("c{k}-sched"), Request::Schedule { time: sim_t }));
+    }
+    reqs
+}
+
+/// Start a `lachesis serve` child on an ephemeral port with the chaos
+/// journal attached, and parse the bound address off its stdout.
+fn spawn_server(
+    cfg: &ChaosConfig,
+    src: &PolicySource,
+    restore: bool,
+) -> Result<(std::process::Child, String)> {
+    let exe = std::env::current_exe().context("locating the lachesis binary")?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("serve")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--algo")
+        .arg(&cfg.algo)
+        .arg("--executors")
+        .arg(cfg.executors.to_string())
+        .arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("--artifacts")
+        .arg(&src.artifact_dir)
+        .arg("--backend")
+        .arg(&src.backend)
+        .arg("--journal")
+        .arg(&cfg.dir)
+        .arg("--snapshot-every")
+        .arg(cfg.snapshot_every.to_string());
+    if let Some(p) = &src.lachesis_params {
+        cmd.arg("--lachesis-params").arg(p);
+    }
+    if let Some(p) = &src.decima_params {
+        cmd.arg("--decima-params").arg(p);
+    }
+    if restore {
+        cmd.arg("--restore");
+    }
+    cmd.stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null());
+    let mut child = cmd.spawn().context("spawning `lachesis serve`")?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading server stdout")?;
+        if n == 0 {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("server child exited before reporting its bound address");
+        }
+        if let Some(addr) = line.trim().strip_prefix("bound ") {
+            let addr = addr.to_string();
+            // Keep draining stdout so the child never blocks on a full pipe.
+            std::thread::spawn(move || {
+                let mut sink = String::new();
+                while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                    sink.clear();
+                }
+            });
+            return Ok((child, addr));
+        }
+    }
+}
+
+/// Hostile-client interference: a request torn mid-line, invalid UTF-8,
+/// a garbage JSON line (must be answered with an error, not kill the
+/// server), and a silent stalled connection. None of these mutate state.
+fn interfere(addr: &str) -> Result<()> {
+    use std::net::TcpStream;
+    {
+        let mut s = TcpStream::connect(addr).context("torn-line connect")?;
+        s.write_all(b"{\"type\":\"submit_job\",\"name\":\"torn")?;
+        // Dropped without the newline: the server sees EOF mid-line.
+    }
+    {
+        let mut s = TcpStream::connect(addr).context("bad-utf8 connect")?;
+        s.write_all(b"\xff\xfe\x01garbage\n")?;
+    }
+    {
+        let s = TcpStream::connect(addr).context("garbage-line connect")?;
+        let mut w = s.try_clone()?;
+        w.write_all(b"this is not json\n")?;
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line)?;
+        if !line.contains("\"error\"") {
+            bail!("garbage line answered with {line:?}, expected an error response");
+        }
+    }
+    {
+        let _s = TcpStream::connect(addr).context("stall connect")?;
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    Ok(())
+}
+
+/// The same stream into an in-process core that never crashes and never
+/// journals — the oracle the restored run must match byte-for-byte.
+fn run_reference(
+    cfg: &ChaosConfig,
+    src: &PolicySource,
+    stream: &[(String, Request)],
+) -> Result<Response> {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(cfg.executors), cfg.seed);
+    let scheduler = build_send_scheduler(&cfg.algo, src, cfg.seed)?;
+    let mut core = AgentCore::new(cluster, scheduler);
+    for (id, req) in stream {
+        core.handle_tagged(Some(id.as_str()), req.clone());
+    }
+    Ok(core.status_snapshot().to_response())
+}
+
+/// Render only the schedule-state fields of a `status` response. The
+/// operational counters (queue depth, shed, deduped) legitimately differ
+/// between a crashed-and-restored run and the uninterrupted reference;
+/// everything the scheduler's decisions depend on must be identical,
+/// with the float horizon compared by bit pattern.
+fn schedule_state_key(resp: &Response) -> Result<String> {
+    match resp {
+        Response::Status {
+            jobs,
+            assigned,
+            executors,
+            horizon,
+            executable,
+            pending,
+            down,
+            ..
+        } => Ok(format!(
+            "jobs={jobs} assigned={assigned} executors={executors} \
+             horizon_bits={:016x} executable={executable} pending={pending} down={down}",
+            horizon.to_bits()
+        )),
+        other => bail!("expected a status response, got {other:?}"),
+    }
+}
+
+/// Kill-and-restore chaos drill: drive a journaled child server with a
+/// retrying client, SIGKILL it mid-stream, restart it with `--restore`,
+/// re-send the last acknowledged request (must be deduplicated
+/// byte-identically), run interference connections, finish the stream —
+/// and require the final status to match an uninterrupted in-process
+/// reference byte-for-byte. Writes a `## Chaos soak` section into
+/// `results/soak.md` and a `service_chaos` bench JSON at `out_json`.
+pub fn chaos(cfg: &ChaosConfig, src: &PolicySource, out_json: &str) -> Result<String> {
+    let stream = chaos_stream(cfg);
+    let n_requests = stream.len();
+    if cfg.kill_after == 0 || cfg.kill_after >= n_requests {
+        bail!(
+            "--kill-after must fall mid-stream (1..{n_requests} for {} jobs)",
+            cfg.jobs
+        );
+    }
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+    let ccfg = ClientConfig {
+        read_timeout: Duration::from_secs(10),
+        retries: 8,
+        backoff: Duration::from_millis(100),
+        ..ClientConfig::default()
+    };
+
+    // Phase 1: journaled server, drive the stream up to the kill point.
+    let (mut child, addr) = spawn_server(cfg, src, false)?;
+    let mut client = ServiceClient::connect_with(&addr, ccfg.clone())?;
+    let mut acks: Vec<String> = Vec::with_capacity(n_requests);
+    for (id, req) in &stream[..cfg.kill_after] {
+        acks.push(client.call_idempotent(id, req)?.to_json().to_string());
+    }
+
+    // SIGKILL: no flush, no goodbye — exactly the crash the journal's
+    // fsync-before-ack contract covers.
+    child.kill().context("killing the server child")?;
+    child.wait().context("reaping the killed child")?;
+    let t_down = Instant::now();
+
+    // Phase 2: restart from disk; recovery time covers exec + snapshot
+    // load + journal replay + the first successfully answered status.
+    let (mut child, addr) = spawn_server(cfg, src, true)?;
+    let mut client = ServiceClient::connect_with(&addr, ccfg)?;
+    client.call(&Request::Status).context("first post-restore status")?;
+    let recovery_ms = t_down.elapsed().as_secs_f64() * 1e3;
+
+    interfere(&addr)?;
+
+    // A client that never saw the last pre-crash ack retries it: the
+    // restored dedup window must answer byte-identically, not re-apply.
+    let (dup_id, dup_req) = &stream[cfg.kill_after - 1];
+    let dup = client.call_idempotent(dup_id, dup_req)?.to_json().to_string();
+    if dup != acks[cfg.kill_after - 1] {
+        bail!(
+            "duplicate of '{dup_id}' not served from the restored dedup window:\n  \
+             pre-crash    {}\n  post-restore {dup}",
+            acks[cfg.kill_after - 1]
+        );
+    }
+
+    // Finish the stream on the restored server.
+    for (id, req) in &stream[cfg.kill_after..] {
+        acks.push(client.call_idempotent(id, req)?.to_json().to_string());
+    }
+    let final_status = client.call(&Request::Status)?;
+    let (shed, deduped) = match &final_status {
+        Response::Status { shed, deduped, .. } => (*shed, *deduped),
+        other => bail!("unexpected final status {other:?}"),
+    };
+    if deduped == 0 {
+        bail!("the deliberate duplicate was not counted by the dedup window");
+    }
+    client.call(&Request::Shutdown)?;
+    child.wait().context("reaping the restored child")?;
+
+    let reference = run_reference(cfg, src, &stream)?;
+    let got = schedule_state_key(&final_status)?;
+    let want = schedule_state_key(&reference)?;
+    if got != want {
+        bail!(
+            "restored run diverged from the uninterrupted reference:\n  \
+             restored  {got}\n  reference {want}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+
+    let mut out = String::from("## Chaos soak: SIGKILL + restore\n\n");
+    out.push_str(&format!(
+        "{} jobs ({n_requests} requests), killed after {} acked requests, \
+         {} executors, algo {}, seed {}, snapshot every {} records\n\n",
+        cfg.jobs, cfg.kill_after, cfg.executors, cfg.algo, cfg.seed, cfg.snapshot_every
+    ));
+    out.push_str(&format!(
+        "- recovery (restart + restore + first status): {recovery_ms:.1} ms\n\
+         - duplicates suppressed by the restored dedup window: {deduped}\n\
+         - requests shed: {shed}\n\
+         - final status byte-identical to the never-crashed reference\n"
+    ));
+
+    // Append after (or replace) any previous chaos section so `soak` and
+    // `soak --chaos` can share results/soak.md in either order.
+    let path = std::path::Path::new("results").join("soak.md");
+    let mut doc = std::fs::read_to_string(&path).unwrap_or_default();
+    if let Some(i) = doc.find("## Chaos soak") {
+        doc.truncate(i);
+    }
+    if !doc.is_empty() && !doc.ends_with("\n\n") {
+        doc.push('\n');
+    }
+    doc.push_str(&out);
+    write_results("soak.md", &doc)?;
+
+    let json = Json::from_pairs(vec![
+        ("bench", Json::from("service_chaos")),
+        (
+            "config",
+            Json::from_pairs(vec![
+                ("jobs", Json::from(cfg.jobs)),
+                ("requests", Json::from(n_requests)),
+                ("kill_after", Json::from(cfg.kill_after)),
+                ("executors", Json::from(cfg.executors)),
+                ("algo", Json::from(cfg.algo.clone())),
+                ("seed", Json::from(cfg.seed as usize)),
+                ("snapshot_every", Json::from(cfg.snapshot_every)),
+            ]),
+        ),
+        (
+            "notes",
+            Json::from_pairs(vec![
+                ("recovery_ms", Json::from(recovery_ms)),
+                ("duplicates_suppressed", Json::from(deduped)),
+                ("requests_shed", Json::from(shed)),
+                ("status_byte_identical", Json::from(true)),
             ]),
         ),
     ]);
@@ -422,6 +882,7 @@ mod tests {
             seed: 11,
             status_every: 1,
             monitors: 1,
+            ..SoakConfig::default()
         };
         let src = PolicySource {
             backend: "rust".to_string(),
@@ -435,9 +896,11 @@ mod tests {
         let md = soak(&cfg, &src, &out_path).unwrap();
         assert!(md.contains("decision/serial"));
         assert!(md.contains("decision/batched"));
+        assert!(md.contains("decision/batched+journal"));
         let raw = std::fs::read_to_string(&out_path).unwrap();
         assert!(raw.contains("jobs_per_sec_serial"));
         assert!(raw.contains("jobs_per_sec_batched"));
+        assert!(raw.contains("journal_overhead_ratio"));
         std::fs::remove_file(&out_path).ok();
     }
 
@@ -454,6 +917,7 @@ mod tests {
             seed: 5,
             status_every: 2,
             monitors: 0,
+            ..SoakConfig::default()
         };
         let src = PolicySource {
             backend: "rust".to_string(),
@@ -466,5 +930,43 @@ mod tests {
         assert!(rep.assignments > 0);
         assert!(rep.batches > 0);
         assert!(rep.jobs_per_sec > 0.0);
+        assert_eq!(rep.label, "batched");
+        assert_eq!(rep.deduped, 0, "unique ids must never count as duplicates");
+    }
+
+    /// The journaled leg lands every job through the write-ahead journal,
+    /// and a tight mailbox bound with retrying clients loses nothing.
+    #[test]
+    fn soak_mode_journals_and_bounds_queue() {
+        let dir = std::env::temp_dir().join(format!(
+            "lachesis-soak-journal-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SoakConfig {
+            masters: 2,
+            jobs: 6,
+            mean_interval: 1.0,
+            executors: 4,
+            algo: "FIFO-DEFT".to_string(),
+            seed: 9,
+            status_every: 0,
+            monitors: 0,
+            journal: Some(dir.clone()),
+            snapshot_every: 4,
+            max_queue: 1,
+        };
+        let src = PolicySource {
+            backend: "rust".to_string(),
+            ..PolicySource::default()
+        };
+        let rep = run_soak_mode(&cfg, &src, ServiceMode::Batched).unwrap();
+        assert_eq!(rep.jobs, 6, "shed requests must be retried to completion");
+        assert_eq!(rep.label, "batched+journal");
+        assert!(
+            dir.join(crate::service::journal::JOURNAL_FILE).exists(),
+            "journaled leg must leave a journal on disk"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -27,11 +27,26 @@ USAGE:
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
                      [--mode serial|batched]   (batched: mailbox core loop
                       + lock-free status snapshots — the default)
+                     [--journal DIR] [--restore] [--snapshot-every N]
+                     (write-ahead journal + periodic snapshots; --restore
+                      rebuilds the core from disk before serving)
+                     [--max-queue N] [--admission shed|block]
+                     (bounded mailbox: refuse with `overloaded` or block)
   lachesis soak      [--masters N] [--jobs J] [--mean-interval S]
                      [--executors M] [--algo NAME] [--seed S]
-                     [--status-every K] [--monitors N]
+                     [--status-every K] [--monitors N] [--max-queue N]
+                     [--journal DIR] [--snapshot-every N]
                      [--out BENCH_service.json]
-                     (sustained Poisson load over TCP, serial vs batched)
+                     (sustained Poisson load over TCP: serial vs batched
+                      vs batched+journal, with the journaling overhead
+                      ratio CI gates on)
+  lachesis soak --chaos
+                     [--jobs J] [--kill-after R] [--executors M]
+                     [--algo NAME] [--seed S] [--journal DIR]
+                     [--snapshot-every N] [--out BENCH_chaos.json]
+                     (SIGKILL a journaled server child mid-stream,
+                      restore it, and require the final status to match
+                      an uninterrupted reference byte-for-byte)
   lachesis repro     fig4|fig5|fig6|fig7|all [--quick] [--seeds K]
                      [--threads N|auto] [--backend pjrt|rust]
   lachesis ablate    [--seeds K] [--threads N|auto]
@@ -262,18 +277,34 @@ fn cmd_faults(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use lachesis::service::{AgentServer, ServiceMode};
+    use lachesis::service::{AdmissionPolicy, AgentServer, Durability, ServiceMode};
     let addr = args.opt_or("addr", "127.0.0.1:7654");
     let algo = args.opt_or("algo", "HighRankUp-DEFT");
     let executors = args.usize_opt("executors", 50)?;
     let seed = args.u64_opt("seed", 1)?;
     let mode = ServiceMode::parse(args.opt_or("mode", "batched"))?;
+    let max_queue = args.usize_opt("max-queue", 0)?;
+    let admission = AdmissionPolicy::parse(args.opt_or("admission", "shed"))?;
     let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
     let src = policy_source(args);
     let sched = exp::build_send_scheduler(algo, &src, seed)?;
-    let agent = AgentServer::with_mode(cluster, sched, mode);
+    let mut agent = AgentServer::with_mode(cluster, sched, mode);
+    if max_queue > 0 {
+        agent = agent.with_admission(max_queue, admission);
+    }
+    let mut durable = "";
+    if let Some(dir) = args.opt("journal") {
+        agent = agent.with_durability(Durability {
+            dir: std::path::PathBuf::from(dir),
+            snapshot_every: args.u64_opt("snapshot-every", 256)?,
+            restore: args.flag("restore"),
+        })?;
+        durable = ", journaled";
+    } else if args.flag("restore") {
+        bail!("--restore needs --journal DIR to restore from");
+    }
     println!(
-        "lachesis agent ({algo}, {} engine) listening on {addr} — ctrl-c to stop",
+        "lachesis agent ({algo}, {} engine{durable}) listening on {addr} — ctrl-c to stop",
         mode.name()
     );
     agent.serve(addr, |bound| println!("bound {bound}"))?;
@@ -281,9 +312,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// Sustained-load soak: open-loop Poisson arrivals over N concurrent
-/// master connections, run once per service engine (serial, batched) and
-/// reported side by side (`results/soak.md` + a bench JSON).
+/// master connections, run once per service engine (serial, batched,
+/// batched+journal) and reported side by side (`results/soak.md` + a
+/// bench JSON). `--chaos` runs the kill-and-restore drill instead.
 fn cmd_soak(args: &Args) -> Result<()> {
+    let src = policy_source(args);
+    if args.flag("chaos") {
+        let mut cfg = lachesis::exp::soak::ChaosConfig::default();
+        cfg.jobs = args.usize_opt("jobs", cfg.jobs)?;
+        cfg.kill_after = args.usize_opt("kill-after", cfg.kill_after)?;
+        cfg.executors = args.usize_opt("executors", cfg.executors)?;
+        if let Some(algo) = args.opt("algo") {
+            cfg.algo = algo.to_string();
+        }
+        cfg.seed = args.u64_opt("seed", cfg.seed)?;
+        if let Some(dir) = args.opt("journal") {
+            cfg.dir = std::path::PathBuf::from(dir);
+        }
+        cfg.snapshot_every = args.u64_opt("snapshot-every", cfg.snapshot_every)?;
+        let out = args.opt_or("out", "BENCH_chaos.json");
+        let report = lachesis::exp::soak::chaos(&cfg, &src, out)?;
+        println!("{report}");
+        return Ok(());
+    }
     let mut cfg = lachesis::exp::soak::SoakConfig::default();
     cfg.masters = args.usize_opt("masters", cfg.masters)?;
     cfg.jobs = args.usize_opt("jobs", cfg.jobs)?;
@@ -295,11 +346,13 @@ fn cmd_soak(args: &Args) -> Result<()> {
     cfg.seed = args.u64_opt("seed", cfg.seed)?;
     cfg.status_every = args.usize_opt("status-every", cfg.status_every)?;
     cfg.monitors = args.usize_opt("monitors", cfg.monitors)?;
+    cfg.max_queue = args.usize_opt("max-queue", cfg.max_queue)?;
+    cfg.journal = args.opt("journal").map(std::path::PathBuf::from);
+    cfg.snapshot_every = args.u64_opt("snapshot-every", cfg.snapshot_every)?;
     if !cfg.mean_interval.is_finite() || cfg.mean_interval <= 0.0 {
         bail!("--mean-interval must be finite and positive");
     }
     let out = args.opt_or("out", "BENCH_service.json");
-    let src = policy_source(args);
     let report = lachesis::exp::soak::soak(&cfg, &src, out)?;
     println!("{report}");
     Ok(())

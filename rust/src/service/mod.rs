@@ -19,10 +19,25 @@
 //! activate only when the wall clock reaches them — matching the
 //! simulator's event-driven arrival semantics.
 //!
+//! The service also survives its own crashes: with a `--journal`
+//! directory every mutating request is appended to a write-ahead
+//! [`journal`] before it is applied, periodic [`snapshot`]s checkpoint
+//! the whole core, and `--restore` rebuilds the core bit-identically
+//! from the latest snapshot plus the journal suffix. Clients tag
+//! requests with a `request_id`; a bounded dedup window makes retries
+//! exactly-once, and a bounded mailbox (`--max-queue`) sheds or blocks
+//! new work under overload instead of growing without bound.
+//!
 //! [`SimState`]: crate::sim::SimState
 
+pub mod journal;
 pub mod protocol;
 pub mod server;
+pub mod snapshot;
 
+pub use journal::{Journal, JournalRecord};
 pub use protocol::{Assignment, Request, Response};
-pub use server::{AgentCore, AgentServer, ServiceClient, ServiceMode, StatusSnapshot};
+pub use server::{
+    AdmissionPolicy, AgentCore, AgentServer, ClientConfig, Durability, ServiceClient,
+    ServiceMode, StatusSnapshot,
+};

@@ -33,6 +33,17 @@
 //! `status` is answered from a lock-free snapshot refreshed after every
 //! batch — at most one batch stale, never torn, and always at least as
 //! fresh as the last response the same connection has already received.
+//!
+//! Idempotency: any request object may carry an optional top-level
+//! `"request_id"` string. The server remembers the response produced
+//! for each mutating request id in a bounded window, so a client that
+//! times out and retries the same line never double-applies it — the
+//! retry is answered with the remembered response. Ids on
+//! non-mutating requests (`status`, `shutdown`) are accepted and
+//! ignored: those are safe to repeat. When the server's mailbox is
+//! full and the admission policy is `shed`, mutating requests are
+//! answered with `{"type":"overloaded","queue":N}` without being
+//! applied — the client should back off and retry.
 
 use crate::dag::Job;
 use crate::sim::Allocation;
@@ -97,6 +108,15 @@ pub enum Response {
         pending: usize,
         /// Executors currently down (crashed, not yet recovered).
         down: usize,
+        /// Mailbox depth when this snapshot was published (batched
+        /// engine; 0 in serial mode). Clients use it to back off
+        /// before the admission policy starts shedding.
+        queue: usize,
+        /// Mutating requests rejected with `Overloaded` so far.
+        shed: usize,
+        /// Retried requests suppressed by the `request_id` dedup
+        /// window so far (each was applied exactly once).
+        deduped: usize,
     },
     /// Rollback counts answering a `report_failure`.
     Recovery {
@@ -106,6 +126,12 @@ pub enum Response {
         requeued: usize,
         /// Tasks saved by promoting a surviving duplicate copy.
         survived: usize,
+    },
+    /// The mailbox is full and the admission policy is `shed`: the
+    /// request was *not* applied. `queue` is the depth observed at
+    /// rejection time — a hint for client backoff.
+    Overloaded {
+        queue: usize,
     },
     Error(String),
 }
@@ -291,6 +317,9 @@ impl Response {
                 executable,
                 pending,
                 down,
+                queue,
+                shed,
+                deduped,
             } => Json::from_pairs(vec![
                 ("type", Json::from("status")),
                 ("jobs", Json::from(*jobs)),
@@ -300,6 +329,9 @@ impl Response {
                 ("executable", Json::from(*executable)),
                 ("pending", Json::from(*pending)),
                 ("down", Json::from(*down)),
+                ("queue", Json::from(*queue)),
+                ("shed", Json::from(*shed)),
+                ("deduped", Json::from(*deduped)),
             ]),
             Response::Recovery {
                 cancelled,
@@ -310,6 +342,10 @@ impl Response {
                 ("cancelled", Json::from(*cancelled)),
                 ("requeued", Json::from(*requeued)),
                 ("survived", Json::from(*survived)),
+            ]),
+            Response::Overloaded { queue } => Json::from_pairs(vec![
+                ("type", Json::from("overloaded")),
+                ("queue", Json::from(*queue)),
             ]),
             Response::Error(msg) => Json::from_pairs(vec![
                 ("type", Json::from("error")),
@@ -354,6 +390,14 @@ impl Response {
                 pending: v.get("pending").and_then(Json::as_usize).unwrap_or(0),
                 // Absent in pre-fault peers: default 0 (all executors up).
                 down: v.get("down").and_then(Json::as_usize).unwrap_or(0),
+                // Absent in pre-admission-control peers: default 0.
+                queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
+                shed: v.get("shed").and_then(Json::as_usize).unwrap_or(0),
+                deduped: v.get("deduped").and_then(Json::as_usize).unwrap_or(0),
+            }),
+            "overloaded" => Ok(Response::Overloaded {
+                // Absent from a terse peer: depth hint defaults to 0.
+                queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
             }),
             "recovery" => Ok(Response::Recovery {
                 cancelled: v.req_usize("cancelled").map_err(|e| anyhow!("{e}"))?,
@@ -366,6 +410,25 @@ impl Response {
             other => bail!("unknown response type '{other}'"),
         }
     }
+}
+
+/// Extract the optional client-assigned `request_id` from a parsed
+/// request object. Absent (or explicit null) means untagged; a present
+/// non-string value is a malformed request — silently ignoring it
+/// would defeat the idempotency the client asked for.
+pub fn request_id(v: &Json) -> Result<Option<String>> {
+    match v.get("request_id") {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => bail!("request_id must be a string"),
+    }
+}
+
+/// Encode a request tagged with a client-assigned id.
+pub fn with_request_id(req: &Request, id: &str) -> Json {
+    let mut j = req.to_json();
+    j.set("request_id", Json::from(id));
+    j
 }
 
 /// Translate an applied allocation into a wire assignment.
@@ -455,12 +518,16 @@ mod tests {
                 executable: 3,
                 pending: 1,
                 down: 2,
+                queue: 7,
+                shed: 4,
+                deduped: 9,
             },
             Response::Recovery {
                 cancelled: 4,
                 requeued: 2,
                 survived: 1,
             },
+            Response::Overloaded { queue: 640 },
             Response::Error("boom".into()),
         ];
         for r in resps {
@@ -486,6 +553,41 @@ mod tests {
         let v = Json::parse(r#"{"type": "nope"}"#).unwrap();
         assert!(Request::from_json(&v).is_err());
         assert!(Response::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn request_id_parses_and_tags() {
+        let plain = Json::parse(r#"{"type":"status"}"#).unwrap();
+        assert_eq!(request_id(&plain).unwrap(), None);
+        let null = Json::parse(r#"{"type":"status","request_id":null}"#).unwrap();
+        assert_eq!(request_id(&null).unwrap(), None);
+        let tagged = with_request_id(&Request::Schedule { time: 4.0 }, "m1-17");
+        assert_eq!(request_id(&tagged).unwrap().as_deref(), Some("m1-17"));
+        // The tag must not disturb the request body itself.
+        let back = Request::from_json(&tagged).unwrap();
+        assert!(matches!(back, Request::Schedule { time } if time == 4.0));
+        // Non-string ids are malformed, not silently untagged.
+        let bad = Json::parse(r#"{"type":"status","request_id":7}"#).unwrap();
+        assert!(request_id(&bad).is_err());
+    }
+
+    #[test]
+    fn status_compat_defaults_admission_fields_to_zero() {
+        let old = Json::parse(
+            r#"{"type":"status","jobs":1,"assigned":2,"executors":3,"horizon":4.0}"#,
+        )
+        .unwrap();
+        match Response::from_json(&old).unwrap() {
+            Response::Status {
+                queue,
+                shed,
+                deduped,
+                ..
+            } => {
+                assert_eq!((queue, shed, deduped), (0, 0, 0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

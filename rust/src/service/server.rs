@@ -34,16 +34,20 @@
 //! activated — it becomes schedulable only once a `schedule` or
 //! `task_complete` advances the agent's wall clock past its arrival time.
 
-use super::protocol::{assignment_from, Request, Response};
+use super::journal::Journal;
+use super::protocol::{assignment_from, request_id, Request, Response};
+use super::snapshot;
 use crate::cluster::Cluster;
 use crate::sched::Scheduler;
 use crate::sim::SimState;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::workload::Workload;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::Duration;
@@ -123,6 +127,108 @@ impl ServiceMode {
     }
 }
 
+/// What the batched engine does with a mutating request that arrives
+/// while the mailbox already holds `--max-queue` envelopes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Refuse it immediately with an `Overloaded` response carrying the
+    /// queue depth — the client backs off and retries (load shedding).
+    Shed,
+    /// Park the connection thread until the core loop drains space —
+    /// backpressure propagates to the peer's socket instead.
+    Block,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        match s {
+            "shed" => Ok(AdmissionPolicy::Shed),
+            "block" => Ok(AdmissionPolicy::Block),
+            other => bail!("unknown admission policy '{other}' (shed|block)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::Block => "block",
+        }
+    }
+}
+
+/// Durability configuration for [`AgentServer::with_durability`]: where
+/// the write-ahead journal and snapshots live, how often to checkpoint,
+/// and whether to rebuild the core from disk before serving.
+#[derive(Debug, Clone)]
+pub struct Durability {
+    /// Directory holding `journal.log` and `snap-<seq>.json` files.
+    pub dir: PathBuf,
+    /// Journal records between snapshots (0 = journal only, never
+    /// snapshot — recovery replays the whole journal).
+    pub snapshot_every: u64,
+    /// Load the newest snapshot and replay the journal suffix instead
+    /// of requiring the directory to be fresh.
+    pub restore: bool,
+}
+
+/// Requests whose cached responses the dedup window retains. Bounded so
+/// a long-lived server's memory stays flat; clients that retry within
+/// the window get the original response back, byte for byte.
+const DEDUP_WINDOW: usize = 4096;
+
+/// Bounded FIFO map from client-assigned `request_id` to the response
+/// the first application produced. Insertion order is the eviction
+/// order *and* the snapshot serialization order, so a restored window
+/// evicts identically to the uninterrupted run.
+#[derive(Default)]
+struct DedupWindow {
+    order: VecDeque<String>,
+    map: HashMap<String, Response>,
+}
+
+impl DedupWindow {
+    fn get(&self, id: &str) -> Option<&Response> {
+        self.map.get(id)
+    }
+
+    fn insert(&mut self, id: String, resp: Response) {
+        if self.map.contains_key(&id) {
+            // Only reachable by re-storing under a cached id (the dedup
+            // check runs first); keep the original response and its slot.
+            return;
+        }
+        if self.order.len() >= DEDUP_WINDOW {
+            if let Some(evicted) = self.order.pop_front() {
+                self.map.remove(&evicted);
+            }
+        }
+        self.order.push_back(id.clone());
+        self.map.insert(id, resp);
+    }
+
+    /// `(id, response)` pairs oldest-first — the order `insert` must be
+    /// replayed in to rebuild an identical window.
+    fn iter_in_order(&self) -> impl Iterator<Item = (&String, &Response)> {
+        self.order
+            .iter()
+            .map(move |id| (id, self.map.get(id).expect("ordered id is mapped")))
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+}
+
+/// The journal/snapshot machinery carried by a durable [`AgentCore`].
+struct DurabilityState {
+    journal: Journal,
+    dir: PathBuf,
+    /// Journal records between snapshots (0 = never snapshot).
+    snapshot_every: u64,
+    /// Records appended since the last successful snapshot write.
+    since_snapshot: u64,
+}
+
 /// The status fields as a plain value: what a `status` request reports,
 /// and what the batched server publishes into its lock-free cell.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -137,6 +243,12 @@ pub struct StatusSnapshot {
     pub pending: usize,
     /// Executors currently down (crashed, not yet recovered).
     pub down: usize,
+    /// Mailbox depth at publish time (batched engine; 0 in serial mode).
+    pub queue: usize,
+    /// Mutating requests refused with `Overloaded` so far.
+    pub shed: usize,
+    /// Retries answered from the request-id dedup window so far.
+    pub deduped: usize,
 }
 
 impl StatusSnapshot {
@@ -149,6 +261,9 @@ impl StatusSnapshot {
             executable: self.executable,
             pending: self.pending,
             down: self.down,
+            queue: self.queue,
+            shed: self.shed,
+            deduped: self.deduped,
         }
     }
 }
@@ -170,6 +285,9 @@ struct StatusCell {
     executable: AtomicUsize,
     pending: AtomicUsize,
     down: AtomicUsize,
+    queue: AtomicUsize,
+    shed: AtomicUsize,
+    deduped: AtomicUsize,
 }
 
 impl StatusCell {
@@ -183,6 +301,9 @@ impl StatusCell {
             executable: AtomicUsize::new(0),
             pending: AtomicUsize::new(0),
             down: AtomicUsize::new(0),
+            queue: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            deduped: AtomicUsize::new(0),
         }
     }
 
@@ -200,6 +321,9 @@ impl StatusCell {
         self.executable.store(s.executable, Ordering::Relaxed);
         self.pending.store(s.pending, Ordering::Relaxed);
         self.down.store(s.down, Ordering::Relaxed);
+        self.queue.store(s.queue, Ordering::Relaxed);
+        self.shed.store(s.shed, Ordering::Relaxed);
+        self.deduped.store(s.deduped, Ordering::Relaxed);
         self.seq.fetch_add(1, Ordering::Release);
     }
 
@@ -217,6 +341,9 @@ impl StatusCell {
                     executable: self.executable.load(Ordering::Relaxed),
                     pending: self.pending.load(Ordering::Relaxed),
                     down: self.down.load(Ordering::Relaxed),
+                    queue: self.queue.load(Ordering::Relaxed),
+                    shed: self.shed.load(Ordering::Relaxed),
+                    deduped: self.deduped.load(Ordering::Relaxed),
                 };
                 std::sync::atomic::fence(Ordering::Acquire);
                 if self.seq.load(Ordering::Relaxed) == s1 {
@@ -241,6 +368,8 @@ impl StatusCell {
 /// disconnects the channel, which the waiter surfaces as an error — so
 /// a panicking core loop can never strand a connection forever.
 struct Envelope {
+    /// Client-assigned idempotency id, if the request carried one.
+    id: Option<String>,
     req: Request,
     resp_tx: mpsc::Sender<Response>,
 }
@@ -275,6 +404,16 @@ impl Mailbox {
     }
 }
 
+/// Outcome of [`AgentServer::enqueue`] under the admission bound.
+enum Enqueued {
+    /// Parked; await the response on this channel.
+    Queued(mpsc::Receiver<Response>),
+    /// Refused by the `Shed` policy at this queue depth.
+    Overloaded(usize),
+    /// The core loop is gone (shutdown or panic).
+    Closed,
+}
+
 /// The scheduling agent's shared core: live state, the scheduler, and
 /// the deferred-arrival queue. One of these sits behind the server's
 /// mutex; it is also usable directly (no networking) in tests and
@@ -289,6 +428,12 @@ pub struct AgentCore {
     /// Transient crashes reported via `report_failure`, waiting for the
     /// wall clock to reach their recovery time (`id` = executor).
     recoveries: BinaryHeap<Pending>,
+    /// Cached responses keyed by client-assigned `request_id`.
+    dedup: DedupWindow,
+    /// Retries answered from the window instead of re-applied.
+    n_deduped: u64,
+    /// Write-ahead journal + snapshot machinery (None = in-memory only).
+    durability: Option<DurabilityState>,
 }
 
 impl AgentCore {
@@ -298,6 +443,9 @@ impl AgentCore {
             scheduler,
             pending: BinaryHeap::new(),
             recoveries: BinaryHeap::new(),
+            dedup: DedupWindow::default(),
+            n_deduped: 0,
+            durability: None,
         }
     }
 
@@ -347,11 +495,228 @@ impl AgentCore {
             executable: self.state.executable().len(),
             pending: self.pending.len(),
             down: self.state.cluster.len() - self.state.cluster.n_available(),
+            // queue/shed are engine-level; the server overrides them
+            // when it publishes.
+            queue: 0,
+            shed: 0,
+            deduped: self.n_deduped as usize,
         }
     }
 
-    /// Handle one request against the live state.
+    /// Handle one request against the live state (no idempotency id).
     pub fn handle(&mut self, req: Request) -> Response {
+        self.handle_tagged(None, req)
+    }
+
+    /// Handle one request carrying an optional client-assigned
+    /// idempotency id. Mutating requests go through the full durable
+    /// path: a retry whose id is still in the dedup window gets the
+    /// original response back without re-applying; a fresh request is
+    /// appended to the journal *before* it touches the state (an append
+    /// failure refuses the request outright), applied, and its response
+    /// cached under the id. The journal record is durable only after
+    /// the next [`AgentCore::sync_durability`] — the server syncs once
+    /// per batch before releasing responses.
+    pub fn handle_tagged(&mut self, id: Option<&str>, req: Request) -> Response {
+        if !req.is_mutating() {
+            return self.dispatch(req);
+        }
+        if let Some(cached) = self.dedup_cached(id) {
+            return cached;
+        }
+        if let Err(e) = self.journal_append(id, &req) {
+            crate::log_warn!("journal append failed: {e:#}");
+            return Response::Error(format!("journal append failed; request not applied: {e:#}"));
+        }
+        let resp = self.dispatch(req);
+        self.dedup_store(id, &resp);
+        resp
+    }
+
+    /// The dedup-window lookup: a hit means this exact request was
+    /// already applied — hand back the original response.
+    fn dedup_cached(&mut self, id: Option<&str>) -> Option<Response> {
+        let cached = self.dedup.get(id?)?.clone();
+        self.n_deduped += 1;
+        Some(cached)
+    }
+
+    fn dedup_store(&mut self, id: Option<&str>, resp: &Response) {
+        if let Some(id) = id {
+            self.dedup.insert(id.to_string(), resp.clone());
+        }
+    }
+
+    /// Append a mutating request to the write-ahead journal (no-op when
+    /// durability is off). Must run before the request is applied.
+    fn journal_append(&mut self, id: Option<&str>, req: &Request) -> Result<()> {
+        let Some(d) = self.durability.as_mut() else {
+            return Ok(());
+        };
+        d.journal.append(id, req)?;
+        d.since_snapshot += 1;
+        Ok(())
+    }
+
+    /// The sequence number the next journal append would get (None when
+    /// durability is off) — lets the server tell whether a request was
+    /// actually journaled without widening `handle_tagged`'s signature.
+    fn journal_next_seq(&self) -> Option<u64> {
+        self.durability.as_ref().map(|d| d.journal.next_seq())
+    }
+
+    /// Flush and fsync journal appends. The server calls this once per
+    /// applied batch, before any of the batch's responses are released.
+    pub fn sync_durability(&mut self) -> Result<()> {
+        match self.durability.as_mut() {
+            Some(d) => d.journal.sync(),
+            None => Ok(()),
+        }
+    }
+
+    /// Write a snapshot if `snapshot_every` journal records accumulated
+    /// since the last one. Call only after a successful
+    /// [`AgentCore::sync_durability`] — a snapshot must never cover
+    /// records that are not yet on disk. Snapshot failures are warnings:
+    /// the journal alone still recovers everything.
+    pub fn maybe_snapshot(&mut self) {
+        let (seq, dir) = match &self.durability {
+            Some(d) if d.snapshot_every > 0 && d.since_snapshot >= d.snapshot_every => {
+                (d.journal.next_seq() - 1, d.dir.clone())
+            }
+            _ => return,
+        };
+        let doc = self.snapshot_json();
+        match snapshot::write(&dir, seq, doc) {
+            Ok(_path) => {
+                if let Some(d) = self.durability.as_mut() {
+                    d.since_snapshot = 0;
+                }
+            }
+            Err(e) => crate::log_warn!("snapshot write failed at seq {seq}: {e:#}"),
+        }
+    }
+
+    /// Serialize the whole core — state, deferred arrivals, scheduled
+    /// recoveries, and the dedup window — as one JSON document. Heaps
+    /// are serialized sorted by `(time, id)`; `Pending`'s total order
+    /// makes pop order a function of the multiset alone, so the restored
+    /// heaps drain identically however they were built.
+    pub fn snapshot_json(&self) -> Json {
+        let heap_json = |h: &BinaryHeap<Pending>| -> Json {
+            let mut entries: Vec<(f64, usize)> = h.iter().map(|p| (p.time, p.id)).collect();
+            entries.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            Json::from(
+                entries
+                    .into_iter()
+                    .map(|(t, i)| Json::from(vec![Json::from(t), Json::from(i)]))
+                    .collect::<Vec<Json>>(),
+            )
+        };
+        let dedup = Json::from(
+            self.dedup
+                .iter_in_order()
+                .map(|(id, resp)| Json::from(vec![Json::from(id.as_str()), resp.to_json()]))
+                .collect::<Vec<Json>>(),
+        );
+        Json::from_pairs(vec![
+            ("state", self.state.snapshot_json()),
+            ("pending", heap_json(&self.pending)),
+            ("recoveries", heap_json(&self.recoveries)),
+            ("dedup", dedup),
+            ("n_deduped", Json::from(self.n_deduped)),
+        ])
+    }
+
+    /// Rebuild this core from a [`AgentCore::snapshot_json`] document.
+    /// The cluster shape must match the one the snapshot was taken
+    /// against (checked bitwise by the state restore); the scheduler is
+    /// kept as constructed — recovery determinism requires it to be a
+    /// pure function of the state, which every in-tree scheduler is.
+    pub fn restore_from(&mut self, doc: &Json) -> Result<()> {
+        let state_doc = doc
+            .get("state")
+            .ok_or_else(|| anyhow!("snapshot missing state"))?;
+        let state = SimState::from_snapshot_json(self.state.cluster.clone(), state_doc)
+            .context("restoring simulation state")?;
+        let parse_heap = |field: &str| -> Result<BinaryHeap<Pending>> {
+            let arr = doc
+                .get(field)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("snapshot missing {field}"))?;
+            let mut heap = BinaryHeap::with_capacity(arr.len());
+            for e in arr {
+                let pair = e
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| anyhow!("bad {field} entry (want [time, id])"))?;
+                let time = pair[0]
+                    .as_f64()
+                    .filter(|t| t.is_finite())
+                    .ok_or_else(|| anyhow!("bad {field} time"))?;
+                let id = pair[1]
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad {field} id"))?;
+                heap.push(Pending { time, id });
+            }
+            Ok(heap)
+        };
+        let pending = parse_heap("pending")?;
+        let recoveries = parse_heap("recoveries")?;
+        // Cross-check the heap invariants against the restored state:
+        // every unarrived job has exactly one pending entry, and every
+        // scheduled recovery names a distinct, currently-down executor.
+        let mut pending_ids: Vec<usize> = pending.iter().map(|p| p.id).collect();
+        pending_ids.sort_unstable();
+        let mut unarrived: Vec<usize> = (0..state.jobs.len()).filter(|&j| !state.arrived[j]).collect();
+        unarrived.sort_unstable();
+        if pending_ids != unarrived {
+            bail!("pending heap does not match the state's unarrived jobs");
+        }
+        let mut rec_ids: Vec<usize> = recoveries.iter().map(|p| p.id).collect();
+        rec_ids.sort_unstable();
+        if rec_ids.windows(2).any(|w| w[0] == w[1]) {
+            bail!("duplicate recovery entries");
+        }
+        for &e in &rec_ids {
+            if e >= state.cluster.len() {
+                bail!("recovery entry for executor {e} out of range");
+            }
+            if state.exec_available(e) {
+                bail!("recovery scheduled for executor {e}, which is up");
+            }
+        }
+        let mut dedup = DedupWindow::default();
+        let dedup_arr = doc
+            .get("dedup")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("snapshot missing dedup window"))?;
+        for e in dedup_arr {
+            let pair = e
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow!("bad dedup entry (want [id, response])"))?;
+            let id = pair[0]
+                .as_str()
+                .ok_or_else(|| anyhow!("bad dedup id"))?;
+            let resp = Response::from_json(&pair[1]).context("bad dedup response")?;
+            dedup.insert(id.to_string(), resp);
+        }
+        let n_deduped = doc
+            .get("n_deduped")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("snapshot missing n_deduped"))?;
+        self.state = state;
+        self.pending = pending;
+        self.recoveries = recoveries;
+        self.dedup = dedup;
+        self.n_deduped = n_deduped;
+        Ok(())
+    }
+
+    /// Apply one request to the live state (the engine shared by both
+    /// the plain and the tagged entry points — no dedup, no journal).
+    fn dispatch(&mut self, req: Request) -> Response {
         match req {
             Request::SubmitJob { .. } => match req.build_job(0) {
                 Ok(job) => {
@@ -483,6 +848,10 @@ pub struct AgentServer {
     mode: ServiceMode,
     mailbox: Mailbox,
     status: StatusCell,
+    /// Mailbox bound for the batched engine (0 = unbounded).
+    max_queue: usize,
+    admission: AdmissionPolicy,
+    n_shed: AtomicU64,
     // Batch-formation counters (telemetry for the soak harness).
     n_batches: AtomicU64,
     n_batched_requests: AtomicU64,
@@ -506,14 +875,99 @@ impl AgentServer {
             mode,
             mailbox: Mailbox::new(),
             status: StatusCell::new(),
+            max_queue: 0,
+            admission: AdmissionPolicy::Shed,
+            n_shed: AtomicU64::new(0),
             n_batches: AtomicU64::new(0),
             n_batched_requests: AtomicU64::new(0),
             n_coalesced_heartbeats: AtomicU64::new(0),
         }
     }
 
+    /// Bound the mailbox at `max_queue` envelopes (0 = unbounded) with
+    /// the given over-bound policy. Applies to the batched engine; the
+    /// serial engine has no queue to bound.
+    pub fn with_admission(mut self, max_queue: usize, admission: AdmissionPolicy) -> AgentServer {
+        self.max_queue = max_queue;
+        self.admission = admission;
+        self
+    }
+
+    /// Attach a write-ahead journal (and periodic snapshots) to the
+    /// core. With `restore` set, the core is rebuilt from the newest
+    /// readable snapshot plus a deterministic replay of the journal
+    /// suffix — bit-identical to a server that processed the same
+    /// request stream without interruption. Without `restore`, the
+    /// directory must be fresh: silently appending seq N+1 to a journal
+    /// whose first N records were never applied would poison every
+    /// future recovery.
+    pub fn with_durability(mut self, d: Durability) -> Result<AgentServer> {
+        let (journal, records) = Journal::open(&d.dir)?;
+        let core = self
+            .core
+            .get_mut()
+            .unwrap_or_else(|e| e.into_inner());
+        if d.restore {
+            let start_seq = match snapshot::load_latest(&d.dir)? {
+                Some((seq, doc)) => {
+                    core.restore_from(&doc)
+                        .with_context(|| format!("restoring snapshot at seq {seq}"))?;
+                    seq
+                }
+                None => 0,
+            };
+            if start_seq + 1 > journal.next_seq() {
+                // Snapshots are written only after their records are
+                // fsynced, so a journal shorter than the snapshot means
+                // damage recovery cannot reason about.
+                bail!(
+                    "snapshot covers journal seq {start_seq} but the journal ends at \
+                     {} — refusing to recover from inconsistent storage",
+                    journal.next_seq() - 1
+                );
+            }
+            let mut replayed = 0u64;
+            for rec in &records {
+                if rec.seq <= start_seq {
+                    continue;
+                }
+                // Replay through the tagged path with durability still
+                // unset: no re-journaling, but the dedup window and
+                // deferred heaps rebuild exactly as the original
+                // application built them. Responses are re-derived, not
+                // delivered (their clients are long gone).
+                let _ = core.handle_tagged(rec.id.as_deref(), rec.req.clone());
+                replayed += 1;
+            }
+            crate::log_info!(
+                "restored agent core: snapshot seq {start_seq}, {replayed} journal \
+                 records replayed, {} pending jobs, wall {:.3}",
+                core.pending.len(),
+                core.state.wall
+            );
+        } else if !records.is_empty() || snapshot::load_latest(&d.dir)?.is_some() {
+            bail!(
+                "journal dir {} already holds a journal/snapshots; pass --restore to \
+                 recover from it, or point --journal at a fresh directory",
+                d.dir.display()
+            );
+        }
+        core.durability = Some(DurabilityState {
+            journal,
+            dir: d.dir,
+            snapshot_every: d.snapshot_every,
+            since_snapshot: 0,
+        });
+        Ok(self)
+    }
+
     pub fn mode(&self) -> ServiceMode {
         self.mode
+    }
+
+    /// Mutating requests refused with `Overloaded` so far.
+    pub fn shed_count(&self) -> u64 {
+        self.n_shed.load(Ordering::Relaxed)
     }
 
     /// `(batches, requests applied through batches, heartbeats coalesced
@@ -533,8 +987,37 @@ impl AgentServer {
     /// made this way are reflected in `status` snapshots only after the
     /// next batch publishes.
     pub fn handle(&self, req: Request) -> Response {
+        self.handle_tagged(None, req)
+    }
+
+    /// [`AgentServer::handle`] with an idempotency id — the serial
+    /// engine's per-request path. Each request is its own durability
+    /// batch: append, apply, fsync, maybe snapshot, then answer. A
+    /// failed fsync degrades the acknowledgement to an error (the
+    /// journal may not hold the record a crash-recovery would need),
+    /// though the request *was* applied — a client retry gets the real
+    /// response back from the dedup window.
+    pub fn handle_tagged(&self, id: Option<&str>, req: Request) -> Response {
         match self.core.lock() {
-            Ok(mut core) => core.handle(req),
+            Ok(mut core) => {
+                let before = core.journal_next_seq();
+                let resp = core.handle_tagged(id, req);
+                let journaled = core.journal_next_seq() != before;
+                match core.sync_durability() {
+                    Ok(()) => {
+                        core.maybe_snapshot();
+                        resp
+                    }
+                    Err(e) if journaled => {
+                        crate::log_warn!("journal sync failed: {e:#}");
+                        Response::Error(format!("journal sync failed: {e:#}"))
+                    }
+                    Err(e) => {
+                        crate::log_warn!("journal sync failed: {e:#}");
+                        resp
+                    }
+                }
+            }
             // A panic mid-request may have left the state half-mutated:
             // refuse new decisions instead of scheduling against it, but
             // keep shutdown answerable so the server stays stoppable.
@@ -555,14 +1038,20 @@ impl AgentServer {
     /// Run `f` with the core mutex held — the embedder's escape hatch
     /// for direct state inspection, and what the snapshot-isolation test
     /// uses to prove `status` never acquires this lock. Mutations made
-    /// here do not refresh the status snapshot (prefer requests).
+    /// here do not refresh the status snapshot (prefer requests). A
+    /// poisoned lock is recovered rather than propagated: inspection
+    /// must keep working after a panic (that is when you need it most)
+    /// — the request paths are the ones that refuse a poisoned core.
     pub fn with_core<R>(&self, f: impl FnOnce(&mut AgentCore) -> R) -> R {
-        let mut core = self.core.lock().expect("agent core poisoned");
+        let mut core = self.core.lock().unwrap_or_else(|e| e.into_inner());
         f(&mut core)
     }
 
     fn publish_status(&self, core: &AgentCore) {
-        self.status.publish(&core.status_snapshot());
+        let mut snap = core.status_snapshot();
+        snap.queue = self.mailbox.lock().queue.len();
+        snap.shed = self.n_shed.load(Ordering::Relaxed) as usize;
+        self.status.publish(&snap);
     }
 
     /// Serve connections until a `shutdown` request arrives on any of
@@ -635,14 +1124,24 @@ impl AgentServer {
     /// and the mailbox has been drained dry.
     fn core_loop(&self) {
         // On any exit — including a panic inside a scheduler — close the
-        // mailbox and drop queued envelopes so blocked connection
-        // threads observe disconnected channels instead of hanging.
+        // mailbox and answer every still-queued envelope with an explicit
+        // error. Dropping them silently would also unblock the waiters
+        // (disconnected channel), but the explicit reply distinguishes
+        // "never applied, never journaled — safe to resubmit" from the
+        // ambiguous disconnect a mid-apply crash produces.
         struct MailboxCloser<'a>(&'a AgentServer);
         impl Drop for MailboxCloser<'_> {
             fn drop(&mut self) {
-                let mut q = self.0.mailbox.lock();
-                q.closed = true;
-                q.queue.clear();
+                let drained: Vec<Envelope> = {
+                    let mut q = self.0.mailbox.lock();
+                    q.closed = true;
+                    q.queue.drain(..).collect()
+                };
+                for env in drained {
+                    let _ = env.resp_tx.send(Response::Error(
+                        "server shutting down before the request was applied".to_string(),
+                    ));
+                }
             }
         }
         let _closer = MailboxCloser(self);
@@ -660,7 +1159,12 @@ impl AgentServer {
                 self.n_batches.fetch_add(1, Ordering::Relaxed);
                 self.n_batched_requests
                     .fetch_add(q.queue.len() as u64, Ordering::Relaxed);
-                return Some(q.queue.drain(..).collect());
+                let batch = q.queue.drain(..).collect();
+                drop(q);
+                // The drain freed the whole bound: wake producers the
+                // `Block` admission policy parked on the shared condvar.
+                self.mailbox.cv.notify_all();
+                return Some(batch);
             }
             if self.shutdown.load(Ordering::SeqCst) {
                 return None;
@@ -686,38 +1190,88 @@ impl AgentServer {
     /// are released, so a client that saw its mutation acknowledged
     /// reads a snapshot at least that fresh (read-your-writes).
     fn apply_batch(&self, batch: Vec<Envelope>) {
-        let mut replies: Vec<(mpsc::Sender<Response>, Response)> =
+        // `(waiter, response, journaled-this-batch)` — the flag marks
+        // which acknowledgements a failed batch fsync must degrade.
+        let mut replies: Vec<(mpsc::Sender<Response>, Response, bool)> =
             Vec::with_capacity(batch.len());
         match self.core.lock() {
             Ok(mut core) => {
                 let mut it = batch.into_iter().peekable();
                 while let Some(env) = it.next() {
-                    if let Request::TaskComplete { time, .. } = env.req {
-                        let mut max_t = time;
-                        let mut acks = vec![env.resp_tx];
+                    if matches!(env.req, Request::TaskComplete { .. }) {
+                        // A run of consecutive heartbeats collapses into
+                        // one `advance_to(max time)` — but each still
+                        // goes through dedup and the journal (replay
+                        // re-applies them one by one; `advance_to` is
+                        // monotone, so the end state is identical).
+                        let mut run = vec![env];
                         while matches!(
                             it.peek().map(|e| &e.req),
                             Some(Request::TaskComplete { .. })
                         ) {
-                            let e = it.next().expect("peeked entry exists");
-                            if let Request::TaskComplete { time, .. } = e.req {
-                                // f64::max ignores NaN operands, exactly
-                                // like the serial path's advance_wall
-                                // no-op on a NaN heartbeat.
-                                max_t = max_t.max(time);
+                            run.push(it.next().expect("peeked entry exists"));
+                        }
+                        let n_run = run.len();
+                        let mut max_t: Option<f64> = None;
+                        for env in run {
+                            let Envelope { id, req, resp_tx } = env;
+                            let Request::TaskComplete { time, .. } = req else {
+                                unreachable!("run holds only heartbeats");
+                            };
+                            if let Some(cached) = core.dedup_cached(id.as_deref()) {
+                                replies.push((resp_tx, cached, false));
+                                continue;
                             }
-                            acks.push(e.resp_tx);
+                            if let Err(e) = core.journal_append(id.as_deref(), &req) {
+                                crate::log_warn!("journal append failed: {e:#}");
+                                replies.push((
+                                    resp_tx,
+                                    Response::Error(format!(
+                                        "journal append failed; request not applied: {e:#}"
+                                    )),
+                                    false,
+                                ));
+                                continue;
+                            }
+                            // f64::max ignores NaN operands, exactly like
+                            // the serial path's advance_wall no-op on a
+                            // NaN heartbeat.
+                            max_t = Some(max_t.map_or(time, |m: f64| m.max(time)));
+                            let resp = Response::Ok { job_id: None };
+                            core.dedup_store(id.as_deref(), &resp);
+                            replies.push((resp_tx, resp, true));
                         }
-                        core.advance_to(max_t);
+                        if let Some(t) = max_t {
+                            core.advance_to(t);
+                        }
                         self.n_coalesced_heartbeats
-                            .fetch_add(acks.len() as u64 - 1, Ordering::Relaxed);
-                        for tx in acks {
-                            replies.push((tx, Response::Ok { job_id: None }));
-                        }
+                            .fetch_add(n_run as u64 - 1, Ordering::Relaxed);
                     } else {
-                        let Envelope { req, resp_tx } = env;
-                        let resp = core.handle(req);
-                        replies.push((resp_tx, resp));
+                        let Envelope { id, req, resp_tx } = env;
+                        let before = core.journal_next_seq();
+                        let resp = core.handle_tagged(id.as_deref(), req);
+                        let journaled = core.journal_next_seq() != before;
+                        replies.push((resp_tx, resp, journaled));
+                    }
+                }
+                // Durability barrier: fsync the whole batch's appends
+                // before any response escapes. On failure the journaled
+                // acknowledgements become errors — the requests *were*
+                // applied (a retry gets the real response from the dedup
+                // window), but a crash-recovery might not see them, so
+                // they must not be acknowledged as durable.
+                match core.sync_durability() {
+                    Ok(()) => core.maybe_snapshot(),
+                    Err(e) => {
+                        crate::log_warn!(
+                            "journal sync failed: {e:#} (degrading this batch's acks)"
+                        );
+                        for (_tx, resp, journaled) in replies.iter_mut() {
+                            if *journaled {
+                                *resp =
+                                    Response::Error(format!("journal sync failed: {e:#}"));
+                            }
+                        }
                     }
                 }
                 self.publish_status(&core);
@@ -731,30 +1285,65 @@ impl AgentServer {
                              (send shutdown)"
                                 .to_string(),
                         ),
+                        false,
                     ));
                 }
             }
         }
-        for (tx, resp) in replies {
+        for (tx, resp, _journaled) in replies {
             // A connection that died while waiting dropped its receiver;
             // nothing to do.
             let _ = tx.send(resp);
         }
     }
 
-    /// Park a mutating request in the mailbox; `None` when the core loop
-    /// is gone (shutdown or panic).
-    fn enqueue(&self, req: Request) -> Option<mpsc::Receiver<Response>> {
+    /// Park a mutating request in the mailbox, subject to the admission
+    /// bound. `Shed` refuses an over-bound request immediately with the
+    /// observed depth; `Block` parks the connection thread until the
+    /// core loop drains space (polling shutdown so it can never hang a
+    /// stopping server).
+    fn enqueue(&self, id: Option<String>, req: Request) -> Enqueued {
         let (tx, rx) = mpsc::channel();
-        {
-            let mut q = self.mailbox.lock();
+        let mut q = self.mailbox.lock();
+        loop {
             if q.closed {
-                return None;
+                return Enqueued::Closed;
             }
-            q.queue.push_back(Envelope { req, resp_tx: tx });
+            if self.max_queue == 0 || q.queue.len() < self.max_queue {
+                q.queue.push_back(Envelope {
+                    id,
+                    req,
+                    resp_tx: tx,
+                });
+                drop(q);
+                // notify_all: the condvar is shared with producers
+                // blocked on admission — a single wakeup could land on
+                // one of them instead of the core loop.
+                self.mailbox.cv.notify_all();
+                return Enqueued::Queued(rx);
+            }
+            match self.admission {
+                AdmissionPolicy::Shed => {
+                    let depth = q.queue.len();
+                    drop(q);
+                    self.n_shed.fetch_add(1, Ordering::Relaxed);
+                    return Enqueued::Overloaded(depth);
+                }
+                AdmissionPolicy::Block => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return Enqueued::Closed;
+                    }
+                    // Timeout backstop mirrors `next_batch`: a missed
+                    // wakeup must not park this producer forever.
+                    q = self
+                        .mailbox
+                        .cv
+                        .wait_timeout(q, ACCEPT_POLL)
+                        .map(|(g, _t)| g)
+                        .unwrap_or_else(|e| e.into_inner().0);
+                }
+            }
         }
-        self.mailbox.cv.notify_one();
-        Some(rx)
     }
 
     /// Block until the core loop answers the envelope. A disconnected
@@ -826,11 +1415,11 @@ impl AgentServer {
                 Err(_) => Response::Error("bad request: invalid utf-8".to_string()),
                 Ok(line) => match Json::parse(line.trim())
                     .map_err(|e| anyhow!("{e}"))
-                    .and_then(|v| Request::from_json(&v))
+                    .and_then(|v| Ok((request_id(&v)?, Request::from_json(&v)?)))
                 {
-                    Ok(req) => {
+                    Ok((id, req)) => {
                         let is_shutdown = matches!(req, Request::Shutdown);
-                        let resp = self.handle(req);
+                        let resp = self.handle_tagged(id.as_deref(), req);
                         writeln!(writer, "{}", resp.to_json().to_string())?;
                         writer.flush()?;
                         if is_shutdown {
@@ -898,16 +1487,19 @@ impl AgentServer {
                     }
                     Ok(text) => match Json::parse(text.trim())
                         .map_err(|e| anyhow!("{e}"))
-                        .and_then(|v| Request::from_json(&v))
+                        .and_then(|v| Ok((request_id(&v)?, Request::from_json(&v)?)))
                     {
                         Err(e) => Slot::Ready(Response::Error(format!("bad request: {e}"))),
-                        Ok(Request::Status) => Slot::Snapshot,
-                        Ok(Request::Shutdown) => Slot::Shutdown,
-                        Ok(req) => {
+                        Ok((_, Request::Status)) => Slot::Snapshot,
+                        Ok((_, Request::Shutdown)) => Slot::Shutdown,
+                        Ok((id, req)) => {
                             debug_assert!(req.is_mutating());
-                            match self.enqueue(req) {
-                                Some(rx) => Slot::Waiting(rx),
-                                None => Slot::Ready(Response::Error(
+                            match self.enqueue(id, req) {
+                                Enqueued::Queued(rx) => Slot::Waiting(rx),
+                                Enqueued::Overloaded(queue) => {
+                                    Slot::Ready(Response::Overloaded { queue })
+                                }
+                                Enqueued::Closed => Slot::Ready(Response::Error(
                                     "server shutting down".to_string(),
                                 )),
                             }
@@ -1011,29 +1603,205 @@ fn take_buffered_line(reader: &mut BufReader<TcpStream>) -> Option<Vec<u8>> {
     Some(line)
 }
 
-/// Blocking client for the agent protocol (what the resource manager — or
-/// our examples/tests — runs).
-pub struct ServiceClient {
+/// Timeouts and retry policy for [`ServiceClient`]. The defaults are
+/// deliberately generous: they exist to bound a *stalled* peer, not to
+/// race a slow-but-live one.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub connect_timeout: Duration,
+    /// Per-response read deadline. A `schedule` over a large frontier
+    /// can legitimately take a while — keep this well above the
+    /// server's worst batch.
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    /// Retries after the first attempt in [`ServiceClient::call_idempotent`].
+    pub retries: u32,
+    /// First retry backoff; doubles per attempt (capped at 2s) with up
+    /// to +50% jitter so a reconnect stampede spreads out.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(5),
+            retries: 5,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One live connection: the reader/writer pair over a cloned stream.
+struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
 
-impl ServiceClient {
-    pub fn connect(addr: &str) -> Result<ServiceClient> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        Ok(ServiceClient {
+impl Conn {
+    fn open(addr: &str, cfg: &ClientConfig) -> Result<Conn> {
+        use std::net::ToSocketAddrs;
+        let addrs: Vec<std::net::SocketAddr> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .collect();
+        let mut last: Option<std::io::Error> = None;
+        let mut stream: Option<TcpStream> = None;
+        for a in addrs {
+            match TcpStream::connect_timeout(&a, cfg.connect_timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let stream = match (stream, last) {
+            (Some(s), _) => s,
+            (None, Some(e)) => {
+                return Err(anyhow::Error::from(e).context(format!("connecting {addr}")))
+            }
+            (None, None) => bail!("{addr} resolved to no addresses"),
+        };
+        stream
+            .set_read_timeout(Some(cfg.read_timeout))
+            .context("read timeout")?;
+        stream
+            .set_write_timeout(Some(cfg.write_timeout))
+            .context("write timeout")?;
+        Ok(Conn {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
         })
     }
 
-    pub fn call(&mut self, req: &Request) -> Result<Response> {
-        writeln!(self.writer, "{}", req.to_json().to_string())?;
+    /// One request/response round trip for an already-serialized line.
+    fn call_line(&mut self, line: &str) -> Result<Response> {
+        writeln!(self.writer, "{line}")?;
         self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let v = Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        let v = Json::parse(buf.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
         Response::from_json(&v)
+    }
+}
+
+/// Blocking client for the agent protocol (what the resource manager —
+/// or our examples/tests — runs). Every socket carries connect, read,
+/// and write deadlines ([`ClientConfig`]), so a stalled or half-dead
+/// server surfaces as an error instead of a hang; and
+/// [`ServiceClient::call_idempotent`] layers exactly-once retries on
+/// top: the request is tagged with a `request_id`, and on timeout or a
+/// torn connection the client reconnects (exponential backoff, jittered)
+/// and resends — the server's dedup window guarantees a request that
+/// did land is applied once, never twice.
+pub struct ServiceClient {
+    addr: String,
+    cfg: ClientConfig,
+    /// `None` after an I/O error — the next call reconnects.
+    conn: Option<Conn>,
+    /// Backoff jitter only — never touches protocol decisions.
+    rng: Rng,
+    /// Counter behind [`ServiceClient::call_retrying`]'s auto ids.
+    next_id: u64,
+}
+
+impl ServiceClient {
+    pub fn connect(addr: &str) -> Result<ServiceClient> {
+        ServiceClient::connect_with(addr, ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<ServiceClient> {
+        let conn = Conn::open(addr, &cfg)?;
+        // Jitter seed: distinct per process so a fleet of clients
+        // restarting together doesn't retry in lockstep.
+        let rng = Rng::new(0x5EED_C11E_47u64 ^ (std::process::id() as u64));
+        Ok(ServiceClient {
+            addr: addr.to_string(),
+            cfg,
+            conn: Some(conn),
+            rng,
+            next_id: 0,
+        })
+    }
+
+    fn ensure_conn(&mut self) -> Result<&mut Conn> {
+        if self.conn.is_none() {
+            self.conn = Some(Conn::open(&self.addr, &self.cfg)?);
+        }
+        Ok(self.conn.as_mut().expect("just ensured"))
+    }
+
+    /// One-shot call, no request id, no retry: an I/O failure is the
+    /// caller's problem (the connection is dropped and will be reopened
+    /// by the next call).
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        let line = req.to_json().to_string();
+        let conn = self.ensure_conn()?;
+        let res = conn.call_line(&line);
+        if res.is_err() {
+            self.conn = None;
+        }
+        res
+    }
+
+    /// [`ServiceClient::call_idempotent`] with an auto-assigned id
+    /// (`c<pid>-<n>`): unique across this process's clients for the
+    /// lifetime of the server's dedup window.
+    pub fn call_retrying(&mut self, req: &Request) -> Result<Response> {
+        let id = format!("c{}-{}", std::process::id(), self.next_id);
+        self.next_id += 1;
+        self.call_idempotent(&id, req)
+    }
+
+    /// Send `req` tagged with `id`, retrying through timeouts, torn
+    /// connections, and `Overloaded` shedding with exponential backoff
+    /// and jittered reconnects. Safe for mutating requests precisely
+    /// because of the tag: a resend of a request that did reach the
+    /// server is answered from its dedup window, not re-applied.
+    pub fn call_idempotent(&mut self, id: &str, req: &Request) -> Result<Response> {
+        let line = super::protocol::with_request_id(req, id).to_string();
+        let mut delay = self.cfg.backoff;
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                let jitter = delay.mul_f64(self.rng.next_f64() * 0.5);
+                std::thread::sleep(delay + jitter);
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+            if self.conn.is_none() {
+                match Conn::open(&self.addr, &self.cfg) {
+                    Ok(c) => self.conn = Some(c),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let conn = self.conn.as_mut().expect("connection exists");
+            match conn.call_line(&line) {
+                Ok(Response::Overloaded { queue }) => {
+                    last_err = Some(anyhow!("server overloaded (queue depth {queue})"));
+                }
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // The request may or may not have been applied —
+                    // irrelevant: the id makes the resend exactly-once.
+                    self.conn = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("no attempt recorded"))
+            .context(format!(
+                "request '{id}' failed after {} attempts",
+                self.cfg.retries + 1
+            )))
     }
 }
 
@@ -1373,6 +2141,174 @@ mod tests {
         assert_eq!(ServiceMode::Batched.name(), "batched");
     }
 
+    #[test]
+    fn admission_policy_parses() {
+        assert_eq!(
+            AdmissionPolicy::parse("shed").unwrap(),
+            AdmissionPolicy::Shed
+        );
+        assert_eq!(
+            AdmissionPolicy::parse("block").unwrap(),
+            AdmissionPolicy::Block
+        );
+        assert!(AdmissionPolicy::parse("drop").is_err());
+        assert_eq!(AdmissionPolicy::Block.name(), "block");
+    }
+
+    /// A retried request id returns the cached response without
+    /// re-applying; the window evicts oldest-first once full.
+    #[test]
+    fn dedup_window_is_exactly_once_and_bounded() {
+        let cluster = Cluster::homogeneous(2, 2.0, 100.0);
+        let mut agent = AgentCore::new(cluster, Box::new(FifoScheduler::new()));
+        let submit = Request::SubmitJob {
+            name: "j".into(),
+            arrival: 0.0,
+            computes: vec![1.0],
+            edges: vec![],
+        };
+        let first = agent.handle_tagged(Some("m0-1"), submit.clone());
+        assert!(matches!(first, Response::Ok { job_id: Some(0) }));
+        // The retry must NOT create job 1.
+        let retry = agent.handle_tagged(Some("m0-1"), submit.clone());
+        assert_eq!(
+            retry.to_json().to_string(),
+            first.to_json().to_string(),
+            "retry answered from the window, byte-identical"
+        );
+        assert_eq!(agent.state().jobs.len(), 1, "no double-submit");
+        assert_eq!(agent.n_deduped, 1);
+        // An untagged duplicate is a new request (that's the contract).
+        agent.handle_tagged(None, submit);
+        assert_eq!(agent.state().jobs.len(), 2);
+
+        let mut w = DedupWindow::default();
+        for i in 0..(DEDUP_WINDOW + 3) {
+            w.insert(format!("id-{i}"), Response::Ok { job_id: Some(i) });
+        }
+        assert_eq!(w.len(), DEDUP_WINDOW);
+        assert!(w.get("id-0").is_none(), "oldest evicted");
+        assert!(w.get("id-2").is_none());
+        assert!(w.get("id-3").is_some());
+        let order: Vec<&String> = w.iter_in_order().map(|(id, _)| id).collect();
+        assert_eq!(order[0], "id-3");
+    }
+
+    /// Over the bound, `Shed` answers `Overloaded` with the depth and
+    /// bumps the shed counter; under the bound, requests queue.
+    #[test]
+    fn shed_admission_refuses_over_bound() {
+        let cluster = Cluster::homogeneous(1, 1.0, 100.0);
+        let server = AgentServer::new(cluster, Box::new(FifoScheduler::new()))
+            .with_admission(2, AdmissionPolicy::Shed);
+        // No core loop running: the queue only fills.
+        let hb = |t: f64| Request::TaskComplete {
+            job: 0,
+            node: 0,
+            time: t,
+        };
+        assert!(matches!(server.enqueue(None, hb(1.0)), Enqueued::Queued(_)));
+        assert!(matches!(server.enqueue(None, hb(2.0)), Enqueued::Queued(_)));
+        match server.enqueue(None, hb(3.0)) {
+            Enqueued::Overloaded(depth) => assert_eq!(depth, 2),
+            _ => panic!("third enqueue must shed"),
+        }
+        assert_eq!(server.shed_count(), 1);
+    }
+
+    /// Core snapshot/restore round trip: deferred arrivals, a scheduled
+    /// recovery, and the dedup window all survive; the restored core
+    /// makes the identical next decision.
+    #[test]
+    fn agent_core_snapshot_roundtrip() {
+        let mk = || {
+            let mut cluster = Cluster::homogeneous(2, 1.0, 100.0);
+            cluster.executors[1].speed = 2.0;
+            AgentCore::new(cluster, Box::new(FifoScheduler::new()))
+        };
+        let mut agent = mk();
+        agent.handle_tagged(
+            Some("m0-1"),
+            Request::SubmitJob {
+                name: "now".into(),
+                arrival: 0.0,
+                computes: vec![2.0, 3.0],
+                edges: vec![(0, 1, 5.0)],
+            },
+        );
+        agent.handle_tagged(
+            Some("m0-2"),
+            Request::SubmitJob {
+                name: "later".into(),
+                arrival: 40.0,
+                computes: vec![1.0],
+                edges: vec![],
+            },
+        );
+        agent.handle(Request::Schedule { time: 1.0 });
+        agent.handle(Request::ReportFailure {
+            exec: 0,
+            time: 2.0,
+            recovery: Some(30.0),
+        });
+        let doc_text = agent.snapshot_json().to_string();
+
+        let mut restored = mk();
+        let doc = Json::parse(&doc_text).unwrap();
+        restored.restore_from(&doc).unwrap();
+        restored.state().validate().unwrap();
+        assert_eq!(restored.pending_jobs(), 1);
+        assert_eq!(restored.recoveries.len(), 1);
+        assert_eq!(restored.dedup.len(), 2);
+        assert_eq!(
+            restored.status_snapshot(),
+            agent.status_snapshot(),
+            "restored status identical"
+        );
+        // The cached response survives the round trip byte-for-byte.
+        let a = agent.handle_tagged(Some("m0-1"), Request::Schedule { time: 0.0 });
+        let b = restored.handle_tagged(Some("m0-1"), Request::Schedule { time: 0.0 });
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        // And the next real decision is bit-identical on both.
+        let a = agent.handle(Request::Schedule { time: 45.0 });
+        let b = restored.handle(Request::Schedule { time: 45.0 });
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(agent.pending_jobs(), 0);
+        assert_eq!(restored.recoveries.len(), 0, "recovery popped at t=30");
+    }
+
+    /// A mismatched snapshot is rejected with the heap cross-checks.
+    #[test]
+    fn restore_rejects_inconsistent_heaps() {
+        let mk = || {
+            AgentCore::new(
+                Cluster::homogeneous(2, 1.0, 100.0),
+                Box::new(FifoScheduler::new()),
+            )
+        };
+        let mut agent = mk();
+        agent.handle(Request::SubmitJob {
+            name: "later".into(),
+            arrival: 10.0,
+            computes: vec![1.0],
+            edges: vec![],
+        });
+        let mut doc = agent.snapshot_json();
+        // Drop the pending entry: the state says job 0 is unarrived but
+        // the heap no longer covers it.
+        doc.set("pending", Json::from(Vec::<Json>::new()));
+        let mut restored = mk();
+        assert!(restored.restore_from(&doc).is_err());
+        // A recovery entry for an executor that is up is also rejected.
+        let mut doc = agent.snapshot_json();
+        doc.set(
+            "recoveries",
+            Json::from(vec![Json::from(vec![Json::from(5.0), Json::from(0usize)])]),
+        );
+        let mut restored = mk();
+        assert!(restored.restore_from(&doc).is_err());
+    }
+
     /// Hammer the seqlock from concurrent readers while a writer
     /// publishes correlated snapshots: a reader must never observe a
     /// mix of two publishes (the invariants tie every field to `jobs`).
@@ -1393,6 +2329,9 @@ mod tests {
                         executable: k + 7,
                         pending: k % 13,
                         down: k % 5,
+                        queue: 4 * k,
+                        shed: 5 * k,
+                        deduped: 6 * k,
                     });
                 }
                 stop.store(true, Ordering::SeqCst);
@@ -1405,6 +2344,9 @@ mod tests {
                         assert_eq!(snap.executors, 3 * snap.jobs, "torn snapshot");
                         assert_eq!(snap.horizon, snap.jobs as f64, "torn snapshot");
                         assert_eq!(snap.executable, snap.jobs + 7, "torn snapshot");
+                        assert_eq!(snap.queue, 4 * snap.jobs, "torn snapshot");
+                        assert_eq!(snap.shed, 5 * snap.jobs, "torn snapshot");
+                        assert_eq!(snap.deduped, 6 * snap.jobs, "torn snapshot");
                     }
                 });
             }

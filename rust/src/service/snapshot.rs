@@ -1,0 +1,221 @@
+//! Atomic on-disk snapshots of the agent core.
+//!
+//! A snapshot is one versioned JSON document, written as
+//! `snap-<seq>.json` where `<seq>` is the last journal sequence number
+//! it covers: restore loads the highest-`seq` snapshot and replays
+//! only the journal records with `seq > snapshot.seq`. Writes are
+//! crash-atomic — the document goes to a `.tmp` file first, is
+//! `fsync`ed, and only then renamed into place (a kill mid-write
+//! leaves at worst a stale `.tmp`, never a half-written snapshot
+//! under the real name). Old snapshots beyond the most recent
+//! [`KEEP_SNAPSHOTS`] are pruned after each successful write; pruning
+//! failures are warnings, not errors.
+//!
+//! The document body is built by the server
+//! ([`super::AgentCore::snapshot_json`]) and contains the full
+//! [`crate::sim::SimState`] serialization plus the pending-arrival
+//! heap, the recovery heap, and the request-id dedup window.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Snapshots retained after a successful write (the newest plus one
+/// predecessor, in case the newest is lost with its directory entry).
+pub const KEEP_SNAPSHOTS: usize = 2;
+
+/// Version stamp checked by [`load_latest`].
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+fn snap_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("snap-{seq}.json"))
+}
+
+/// Parse a `snap-<seq>.json` file name back to its sequence number.
+fn parse_snap_name(name: &str) -> Option<u64> {
+    name.strip_prefix("snap-")?
+        .strip_suffix(".json")?
+        .parse()
+        .ok()
+}
+
+/// Atomically persist `body` as the snapshot covering journal sequence
+/// `seq`. `body` is wrapped with the version stamp and `seq`; callers
+/// pass the core-state document only.
+pub fn write(dir: &Path, seq: u64, body: Json) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+    let doc = Json::from_pairs(vec![
+        ("lachesis_snapshot", Json::from(SNAPSHOT_VERSION)),
+        ("seq", Json::from(seq)),
+        ("core", body),
+    ]);
+    let path = snap_path(dir, seq);
+    let tmp = dir.join(format!("snap-{seq}.json.tmp"));
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(doc.to_string().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    prune(dir, seq);
+    Ok(path)
+}
+
+/// Delete snapshots older than the `KEEP_SNAPSHOTS` most recent ones
+/// (and any orphaned `.tmp` from a previous crash-mid-write).
+fn prune(dir: &Path, newest: u64) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut seqs: Vec<u64> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.ends_with(".json.tmp") && name.starts_with("snap-") {
+            // A crash between create and rename left this behind; the
+            // newest real snapshot supersedes it.
+            let _ = std::fs::remove_file(entry.path());
+            continue;
+        }
+        if let Some(seq) = parse_snap_name(name) {
+            seqs.push(seq);
+        }
+    }
+    seqs.sort_unstable();
+    let cut = seqs.len().saturating_sub(KEEP_SNAPSHOTS);
+    for &seq in &seqs[..cut] {
+        if seq == newest {
+            continue;
+        }
+        if let Err(e) = std::fs::remove_file(snap_path(dir, seq)) {
+            crate::log_warn!("snapshot prune failed for seq {seq}: {e}");
+        }
+    }
+}
+
+/// Load the highest-sequence snapshot in `dir`, if any. Returns the
+/// covered journal sequence and the core-state document. A snapshot
+/// that fails to parse is skipped with a warning and the next-newest
+/// is tried — recovery prefers an older consistent checkpoint (plus a
+/// longer journal replay) over refusing to start.
+pub fn load_latest(dir: &Path) -> Result<Option<(u64, Json)>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(anyhow!("reading snapshot dir {}: {e}", dir.display())),
+    };
+    let mut seqs: Vec<u64> = entries
+        .flatten()
+        .filter_map(|e| e.file_name().to_str().and_then(parse_snap_name))
+        .collect();
+    seqs.sort_unstable();
+    for &seq in seqs.iter().rev() {
+        let path = snap_path(dir, seq);
+        match try_load(&path, seq) {
+            Ok(core) => return Ok(Some((seq, core))),
+            Err(e) => {
+                crate::log_warn!("skipping unreadable snapshot {}: {e:#}", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+fn try_load(path: &Path, expect_seq: u64) -> Result<Json> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(text.trim_end()).map_err(|e| anyhow!("{e}"))?;
+    let version = doc
+        .get("lachesis_snapshot")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing snapshot version stamp"))?;
+    if version != SNAPSHOT_VERSION {
+        return Err(anyhow!("unsupported snapshot version {version}"));
+    }
+    let seq = doc
+        .get("seq")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing seq"))?;
+    if seq != expect_seq {
+        return Err(anyhow!(
+            "file name says seq {expect_seq} but the document says {seq}"
+        ));
+    }
+    doc.get("core")
+        .cloned()
+        .ok_or_else(|| anyhow!("missing core document"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "lachesis-snapshot-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn body(x: usize) -> Json {
+        Json::from_pairs(vec![("x", Json::from(x))])
+    }
+
+    #[test]
+    fn write_then_load_latest() {
+        let dir = tmpdir("rw");
+        assert!(load_latest(&dir).unwrap().is_none(), "no dir yet");
+        write(&dir, 10, body(1)).unwrap();
+        write(&dir, 25, body(2)).unwrap();
+        let (seq, core) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(seq, 25);
+        assert_eq!(core.get("x").and_then(Json::as_usize), Some(2));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pruning_keeps_two_and_clears_tmp_orphans() {
+        let dir = tmpdir("prune");
+        for (i, seq) in [3u64, 8, 15, 21].into_iter().enumerate() {
+            write(&dir, seq, body(i)).unwrap();
+        }
+        std::fs::write(dir.join("snap-99.json.tmp"), "half-written").unwrap();
+        write(&dir, 30, body(9)).unwrap();
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["snap-21.json", "snap-30.json"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_predecessor() {
+        let dir = tmpdir("fallback");
+        write(&dir, 5, body(1)).unwrap();
+        write(&dir, 9, body(2)).unwrap();
+        std::fs::write(snap_path(&dir, 9), "{\"torn").unwrap();
+        let (seq, core) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(seq, 5);
+        assert_eq!(core.get("x").and_then(Json::as_usize), Some(1));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn name_and_document_seq_must_agree() {
+        let dir = tmpdir("rename");
+        write(&dir, 4, body(1)).unwrap();
+        // An adversarially renamed snapshot is skipped.
+        std::fs::rename(snap_path(&dir, 4), snap_path(&dir, 7)).unwrap();
+        assert!(load_latest(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -105,6 +105,36 @@ impl Frontier {
         }
     }
 
+    /// Rebuild the whole frontier from scratch against flag vectors
+    /// (snapshot restore). Replaying `assign` per already-assigned task
+    /// would be order-sensitive — a parent assigned *after* its child
+    /// in `(job, node)` order would re-admit the assigned child — so
+    /// the counters and the item list are computed directly: the same
+    /// scan `SimState::validate` pins the incremental state against.
+    pub fn rebuild(jobs: &[Job], arrived: &[bool], assigned: &[Vec<bool>]) -> Frontier {
+        let mut f = Frontier::new();
+        for (j, job) in jobs.iter().enumerate() {
+            let counts: Vec<usize> = (0..job.n_tasks())
+                .map(|n| {
+                    let mut parents: Vec<NodeId> =
+                        job.parents[n].iter().map(|e| e.other).collect();
+                    parents.sort_unstable();
+                    parents.dedup();
+                    parents.iter().filter(|&&p| !assigned[j][p]).count()
+                })
+                .collect();
+            for (n, &c) in counts.iter().enumerate() {
+                if c == 0 && arrived[j] && !assigned[j][n] {
+                    // Job-major, node-minor push order is already the
+                    // sorted TaskRef order.
+                    f.items.push(TaskRef::new(j, n));
+                }
+            }
+            f.pending.push(counts);
+        }
+        f
+    }
+
     /// The executable set, sorted.
     pub fn items(&self) -> &[TaskRef] {
         &self.items
@@ -224,6 +254,45 @@ mod tests {
         // node 1; node 2 is still assigned).
         assert_eq!(parent_first.0, vec![TaskRef::new(0, 0)]);
         assert_eq!(parent_first.1, 1);
+    }
+
+    #[test]
+    fn rebuild_matches_incremental_state() {
+        // Node 1 is the *parent* of node 0 (a legal DAG — indices need
+        // not be topological). A rebuild that replayed `assign` in
+        // (job, node) order would re-admit node 0 when replaying its
+        // parent's assignment; the scan must not.
+        let back = Job::new(1, "back", 0.0, vec![1.0, 1.0, 2.0], &[(1, 0, 1.0), (0, 2, 1.0)]);
+        let j0 = diamond();
+        let jobs = vec![j0.clone(), back.clone()];
+        let mut live = Frontier::new();
+        live.add_job(&j0);
+        live.add_job(&back);
+        live.activate_job(0);
+        live.activate_job(1);
+        live.assign(&j0, TaskRef::new(0, 0));
+        live.assign(&back, TaskRef::new(1, 1));
+        live.assign(&back, TaskRef::new(1, 0));
+        let arrived = vec![true, true];
+        let assigned = vec![
+            vec![true, false, false, false],
+            vec![true, true, false],
+        ];
+        let rebuilt = Frontier::rebuild(&jobs, &arrived, &assigned);
+        assert_eq!(rebuilt.items(), live.items());
+        for (j, job) in jobs.iter().enumerate() {
+            for n in 0..job.n_tasks() {
+                let t = TaskRef::new(j, n);
+                assert_eq!(
+                    rebuilt.unassigned_parents(t),
+                    live.unassigned_parents(t),
+                    "counter mismatch at ({j}, {n})"
+                );
+            }
+        }
+        // Unarrived jobs contribute counters but no items.
+        let cold = Frontier::rebuild(&jobs, &[true, false], &assigned);
+        assert_eq!(cold.items(), &[TaskRef::new(0, 1), TaskRef::new(0, 2)]);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::cluster::Cluster;
 use crate::config::SchedMode;
 use crate::dag::{ranks, Job, NodeId, TaskRef};
 use crate::fault::{FaultStats, RecoveryOutcome};
+use crate::util::json::Json;
 use crate::workload::Workload;
 
 /// One scheduled copy of a task on an executor (a member of `R_{n_i}`).
@@ -1016,6 +1017,521 @@ impl SimState {
         }
         Ok(())
     }
+
+    // ------------------------------------------------------------------
+    // Snapshot serialization (service crash recovery). The contract is
+    // bitwise: a state restored from `snapshot_json` must plan, apply,
+    // and report exactly what the live state would have — so every
+    // float travels as a JSON number (the writer prints f64 exactly;
+    // see `util::json::write_num`), order-bearing lists (placements,
+    // exec logs, adjacency, timelines) are stored verbatim, and
+    // scan-recomputable caches (`min_aft`, `left_tasks`, frontier,
+    // ranks) are re-derived — `validate()` pins each of those to its
+    // scan, so recomputation is exact. `left_work` is the one cache
+    // that drifts from its scan (incremental subtraction, 1e-6
+    // tolerance in `validate`): it is serialized, not recomputed.
+    // ------------------------------------------------------------------
+
+    /// Serialize everything needed to rebuild this state bit-identically
+    /// (given the same cluster). The encoder-event log is deliberately
+    /// excluded: a fresh consumer rebuilds from live state and PR 2's
+    /// cache tests pin that rebuild to be decision-identical.
+    pub fn snapshot_json(&self) -> Json {
+        let edges = |es: &[crate::dag::Edge]| -> Json {
+            Json::Arr(
+                es.iter()
+                    .map(|e| Json::Arr(vec![Json::from(e.other), Json::from(e.data)]))
+                    .collect(),
+            )
+        };
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                Json::from_pairs(vec![
+                    ("name", Json::from(j.name.clone())),
+                    ("arrival", Json::from(j.arrival)),
+                    (
+                        "computes",
+                        Json::from(j.tasks.iter().map(|t| t.compute).collect::<Vec<f64>>()),
+                    ),
+                    (
+                        "children",
+                        Json::Arr(j.children.iter().map(|es| edges(es)).collect()),
+                    ),
+                    (
+                        "parents",
+                        Json::Arr(j.parents.iter().map(|es| edges(es)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let placement_json = |pl: &Placement| -> Json {
+            Json::Arr(vec![
+                Json::from(pl.exec),
+                Json::from(pl.start),
+                Json::from(pl.finish),
+                Json::from(pl.duplicate),
+            ])
+        };
+        let placements: Vec<Json> = self
+            .placements
+            .iter()
+            .map(|job| {
+                Json::Arr(
+                    job.iter()
+                        .map(|copies| Json::Arr(copies.iter().map(placement_json).collect()))
+                        .collect(),
+                )
+            })
+            .collect();
+        let exec_log: Vec<Json> = self
+            .exec_log
+            .iter()
+            .map(|log| {
+                Json::Arr(
+                    log.iter()
+                        .map(|(t, pl)| {
+                            Json::Arr(vec![
+                                Json::from(t.job),
+                                Json::from(t.node),
+                                placement_json(pl),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let intervals = |iv: &[(f64, f64)]| -> Json {
+            Json::Arr(
+                iv.iter()
+                    .map(|&(s, f)| Json::Arr(vec![Json::from(s), Json::from(f)]))
+                    .collect(),
+            )
+        };
+        Json::from_pairs(vec![
+            ("version", Json::from(1usize)),
+            ("sched_mode", Json::from(self.sched_mode.as_str())),
+            (
+                "speeds",
+                Json::from(
+                    self.cluster
+                        .executors
+                        .iter()
+                        .map(|e| e.speed)
+                        .collect::<Vec<f64>>(),
+                ),
+            ),
+            ("comm_mbps", Json::from(self.cluster.comm_mbps)),
+            ("wall", Json::from(self.wall)),
+            ("horizon", Json::from(self.horizon)),
+            ("n_assigned", Json::from(self.n_assigned)),
+            ("n_duplicates", Json::from(self.n_duplicates)),
+            ("v_avg", Json::from(self.v_avg)),
+            ("c_avg", Json::from(self.c_avg)),
+            ("jobs", Json::Arr(jobs)),
+            (
+                "arrived",
+                Json::from(self.arrived.iter().map(|&a| Json::from(a)).collect::<Vec<_>>()),
+            ),
+            (
+                "assigned",
+                Json::Arr(
+                    self.assigned
+                        .iter()
+                        .map(|j| Json::from(j.iter().map(|&a| Json::from(a)).collect::<Vec<_>>()))
+                        .collect(),
+                ),
+            ),
+            (
+                "reexec",
+                Json::Arr(
+                    self.reexec
+                        .iter()
+                        .map(|j| Json::from(j.iter().map(|&a| Json::from(a)).collect::<Vec<_>>()))
+                        .collect(),
+                ),
+            ),
+            ("left_work", Json::from(self.left_work.clone())),
+            ("placements", Json::Arr(placements)),
+            ("exec_log", Json::Arr(exec_log)),
+            (
+                "timelines",
+                Json::Arr(
+                    self.timelines
+                        .iter()
+                        .map(|tl| intervals(tl.intervals()))
+                        .collect(),
+                ),
+            ),
+            (
+                "blackouts",
+                Json::Arr(self.blackouts.iter().map(|b| intervals(b)).collect()),
+            ),
+            (
+                "down_since",
+                Json::Arr(
+                    self.down_since
+                        .iter()
+                        .map(|d| d.map_or(Json::Null, |t: f64| Json::from(t)))
+                        .collect(),
+                ),
+            ),
+            (
+                "faults",
+                Json::from_pairs(vec![
+                    ("crashes", Json::from(self.faults.n_crashes)),
+                    ("straggles", Json::from(self.faults.n_straggles)),
+                    ("cancelled", Json::from(self.faults.n_cancelled)),
+                    ("requeued", Json::from(self.faults.n_requeued)),
+                    ("dup_survived", Json::from(self.faults.n_dup_survived)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Rebuild a state from [`SimState::snapshot_json`] output against a
+    /// freshly-constructed cluster (same config flags and seed as the
+    /// process that wrote the snapshot — speeds, comm, and booking mode
+    /// are cross-checked so an operator restarting with different flags
+    /// gets an error instead of silent divergence). Executor
+    /// availability is restored from the snapshot's `down_since`.
+    pub fn from_snapshot_json(mut cluster: Cluster, v: &Json) -> anyhow::Result<SimState> {
+        use anyhow::{anyhow, bail};
+        let version = v.req_usize("version").map_err(|e| anyhow!("{e}"))?;
+        if version != 1 {
+            bail!("unsupported state snapshot version {version}");
+        }
+        let mode = v.req_str("sched_mode").map_err(|e| anyhow!("{e}"))?;
+        if mode != cluster.sched_mode.as_str() {
+            bail!(
+                "snapshot booked executor time in '{mode}' mode but the cluster \
+                 is '{}' — restart with the flags the snapshot was taken under",
+                cluster.sched_mode.as_str()
+            );
+        }
+        let speeds = parse_f64s(v.req("speeds").map_err(|e| anyhow!("{e}"))?, "speeds")?;
+        if speeds.len() != cluster.len()
+            || speeds
+                .iter()
+                .zip(&cluster.executors)
+                .any(|(s, e)| s.to_bits() != e.speed.to_bits())
+        {
+            bail!(
+                "snapshot cluster ({} executors) does not match the configured one \
+                 ({}) — restart with the same --executors/--seed flags",
+                speeds.len(),
+                cluster.len()
+            );
+        }
+        let comm = v.req_f64("comm_mbps").map_err(|e| anyhow!("{e}"))?;
+        if comm.to_bits() != cluster.comm_mbps.to_bits() {
+            bail!("snapshot comm speed {comm} != configured {}", cluster.comm_mbps);
+        }
+        let n_exec = cluster.len();
+        let v_avg = v.req_f64("v_avg").map_err(|e| anyhow!("{e}"))?;
+        let c_avg = v.req_f64("c_avg").map_err(|e| anyhow!("{e}"))?;
+
+        let jobs_json = v
+            .req("jobs")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("jobs must be an array"))?;
+        let mut jobs: Vec<Job> = Vec::with_capacity(jobs_json.len());
+        for (id, jj) in jobs_json.iter().enumerate() {
+            let computes =
+                parse_f64s(jj.req("computes").map_err(|e| anyhow!("{e}"))?, "computes")?;
+            let adj = |key: &str| -> anyhow::Result<Vec<Vec<crate::dag::Edge>>> {
+                jj.req(key)
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} must be an array"))?
+                    .iter()
+                    .map(|es| {
+                        es.as_arr()
+                            .ok_or_else(|| anyhow!("{key} entry must be an array"))?
+                            .iter()
+                            .map(|e| {
+                                let other = e.at(0).and_then(Json::as_usize);
+                                let data = e.at(1).and_then(Json::as_f64);
+                                match (other, data) {
+                                    (Some(other), Some(data)) => {
+                                        Ok(crate::dag::Edge { other, data })
+                                    }
+                                    _ => Err(anyhow!("bad {key} edge")),
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            jobs.push(Job::from_adjacency(
+                id,
+                jj.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                jj.req_f64("arrival").map_err(|e| anyhow!("{e}"))?,
+                computes,
+                adj("children")?,
+                adj("parents")?,
+            )?);
+        }
+
+        let arrived = parse_bools(v.req("arrived").map_err(|e| anyhow!("{e}"))?, "arrived")?;
+        let assigned = parse_bool_rows(v.req("assigned").map_err(|e| anyhow!("{e}"))?, "assigned")?;
+        let reexec = parse_bool_rows(v.req("reexec").map_err(|e| anyhow!("{e}"))?, "reexec")?;
+        let left_work =
+            parse_f64s(v.req("left_work").map_err(|e| anyhow!("{e}"))?, "left_work")?;
+        if arrived.len() != jobs.len()
+            || assigned.len() != jobs.len()
+            || reexec.len() != jobs.len()
+            || left_work.len() != jobs.len()
+        {
+            bail!("per-job snapshot arrays disagree with the job count");
+        }
+        for (j, job) in jobs.iter().enumerate() {
+            if assigned[j].len() != job.n_tasks() || reexec[j].len() != job.n_tasks() {
+                bail!("per-task snapshot arrays disagree with job {j}'s task count");
+            }
+        }
+
+        let parse_placement = |e: &Json| -> anyhow::Result<Placement> {
+            let exec = e.at(0).and_then(Json::as_usize);
+            let start = e.at(1).and_then(Json::as_f64);
+            let finish = e.at(2).and_then(Json::as_f64);
+            let duplicate = e.at(3).and_then(Json::as_bool);
+            match (exec, start, finish, duplicate) {
+                (Some(exec), Some(start), Some(finish), Some(duplicate)) if exec < n_exec => {
+                    Ok(Placement {
+                        exec,
+                        start,
+                        finish,
+                        duplicate,
+                    })
+                }
+                _ => Err(anyhow!("bad placement entry")),
+            }
+        };
+        let placements_json = v
+            .req("placements")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("placements must be an array"))?;
+        if placements_json.len() != jobs.len() {
+            bail!("placements disagree with the job count");
+        }
+        let mut placements: Vec<Vec<Vec<Placement>>> = Vec::with_capacity(jobs.len());
+        for (j, pj) in placements_json.iter().enumerate() {
+            let rows = pj
+                .as_arr()
+                .ok_or_else(|| anyhow!("placements[{j}] must be an array"))?;
+            if rows.len() != jobs[j].n_tasks() {
+                bail!("placements[{j}] disagrees with the task count");
+            }
+            let mut job_rows = Vec::with_capacity(rows.len());
+            for copies in rows {
+                job_rows.push(
+                    copies
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("placement copies must be an array"))?
+                        .iter()
+                        .map(&parse_placement)
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                );
+            }
+            placements.push(job_rows);
+        }
+        let exec_log_json = v
+            .req("exec_log")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("exec_log must be an array"))?;
+        if exec_log_json.len() != n_exec {
+            bail!("exec_log disagrees with the executor count");
+        }
+        let mut exec_log: Vec<Vec<(TaskRef, Placement)>> = Vec::with_capacity(n_exec);
+        for (k, lj) in exec_log_json.iter().enumerate() {
+            let mut log = Vec::new();
+            for entry in lj
+                .as_arr()
+                .ok_or_else(|| anyhow!("exec_log[{k}] must be an array"))?
+            {
+                let job = entry.at(0).and_then(Json::as_usize);
+                let node = entry.at(1).and_then(Json::as_usize);
+                let pl = entry
+                    .at(2)
+                    .ok_or_else(|| anyhow!("bad exec_log entry"))
+                    .and_then(|p| parse_placement(p))?;
+                match (job, node) {
+                    (Some(job), Some(node))
+                        if job < jobs.len() && node < jobs[job].n_tasks() && pl.exec == k =>
+                    {
+                        log.push((TaskRef::new(job, node), pl));
+                    }
+                    _ => bail!("bad exec_log entry on executor {k}"),
+                }
+            }
+            exec_log.push(log);
+        }
+        let timelines = parse_interval_rows(
+            v.req("timelines").map_err(|e| anyhow!("{e}"))?,
+            "timelines",
+            n_exec,
+        )?
+        .into_iter()
+        .map(Timeline::from_intervals)
+        .collect();
+        let blackouts = parse_interval_rows(
+            v.req("blackouts").map_err(|e| anyhow!("{e}"))?,
+            "blackouts",
+            n_exec,
+        )?;
+        let down_json = v
+            .req("down_since")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("down_since must be an array"))?;
+        if down_json.len() != n_exec {
+            bail!("down_since disagrees with the executor count");
+        }
+        let mut down_since: Vec<Option<f64>> = Vec::with_capacity(n_exec);
+        for (k, d) in down_json.iter().enumerate() {
+            let d = match d {
+                Json::Null => None,
+                other => Some(
+                    other
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("down_since[{k}] must be a number or null"))?,
+                ),
+            };
+            cluster.set_available(k, d.is_none());
+            down_since.push(d);
+        }
+        let fj = v.req("faults").map_err(|e| anyhow!("{e}"))?;
+        let faults = FaultStats {
+            n_crashes: fj.req_usize("crashes").map_err(|e| anyhow!("{e}"))?,
+            n_straggles: fj.req_usize("straggles").map_err(|e| anyhow!("{e}"))?,
+            n_cancelled: fj.req_usize("cancelled").map_err(|e| anyhow!("{e}"))?,
+            n_requeued: fj.req_usize("requeued").map_err(|e| anyhow!("{e}"))?,
+            n_dup_survived: fj.req_usize("dup_survived").map_err(|e| anyhow!("{e}"))?,
+        };
+
+        // Recomputed caches: each is pinned to its scan by `validate`,
+        // so re-deriving them here is bit-exact.
+        let rank_up = jobs.iter().map(|j| ranks::rank_up(j, v_avg, c_avg)).collect();
+        let rank_down = jobs
+            .iter()
+            .map(|j| ranks::rank_down(j, v_avg, c_avg))
+            .collect();
+        let min_aft_cache = placements
+            .iter()
+            .map(|job| {
+                job.iter()
+                    .map(|copies| {
+                        copies
+                            .iter()
+                            .map(|p| p.finish)
+                            .fold(f64::INFINITY, f64::min)
+                    })
+                    .collect()
+            })
+            .collect();
+        let left_tasks = assigned
+            .iter()
+            .map(|j| j.iter().filter(|&&a| !a).count())
+            .collect();
+        let frontier = Frontier::rebuild(&jobs, &arrived, &assigned);
+
+        let state = SimState {
+            arrived,
+            assigned,
+            placements,
+            exec_log,
+            wall: v.req_f64("wall").map_err(|e| anyhow!("{e}"))?,
+            horizon: v.req_f64("horizon").map_err(|e| anyhow!("{e}"))?,
+            rank_up,
+            rank_down,
+            n_assigned: v.req_usize("n_assigned").map_err(|e| anyhow!("{e}"))?,
+            n_duplicates: v.req_usize("n_duplicates").map_err(|e| anyhow!("{e}"))?,
+            sched_mode: cluster.sched_mode,
+            timelines,
+            frontier,
+            min_aft_cache,
+            left_tasks,
+            left_work,
+            v_avg,
+            c_avg,
+            blackouts,
+            down_since,
+            reexec,
+            faults,
+            enc_log: Vec::new(),
+            enc_log_start: 0,
+            cluster,
+            jobs,
+        };
+        state
+            .validate()
+            .map_err(|e| anyhow!("restored state failed validation: {e}"))?;
+        Ok(state)
+    }
+}
+
+fn parse_f64s(v: &Json, what: &str) -> anyhow::Result<Vec<f64>> {
+    use anyhow::anyhow;
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what} must be an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| anyhow!("{what} entries must be numbers"))
+        })
+        .collect()
+}
+
+fn parse_bools(v: &Json, what: &str) -> anyhow::Result<Vec<bool>> {
+    use anyhow::anyhow;
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what} must be an array"))?
+        .iter()
+        .map(|x| {
+            x.as_bool()
+                .ok_or_else(|| anyhow!("{what} entries must be booleans"))
+        })
+        .collect()
+}
+
+fn parse_bool_rows(v: &Json, what: &str) -> anyhow::Result<Vec<Vec<bool>>> {
+    use anyhow::anyhow;
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what} must be an array"))?
+        .iter()
+        .map(|row| parse_bools(row, what))
+        .collect()
+}
+
+fn parse_interval_rows(v: &Json, what: &str, n: usize) -> anyhow::Result<Vec<Vec<(f64, f64)>>> {
+    use anyhow::{anyhow, bail};
+    let rows = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("{what} must be an array"))?;
+    if rows.len() != n {
+        bail!("{what} disagrees with the executor count");
+    }
+    rows.iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| anyhow!("{what} rows must be arrays"))?
+                .iter()
+                .map(|iv| {
+                    let s = iv.at(0).and_then(Json::as_f64);
+                    let f = iv.at(1).and_then(Json::as_f64);
+                    match (s, f) {
+                        (Some(s), Some(f)) => Ok((s, f)),
+                        _ => Err(anyhow!("bad {what} interval")),
+                    }
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -1369,6 +1885,143 @@ mod tests {
             evs.iter().any(|e| matches!(e, EncEvent::Invalidated)),
             "{evs:?}"
         );
+    }
+
+    // ---- snapshot restore ---------------------------------------------
+
+    /// Assert two states agree bitwise on everything a scheduler can
+    /// observe (and on the bookkeeping the service reports).
+    fn assert_states_bitwise_equal(a: &SimState, b: &SimState) {
+        assert_eq!(a.wall.to_bits(), b.wall.to_bits());
+        assert_eq!(a.horizon.to_bits(), b.horizon.to_bits());
+        assert_eq!(a.n_assigned, b.n_assigned);
+        assert_eq!(a.n_duplicates, b.n_duplicates);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(a.assigned, b.assigned);
+        assert_eq!(a.reexec, b.reexec);
+        assert_eq!(a.executable(), b.executable());
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for j in 0..a.jobs.len() {
+            assert_eq!(a.jobs[j].topo(), b.jobs[j].topo());
+            assert_eq!(
+                a.job_left_work(j).to_bits(),
+                b.job_left_work(j).to_bits(),
+                "left_work[{j}]"
+            );
+            assert_eq!(a.job_left_tasks(j), b.job_left_tasks(j));
+            for n in 0..a.jobs[j].n_tasks() {
+                let t = TaskRef::new(j, n);
+                assert_eq!(a.min_aft(t).to_bits(), b.min_aft(t).to_bits());
+                assert_eq!(a.rank_up[j][n].to_bits(), b.rank_up[j][n].to_bits());
+                assert_eq!(a.rank_down[j][n].to_bits(), b.rank_down[j][n].to_bits());
+                let (pa, pb) = (&a.placements[j][n], &b.placements[j][n]);
+                assert_eq!(pa.len(), pb.len());
+                for (x, y) in pa.iter().zip(pb) {
+                    assert!(x.same_booking(y), "placement mismatch at ({j},{n})");
+                }
+            }
+        }
+        for k in 0..a.cluster.len() {
+            assert_eq!(a.exec_available(k), b.exec_available(k));
+            assert_eq!(a.down_since(k), b.down_since(k));
+            assert_eq!(a.blackouts(k), b.blackouts(k));
+            let (ta, tb) = (a.timeline(k).intervals(), b.timeline(k).intervals());
+            assert_eq!(ta.len(), tb.len());
+            for (x, y) in ta.iter().zip(tb) {
+                assert_eq!(x.0.to_bits(), y.0.to_bits());
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+            assert_eq!(a.exec_log[k].len(), b.exec_log[k].len());
+            for ((t1, p1), (t2, p2)) in a.exec_log[k].iter().zip(&b.exec_log[k]) {
+                assert_eq!(t1, t2);
+                assert!(p1.same_booking(p2));
+            }
+        }
+    }
+
+    /// Snapshot → JSON text → restore is bitwise lossless, including
+    /// after duplicates, crashes (with blackouts and a down executor),
+    /// and straggles — and the restored state plans identically.
+    #[test]
+    fn snapshot_roundtrips_bitwise_through_text() {
+        let mut cluster = Cluster::homogeneous(3, 1.0, 10.0);
+        cluster.executors[1].speed = 2.0;
+        cluster.executors[2].speed = 0.7;
+        let j0 = Job::new(0, "chain", 0.0, vec![4.0, 6.0, 3.0], &[(0, 1, 20.0), (1, 2, 5.0)]);
+        let j1 = Job::new(1, "late", 6.5, vec![2.0, 2.0], &[(0, 1, 1.0)]);
+        let mut st = SimState::new(cluster, Workload::new(vec![j0, j1]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        st.apply(
+            TaskRef::new(0, 1),
+            Allocation::Duplicate { exec: 1, parent: 0 },
+        );
+        st.advance_wall(3.0);
+        st.apply_crash(0, 3.0, Some(9.0));
+        st.apply_straggle(1, 3.0, 1.5);
+        st.advance_wall(7.0);
+        st.mark_arrived(1);
+        st.apply(TaskRef::new(1, 0), Allocation::Direct { exec: 2 });
+        st.validate().unwrap();
+
+        let text = st.snapshot_json().to_string();
+        let back = Json::parse(&text).unwrap();
+        let cluster2 = {
+            let mut c = Cluster::homogeneous(3, 1.0, 10.0);
+            c.executors[1].speed = 2.0;
+            c.executors[2].speed = 0.7;
+            c
+        };
+        let restored = SimState::from_snapshot_json(cluster2, &back).unwrap();
+        assert_states_bitwise_equal(&st, &restored);
+
+        // Planning and applying from both states stays bit-identical.
+        for t in st.executable().to_vec() {
+            for k in 0..st.cluster.len() {
+                if !st.exec_available(k) {
+                    continue;
+                }
+                let (s1, f1) = st.plan_direct(t, k);
+                let (s2, f2) = restored.plan_direct(t, k);
+                assert_eq!(s1.to_bits(), s2.to_bits());
+                assert_eq!(f1.to_bits(), f2.to_bits());
+            }
+        }
+        let mut live = st.clone();
+        let mut rest = restored;
+        let t = live.executable()[0];
+        let f1 = live.apply(t, Allocation::Direct { exec: 1 });
+        let f2 = rest.apply(t, Allocation::Direct { exec: 1 });
+        assert_eq!(f1.to_bits(), f2.to_bits());
+        assert_states_bitwise_equal(&live, &rest);
+    }
+
+    /// Restoring against a cluster built from different flags fails
+    /// loudly instead of silently diverging.
+    #[test]
+    fn snapshot_restore_rejects_mismatched_cluster() {
+        let st = two_exec_state();
+        let snap = st.snapshot_json();
+        let wrong_count = Cluster::homogeneous(3, 1.0, 10.0);
+        assert!(SimState::from_snapshot_json(wrong_count, &snap).is_err());
+        let wrong_speed = Cluster::homogeneous(2, 1.0, 10.0);
+        assert!(
+            SimState::from_snapshot_json(wrong_speed, &snap).is_err(),
+            "executor 1's speed differs"
+        );
+        let wrong_mode = {
+            let mut c = Cluster::homogeneous(2, 1.0, 10.0);
+            c.executors[1].speed = 2.0;
+            c.with_sched_mode(SchedMode::GapAware)
+        };
+        assert!(SimState::from_snapshot_json(wrong_mode, &snap).is_err());
+        let right = {
+            let mut c = Cluster::homogeneous(2, 1.0, 10.0);
+            c.executors[1].speed = 2.0;
+            c
+        };
+        assert!(SimState::from_snapshot_json(right, &snap).is_ok());
     }
 
     #[test]

@@ -48,6 +48,22 @@ impl Timeline {
         &self.busy
     }
 
+    /// Rebuild a timeline from intervals previously observed via
+    /// [`Timeline::intervals`] (snapshot restore). Trusting the stored
+    /// list verbatim — rather than re-booking entries from the
+    /// execution log — keeps tie orderings bit-identical to the
+    /// process that wrote the snapshot. The caller guarantees the list
+    /// is sorted and non-overlapping; debug builds re-check.
+    pub fn from_intervals(busy: Vec<(f64, f64)>) -> Timeline {
+        debug_assert!(busy.windows(2).all(|w| {
+            w[0].0 <= w[1].0 && w[0].1 <= w[1].0 + EPS
+        }));
+        debug_assert!(busy
+            .iter()
+            .all(|&(s, f)| s.is_finite() && f.is_finite() && f >= s - EPS));
+        Timeline { busy }
+    }
+
     /// Total booked time (the utilization numerator).
     pub fn busy_time(&self) -> f64 {
         self.busy.iter().map(|&(s, f)| f - s).sum()

@@ -1,0 +1,423 @@
+//! Crash-recovery integration: the write-ahead journal, snapshots, and
+//! the restore path must rebuild the agent core bit-for-bit; duplicate
+//! request ids must stay exactly-once across a restart; and the server
+//! must keep answering — through poisoned cores, torn journal tails,
+//! and shutdown racing a flood of in-flight requests.
+
+use lachesis::cluster::Cluster;
+use lachesis::config::ClusterConfig;
+use lachesis::sched::HighRankUpScheduler;
+use lachesis::service::{
+    AgentServer, ClientConfig, Durability, Request, Response, ServiceClient, ServiceMode,
+};
+use lachesis::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lachesis-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A server whose scheduler and cluster are fully determined by
+/// `(executors, seed)` — reference, journaled, and restored instances
+/// built from the same pair are interchangeable.
+fn server(executors: usize, seed: u64) -> AgentServer {
+    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+    AgentServer::with_mode(
+        cluster,
+        Box::new(HighRankUpScheduler::new()),
+        ServiceMode::Batched,
+    )
+}
+
+fn journaled(
+    executors: usize,
+    seed: u64,
+    dir: &Path,
+    snapshot_every: u64,
+    restore: bool,
+) -> AgentServer {
+    server(executors, seed)
+        .with_durability(Durability {
+            dir: dir.to_path_buf(),
+            snapshot_every,
+            restore,
+        })
+        .unwrap()
+}
+
+/// A small deterministic tagged request stream: chain-DAG submits (some
+/// arriving in the future), heartbeats, failure reports with recovery
+/// times, and schedule calls.
+fn stream(jobs: usize, executors: usize) -> Vec<(String, Request)> {
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    for k in 0..jobs {
+        t += 1.5;
+        let n = 2 + k % 3;
+        reqs.push((
+            format!("s{k}-submit"),
+            Request::SubmitJob {
+                name: format!("job-{k}"),
+                // Every third job arrives in the future, exercising the
+                // pending heap across snapshot/restore.
+                arrival: if k % 3 == 2 { t + 4.0 } else { t },
+                computes: (0..n).map(|i| 2.0 + i as f64).collect(),
+                edges: (0..n - 1).map(|i| (i, i + 1, 1.0 + i as f64)).collect(),
+            },
+        ));
+        if k > 0 {
+            reqs.push((
+                format!("s{k}-hb"),
+                Request::TaskComplete {
+                    job: k - 1,
+                    node: 0,
+                    time: t,
+                },
+            ));
+        }
+        if k % 4 == 1 {
+            reqs.push((
+                format!("s{k}-fail"),
+                Request::ReportFailure {
+                    exec: k % executors,
+                    time: t,
+                    recovery: Some(t + 6.0),
+                },
+            ));
+        }
+        reqs.push((format!("s{k}-sched"), Request::Schedule { time: t }));
+    }
+    reqs
+}
+
+fn apply(server: &AgentServer, reqs: &[(String, Request)]) -> Vec<String> {
+    reqs.iter()
+        .map(|(id, req)| {
+            server
+                .handle_tagged(Some(id.as_str()), req.clone())
+                .to_json()
+                .to_string()
+        })
+        .collect()
+}
+
+/// The full core document (sim state, placements, pending/recovery
+/// heaps, dedup window) rendered to its canonical JSON string — the
+/// bitwise-equality yardstick for every test below.
+fn core_fingerprint(server: &AgentServer) -> String {
+    server.with_core(|core| core.snapshot_json().to_string())
+}
+
+#[test]
+fn kill_and_restore_matches_uninterrupted_reference() {
+    let dir = tmpdir("restore");
+    let reqs = stream(9, 6);
+    let kill_at = reqs.len() / 2;
+
+    let reference = server(6, 3);
+    let ref_acks = apply(&reference, &reqs);
+
+    // Every ack is released only after its journal record is fsynced, so
+    // dropping the server right after an ack is exactly a SIGKILL's view
+    // of the disk.
+    let first = journaled(6, 3, &dir, 5, false);
+    let pre_acks = apply(&first, &reqs[..kill_at]);
+    assert_eq!(pre_acks, ref_acks[..kill_at].to_vec());
+    drop(first);
+
+    let restored = journaled(6, 3, &dir, 5, true);
+    assert_eq!(
+        core_fingerprint(&restored),
+        {
+            let ref_at_kill = server(6, 3);
+            apply(&ref_at_kill, &reqs[..kill_at]);
+            core_fingerprint(&ref_at_kill)
+        },
+        "restored core must be bitwise-identical at the kill point"
+    );
+    let post_acks = apply(&restored, &reqs[kill_at..]);
+    assert_eq!(post_acks, ref_acks[kill_at..].to_vec());
+    assert_eq!(core_fingerprint(&restored), core_fingerprint(&reference));
+    assert_eq!(
+        restored.handle(Request::Status).to_json().to_string(),
+        reference.handle(Request::Status).to_json().to_string(),
+        "final status must be byte-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_journal_tail_is_discarded_on_restore() {
+    let dir = tmpdir("torn");
+    let reqs = stream(6, 5);
+    let reference = server(5, 9);
+    apply(&reference, &reqs);
+
+    let first = journaled(5, 9, &dir, 0, false);
+    apply(&first, &reqs);
+    drop(first);
+
+    // A crash mid-append leaves a torn, newline-less tail. Restore must
+    // truncate it and come back with every acknowledged record intact.
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(dir.join(lachesis::service::journal::JOURNAL_FILE))
+        .unwrap();
+    f.write_all(b"{\"seq\":9999,\"req\":{\"type\":\"schedu").unwrap();
+    drop(f);
+
+    let restored = journaled(5, 9, &dir, 0, true);
+    assert_eq!(core_fingerprint(&restored), core_fingerprint(&reference));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn duplicate_request_id_is_exactly_once_across_restart() {
+    let dir = tmpdir("dedup");
+    let submit = Request::SubmitJob {
+        name: "only-once".to_string(),
+        arrival: 0.0,
+        computes: vec![3.0, 1.0],
+        edges: vec![(0, 1, 2.0)],
+    };
+    let first = journaled(4, 1, &dir, 1, false);
+    let ack = first.handle_tagged(Some("dup-1"), submit.clone()).to_json().to_string();
+    drop(first);
+
+    let restored = journaled(4, 1, &dir, 1, true);
+    let retry = restored
+        .handle_tagged(Some("dup-1"), submit)
+        .to_json()
+        .to_string();
+    assert_eq!(retry, ack, "retry must be answered byte-identically");
+    match restored.handle(Request::Status) {
+        Response::Status { jobs, deduped, .. } => {
+            assert_eq!(jobs, 1, "the job must not be applied twice");
+            assert_eq!(deduped, 1, "the retry must be counted as a duplicate");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reopening_a_used_journal_without_restore_is_refused() {
+    let dir = tmpdir("guard");
+    let first = journaled(3, 2, &dir, 0, false);
+    apply(&first, &stream(2, 3));
+    drop(first);
+    // Appending new sequence numbers without replaying the old ones
+    // would poison any later recovery — the server must refuse.
+    let err = server(3, 2)
+        .with_durability(Durability {
+            dir: dir.clone(),
+            snapshot_every: 0,
+            restore: false,
+        })
+        .err()
+        .expect("reopening without --restore must fail");
+    assert!(format!("{err:#}").contains("--restore"), "got: {err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hand-rolled property test: random interleavings of submit /
+/// schedule / task_complete / report_failure, a crash at a random
+/// point, snapshots at a random cadence — the restored core must be
+/// bitwise-equal to a reference that never crashed, for every seed.
+#[test]
+fn replay_property_random_interleavings() {
+    for seed in 0..6u64 {
+        let dir = tmpdir(&format!("prop{seed}"));
+        let executors = 4 + (seed as usize % 3);
+        let mut rng = Rng::new(0xC0FFEE ^ (seed * 7919));
+        let mut reqs: Vec<(String, Request)> = Vec::new();
+        let mut t = 0.0;
+        let mut n_jobs = 0usize;
+        for i in 0..40 {
+            t += rng.exponential(1.0);
+            let roll = rng.next_f64();
+            let req = if roll < 0.4 || n_jobs == 0 {
+                let n = 1 + rng.below(4);
+                let job = Request::SubmitJob {
+                    name: format!("p{i}"),
+                    arrival: if rng.next_f64() < 0.3 {
+                        t + 5.0 * rng.next_f64()
+                    } else {
+                        t
+                    },
+                    computes: (0..n).map(|_| 1.0 + 3.0 * rng.next_f64()).collect(),
+                    edges: (0..n.saturating_sub(1))
+                        .map(|u| (u, u + 1, 5.0 * rng.next_f64()))
+                        .collect(),
+                };
+                n_jobs += 1;
+                job
+            } else if roll < 0.7 {
+                Request::Schedule { time: t }
+            } else if roll < 0.9 {
+                Request::TaskComplete {
+                    job: rng.below(n_jobs),
+                    node: 0,
+                    time: t,
+                }
+            } else {
+                Request::ReportFailure {
+                    exec: rng.below(executors),
+                    time: t,
+                    recovery: if rng.next_f64() < 0.5 {
+                        Some(t + 3.0 * rng.next_f64())
+                    } else {
+                        None
+                    },
+                }
+            };
+            reqs.push((format!("p{seed}-{i}"), req));
+        }
+        let kill_at = 1 + rng.below(reqs.len() - 1);
+        let snapshot_every = rng.below(5) as u64; // 0 = journal-only
+
+        let reference = server(executors, seed);
+        let ref_acks = apply(&reference, &reqs);
+
+        let first = journaled(executors, seed, &dir, snapshot_every, false);
+        apply(&first, &reqs[..kill_at]);
+        drop(first);
+
+        let restored = journaled(executors, seed, &dir, snapshot_every, true);
+        let post = apply(&restored, &reqs[kill_at..]);
+        assert_eq!(
+            post,
+            ref_acks[kill_at..].to_vec(),
+            "seed {seed}: post-restore responses diverged (kill_at {kill_at}, snap {snapshot_every})"
+        );
+        assert_eq!(
+            core_fingerprint(&restored),
+            core_fingerprint(&reference),
+            "seed {seed}: restored core not bitwise-equal (kill_at {kill_at}, snap {snapshot_every})"
+        );
+        // The restored schedule function itself must agree, not just the
+        // state: one more decision at a later time, byte-for-byte.
+        let probe = Request::Schedule { time: t + 10.0 };
+        assert_eq!(
+            restored.handle(probe.clone()).to_json().to_string(),
+            reference.handle(probe).to_json().to_string(),
+            "seed {seed}: post-restore decision diverged"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn poisoned_core_still_serves_status_and_shutdown() {
+    let agent = Arc::new(server(4, 8));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = {
+        let agent = Arc::clone(&agent);
+        std::thread::spawn(move || agent.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()))
+    };
+    let addr = rx.recv().unwrap().to_string();
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    assert!(matches!(
+        client.call(&Request::Schedule { time: 0.0 }).unwrap(),
+        Response::Assignments(_)
+    ));
+
+    // Panic while holding the core lock: the mutex is now poisoned.
+    let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        agent.with_core(|_| panic!("deliberate poison"))
+    }));
+    assert!(poison.is_err());
+
+    // Reads must still be answered (batched mode serves them from the
+    // lock-free snapshot), mutations must degrade to an error response
+    // rather than killing the connection thread, and shutdown must
+    // still take the whole server down cleanly.
+    assert!(matches!(
+        client.call(&Request::Status).unwrap(),
+        Response::Status { .. }
+    ));
+    match client.call(&Request::Schedule { time: 1.0 }).unwrap() {
+        Response::Error(msg) => assert!(msg.contains("poisoned"), "got: {msg}"),
+        other => panic!("expected an error for a mutation on a poisoned core, got {other:?}"),
+    }
+    assert!(matches!(
+        client.call(&Request::Shutdown).unwrap(),
+        Response::Ok { .. }
+    ));
+    srv.join().unwrap().unwrap();
+}
+
+#[test]
+fn flood_then_shutdown_answers_every_in_flight_request() {
+    let agent = Arc::new(server(4, 4));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = {
+        let agent = Arc::clone(&agent);
+        std::thread::spawn(move || agent.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()))
+    };
+    let addr = rx.recv().unwrap().to_string();
+
+    // Flood from several connections while shutdown races the drain: every
+    // request must resolve promptly — applied, refused with an explicit
+    // shutting-down error, or a closed connection. Never a hang (the read
+    // deadline would surface one as a timeout error instead).
+    let cfg = ClientConfig {
+        read_timeout: Duration::from_secs(10),
+        retries: 0,
+        ..ClientConfig::default()
+    };
+    let floods: Vec<_> = (0..6)
+        .map(|f| {
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || -> (usize, usize) {
+                let Ok(mut client) = ServiceClient::connect_with(&addr, cfg) else {
+                    return (0, 0);
+                };
+                let (mut applied, mut refused) = (0, 0);
+                for k in 0..200 {
+                    match client.call(&Request::SubmitJob {
+                        name: format!("flood-{f}-{k}"),
+                        arrival: 0.0,
+                        computes: vec![1.0],
+                        edges: vec![],
+                    }) {
+                        Ok(Response::Ok { .. }) => applied += 1,
+                        Ok(Response::Error(msg)) => {
+                            assert!(
+                                msg.contains("shutting down"),
+                                "unexpected error under shutdown: {msg}"
+                            );
+                            refused += 1;
+                            break;
+                        }
+                        Ok(other) => panic!("unexpected {other:?}"),
+                        // Connection torn down by shutdown — also a
+                        // resolved outcome.
+                        Err(_) => break,
+                    }
+                }
+                (applied, refused)
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    let mut shut = ServiceClient::connect(&addr).unwrap();
+    shut.call(&Request::Shutdown).unwrap();
+    let mut total_applied = 0;
+    for h in floods {
+        let (applied, _refused) = h.join().unwrap();
+        total_applied += applied;
+    }
+    srv.join().unwrap().unwrap();
+    // The flood must have made real progress before the shutdown landed.
+    assert!(total_applied > 0, "flood never applied anything");
+}
