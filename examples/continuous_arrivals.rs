@@ -3,7 +3,11 @@
 //! sensitivity sweep over the arrival rate (an extension experiment the
 //! paper motivates but does not plot).
 //!
-//!     cargo run --release --example continuous_arrivals
+//!     cargo run --release --example continuous_arrivals [-- --net tree:5x10]
+//!
+//! `--net` selects the network topology (`flat` | `tree:RxW` |
+//! `fat-tree:K`) so the continuous-mode comparison can be repeated on a
+//! rack-structured cluster.
 
 use lachesis::cluster::Cluster;
 use lachesis::config::{Arrival, ClusterConfig, WorkloadConfig};
@@ -37,10 +41,14 @@ fn make_scheds(params: &[f32]) -> Vec<Box<dyn Scheduler>> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let cfg = ClusterConfig::default();
+    let args = lachesis::util::cli::Args::from_env()?;
+    let mut cfg = ClusterConfig::default();
+    cfg.net = lachesis::net::NetConfig::parse(args.opt_or("net", "flat"))?;
+    cfg.validate()?;
     let seeds: Vec<u64> = (0..4).collect();
     let params = lachesis_params();
 
+    println!("network topology: {}", cfg.net.topology_str());
     println!("== Fig 7a slice: makespan at mean inter-arrival 45 s ==");
     println!("{:<18} {:>12} {:>10}", "algorithm", "avg makespan", "avg JCT");
     for mut sched in make_scheds(&params) {

@@ -4,7 +4,9 @@ rust runtime validates them against `artifacts/meta.json` at load time.
 """
 
 # Raw node feature count (rust: policy::features::NODE_FEATURES).
-F = 12
+# 12 paper features + 3 data-locality features (rack-local parent-data
+# fraction, cross-rack bytes pending, dominant rack id).
+F = 15
 # Embedding width.
 E = 16
 # Hidden width of the g/f MLPs.

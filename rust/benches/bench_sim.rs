@@ -142,6 +142,66 @@ fn main() {
         });
     }
 
+    // Network-model overhead: under `flat` the matrix-backed
+    // `transfer_time` must price exactly like the old scalar division,
+    // and the CI gate holds its cost to < 5% over the inline formula.
+    // Interleaved like the fault gate so runner noise hits both sides.
+    {
+        let cluster = Cluster::heterogeneous(&cfg, 5);
+        let comm = cfg.comm_mbps;
+        let n = cluster.len();
+        let pairs: Vec<(usize, usize)> =
+            (0..n).flat_map(|i| (0..n).map(move |j| (i, j))).collect();
+        let lookup_pass = |cluster: &Cluster| {
+            let mut acc = 0.0f64;
+            for &(i, j) in &pairs {
+                acc += cluster.transfer_time(black_box(64.0), i, j);
+            }
+            black_box(acc)
+        };
+        let scalar_pass = || {
+            let mut acc = 0.0f64;
+            for &(i, j) in &pairs {
+                // The pre-topology model: free on-executor, data/c̄ else.
+                acc += if i == j {
+                    0.0
+                } else {
+                    black_box(64.0) / black_box(comm)
+                };
+            }
+            black_box(acc)
+        };
+        let t0 = Instant::now();
+        lookup_pass(&cluster);
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        // Hard CI gate on the ratio: keep enough interleaved pairs that
+        // short-sample variance cannot dominate at tiny budgets.
+        let iters = ((b.budget_secs * 0.1 / once).ceil() as usize).clamp(500, 500_000);
+        let (mut t_net, mut t_scalar) = (0.0f64, 0.0f64);
+        for _ in 0..iters {
+            let t = Instant::now();
+            lookup_pass(&cluster);
+            t_net += t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            scalar_pass();
+            t_scalar += t.elapsed().as_secs_f64();
+        }
+        b.note("net_flat_overhead_ratio", t_net / t_scalar);
+    }
+
+    // A rack-structured run for the perf trajectory: same workload scale
+    // as the flat batch20 cases, with tree-topology transfer pricing.
+    {
+        let mut tree_cfg = cfg.clone();
+        tree_cfg.net = lachesis::net::NetConfig::tree(5, 10);
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 6).generate();
+        let cluster = Cluster::heterogeneous(&tree_cfg, 6);
+        b.case("sim_heft_tree5x10/batch20", || {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+        });
+    }
+
     // Learned policy (rust backend) at moderate scale.
     let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 3).generate();
     let cluster = Cluster::heterogeneous(&cfg, 3);

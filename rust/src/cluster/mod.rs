@@ -2,10 +2,14 @@
 //!
 //! Executors differ in processing speed `v_k` (sampled from an Intel CPU
 //! frequency table, 2.1–3.6 GHz, per §5.2). Data transmission between
-//! *distinct* executors runs at a uniform speed `c` (paper simplification);
-//! transfers within one executor are free.
+//! *distinct* executors is priced by a [`NetworkModel`]: the default
+//! `flat` topology reproduces the paper's uniform speed `c` bitwise,
+//! while `tree`/`fat-tree` topologies give rack-local pairs more
+//! bandwidth than cross-rack ones (see `rust/src/net/`). Transfers
+//! within one executor are free in every topology.
 
 use crate::config::{ClusterConfig, SchedMode};
+use crate::net::{NetConfig, NetworkModel};
 use crate::util::rng::{Rng, STREAM_CLUSTER};
 
 /// One computing executor.
@@ -24,11 +28,16 @@ pub struct Executor {
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub executors: Vec<Executor>,
-    /// Uniform inter-executor transmission speed in MB/s.
+    /// Base inter-executor transmission speed in MB/s (the uniform
+    /// speed under `flat`; the reference link rate other topologies
+    /// scale from).
     pub comm_mbps: f64,
     /// How executor time is booked by the simulator (append-compat vs
     /// gap-aware insertion); threaded from [`ClusterConfig::sched_mode`].
     pub sched_mode: SchedMode,
+    /// Compiled per-pair bandwidth/latency lookups; rebuilt on cluster
+    /// change via [`Cluster::with_net`].
+    pub net: NetworkModel,
 }
 
 impl Cluster {
@@ -48,10 +57,12 @@ impl Cluster {
             executors,
             comm_mbps: cfg.comm_mbps,
             sched_mode: cfg.sched_mode,
+            net: NetworkModel::build(&cfg.net, cfg.comm_mbps, cfg.n_executors),
         }
     }
 
     /// A homogeneous cluster (Decima's setting; used in ablations/tests).
+    /// Always flat — topology-aware tests go through [`Cluster::with_net`].
     pub fn homogeneous(n: usize, speed: f64, comm_mbps: f64) -> Cluster {
         assert!(n > 0 && speed > 0.0 && comm_mbps > 0.0);
         Cluster {
@@ -64,6 +75,7 @@ impl Cluster {
                 .collect(),
             comm_mbps,
             sched_mode: SchedMode::Append,
+            net: NetworkModel::build(&NetConfig::flat(), comm_mbps, n),
         }
     }
 
@@ -71,6 +83,13 @@ impl Cluster {
     /// gap-aware bench comparisons).
     pub fn with_sched_mode(mut self, mode: SchedMode) -> Cluster {
         self.sched_mode = mode;
+        self
+    }
+
+    /// Builder-style topology override: recompiles the per-pair lookup
+    /// matrices for this cluster's size and base speed.
+    pub fn with_net(mut self, cfg: &NetConfig) -> Cluster {
+        self.net = NetworkModel::build(cfg, self.comm_mbps, self.len());
         self
     }
 
@@ -137,40 +156,54 @@ impl Cluster {
     /// Ties keep the historical resolution (last maximum wins), so the
     /// zero-fault answer is unchanged.
     pub fn fastest(&self) -> usize {
+        // total_cmp: speeds are validated finite, but a NaN smuggled in
+        // through a hand-built cluster must not panic the scheduler
+        // (same hardening as the event-queue ordering).
         (0..self.len())
             .filter(|&k| self.executors[k].available)
-            .max_by(|&a, &b| self.speed(a).partial_cmp(&self.speed(b)).unwrap())
+            .max_by(|&a, &b| self.speed(a).total_cmp(&self.speed(b)))
             .unwrap_or_else(|| {
                 (0..self.len())
-                    .max_by(|&a, &b| self.speed(a).partial_cmp(&self.speed(b)).unwrap())
+                    .max_by(|&a, &b| self.speed(a).total_cmp(&self.speed(b)))
                     .unwrap()
             })
     }
 
     /// Transmission speed `c_ij` between executors (MB/s); infinite within
-    /// a single executor (data already local, paper constraint 3).
+    /// a single executor (data already local, paper constraint 3). Under
+    /// `flat` this is the uniform `comm_mbps`; other topologies return
+    /// the pair's effective bandwidth.
     pub fn comm_speed(&self, from: usize, to: usize) -> f64 {
-        if from == to {
-            f64::INFINITY
-        } else {
-            self.comm_mbps
-        }
+        self.net.bandwidth(from, to)
     }
 
     /// Average inter-executor transmission speed `c̄` (for the rank
-    /// features). With the paper's uniform model this is just `comm_mbps`.
+    /// features): the topology's mean off-diagonal bandwidth, which is
+    /// exactly `comm_mbps` under the paper's uniform (`flat`) model.
     pub fn c_avg(&self) -> f64 {
-        self.comm_mbps
+        self.net.c_avg()
     }
 
     /// Transfer time of `data` MB from executor `from` to `to` (Eq 2's
-    /// `e_pi / c_pj` term): zero when co-located.
+    /// `e_pi / c_pj` term): zero when co-located, otherwise latency +
+    /// size over the pair's effective bandwidth.
     pub fn transfer_time(&self, data: f64, from: usize, to: usize) -> f64 {
-        if from == to || data == 0.0 {
-            0.0
-        } else {
-            data / self.comm_mbps
-        }
+        self.net.transfer_time(data, from, to)
+    }
+
+    /// Rack id of executor `k` (0 for every executor under `flat`).
+    pub fn rack_of(&self, k: usize) -> usize {
+        self.net.rack_of(k)
+    }
+
+    /// Number of racks in the topology (1 under `flat`).
+    pub fn n_racks(&self) -> usize {
+        self.net.n_racks()
+    }
+
+    /// Do two executors share a rack (always true under `flat`)?
+    pub fn same_rack(&self, a: usize, b: usize) -> bool {
+        self.net.same_rack(a, b)
     }
 }
 
@@ -217,6 +250,37 @@ mod tests {
         assert_eq!(c.transfer_time(500.0, 1, 1), 0.0);
         assert_eq!(c.transfer_time(0.0, 0, 1), 0.0);
         assert!(c.comm_speed(0, 0).is_infinite());
+        assert_eq!(c.c_avg(), 100.0);
+        assert_eq!(c.n_racks(), 1);
+        assert!(c.same_rack(0, 2));
+    }
+
+    #[test]
+    fn with_net_compiles_topology() {
+        let c = Cluster::homogeneous(8, 2.0, 100.0).with_net(&NetConfig::tree(2, 4));
+        assert_eq!(c.n_racks(), 2);
+        assert_eq!(c.rack_of(3), 0);
+        assert_eq!(c.rack_of(4), 1);
+        assert!(c.transfer_time(100.0, 0, 1) < c.transfer_time(100.0, 0, 4));
+        // Intra-executor transfers stay free in every topology.
+        assert_eq!(c.transfer_time(100.0, 5, 5), 0.0);
+        // c̄ reflects the topology mix, not the scalar base.
+        assert_ne!(c.c_avg(), 100.0);
+        assert!(c.c_avg().is_finite() && c.c_avg() > 0.0);
+    }
+
+    #[test]
+    fn fastest_survives_nan_speed() {
+        // A NaN speed must not panic fastest(); total_cmp orders NaN
+        // above every finite value, so the finite argmax still wins
+        // when the NaN executor is filtered out by availability.
+        let mut c = Cluster::homogeneous(3, 2.0, 10.0);
+        c.executors[1].speed = f64::NAN;
+        c.set_available(1, false);
+        assert_eq!(c.fastest(), 2, "ties keep last-max resolution");
+        // Even with the NaN executor live the call must not panic.
+        c.set_available(1, true);
+        let _ = c.fastest();
     }
 
     #[test]

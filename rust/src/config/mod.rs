@@ -6,6 +6,7 @@
 //! settings (50 executors, Intel 2.1–3.6 GHz frequency table, TPC-H
 //! workloads at 2/5/10/50/80/100 GB, Poisson arrivals with 45 s mean).
 
+use crate::net::NetConfig;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -52,11 +53,15 @@ pub struct ClusterConfig {
     /// Executor speed table in GHz; speeds are sampled uniformly from this
     /// grid (paper: Intel CPU frequencies 2.1–3.6 GHz).
     pub freq_table: Vec<f64>,
-    /// Uniform data transmission speed between distinct executors, MB/s
-    /// (paper assumes identical transfer speed between executors).
+    /// Base data transmission speed between distinct executors, MB/s
+    /// (the uniform speed under the paper's `flat` topology; the
+    /// reference link rate other topologies scale from).
     pub comm_mbps: f64,
     /// Executor-time booking mode (append-compat vs gap-aware insertion).
     pub sched_mode: SchedMode,
+    /// Network topology (`flat` | `tree:RxW` | `fat-tree:K`); `flat`
+    /// reproduces the paper's scalar comm model bit-identically.
+    pub net: NetConfig,
 }
 
 impl Default for ClusterConfig {
@@ -68,6 +73,7 @@ impl Default for ClusterConfig {
             freq_table,
             comm_mbps: 100.0,
             sched_mode: SchedMode::Append,
+            net: NetConfig::flat(),
         }
     }
 }
@@ -93,6 +99,7 @@ impl ClusterConfig {
         if self.comm_mbps <= 0.0 {
             bail!("communication speed must be positive");
         }
+        self.net.validate(self.n_executors)?;
         Ok(())
     }
 
@@ -102,6 +109,15 @@ impl ClusterConfig {
             ("freq_table", Json::from(self.freq_table.clone())),
             ("comm_mbps", Json::from(self.comm_mbps)),
             ("sched_mode", Json::from(self.sched_mode.as_str())),
+            (
+                "net",
+                Json::from_pairs(vec![
+                    ("topology", Json::from(self.net.topology_str())),
+                    ("rack_mult", Json::from(self.net.rack_mult)),
+                    ("oversub", Json::from(self.net.oversub)),
+                    ("hop_latency", Json::from(self.net.hop_latency)),
+                ]),
+            ),
         ])
     }
 
@@ -120,11 +136,33 @@ impl ClusterConfig {
             Some("gap") | Some("gap_aware") => SchedMode::GapAware,
             Some(other) => bail!("unknown sched_mode '{other}' (append|gap)"),
         };
+        // Absent in pre-topology configs: default to the paper's flat
+        // (scalar) network so old experiment files stay reproducible.
+        // Accepted as either a bare topology string ("tree:4x8") or an
+        // object with explicit knobs.
+        let net = match v.get("net") {
+            None => NetConfig::flat(),
+            Some(Json::Str(s)) => NetConfig::parse(s)?,
+            Some(obj) => {
+                let mut net = NetConfig::parse(obj.req_str("topology")?)?;
+                if let Some(x) = obj.get("rack_mult").and_then(Json::as_f64) {
+                    net.rack_mult = x;
+                }
+                if let Some(x) = obj.get("oversub").and_then(Json::as_f64) {
+                    net.oversub = x;
+                }
+                if let Some(x) = obj.get("hop_latency").and_then(Json::as_f64) {
+                    net.hop_latency = x;
+                }
+                net
+            }
+        };
         let cfg = ClusterConfig {
             n_executors: v.req_usize("n_executors")?,
             freq_table,
             comm_mbps: v.req_f64("comm_mbps")?,
             sched_mode,
+            net,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -279,6 +317,13 @@ pub struct FaultConfig {
     /// Incidents are pre-generated over `[0, horizon]` simulated seconds;
     /// a schedule extending past the horizon sees no further faults.
     pub horizon: f64,
+    /// Per-rack correlated-failure rate (incidents per simulated second
+    /// per rack): each incident downs *every* executor in the rack at
+    /// once (ToR switch / PDU failure). `0.0` (the default) disables the
+    /// mode and keeps plans bit-identical to pre-topology ones. Rack
+    /// incidents are always transient — a permanent whole-rack loss
+    /// would leave single-rack topologies unschedulable.
+    pub rack_rate: f64,
 }
 
 impl Default for FaultConfig {
@@ -292,6 +337,7 @@ impl Default for FaultConfig {
             straggler_prob: 0.25,
             slowdown: 3.0,
             horizon: 10_000.0,
+            rack_rate: 0.0,
         }
     }
 }
@@ -317,7 +363,7 @@ impl FaultConfig {
 
     /// True when the plan this config generates is always empty.
     pub fn is_none(&self) -> bool {
-        self.crash_rate <= 0.0
+        self.crash_rate <= 0.0 && self.rack_rate <= 0.0
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -339,6 +385,9 @@ impl FaultConfig {
         if self.horizon <= 0.0 || !self.horizon.is_finite() {
             bail!("horizon must be positive and finite");
         }
+        if !self.rack_rate.is_finite() || self.rack_rate < 0.0 {
+            bail!("rack_rate must be finite and non-negative");
+        }
         Ok(())
     }
 
@@ -350,6 +399,7 @@ impl FaultConfig {
             ("straggler_prob", Json::from(self.straggler_prob)),
             ("slowdown", Json::from(self.slowdown)),
             ("horizon", Json::from(self.horizon)),
+            ("rack_rate", Json::from(self.rack_rate)),
         ])
     }
 
@@ -361,6 +411,8 @@ impl FaultConfig {
             straggler_prob: v.req_f64("straggler_prob")?,
             slowdown: v.req_f64("slowdown")?,
             horizon: v.req_f64("horizon")?,
+            // Absent in pre-topology fault configs.
+            rack_rate: v.req_f64("rack_rate").unwrap_or(0.0),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -540,6 +592,54 @@ mod tests {
         ]);
         let c3 = ClusterConfig::from_json(&legacy).unwrap();
         assert_eq!(c3.sched_mode, SchedMode::Append);
+    }
+
+    #[test]
+    fn net_roundtrip_and_legacy_default() {
+        use crate::net::NetTopology;
+        let mut c = ClusterConfig::with_executors(8);
+        c.net = NetConfig::tree(2, 4);
+        c.net.oversub = 3.0;
+        let c2 = ClusterConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.net, c.net);
+        // Pre-topology config files (no net key) default to flat.
+        let legacy = Json::from_pairs(vec![
+            ("n_executors", Json::from(2usize)),
+            ("freq_table", Json::from(vec![2.0])),
+            ("comm_mbps", Json::from(10.0)),
+        ]);
+        assert!(ClusterConfig::from_json(&legacy).unwrap().net.is_flat());
+        // A bare topology string is accepted for hand-written configs.
+        let terse = Json::from_pairs(vec![
+            ("n_executors", Json::from(8usize)),
+            ("freq_table", Json::from(vec![2.0])),
+            ("comm_mbps", Json::from(10.0)),
+            ("net", Json::from("fat-tree:4")),
+        ]);
+        let c3 = ClusterConfig::from_json(&terse).unwrap();
+        assert_eq!(c3.net.topology, NetTopology::FatTree { k: 4 });
+        // Over-capacity topologies are rejected by validate().
+        let mut bad = ClusterConfig::with_executors(9);
+        bad.net = NetConfig::tree(2, 4);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fault_rack_rate_roundtrip_and_legacy() {
+        let mut f = FaultConfig::none();
+        f.rack_rate = 2e-3;
+        assert!(!f.is_none(), "rack-only faults still produce a plan");
+        let f2 = FaultConfig::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, f2);
+        // Pre-topology fault JSON (no rack_rate key) defaults to 0.
+        let mut j = FaultConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("rack_rate");
+        }
+        assert_eq!(FaultConfig::from_json(&j).unwrap().rack_rate, 0.0);
+        let mut bad = FaultConfig::default();
+        bad.rack_rate = -1.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -724,6 +724,256 @@ pub fn fault_sweep(
     Ok(out)
 }
 
+/// The locality-sweep scheduler set: list-scheduling heuristics with and
+/// without duplication plus the learned policy.
+pub const LOCALITY_ALGOS: [&str; 5] = [
+    "FIFO-DEFT",
+    "HighRankUp-DEFT",
+    "HEFT",
+    "TDCA",
+    "Lachesis",
+];
+
+/// The topologies the locality sweep compares on the default 50-executor
+/// cluster: the paper's uniform model, a 5-rack tree, and an 8-ary
+/// fat-tree (capacity 128).
+pub const LOCALITY_NETS: [&str; 3] = ["flat", "tree:5x10", "fat-tree:8"];
+
+/// Cross-rack traffic of a finished schedule: for every parent→child
+/// edge whose child has a primary placement, the edge's bytes count as
+/// cross-rack when *no* copy of the parent (primary or duplicate) shares
+/// the child's rack — the transfer must cross an uplink. Zero under
+/// `flat` (one rack).
+fn cross_rack_mb(state: &crate::sim::SimState) -> f64 {
+    let mut mb = 0.0f64;
+    for (ji, job) in state.jobs.iter().enumerate() {
+        for node in 0..job.n_tasks() {
+            let Some(pl) = state.placements[ji][node].iter().find(|p| !p.duplicate) else {
+                continue;
+            };
+            for e in &job.parents[node] {
+                let copies = &state.placements[ji][e.other];
+                if !copies.is_empty()
+                    && !copies
+                        .iter()
+                        .any(|pc| state.cluster.same_rack(pc.exec, pl.exec))
+                {
+                    mb += e.data;
+                }
+            }
+        }
+    }
+    mb
+}
+
+/// Topology-locality sweep: every scheduler runs the same workloads on
+/// the same cluster (speeds depend on the seed alone, so they are
+/// identical across topologies) under each of [`LOCALITY_NETS`], and the
+/// figure reports mean makespan, duplicate count, cross-rack traffic,
+/// and how many primary placements moved relative to the flat run —
+/// the direct evidence that topology awareness changes decisions.
+pub fn locality(
+    src: &PolicySource,
+    jobs: usize,
+    seeds: usize,
+    threads: usize,
+) -> Result<String> {
+    let nets: Vec<crate::net::NetConfig> = LOCALITY_NETS
+        .iter()
+        .map(|s| crate::net::NetConfig::parse(s))
+        .collect::<Result<Vec<_>>>()?;
+    let ccfg_base = ClusterConfig::default();
+    let seed_list: Vec<u64> = (0..seeds as u64).map(|s| 7000 + s).collect();
+    // Workloads are shared per seed: the topology must not change the
+    // workload, or the comparison would be confounded.
+    let workloads: Vec<crate::workload::Workload> = seed_list
+        .iter()
+        .map(|&seed| WorkloadGenerator::new(WorkloadConfig::large_batch(jobs), seed).generate())
+        .collect();
+    struct LocCell<'a> {
+        net: usize,
+        seed: u64,
+        algo: &'a str,
+        workload: usize,
+    }
+    let mut cells: Vec<LocCell> = Vec::new();
+    for net in 0..nets.len() {
+        for (wi, &seed) in seed_list.iter().enumerate() {
+            for &algo in &LOCALITY_ALGOS {
+                cells.push(LocCell {
+                    net,
+                    seed,
+                    algo,
+                    workload: wi,
+                });
+            }
+        }
+    }
+    struct LocResult {
+        makespan: f64,
+        duplicates: usize,
+        cross_mb: f64,
+        /// Primary executor per task, in (job, node) scan order — the
+        /// placement signature compared across topologies.
+        primaries: Vec<usize>,
+    }
+    let workloads = &workloads[..];
+    let nets_ref = &nets[..];
+    let results = par_indexed(&cells, threads, |c| {
+        let mut ccfg = ccfg_base.clone();
+        ccfg.net = nets_ref[c.net].clone();
+        let cluster = Cluster::heterogeneous(&ccfg, c.seed);
+        let mut sched = build_scheduler(c.algo, src, c.seed)?;
+        let mut sim = Simulator::new(cluster, workloads[c.workload].clone());
+        let report = sim
+            .run(sched.as_mut())
+            .with_context(|| format!("{} on {} seed {}", c.algo, LOCALITY_NETS[c.net], c.seed))?;
+        sim.state
+            .validate()
+            .with_context(|| format!("{} on {} seed {}", c.algo, LOCALITY_NETS[c.net], c.seed))?;
+        let mut primaries = Vec::new();
+        for (ji, job) in sim.state.jobs.iter().enumerate() {
+            for node in 0..job.n_tasks() {
+                let exec = sim.state.placements[ji][node]
+                    .iter()
+                    .find(|p| !p.duplicate)
+                    .map(|p| p.exec)
+                    .unwrap_or(usize::MAX);
+                primaries.push(exec);
+            }
+        }
+        Ok(LocResult {
+            makespan: report.makespan,
+            duplicates: report.n_duplicates,
+            cross_mb: cross_rack_mb(&sim.state),
+            primaries,
+        })
+    })?;
+
+    // Aggregate per (algo, net); placement diffs compare each topology
+    // cell to the flat cell of the same (algo, seed).
+    let cell_at = |net: usize, seed: u64, algo: &str| -> Option<&LocResult> {
+        cells
+            .iter()
+            .position(|c| c.net == net && c.seed == seed && c.algo == algo)
+            .map(|i| &results[i])
+    };
+    struct Agg {
+        makespan: Vec<f64>,
+        duplicates: usize,
+        cross_mb: f64,
+        moved: usize,
+    }
+    let mut agg: Vec<((String, usize), Agg)> = Vec::new();
+    for (c, r) in cells.iter().zip(&results) {
+        let key = (c.algo.to_string(), c.net);
+        let idx = match agg.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                agg.push((
+                    key,
+                    Agg {
+                        makespan: Vec::new(),
+                        duplicates: 0,
+                        cross_mb: 0.0,
+                        moved: 0,
+                    },
+                ));
+                agg.len() - 1
+            }
+        };
+        let slot = &mut agg[idx].1;
+        slot.makespan.push(r.makespan);
+        slot.duplicates += r.duplicates;
+        slot.cross_mb += r.cross_mb;
+        if c.net != 0 {
+            if let Some(flat) = cell_at(0, c.seed, c.algo) {
+                slot.moved += flat
+                    .primaries
+                    .iter()
+                    .zip(&r.primaries)
+                    .filter(|(a, b)| a != b)
+                    .count();
+            }
+        }
+    }
+    let get = |algo: &str, net: usize| -> Option<&Agg> {
+        agg.iter()
+            .find(|(k, _)| k.0 == algo && k.1 == net)
+            .map(|(_, a)| a)
+    };
+
+    let mut out = String::from(
+        "# Data locality — schedulers across network topologies\n\n",
+    );
+    out.push_str(&format!(
+        "{jobs} jobs (large-batch TPC-H), {} executors, {} seeds; identical \
+         workloads and executor speeds per seed across topologies\n\n",
+        ccfg_base.n_executors, seeds
+    ));
+    let mut csv = String::from(
+        "algo,net,n_seeds,makespan,duplicates,cross_rack_mb,placements_moved_vs_flat\n",
+    );
+    for (title, col) in [
+        ("Mean makespan (s)", 0usize),
+        ("Duplicates (total across seeds)", 1),
+        ("Cross-rack traffic (MB, total)", 2),
+        ("Primary placements moved vs flat (total)", 3),
+    ] {
+        out.push_str(&format!("### {title}\n\n| net |"));
+        for a in LOCALITY_ALGOS {
+            out.push_str(&format!(" {a} |"));
+        }
+        out.push_str("\n|---|");
+        out.push_str(&"---|".repeat(LOCALITY_ALGOS.len()));
+        out.push('\n');
+        for (ni, net) in LOCALITY_NETS.iter().enumerate() {
+            out.push_str(&format!("| {net} |"));
+            for a in LOCALITY_ALGOS {
+                match get(a, ni) {
+                    Some(s) => match col {
+                        0 => out.push_str(&format!(
+                            " {:.1} |",
+                            crate::util::stats::mean(&s.makespan)
+                        )),
+                        1 => out.push_str(&format!(" {} |", s.duplicates)),
+                        2 => out.push_str(&format!(" {:.0} |", s.cross_mb)),
+                        _ => out.push_str(&format!(" {} |", s.moved)),
+                    },
+                    None => out.push_str(" - |"),
+                }
+            }
+            out.push('\n');
+        }
+        out.push('\n');
+    }
+    for a in LOCALITY_ALGOS {
+        for (ni, net) in LOCALITY_NETS.iter().enumerate() {
+            if let Some(s) = get(a, ni) {
+                csv.push_str(&format!(
+                    "{a},{net},{},{:.6},{},{:.3},{}\n",
+                    s.makespan.len(),
+                    crate::util::stats::mean(&s.makespan),
+                    s.duplicates,
+                    s.cross_mb,
+                    s.moved
+                ));
+            }
+        }
+    }
+    let total_moved: usize = agg
+        .iter()
+        .filter(|(k, _)| k.1 != 0)
+        .map(|(_, a)| a.moved)
+        .sum();
+    out.push_str(&format!(
+        "Placements moved on non-flat topologies (all schedulers): {total_moved}\n",
+    ));
+    write_results("locality.md", &out)?;
+    write_results("locality.csv", &csv)?;
+    Ok(out)
+}
+
 /// The decision-time CDF series the paper plots (Figs 5d/6d/7b).
 fn decision_cdf_section(suite: &SuiteReport, algos: &[&str]) -> String {
     let mut out = String::from("### Decision-time CDF (ms)\n\n| algo | p50 | p90 | p98 | p99.9 | max |\n|---|---|---|---|---|---|\n");

@@ -26,7 +26,14 @@
 //! distributed-store assumption), so only unfinished work is lost.
 
 use crate::config::FaultConfig;
+use crate::net::NetworkModel;
 use crate::util::rng::{Rng, STREAM_FAULT};
+
+/// Salt separating the per-rack incident streams from the per-executor
+/// ones (which fork `0..n_exec` off the master fault stream). Pure
+/// `stream_n` members, so adding rack draws never perturbs the
+/// per-executor plan — `rack_rate = 0` stays bit-identical.
+const STREAM_RACK_SALT: u64 = 0x5AC4_FA11_D0C4_BEEF;
 
 /// What happens to an executor at a fault event's time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -134,6 +141,50 @@ impl FaultPlan {
         // the simulator will inject them in.
         events.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.exec.cmp(&b.exec)));
         FaultPlan { events }
+    }
+
+    /// [`FaultPlan::generate`] plus the topology-correlated rack-failure
+    /// mode: each rack additionally draws a Poisson process of
+    /// whole-rack incidents (ToR switch / PDU loss) at
+    /// `cfg.rack_rate`; one incident downs *every* executor in the rack
+    /// at the same time and recovers them at the same time. Rack
+    /// incidents are always transient (a permanent whole-rack loss
+    /// would leave single-rack topologies unschedulable). With
+    /// `rack_rate = 0` the result is bit-identical to
+    /// [`FaultPlan::generate`], so flat runs and pre-topology configs
+    /// are unaffected.
+    pub fn generate_with_topology(
+        cfg: &FaultConfig,
+        net: &NetworkModel,
+        seed: u64,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan::generate(cfg, net.len(), seed);
+        if cfg.rack_rate <= 0.0 {
+            return plan;
+        }
+        cfg.validate().expect("invalid fault config");
+        let mean_gap = 1.0 / cfg.rack_rate;
+        for rack in 0..net.n_racks() {
+            let mut rng = Rng::stream_n(seed, STREAM_FAULT ^ STREAM_RACK_SALT, rack as u64);
+            let mut t = rng.exponential(mean_gap);
+            while t < cfg.horizon {
+                let up = t + rng.exponential(cfg.mttr).max(1e-3);
+                for exec in net.rack_members(rack) {
+                    plan.events.push(FaultEvent {
+                        exec,
+                        time: t,
+                        kind: FaultKind::Crash { recovery: Some(up) },
+                    });
+                }
+                t = up + rng.exponential(mean_gap);
+            }
+        }
+        // A rack event can overlap an executor's own outage; the
+        // recovery pass treats the duplicate down as a no-op and the
+        // earliest queued recovery wins — deterministic either way.
+        plan.events
+            .sort_by(|a, b| a.time.total_cmp(&b.time).then(a.exec.cmp(&b.exec)));
+        plan
     }
 
     /// Crash count in the plan (transient + permanent).
@@ -266,6 +317,52 @@ mod tests {
                 .count();
             assert!(perm < 4, "seed {seed}: all executors permanently dead");
         }
+    }
+
+    #[test]
+    fn rack_mode_off_is_bit_identical() {
+        use crate::net::{NetConfig, NetworkModel};
+        let cfg = FaultConfig::with_rate(5e-3);
+        let net = NetworkModel::build(&NetConfig::tree(2, 3), 100.0, 6);
+        let plain = FaultPlan::generate(&cfg, 6, 7);
+        let topo = FaultPlan::generate_with_topology(&cfg, &net, 7);
+        assert_eq!(plain, topo, "rack_rate = 0 must not perturb the plan");
+    }
+
+    #[test]
+    fn rack_incidents_down_every_member_together() {
+        use crate::net::{NetConfig, NetworkModel};
+        let mut cfg = FaultConfig::none();
+        cfg.rack_rate = 2e-3;
+        let net = NetworkModel::build(&NetConfig::tree(3, 4), 100.0, 12);
+        let plan = FaultPlan::generate_with_topology(&cfg, &net, 9);
+        assert!(!plan.is_empty(), "2e-3 over 10k s must draw incidents");
+        // Group events by (time, recovery): each group must be exactly
+        // one rack's full membership, transient, with a shared window.
+        let mut by_time: std::collections::BTreeMap<u64, Vec<&FaultEvent>> =
+            std::collections::BTreeMap::new();
+        for e in &plan.events {
+            by_time.entry(e.time.to_bits()).or_default().push(e);
+        }
+        for (_, group) in by_time {
+            let rack = net.rack_of(group[0].exec);
+            let members = net.rack_members(rack);
+            let execs: Vec<usize> = group.iter().map(|e| e.exec).collect();
+            assert_eq!(execs, members, "incident must cover the whole rack");
+            let recs: std::collections::BTreeSet<u64> = group
+                .iter()
+                .map(|e| match e.kind {
+                    FaultKind::Crash { recovery } => {
+                        recovery.expect("rack incidents are transient").to_bits()
+                    }
+                    _ => panic!("rack incidents are crashes"),
+                })
+                .collect();
+            assert_eq!(recs.len(), 1, "shared recovery time per incident");
+        }
+        // Determinism.
+        let again = FaultPlan::generate_with_topology(&cfg, &net, 9);
+        assert_eq!(plan, again);
     }
 
     #[test]

@@ -52,6 +52,7 @@ pub mod dag;
 pub mod exp;
 pub mod fault;
 pub mod metrics;
+pub mod net;
 pub mod policy;
 pub mod rl;
 pub mod runtime;
@@ -70,6 +71,7 @@ pub mod prelude {
     pub use crate::dag::{Job, JobId, Task, TaskId, TaskRef};
     pub use crate::fault::{FaultPlan, FaultStats};
     pub use crate::metrics::{ScheduleReport, SuiteReport};
+    pub use crate::net::{DataItem, NetConfig, NetTopology, NetworkModel};
     pub use crate::policy::{PolicyNet, RustPolicy};
     pub use crate::sched::{
         CpopScheduler, DecimaScheduler, DeftAllocator, FifoScheduler, HeftScheduler,

@@ -17,7 +17,10 @@ USAGE:
   lachesis workload  --jobs N [--mode batch|continuous] [--seed S] [--out trace.json]
   lachesis schedule  --algo NAME [--jobs N] [--trace trace.json] [--seed S]
                      [--executors M] [--validate] [--backend pjrt|rust]
+                     [--net flat|tree:RxW|fat-tree:K]   (network topology;
+                      flat reproduces the paper's uniform comm model)
                      [--fault-rate R]   (inject crashes/stragglers at R per exec/s)
+                     [--rack-rate R]    (correlated whole-rack outages at R per rack/s)
   lachesis train     [--episodes N] [--agents A] [--seed S] [--decima]
                      [--threads N|auto] [--artifacts DIR]
                      [--out checkpoints/lachesis.bin]
@@ -25,6 +28,7 @@ USAGE:
                       pjrt and artifacts exist; otherwise the native CPU
                       gradient backend — no artifacts needed)
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
+                     [--net flat|tree:RxW|fat-tree:K]
                      [--mode serial|batched]   (batched: mailbox core loop
                       + lock-free status snapshots — the default)
                      [--journal DIR] [--restore] [--snapshot-every N]
@@ -52,6 +56,10 @@ USAGE:
   lachesis ablate    [--seeds K] [--threads N|auto]
   lachesis faults    [--rates R1,R2,..] [--jobs N] [--seeds K]
                      [--threads N|auto]   (robustness sweep vs failure rate)
+  lachesis locality  [--jobs N] [--seeds K] [--threads N|auto]
+                     (sweep schedulers across flat vs tree vs fat-tree
+                      topologies; reports makespan, duplicates and
+                      cross-rack traffic per topology)
   lachesis info      [--artifacts DIR]
 
 Algorithms: FIFO-DEFT SJF-DEFT HRRN-DEFT HighRankUp-DEFT HEFT CPOP DLS TDCA
@@ -91,6 +99,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some("faults") => cmd_faults(&args),
+        Some("locality") => cmd_locality(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print!("{USAGE}");
@@ -123,6 +132,11 @@ fn cmd_workload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--net` flag into a cluster config's network model.
+fn net_config(args: &Args) -> Result<lachesis::net::NetConfig> {
+    lachesis::net::NetConfig::parse(args.opt_or("net", "flat"))
+}
+
 fn cmd_schedule(args: &Args) -> Result<()> {
     let algo = args.opt_or("algo", "Lachesis");
     let seed = args.u64_opt("seed", 1)?;
@@ -134,20 +148,32 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             WorkloadGenerator::new(WorkloadConfig::small_batch(n), seed).generate()
         }
     };
-    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+    let mut ccfg = ClusterConfig::with_executors(executors);
+    ccfg.net = net_config(args)?;
+    ccfg.validate()?;
+    let cluster = Cluster::heterogeneous(&ccfg, seed);
     let src = policy_source(args);
     let mut sched = exp::build_scheduler(algo, &src, seed)?;
     let mut sim = Simulator::new(cluster, workload);
     let fault_rate = args.f64_opt("fault-rate", 0.0)?;
+    let rack_rate = args.f64_opt("rack-rate", 0.0)?;
     if !fault_rate.is_finite() || fault_rate < 0.0 {
         bail!("--fault-rate must be finite and non-negative, got {fault_rate}");
     }
-    if fault_rate > 0.0 {
-        let fcfg = lachesis::config::FaultConfig::with_rate(fault_rate);
-        let plan =
-            lachesis::fault::FaultPlan::generate(&fcfg, sim.state.cluster.len(), seed);
+    if !rack_rate.is_finite() || rack_rate < 0.0 {
+        bail!("--rack-rate must be finite and non-negative, got {rack_rate}");
+    }
+    if fault_rate > 0.0 || rack_rate > 0.0 {
+        let mut fcfg = lachesis::config::FaultConfig::with_rate(fault_rate);
+        fcfg.rack_rate = rack_rate;
+        let plan = lachesis::fault::FaultPlan::generate_with_topology(
+            &fcfg,
+            &sim.state.cluster.net,
+            seed,
+        );
         println!(
-            "fault plan: {} crashes, {} straggles (rate {fault_rate}/exec/s, seed {seed})",
+            "fault plan: {} crashes, {} straggles (rate {fault_rate}/exec/s, \
+             rack rate {rack_rate}/rack/s, seed {seed})",
             plan.n_crashes(),
             plan.n_straggles()
         );
@@ -276,6 +302,18 @@ fn cmd_faults(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The topology-locality sweep (`exp::locality`): schedulers × network
+/// topologies on shared workloads — the figure showing where locality-
+/// aware placement (duplication, rack-local sourcing) pays off.
+fn cmd_locality(args: &Args) -> Result<()> {
+    let seeds = args.usize_opt("seeds", 3)?;
+    let jobs = args.usize_opt("jobs", 10)?;
+    let threads = args.threads_opt(1)?;
+    let out = exp::locality(&policy_source(args), jobs, seeds, threads)?;
+    println!("{out}");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use lachesis::service::{AdmissionPolicy, AgentServer, Durability, ServiceMode};
     let addr = args.opt_or("addr", "127.0.0.1:7654");
@@ -285,7 +323,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mode = ServiceMode::parse(args.opt_or("mode", "batched"))?;
     let max_queue = args.usize_opt("max-queue", 0)?;
     let admission = AdmissionPolicy::parse(args.opt_or("admission", "shed"))?;
-    let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(executors), seed);
+    let mut ccfg = ClusterConfig::with_executors(executors);
+    ccfg.net = net_config(args)?;
+    ccfg.validate()?;
+    let cluster = Cluster::heterogeneous(&ccfg, seed);
     let src = policy_source(args);
     let sched = exp::build_send_scheduler(algo, &src, seed)?;
     let mut agent = AgentServer::with_mode(cluster, sched, mode);

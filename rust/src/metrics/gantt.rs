@@ -34,6 +34,16 @@ pub fn render(state: &SimState, width: usize) -> String {
             state.faults.n_dup_survived,
         ));
     }
+    // Rack placement only appears under a non-flat topology, so flat
+    // charts render byte-identically to the pre-topology output.
+    let n_racks = state.cluster.n_racks();
+    if n_racks > 1 {
+        out.push_str(&format!(
+            "topology: {} — {} racks\n",
+            state.cluster.net.config().topology_str(),
+            n_racks
+        ));
+    }
     let col = |t: f64| ((t / horizon) * width as f64).floor() as usize;
     for (e, log) in state.exec_log.iter().enumerate() {
         let mut row = vec![b' '; width];
@@ -77,8 +87,13 @@ pub fn render(state: &SimState, width: usize) -> String {
         // (outage windows are not work).
         let busy_pct =
             100.0 * (state.timeline(e).busy_time() - state.blackout_time(e)) / horizon;
+        let rack_tag = if n_racks > 1 {
+            format!("r{:<2} ", state.cluster.rack_of(e))
+        } else {
+            String::new()
+        };
         out.push_str(&format!(
-            "e{e:<3} {speed:.1}GHz {busy_pct:>3.0}% |{}|",
+            "e{e:<3} {rack_tag}{speed:.1}GHz {busy_pct:>3.0}% |{}|",
             String::from_utf8(row).unwrap()
         ));
         // Append up to 4 labels to keep lines readable.
@@ -169,6 +184,25 @@ mod tests {
         assert!(g.contains("j0.0!"), "requeued task marked: {g}");
         assert!(g.contains("1 crashes"), "fault summary line: {g}");
         assert!(g.contains("outage"), "fault legend: {g}");
+    }
+
+    #[test]
+    fn rack_tags_only_under_topologies() {
+        let flat = render(&simple_state(), 60);
+        assert!(!flat.contains("topology:"), "flat chart stays unchanged");
+        assert!(!flat.contains(" r0 "), "flat rows carry no rack tag");
+
+        let cluster = Cluster::homogeneous(4, 1.0, 10.0)
+            .with_net(&crate::net::NetConfig::tree(2, 2));
+        let job = crate::dag::Job::new(0, "par", 0.0, vec![4.0, 4.0], &[]);
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 3 });
+        let g = render(&st, 60);
+        assert!(g.contains("topology: tree:2x2 — 2 racks"), "header: {g}");
+        assert!(g.contains("e0   r0 "), "rack tag on rack-0 row: {g}");
+        assert!(g.contains("e3   r1 "), "rack tag on rack-1 row: {g}");
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Network topology model: per-pair effective bandwidth/latency.
+//!
+//! The paper collapses the cluster network to one scalar `c` (uniform
+//! transfer speed between any two executors). Real clusters move task
+//! outputs — first-class [`DataItem`]s — over shared links whose
+//! effective bandwidth depends on *where* the endpoints sit: two hosts
+//! under the same top-of-rack switch talk faster than hosts separated
+//! by an oversubscribed uplink. This module models that as a
+//! [`NetworkModel`]: a topology ([`NetTopology`]) plus knobs
+//! ([`NetConfig`]) compiled into flat `n×n` bandwidth/latency matrices
+//! so the hot path (`transfer_time` inside every EFT/duplication
+//! evaluation) is one multiply-add after an index lookup.
+//!
+//! Three topologies:
+//!
+//! * **`flat`** — today's semantics, bit-identical: every distinct pair
+//!   moves data at `comm_mbps`, zero latency. No matrices are even
+//!   allocated; the lookup short-circuits to the scalar formula, so the
+//!   pre-refactor golden schedules are preserved bitwise.
+//! * **`tree:RxW`** — `R` racks of `W` hosts under one core switch.
+//!   Intra-rack pairs get `comm_mbps × rack_mult`; cross-rack pairs
+//!   share an oversubscribed uplink and get `comm_mbps / oversub`.
+//! * **`fat-tree:K`** — a k-ary fat-tree (Al-Fares et al.): `k/2` hosts
+//!   per edge switch ("rack"), `k/2` edge switches per pod, `k` pods,
+//!   capacity `k³/4` hosts. Full bisection bandwidth: cross-rack pairs
+//!   keep `comm_mbps`, only the hop count (latency) grows with distance
+//!   (same edge 2, same pod 4, cross-pod 6 hops).
+//!
+//! Invariants (pinned by proptests in `tests/proptest_invariants.rs`):
+//! the matrices are symmetric, self-transfer is free (infinite
+//! bandwidth, zero latency), and rack-local bandwidth is never below
+//! cross-rack bandwidth.
+
+use anyhow::{bail, Result};
+
+/// The shape of the cluster network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NetTopology {
+    /// Uniform scalar model (the paper's assumption, the default).
+    #[default]
+    Flat,
+    /// `racks` racks of `width` hosts under a single core switch.
+    Tree { racks: usize, width: usize },
+    /// k-ary fat-tree: `k/2` hosts per edge switch, `k` pods.
+    FatTree { k: usize },
+}
+
+/// Topology plus link knobs. `(NetConfig, comm_mbps, n)` fully
+/// determines a [`NetworkModel`], so network-aware runs are exactly as
+/// reproducible as flat ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    pub topology: NetTopology,
+    /// Intra-rack bandwidth multiplier (rack-local pairs move data at
+    /// `comm_mbps × rack_mult`). Must be ≥ 1.
+    pub rack_mult: f64,
+    /// Tree-uplink oversubscription: cross-rack pairs in `tree` move at
+    /// `comm_mbps / oversub`. Must be ≥ 1. Ignored by `flat`/`fat-tree`.
+    pub oversub: f64,
+    /// Per-switch-hop latency in seconds, added once per transfer.
+    pub hop_latency: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            topology: NetTopology::Flat,
+            rack_mult: 4.0,
+            oversub: 2.0,
+            hop_latency: 5e-4,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The uniform scalar model (today's semantics).
+    pub fn flat() -> NetConfig {
+        NetConfig::default()
+    }
+
+    pub fn tree(racks: usize, width: usize) -> NetConfig {
+        NetConfig {
+            topology: NetTopology::Tree { racks, width },
+            ..NetConfig::default()
+        }
+    }
+
+    pub fn fat_tree(k: usize) -> NetConfig {
+        NetConfig {
+            topology: NetTopology::FatTree { k },
+            ..NetConfig::default()
+        }
+    }
+
+    /// Parse the CLI/JSON syntax: `flat`, `tree:RxW`, or `fat-tree:K`.
+    pub fn parse(s: &str) -> Result<NetConfig> {
+        let s = s.trim();
+        if s.is_empty() || s == "flat" {
+            return Ok(NetConfig::flat());
+        }
+        if let Some(spec) = s.strip_prefix("tree:") {
+            let (r, w) = spec
+                .split_once('x')
+                .ok_or_else(|| anyhow::anyhow!("tree topology must be tree:RxW, got '{s}'"))?;
+            let racks: usize = r.parse()?;
+            let width: usize = w.parse()?;
+            return Ok(NetConfig::tree(racks, width));
+        }
+        if let Some(spec) = s.strip_prefix("fat-tree:").or_else(|| s.strip_prefix("fattree:")) {
+            let k: usize = spec.parse()?;
+            return Ok(NetConfig::fat_tree(k));
+        }
+        bail!("unknown network topology '{s}' (flat | tree:RxW | fat-tree:K)")
+    }
+
+    /// Canonical topology string (inverse of [`NetConfig::parse`]).
+    pub fn topology_str(&self) -> String {
+        match self.topology {
+            NetTopology::Flat => "flat".to_string(),
+            NetTopology::Tree { racks, width } => format!("tree:{racks}x{width}"),
+            NetTopology::FatTree { k } => format!("fat-tree:{k}"),
+        }
+    }
+
+    /// Exact identity string for snapshot cross-checks: topology plus
+    /// the bit patterns of every knob that changes transfer times.
+    pub fn snapshot_key(&self) -> String {
+        format!(
+            "{}|{:016x}|{:016x}|{:016x}",
+            self.topology_str(),
+            self.rack_mult.to_bits(),
+            self.oversub.to_bits(),
+            self.hop_latency.to_bits()
+        )
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.topology == NetTopology::Flat
+    }
+
+    /// Maximum number of hosts the topology can place (`usize::MAX` for
+    /// flat — it has no structure to run out of).
+    pub fn capacity(&self) -> usize {
+        match self.topology {
+            NetTopology::Flat => usize::MAX,
+            NetTopology::Tree { racks, width } => racks.saturating_mul(width),
+            NetTopology::FatTree { k } => (k * k * k) / 4,
+        }
+    }
+
+    pub fn validate(&self, n_executors: usize) -> Result<()> {
+        if !self.rack_mult.is_finite() || self.rack_mult < 1.0 {
+            bail!("rack_mult must be a finite factor >= 1");
+        }
+        if !self.oversub.is_finite() || self.oversub < 1.0 {
+            bail!("oversub must be a finite factor >= 1");
+        }
+        if !self.hop_latency.is_finite() || self.hop_latency < 0.0 {
+            bail!("hop_latency must be finite and non-negative");
+        }
+        match self.topology {
+            NetTopology::Flat => {}
+            NetTopology::Tree { racks, width } => {
+                if racks == 0 || width == 0 {
+                    bail!("tree topology needs racks > 0 and width > 0");
+                }
+            }
+            NetTopology::FatTree { k } => {
+                if k < 2 || k % 2 != 0 {
+                    bail!("fat-tree k must be an even integer >= 2");
+                }
+            }
+        }
+        if n_executors > self.capacity() {
+            bail!(
+                "topology {} holds at most {} hosts, cluster has {}",
+                self.topology_str(),
+                self.capacity(),
+                n_executors
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A task output: `size_mb` megabytes that must reach the child's
+/// executor before it can start (Eq 2's `e_pi`). Today every DAG edge
+/// is one data item; the type exists so transfers are priced through
+/// one door ([`DataItem::transfer_time`]) instead of raw scalars.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DataItem {
+    pub size_mb: f64,
+}
+
+impl DataItem {
+    pub fn new(size_mb: f64) -> DataItem {
+        DataItem { size_mb }
+    }
+
+    /// Time to move this item between two executors over `net`.
+    #[inline]
+    pub fn transfer_time(&self, net: &NetworkModel, from: usize, to: usize) -> f64 {
+        net.transfer_time(self.size_mb, from, to)
+    }
+}
+
+/// Compiled per-pair lookup tables for one cluster. Rebuilt whenever
+/// the executor count or the [`NetConfig`] changes (see
+/// `Cluster::with_net`); between rebuilds every lookup is O(1).
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    cfg: NetConfig,
+    n: usize,
+    comm_mbps: f64,
+    /// Rack id per executor (all zero for flat).
+    rack: Vec<u32>,
+    n_racks: usize,
+    /// Effective bandwidth per ordered pair, MB/s (`n×n`, row-major).
+    /// Empty for flat: the lookup short-circuits to `comm_mbps`, so the
+    /// flat model costs no memory and stays bit-identical to the
+    /// pre-topology scalar code.
+    bw: Vec<f64>,
+    /// Latency per ordered pair, seconds (`n×n`; empty for flat).
+    lat: Vec<f64>,
+    /// Mean off-diagonal bandwidth (the `c̄` the rank features see).
+    c_avg: f64,
+}
+
+impl NetworkModel {
+    /// Compile `cfg` for an `n`-executor cluster with base speed
+    /// `comm_mbps`.
+    pub fn build(cfg: &NetConfig, comm_mbps: f64, n: usize) -> NetworkModel {
+        cfg.validate(n).expect("invalid network config");
+        assert!(comm_mbps > 0.0 && comm_mbps.is_finite());
+        assert!(n > 0);
+        if cfg.is_flat() {
+            return NetworkModel {
+                cfg: cfg.clone(),
+                n,
+                comm_mbps,
+                rack: vec![0; n],
+                n_racks: 1,
+                bw: Vec::new(),
+                lat: Vec::new(),
+                c_avg: comm_mbps,
+            };
+        }
+        // Host → rack (and, for fat-tree, rack → pod) assignment.
+        let rack: Vec<u32> = match cfg.topology {
+            NetTopology::Flat => unreachable!(),
+            NetTopology::Tree { width, .. } => (0..n).map(|i| (i / width) as u32).collect(),
+            NetTopology::FatTree { k } => (0..n).map(|i| (i / (k / 2)) as u32).collect(),
+        };
+        let n_racks = rack.iter().map(|&r| r as usize + 1).max().unwrap_or(1);
+        let mut bw = vec![0.0f64; n * n];
+        let mut lat = vec![0.0f64; n * n];
+        let mut sum = 0.0f64;
+        let mut pairs = 0usize;
+        for i in 0..n {
+            for j in 0..n {
+                let idx = i * n + j;
+                if i == j {
+                    bw[idx] = f64::INFINITY;
+                    lat[idx] = 0.0;
+                    continue;
+                }
+                let (b, hops) = match cfg.topology {
+                    NetTopology::Flat => unreachable!(),
+                    NetTopology::Tree { .. } => {
+                        if rack[i] == rack[j] {
+                            (comm_mbps * cfg.rack_mult, 2usize)
+                        } else {
+                            (comm_mbps / cfg.oversub, 4usize)
+                        }
+                    }
+                    NetTopology::FatTree { k } => {
+                        let racks_per_pod = k / 2;
+                        let (pi, pj) = (
+                            rack[i] as usize / racks_per_pod,
+                            rack[j] as usize / racks_per_pod,
+                        );
+                        if rack[i] == rack[j] {
+                            (comm_mbps * cfg.rack_mult, 2usize)
+                        } else if pi == pj {
+                            (comm_mbps, 4usize)
+                        } else {
+                            // Full bisection bandwidth: the fat-tree's
+                            // whole point is that cross-pod pairs keep
+                            // line rate; only the path length grows.
+                            (comm_mbps, 6usize)
+                        }
+                    }
+                };
+                bw[idx] = b;
+                lat[idx] = hops as f64 * cfg.hop_latency;
+                sum += b;
+                pairs += 1;
+            }
+        }
+        let c_avg = if pairs > 0 { sum / pairs as f64 } else { comm_mbps };
+        NetworkModel {
+            cfg: cfg.clone(),
+            n,
+            comm_mbps,
+            rack,
+            n_racks,
+            bw,
+            lat,
+            c_avg,
+        }
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.bw.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Effective bandwidth between two executors, MB/s (infinite within
+    /// one executor).
+    #[inline]
+    pub fn bandwidth(&self, from: usize, to: usize) -> f64 {
+        if from == to {
+            f64::INFINITY
+        } else if self.is_flat() {
+            self.comm_mbps
+        } else {
+            self.bw[from * self.n + to]
+        }
+    }
+
+    /// Path latency between two executors, seconds (zero within one).
+    #[inline]
+    pub fn latency(&self, from: usize, to: usize) -> f64 {
+        if from == to || self.is_flat() {
+            0.0
+        } else {
+            self.lat[from * self.n + to]
+        }
+    }
+
+    /// Transfer time of `data` MB from `from` to `to`. The flat branch
+    /// computes exactly the pre-topology scalar formula (`data /
+    /// comm_mbps`, no latency term, no matrix read) so flat schedules
+    /// stay bit-identical to the golden references.
+    #[inline]
+    pub fn transfer_time(&self, data: f64, from: usize, to: usize) -> f64 {
+        if from == to || data == 0.0 {
+            0.0
+        } else if self.is_flat() {
+            data / self.comm_mbps
+        } else {
+            let idx = from * self.n + to;
+            self.lat[idx] + data / self.bw[idx]
+        }
+    }
+
+    /// Mean off-diagonal bandwidth `c̄` (rank features, TDCA replan).
+    /// Exactly `comm_mbps` for flat.
+    #[inline]
+    pub fn c_avg(&self) -> f64 {
+        self.c_avg
+    }
+
+    /// Rack id of executor `k` (0 for every executor under flat).
+    #[inline]
+    pub fn rack_of(&self, k: usize) -> usize {
+        self.rack[k] as usize
+    }
+
+    /// Number of racks the placed executors span (1 for flat).
+    pub fn n_racks(&self) -> usize {
+        self.n_racks
+    }
+
+    #[inline]
+    pub fn same_rack(&self, a: usize, b: usize) -> bool {
+        self.rack[a] == self.rack[b]
+    }
+
+    /// Executors in rack `r` (used by the rack-failure fault mode).
+    pub fn rack_members(&self, r: usize) -> Vec<usize> {
+        (0..self.n).filter(|&k| self.rack[k] as usize == r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["flat", "tree:4x8", "fat-tree:4"] {
+            let cfg = NetConfig::parse(s).unwrap();
+            assert_eq!(cfg.topology_str(), s);
+        }
+        assert_eq!(
+            NetConfig::parse("fattree:6").unwrap().topology,
+            NetTopology::FatTree { k: 6 }
+        );
+        assert!(NetConfig::parse("ring:4").is_err());
+        assert!(NetConfig::parse("tree:4").is_err());
+    }
+
+    #[test]
+    fn validation() {
+        assert!(NetConfig::tree(2, 4).validate(8).is_ok());
+        assert!(NetConfig::tree(2, 4).validate(9).is_err(), "over capacity");
+        assert!(NetConfig::fat_tree(3).validate(1).is_err(), "odd k");
+        assert!(NetConfig::fat_tree(4).validate(16).is_ok());
+        assert!(NetConfig::fat_tree(4).validate(17).is_err());
+        let mut bad = NetConfig::tree(2, 2);
+        bad.rack_mult = 0.5;
+        assert!(bad.validate(4).is_err());
+    }
+
+    #[test]
+    fn flat_matches_scalar_formula_bitwise() {
+        let net = NetworkModel::build(&NetConfig::flat(), 100.0, 8);
+        assert!(net.is_flat());
+        for data in [0.0, 1.0, 512.37, 1e5] {
+            for (i, j) in [(0usize, 1usize), (3, 7), (5, 5)] {
+                let expect = if i == j || data == 0.0 { 0.0 } else { data / 100.0 };
+                assert_eq!(net.transfer_time(data, i, j).to_bits(), expect.to_bits());
+            }
+        }
+        assert_eq!(net.c_avg().to_bits(), 100.0f64.to_bits());
+        assert_eq!(net.n_racks(), 1);
+        assert_eq!(net.rack_of(7), 0);
+    }
+
+    #[test]
+    fn tree_locality_gradient() {
+        let cfg = NetConfig::tree(2, 4);
+        let net = NetworkModel::build(&cfg, 100.0, 8);
+        assert_eq!(net.n_racks(), 2);
+        assert_eq!(net.rack_of(3), 0);
+        assert_eq!(net.rack_of(4), 1);
+        // Intra-rack faster, cross-rack slower than base.
+        assert_eq!(net.bandwidth(0, 1), 400.0);
+        assert_eq!(net.bandwidth(0, 4), 50.0);
+        assert!(net.latency(0, 1) < net.latency(0, 4));
+        // Transfer times order accordingly.
+        let local = net.transfer_time(100.0, 0, 1);
+        let remote = net.transfer_time(100.0, 0, 4);
+        assert!(local < remote);
+        assert_eq!(net.transfer_time(100.0, 2, 2), 0.0);
+        // c̄ sits strictly between the extremes.
+        assert!(net.c_avg() > 50.0 && net.c_avg() < 400.0);
+    }
+
+    #[test]
+    fn fat_tree_hop_structure() {
+        let cfg = NetConfig::fat_tree(4); // 2 hosts/edge, 2 edges/pod, 16 cap
+        let net = NetworkModel::build(&cfg, 100.0, 12);
+        // Hosts 0,1 share an edge switch; 2,3 are the same pod's other
+        // edge; 4.. are the next pod.
+        assert!(net.same_rack(0, 1));
+        assert!(!net.same_rack(0, 2));
+        assert_eq!(net.bandwidth(0, 1), 400.0);
+        assert_eq!(net.bandwidth(0, 2), 100.0);
+        assert_eq!(net.bandwidth(0, 4), 100.0, "full bisection");
+        assert!(net.latency(0, 1) < net.latency(0, 2));
+        assert!(net.latency(0, 2) < net.latency(0, 4));
+    }
+
+    #[test]
+    fn matrices_symmetric() {
+        for cfg in [NetConfig::tree(3, 3), NetConfig::fat_tree(4)] {
+            let net = NetworkModel::build(&cfg, 80.0, 9);
+            for i in 0..9 {
+                for j in 0..9 {
+                    assert_eq!(net.bandwidth(i, j).to_bits(), net.bandwidth(j, i).to_bits());
+                    assert_eq!(net.latency(i, j).to_bits(), net.latency(j, i).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn data_item_prices_through_net() {
+        let net = NetworkModel::build(&NetConfig::tree(2, 2), 100.0, 4);
+        let item = DataItem::new(200.0);
+        assert_eq!(
+            item.transfer_time(&net, 0, 3).to_bits(),
+            net.transfer_time(200.0, 0, 3).to_bits()
+        );
+        assert_eq!(item.transfer_time(&net, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn rack_members_partition() {
+        let net = NetworkModel::build(&NetConfig::tree(3, 2), 100.0, 5);
+        assert_eq!(net.rack_members(0), vec![0, 1]);
+        assert_eq!(net.rack_members(1), vec![2, 3]);
+        assert_eq!(net.rack_members(2), vec![4]);
+    }
+
+    #[test]
+    fn snapshot_key_distinguishes_knobs() {
+        let a = NetConfig::tree(2, 4);
+        let mut b = NetConfig::tree(2, 4);
+        assert_eq!(a.snapshot_key(), b.snapshot_key());
+        b.oversub = 3.0;
+        assert_ne!(a.snapshot_key(), b.snapshot_key());
+        assert_ne!(a.snapshot_key(), NetConfig::flat().snapshot_key());
+    }
+}

@@ -12,7 +12,7 @@ use crate::dag::TaskRef;
 use crate::sim::SimState;
 
 /// Number of features per node. Must match `python/compile/shapes.py::F`.
-pub const NODE_FEATURES: usize = 12;
+pub const NODE_FEATURES: usize = 15;
 
 /// Saturating normalization to [0, 1).
 #[inline]
@@ -108,6 +108,35 @@ pub fn node_features(state: &SimState, t: TaskRef, mode: FeatureMode, out: &mut 
     }
     // 11: job wait time since arrival.
     out[WAIT_FEATURE] = job_wait_feature(state, t.job);
+    // 12–14: data locality (zero-information defaults under flat
+    // topologies and for Decima's network-blind mode, so pre-topology
+    // behavior is preserved). Placement-dependent: sound to cache
+    // because every placement change re-featurizes the touched job
+    // (apply → Assigned) or rebuilds outright (faults → Invalidated).
+    let n_racks = state.cluster.n_racks();
+    if n_racks <= 1 || mode == FeatureMode::HomogeneousBlind {
+        out[12] = 1.0; // all parent data is "rack-local" in a flat world
+        out[13] = 0.0; // no cross-rack bytes pending
+        out[14] = 0.0; // dominant rack id (degenerate)
+    } else {
+        let (dominant, local_mb, total_mb) = state.parent_locality(t);
+        // 12: fraction of placed-parent data with a rack-local copy in
+        //     the dominant rack (1.0 when nothing is placed yet).
+        out[12] = if total_mb > 0.0 {
+            (local_mb / total_mb) as f32
+        } else {
+            1.0
+        };
+        // 13: cross-rack bytes still pending, as a transfer time at c̄.
+        let cross_mb = total_mb - local_mb;
+        out[13] = if c_avg.is_finite() {
+            squash(cross_mb / c_avg, T_DATA)
+        } else {
+            0.0
+        };
+        // 14: dominant rack id, normalized (which rack pulls this task).
+        out[14] = dominant as f32 / n_racks as f32;
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +203,55 @@ mod tests {
         node_features(&st, TaskRef::new(0, 3), FeatureMode::Full, &mut f3);
         assert!(f0[1] > f3[1], "entry has larger rank_up");
         assert!(f3[2] > f0[2], "exit has larger rank_down");
+    }
+
+    #[test]
+    fn locality_features_flat_defaults() {
+        let st = state();
+        let mut f = [0.0f32; NODE_FEATURES];
+        for node in 0..4 {
+            node_features(&st, TaskRef::new(0, node), FeatureMode::Full, &mut f);
+            assert_eq!(f[12], 1.0, "flat: everything is rack-local");
+            assert_eq!(f[13], 0.0);
+            assert_eq!(f[14], 0.0);
+        }
+    }
+
+    #[test]
+    fn locality_features_track_parent_placement() {
+        use crate::net::NetConfig;
+        use crate::sim::Allocation;
+        let cluster = Cluster::homogeneous(4, 2.0, 100.0).with_net(&NetConfig::tree(2, 2));
+        let job = Job::new(
+            0,
+            "diamond",
+            0.0,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[(0, 1, 10.0), (0, 2, 20.0), (1, 3, 30.0), (2, 3, 40.0)],
+        );
+        let mut st = SimState::new(cluster, Workload::new(vec![job]));
+        st.mark_arrived(0);
+        let mut f = [0.0f32; NODE_FEATURES];
+        // No parent placed yet: neutral defaults.
+        node_features(&st, TaskRef::new(0, 3), FeatureMode::Full, &mut f);
+        assert_eq!(f[12], 1.0);
+        assert_eq!(f[13], 0.0);
+        // Place the entry on rack 0, then both middles split across
+        // racks: task 3's parents (1, 2) land in racks 0 and 1.
+        st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+        st.apply(TaskRef::new(0, 1), Allocation::Direct { exec: 1 }); // rack 0
+        st.apply(TaskRef::new(0, 2), Allocation::Direct { exec: 2 }); // rack 1
+        node_features(&st, TaskRef::new(0, 3), FeatureMode::Full, &mut f);
+        // Dominant rack is 1 (40 MB from parent 2 beats 30 MB), so a
+        // fraction of the 70 MB total is rack-local and the rest pends.
+        assert!(f[12] > 0.0 && f[12] < 1.0, "split parents: f12 = {}", f[12]);
+        assert!(f[13] > 0.0, "cross-rack bytes pending");
+        assert_eq!(f[14], 0.5, "dominant rack 1 of 2");
+        // Blind mode ignores the topology entirely.
+        node_features(&st, TaskRef::new(0, 3), FeatureMode::HomogeneousBlind, &mut f);
+        assert_eq!(f[12], 1.0);
+        assert_eq!(f[13], 0.0);
+        assert_eq!(f[14], 0.0);
     }
 
     #[test]

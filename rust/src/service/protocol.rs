@@ -108,6 +108,8 @@ pub enum Response {
         pending: usize,
         /// Executors currently down (crashed, not yet recovered).
         down: usize,
+        /// Racks in the cluster's network topology (1 under `flat`).
+        racks: usize,
         /// Mailbox depth when this snapshot was published (batched
         /// engine; 0 in serial mode). Clients use it to back off
         /// before the admission policy starts shedding.
@@ -317,6 +319,7 @@ impl Response {
                 executable,
                 pending,
                 down,
+                racks,
                 queue,
                 shed,
                 deduped,
@@ -329,6 +332,7 @@ impl Response {
                 ("executable", Json::from(*executable)),
                 ("pending", Json::from(*pending)),
                 ("down", Json::from(*down)),
+                ("racks", Json::from(*racks)),
                 ("queue", Json::from(*queue)),
                 ("shed", Json::from(*shed)),
                 ("deduped", Json::from(*deduped)),
@@ -390,6 +394,8 @@ impl Response {
                 pending: v.get("pending").and_then(Json::as_usize).unwrap_or(0),
                 // Absent in pre-fault peers: default 0 (all executors up).
                 down: v.get("down").and_then(Json::as_usize).unwrap_or(0),
+                // Absent in pre-topology peers: default 1 (flat = one rack).
+                racks: v.get("racks").and_then(Json::as_usize).unwrap_or(1),
                 // Absent in pre-admission-control peers: default 0.
                 queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
                 shed: v.get("shed").and_then(Json::as_usize).unwrap_or(0),
@@ -518,6 +524,7 @@ mod tests {
                 executable: 3,
                 pending: 1,
                 down: 2,
+                racks: 3,
                 queue: 7,
                 shed: 4,
                 deduped: 9,
@@ -582,9 +589,11 @@ mod tests {
                 queue,
                 shed,
                 deduped,
+                racks,
                 ..
             } => {
                 assert_eq!((queue, shed, deduped), (0, 0, 0));
+                assert_eq!(racks, 1, "pre-topology peer defaults to one rack");
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -243,6 +243,8 @@ pub struct StatusSnapshot {
     pub pending: usize,
     /// Executors currently down (crashed, not yet recovered).
     pub down: usize,
+    /// Racks in the network topology (1 under `flat`).
+    pub racks: usize,
     /// Mailbox depth at publish time (batched engine; 0 in serial mode).
     pub queue: usize,
     /// Mutating requests refused with `Overloaded` so far.
@@ -261,6 +263,7 @@ impl StatusSnapshot {
             executable: self.executable,
             pending: self.pending,
             down: self.down,
+            racks: self.racks,
             queue: self.queue,
             shed: self.shed,
             deduped: self.deduped,
@@ -285,6 +288,7 @@ struct StatusCell {
     executable: AtomicUsize,
     pending: AtomicUsize,
     down: AtomicUsize,
+    racks: AtomicUsize,
     queue: AtomicUsize,
     shed: AtomicUsize,
     deduped: AtomicUsize,
@@ -301,6 +305,7 @@ impl StatusCell {
             executable: AtomicUsize::new(0),
             pending: AtomicUsize::new(0),
             down: AtomicUsize::new(0),
+            racks: AtomicUsize::new(1),
             queue: AtomicUsize::new(0),
             shed: AtomicUsize::new(0),
             deduped: AtomicUsize::new(0),
@@ -321,6 +326,7 @@ impl StatusCell {
         self.executable.store(s.executable, Ordering::Relaxed);
         self.pending.store(s.pending, Ordering::Relaxed);
         self.down.store(s.down, Ordering::Relaxed);
+        self.racks.store(s.racks, Ordering::Relaxed);
         self.queue.store(s.queue, Ordering::Relaxed);
         self.shed.store(s.shed, Ordering::Relaxed);
         self.deduped.store(s.deduped, Ordering::Relaxed);
@@ -341,6 +347,7 @@ impl StatusCell {
                     executable: self.executable.load(Ordering::Relaxed),
                     pending: self.pending.load(Ordering::Relaxed),
                     down: self.down.load(Ordering::Relaxed),
+                    racks: self.racks.load(Ordering::Relaxed),
                     queue: self.queue.load(Ordering::Relaxed),
                     shed: self.shed.load(Ordering::Relaxed),
                     deduped: self.deduped.load(Ordering::Relaxed),
@@ -495,6 +502,7 @@ impl AgentCore {
             executable: self.state.executable().len(),
             pending: self.pending.len(),
             down: self.state.cluster.len() - self.state.cluster.n_available(),
+            racks: self.state.cluster.n_racks(),
             // queue/shed are engine-level; the server overrides them
             // when it publishes.
             queue: 0,
@@ -2329,6 +2337,7 @@ mod tests {
                         executable: k + 7,
                         pending: k % 13,
                         down: k % 5,
+                        racks: k % 3 + 1,
                         queue: 4 * k,
                         shed: 5 * k,
                         deduped: 6 * k,
@@ -2344,6 +2353,7 @@ mod tests {
                         assert_eq!(snap.executors, 3 * snap.jobs, "torn snapshot");
                         assert_eq!(snap.horizon, snap.jobs as f64, "torn snapshot");
                         assert_eq!(snap.executable, snap.jobs + 7, "torn snapshot");
+                        assert_eq!(snap.racks, snap.jobs % 3 + 1, "torn snapshot");
                         assert_eq!(snap.queue, 4 * snap.jobs, "torn snapshot");
                         assert_eq!(snap.shed, 5 * snap.jobs, "torn snapshot");
                         assert_eq!(snap.deduped, 6 * snap.jobs, "torn snapshot");

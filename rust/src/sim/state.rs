@@ -387,6 +387,43 @@ impl SimState {
             .fold(f64::INFINITY, f64::min)
     }
 
+    /// Locality summary of a task's placed parents: `(dominant_rack,
+    /// local_mb, total_mb)` where `total_mb` sums the edge data of every
+    /// parent with at least one placed copy, `dominant_rack` is the rack
+    /// holding the most parent bytes (lowest rack id on ties, 0 when no
+    /// parent is placed), and `local_mb` is the bytes available in that
+    /// rack. A parent counts toward a rack if *any* of its copies
+    /// (primary or duplicate) lives there — the scheduler could source
+    /// the transfer rack-locally. Drives the policy's locality features;
+    /// under `flat` everything is rack 0 and `local_mb == total_mb`.
+    pub fn parent_locality(&self, t: TaskRef) -> (usize, f64, f64) {
+        let n_racks = self.cluster.n_racks();
+        let mut per_rack = vec![0.0f64; n_racks];
+        let mut total = 0.0f64;
+        for e in &self.jobs[t.job].parents[t.node] {
+            let copies = &self.placements[t.job][e.other];
+            if copies.is_empty() {
+                continue;
+            }
+            total += e.data;
+            let mut seen = vec![false; n_racks];
+            for pl in copies {
+                let r = self.cluster.rack_of(pl.exec);
+                if !seen[r] {
+                    seen[r] = true;
+                    per_rack[r] += e.data;
+                }
+            }
+        }
+        let mut dominant = 0usize;
+        for r in 1..n_racks {
+            if per_rack[r] > per_rack[dominant] {
+                dominant = r;
+            }
+        }
+        (dominant, per_rack[dominant], total)
+    }
+
     /// Earliest time *all* of a task's input data is available on `exec`
     /// (the inner max of Eq 2). Job arrival bounds entry tasks.
     pub fn data_ready(&self, t: TaskRef, exec: usize) -> f64 {
@@ -1123,6 +1160,7 @@ impl SimState {
                 ),
             ),
             ("comm_mbps", Json::from(self.cluster.comm_mbps)),
+            ("net", Json::from(self.cluster.net.config().snapshot_key())),
             ("wall", Json::from(self.wall)),
             ("horizon", Json::from(self.horizon)),
             ("n_assigned", Json::from(self.n_assigned)),
@@ -1227,6 +1265,20 @@ impl SimState {
         let comm = v.req_f64("comm_mbps").map_err(|e| anyhow!("{e}"))?;
         if comm.to_bits() != cluster.comm_mbps.to_bits() {
             bail!("snapshot comm speed {comm} != configured {}", cluster.comm_mbps);
+        }
+        // Pre-topology snapshots carry no net key; they were taken under
+        // the scalar model, which is exactly the flat topology.
+        let snap_net = v
+            .get("net")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| crate::net::NetConfig::flat().snapshot_key());
+        if snap_net != cluster.net.config().snapshot_key() {
+            bail!(
+                "snapshot network topology '{snap_net}' != configured '{}' — \
+                 restart with the --net flag the snapshot was taken under",
+                cluster.net.config().snapshot_key()
+            );
         }
         let n_exec = cluster.len();
         let v_avg = v.req_f64("v_avg").map_err(|e| anyhow!("{e}"))?;

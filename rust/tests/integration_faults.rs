@@ -184,6 +184,122 @@ fn fault_sweep_is_thread_invariant() {
     assert_eq!(seq, par, "fault sweep must not depend on thread count");
 }
 
+/// A rack incident is one correlated crash: the generated plan downs
+/// every member of the rack at the same instant with one shared
+/// recovery, and the engine survives the plan with a `validate()`-clean
+/// final state across the zoo.
+#[test]
+fn rack_failures_down_whole_racks_and_are_survived() {
+    use lachesis::net::NetConfig;
+    let mut ccfg = ClusterConfig::with_executors(8);
+    ccfg.net = NetConfig::tree(2, 4);
+    for seed in [3u64, 11] {
+        let cluster = Cluster::heterogeneous(&ccfg, seed);
+        let mut fcfg = FaultConfig::none();
+        fcfg.rack_rate = 2e-3;
+        let plan = FaultPlan::generate_with_topology(&fcfg, &cluster.net, seed);
+        assert!(!plan.events.is_empty(), "seed {seed}: rate high enough to fire");
+        // Correlation: group by crash instant — each group must be
+        // exactly one whole rack.
+        let mut groups: std::collections::BTreeMap<u64, Vec<usize>> = Default::default();
+        for ev in &plan.events {
+            groups.entry(ev.time.to_bits()).or_default().push(ev.exec);
+        }
+        for (t, execs) in &groups {
+            let rack = cluster.rack_of(execs[0]);
+            assert_eq!(
+                *execs,
+                cluster.net.rack_members(rack),
+                "seed {seed} t={t:016x}: incident must cover rack {rack} exactly"
+            );
+        }
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), seed).generate();
+        for mk in 0..zoo(seed).len() {
+            let mut sched = zoo(seed).remove(mk);
+            let mut sim =
+                Simulator::with_faults(Cluster::heterogeneous(&ccfg, seed), w.clone(), &plan);
+            let report = sim
+                .run(sched.as_mut())
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", sched.name()));
+            assert!(sim.state.all_assigned());
+            assert!(report.makespan.is_finite() && report.makespan > 0.0);
+            sim.state
+                .validate()
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", sched.name()));
+        }
+    }
+}
+
+/// Duplication-aware recovery across racks: when a whole rack dies, a
+/// task whose duplicate copy lives in another rack is promoted in place
+/// instead of requeued — and the state validates after every single
+/// member crash of the rack event.
+#[test]
+fn rack_crash_promotes_surviving_cross_rack_copy() {
+    use lachesis::dag::{Job, TaskRef};
+    use lachesis::net::NetConfig;
+    use lachesis::sim::{Allocation, SimState};
+    use lachesis::workload::Workload;
+    let cluster = Cluster::homogeneous(4, 1.0, 10.0).with_net(&NetConfig::tree(2, 2));
+    let job = Job::new(0, "chain", 0.0, vec![4.0, 2.0], &[(0, 1, 6.0)]);
+    let mut st = SimState::new(cluster, Workload::new(vec![job]));
+    st.mark_arrived(0);
+    // Parent primary in rack 0; DEFT duplicates it across the uplink
+    // onto rack 1 alongside the child.
+    st.apply(TaskRef::new(0, 0), Allocation::Direct { exec: 0 });
+    st.apply(TaskRef::new(0, 1), Allocation::Duplicate { exec: 2, parent: 0 });
+    assert_eq!(st.n_duplicates, 1);
+    // Rack 0 dies mid-flight: every member crashes at the same instant.
+    let members: Vec<usize> = (0..st.cluster.len())
+        .filter(|&e| st.cluster.rack_of(e) == 0)
+        .collect();
+    assert_eq!(members, vec![0, 1]);
+    let mut survived = 0usize;
+    for &e in &members {
+        let out = st.apply_crash(e, 1.0, Some(20.0));
+        survived += out.survived;
+        st.validate()
+            .unwrap_or_else(|err| panic!("after rack-0 member {e} crash: {err}"));
+        assert!(!st.exec_available(e));
+    }
+    // Rack 1 is untouched; the parent survived via its rack-1 copy.
+    assert!(st.exec_available(2) && st.exec_available(3));
+    assert_eq!(survived, 1, "cross-rack duplicate must be promoted");
+    assert_eq!(st.faults.n_dup_survived, 1);
+    assert!(st.all_assigned(), "nothing requeued: promotion saved the task");
+    assert_eq!(st.placements[0][0].len(), 1);
+    let promoted = st.placements[0][0][0];
+    assert!(!promoted.duplicate, "surviving copy is primary now");
+    assert_eq!(st.cluster.rack_of(promoted.exec), 1, "survivor is cross-rack");
+    assert_eq!(st.n_duplicates, 0);
+}
+
+/// `rack_rate: 0.0` must leave fault plans bitwise unchanged — the
+/// topology-aware generator is invisible unless opted into (the same
+/// gate the zero-fault plan passes for the base subsystem).
+#[test]
+fn zero_rack_rate_plans_are_bitwise_unchanged() {
+    use lachesis::net::NetConfig;
+    let mut ccfg = ClusterConfig::with_executors(9);
+    ccfg.net = NetConfig::tree(3, 3);
+    for seed in [2u64, 29] {
+        let cluster = Cluster::heterogeneous(&ccfg, seed);
+        let fcfg = FaultConfig::with_rate(2e-3);
+        assert_eq!(fcfg.rack_rate, 0.0);
+        let base = FaultPlan::generate(&fcfg, cluster.len(), seed);
+        let topo = FaultPlan::generate_with_topology(&fcfg, &cluster.net, seed);
+        assert_eq!(
+            base.events.len(),
+            topo.events.len(),
+            "seed {seed}: event count drifted"
+        );
+        for (a, b) in base.events.iter().zip(&topo.events) {
+            assert_eq!(a.exec, b.exec, "seed {seed}");
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "seed {seed}");
+        }
+    }
+}
+
 /// The engine's unassigned-task error names the stranded jobs (not just
 /// a count).
 #[test]

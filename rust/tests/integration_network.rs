@@ -1,0 +1,383 @@
+//! Network-topology integration suite: the `flat` model must be
+//! bit-identical to the pre-refactor scalar communication model across
+//! the whole zoo (the golden pin for this subsystem), tree/fat-tree runs
+//! must stay `validate()`-clean, topology pricing must actually change
+//! placements, and snapshots must pin the topology they were taken under.
+
+use anyhow::Result;
+use lachesis::cluster::Cluster;
+use lachesis::config::ClusterConfig;
+use lachesis::config::WorkloadConfig;
+use lachesis::dag::{Job, TaskRef};
+use lachesis::net::NetConfig;
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{
+    CpopScheduler, DecimaScheduler, DlsScheduler, FifoScheduler, HeftScheduler,
+    HighRankUpScheduler, HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler,
+    SjfScheduler, TdcaScheduler,
+};
+use lachesis::sim::{Allocation, SimState, Simulator};
+use lachesis::workload::{Workload, WorkloadGenerator};
+
+/// Records every decision the wrapped scheduler emits, with the wall time
+/// it was made at (same tracing harness as `golden_append`).
+struct Tracing<S: Scheduler> {
+    inner: S,
+    log: Vec<(f64, TaskRef, Allocation)>,
+}
+
+impl<S: Scheduler> Tracing<S> {
+    fn new(inner: S) -> Self {
+        Tracing {
+            inner,
+            log: Vec::new(),
+        }
+    }
+}
+
+impl<S: Scheduler> Scheduler for Tracing<S> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.log.clear();
+    }
+
+    fn step(&mut self, state: &SimState) -> Result<Option<(TaskRef, Allocation)>> {
+        let d = self.inner.step(state)?;
+        if let Some((t, a)) = d {
+            self.log.push((state.wall, t, a));
+        }
+        Ok(d)
+    }
+}
+
+/// The pre-refactor communication model, replicated verbatim: transfers
+/// are priced by the inline scalar division `data / comm_mbps` (free on
+/// the same executor) — no `NetworkModel`, no matrix, no latency term.
+/// Replaying the engine's decisions through this model and demanding
+/// bit-identical bookings pins the flat `NetworkModel` to the scalar
+/// reference for the whole zoo.
+struct ScalarRefModel {
+    comm_mbps: f64,
+    speeds: Vec<f64>,
+    jobs: Vec<Job>,
+    exec_ready: Vec<f64>,
+    placements: Vec<Vec<Vec<(usize, f64)>>>,
+    /// Booking log per executor: (task, start, finish, duplicate).
+    log: Vec<Vec<(TaskRef, f64, f64, bool)>>,
+}
+
+impl ScalarRefModel {
+    fn new(cluster: &Cluster, jobs: Vec<Job>) -> ScalarRefModel {
+        let n_exec = cluster.len();
+        ScalarRefModel {
+            comm_mbps: cluster.comm_mbps,
+            speeds: (0..n_exec).map(|e| cluster.speed(e)).collect(),
+            exec_ready: vec![0.0; n_exec],
+            placements: jobs.iter().map(|j| vec![Vec::new(); j.n_tasks()]).collect(),
+            log: vec![Vec::new(); n_exec],
+            jobs,
+        }
+    }
+
+    fn data_ready(&self, t: TaskRef, exec: usize) -> f64 {
+        let job = &self.jobs[t.job];
+        let mut ready = job.arrival;
+        for e in &job.parents[t.node] {
+            let edge = job.edge_data(e.other, t.node);
+            let avail = self.placements[t.job][e.other]
+                .iter()
+                .map(|&(pe, pf)| {
+                    // The scalar model, byte for byte.
+                    pf + if pe == exec { 0.0 } else { edge / self.comm_mbps }
+                })
+                .fold(f64::INFINITY, f64::min);
+            if avail > ready {
+                ready = avail;
+            }
+        }
+        ready
+    }
+
+    fn apply(&mut self, wall: f64, task: TaskRef, alloc: Allocation) -> f64 {
+        let exec = alloc.exec();
+        let arrival = self.jobs[task.job].arrival;
+        if let Allocation::Duplicate { parent, .. } = alloc {
+            let p = TaskRef::new(task.job, parent);
+            let p_data = self.data_ready(p, exec);
+            let start = p_data.max(self.exec_ready[exec]).max(wall).max(arrival);
+            let finish = start + self.jobs[p.job].tasks[p.node].compute / self.speeds[exec];
+            self.placements[p.job][p.node].push((exec, finish));
+            self.exec_ready[exec] = finish;
+            self.log[exec].push((p, start, finish, true));
+        }
+        let data = self.data_ready(task, exec);
+        let start = data.max(self.exec_ready[exec]).max(wall).max(arrival);
+        let finish = start + self.jobs[task.job].tasks[task.node].compute / self.speeds[exec];
+        self.placements[task.job][task.node].push((exec, finish));
+        self.exec_ready[exec] = finish;
+        self.log[exec].push((task, start, finish, false));
+        finish
+    }
+}
+
+fn zoo(seed: u64) -> Vec<Tracing<Box<dyn Scheduler>>> {
+    let scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(FifoScheduler::new()),
+        Box::new(SjfScheduler::new()),
+        Box::new(HrrnScheduler::new()),
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(HeftScheduler::new()),
+        Box::new(CpopScheduler::new()),
+        Box::new(DlsScheduler::new()),
+        Box::new(TdcaScheduler::new()),
+        Box::new(RandomScheduler::new(seed)),
+        Box::new(DecimaScheduler::greedy_decima(Box::new(RustPolicy::random(
+            seed,
+        )))),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::random(
+            seed ^ 1,
+        )))),
+    ];
+    scheds.into_iter().map(Tracing::new).collect()
+}
+
+/// Primary-copy executor per task, in scan order — the placement
+/// signature compared across topologies.
+fn primary_execs(state: &SimState) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (ji, job) in state.jobs.iter().enumerate() {
+        for node in 0..job.n_tasks() {
+            let exec = state.placements[ji][node]
+                .iter()
+                .find(|p| !p.duplicate)
+                .map(|p| p.exec)
+                .unwrap_or(usize::MAX);
+            out.push(exec);
+        }
+    }
+    out
+}
+
+fn exec_log_bits(state: &SimState) -> Vec<Vec<(usize, usize, u64, u64, bool)>> {
+    state
+        .exec_log
+        .iter()
+        .map(|log| {
+            log.iter()
+                .map(|(t, pl)| {
+                    (
+                        t.job,
+                        t.node,
+                        pl.start.to_bits(),
+                        pl.finish.to_bits(),
+                        pl.duplicate,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The golden pin: every zoo scheduler on a flat-topology cluster books
+/// bit-identically to the pre-refactor scalar communication model.
+#[test]
+fn flat_zoo_bitwise_matches_scalar_reference() {
+    for seed in [11u64, 42, 99] {
+        let mut cfg = ClusterConfig::with_executors(10);
+        // The explicit flat config must be the noop it claims to be.
+        cfg.net = NetConfig::parse("flat").unwrap();
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), seed).generate();
+        for mut sched in zoo(seed) {
+            let cluster = Cluster::heterogeneous(&cfg, seed);
+            let refmodel_jobs = w.jobs.clone();
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let report = sim.run(&mut sched).unwrap();
+            let name = sched.name();
+            let mut reference = ScalarRefModel::new(&cluster, refmodel_jobs);
+            for &(wall, task, alloc) in &sched.log {
+                reference.apply(wall, task, alloc);
+            }
+            for (e, log) in sim.state.exec_log.iter().enumerate() {
+                assert_eq!(
+                    log.len(),
+                    reference.log[e].len(),
+                    "{name}: executor {e} booking count"
+                );
+                for (i, ((t, pl), &(rt, rs, rf, rd))) in
+                    log.iter().zip(&reference.log[e]).enumerate()
+                {
+                    assert_eq!(*t, rt, "{name}: exec {e} slot {i} task");
+                    assert_eq!(pl.duplicate, rd, "{name}: exec {e} slot {i} dup flag");
+                    assert_eq!(
+                        pl.start.to_bits(),
+                        rs.to_bits(),
+                        "{name}: exec {e} slot {i} start {} vs {rs}",
+                        pl.start
+                    );
+                    assert_eq!(
+                        pl.finish.to_bits(),
+                        rf.to_bits(),
+                        "{name}: exec {e} slot {i} finish {} vs {rf}",
+                        pl.finish
+                    );
+                }
+            }
+            let ref_makespan = reference
+                .log
+                .iter()
+                .flatten()
+                .filter(|&&(_, _, _, dup)| !dup)
+                .map(|&(_, _, f, _)| f)
+                .fold(0.0f64, f64::max);
+            assert_eq!(
+                report.makespan.to_bits(),
+                ref_makespan.to_bits(),
+                "{name}: makespan"
+            );
+        }
+    }
+}
+
+/// The default config (no `net` set anywhere) and an explicit
+/// `--net flat` produce bit-identical schedules.
+#[test]
+fn explicit_flat_is_bitwise_noop() {
+    for seed in [7u64, 23] {
+        let default_cfg = ClusterConfig::with_executors(8);
+        let mut flat_cfg = ClusterConfig::with_executors(8);
+        flat_cfg.net = NetConfig::parse("flat").unwrap();
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(4), seed).generate();
+        let run = |cfg: &ClusterConfig| {
+            let mut sim = Simulator::new(Cluster::heterogeneous(cfg, seed), w.clone());
+            sim.run(&mut HeftScheduler::new()).unwrap();
+            exec_log_bits(&sim.state)
+        };
+        assert_eq!(run(&default_cfg), run(&flat_cfg), "seed {seed}");
+    }
+}
+
+/// Tree and fat-tree runs stay `validate()`-clean for the whole zoo, on
+/// batch and continuous workloads.
+#[test]
+fn topology_zoo_validates() {
+    for (spec, n_exec) in [("tree:2x4", 8usize), ("fat-tree:4", 8)] {
+        let mut cfg = ClusterConfig::with_executors(n_exec);
+        cfg.net = NetConfig::parse(spec).unwrap();
+        cfg.validate().unwrap();
+        for seed in [5u64, 17] {
+            let w =
+                WorkloadGenerator::new(WorkloadConfig::small_batch(4), seed).generate();
+            for mut sched in zoo(seed) {
+                let cluster = Cluster::heterogeneous(&cfg, seed);
+                let mut sim = Simulator::new(cluster, w.clone());
+                let report = sim
+                    .run(&mut sched)
+                    .unwrap_or_else(|e| panic!("{spec} {}: {e}", sched.name()));
+                assert!(report.makespan.is_finite() && report.makespan > 0.0);
+                assert!(sim.state.all_assigned());
+                sim.state
+                    .validate()
+                    .unwrap_or_else(|e| panic!("{spec} {}: {e}", sched.name()));
+            }
+        }
+    }
+}
+
+/// The acceptance criterion in miniature: topology-aware transfer
+/// pricing makes at least one scheduler place at least one task
+/// differently than under flat — locality is visible in decisions, not
+/// just in transfer times.
+#[test]
+fn topologies_change_at_least_one_placement() {
+    let mut moved = 0usize;
+    for seed in [3u64, 11, 29] {
+        let flat_cfg = ClusterConfig::with_executors(8);
+        let mut tree_cfg = ClusterConfig::with_executors(8);
+        // Narrow uplink (high oversubscription) to make cross-rack
+        // pricing bite on the data-heavy small-batch DAGs.
+        tree_cfg.net = NetConfig::tree(2, 4);
+        tree_cfg.net.oversub = 8.0;
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), seed).generate();
+        let run = |cfg: &ClusterConfig| {
+            let mut sim = Simulator::new(Cluster::heterogeneous(cfg, seed), w.clone());
+            sim.run(&mut HeftScheduler::new()).unwrap();
+            primary_execs(&sim.state)
+        };
+        let flat = run(&flat_cfg);
+        let tree = run(&tree_cfg);
+        assert_eq!(flat.len(), tree.len());
+        moved += flat.iter().zip(&tree).filter(|(a, b)| a != b).count();
+    }
+    assert!(
+        moved > 0,
+        "tree pricing never moved a single HEFT placement across 3 seeds"
+    );
+}
+
+/// Snapshots pin the topology they were taken under: restoring with the
+/// same net round-trips bitwise, restoring under a different one fails
+/// loudly (pointing at the `--net` flag).
+#[test]
+fn snapshot_pins_network_topology() {
+    let mut tree_cfg = ClusterConfig::with_executors(6);
+    tree_cfg.net = NetConfig::tree(2, 3);
+    let seed = 13u64;
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(3), seed).generate();
+    let mut sim = Simulator::new(Cluster::heterogeneous(&tree_cfg, seed), w);
+    sim.run(&mut HeftScheduler::new()).unwrap();
+    let snap = sim.state.snapshot_json();
+
+    // Same topology: restores, bit-identical bookings.
+    let restored =
+        SimState::from_snapshot_json(Cluster::heterogeneous(&tree_cfg, seed), &snap).unwrap();
+    assert_eq!(exec_log_bits(&sim.state), exec_log_bits(&restored));
+    restored.validate().unwrap();
+
+    // Different topology (flat): must be rejected, naming the fix.
+    let flat_cfg = ClusterConfig::with_executors(6);
+    let err = SimState::from_snapshot_json(Cluster::heterogeneous(&flat_cfg, seed), &snap)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--net"), "error should point at --net: {err}");
+
+    // Same topology but different knobs: also a different network.
+    let mut knob_cfg = tree_cfg.clone();
+    knob_cfg.net.oversub = 4.0;
+    assert!(
+        SimState::from_snapshot_json(Cluster::heterogeneous(&knob_cfg, seed), &snap).is_err(),
+        "oversubscription changes transfer times; restore must refuse"
+    );
+}
+
+/// CLI-facing parse surface: accepted specs, rejected specs, and the
+/// capacity check against the executor count.
+#[test]
+fn net_spec_parse_and_capacity() {
+    assert!(NetConfig::parse("flat").unwrap().is_flat());
+    assert_eq!(NetConfig::parse("tree:3x4").unwrap().topology_str(), "tree:3x4");
+    assert_eq!(
+        NetConfig::parse("fat-tree:8").unwrap().topology_str(),
+        "fat-tree:8"
+    );
+    for bad in ["mesh", "tree:3", "tree:ax4", "fat-tree:x"] {
+        assert!(NetConfig::parse(bad).is_err(), "'{bad}' must be rejected");
+    }
+    // Structurally invalid topologies parse but fail validation.
+    for degenerate in ["tree:0x4", "fat-tree:3", "fat-tree:0"] {
+        let net = NetConfig::parse(degenerate).unwrap();
+        assert!(
+            net.validate(1).is_err(),
+            "'{degenerate}' must fail validation"
+        );
+    }
+    // tree:2x3 holds 6 executors — 7 must fail ClusterConfig validation.
+    let mut cfg = ClusterConfig::with_executors(7);
+    cfg.net = NetConfig::tree(2, 3);
+    assert!(cfg.validate().is_err(), "over-capacity topology accepted");
+    cfg.n_executors = 6;
+    cfg.validate().unwrap();
+}

@@ -605,6 +605,140 @@ fn prop_forward_batch_matches_single_state() {
     }
 }
 
+/// Random cluster with a random topology (flat, tree, fat-tree), always
+/// sized so the executor count fits the topology's capacity.
+fn random_net_cluster(rng: &mut Rng) -> Cluster {
+    use lachesis::net::NetConfig;
+    let n = rng.range_u(2, 24);
+    let mut cfg = ClusterConfig::with_executors(n);
+    cfg.comm_mbps = rng.range_f(5.0, 500.0);
+    cfg.net = match rng.below(3) {
+        0 => NetConfig::flat(),
+        1 => {
+            let racks = rng.range_u(1, 5);
+            NetConfig::tree(racks, (n + racks - 1) / racks)
+        }
+        _ => {
+            let mut k = 2 * rng.range_u(1, 5);
+            while k * k * k / 4 < n {
+                k += 2;
+            }
+            NetConfig::fat_tree(k)
+        }
+    };
+    cfg.validate().unwrap();
+    Cluster::heterogeneous(&cfg, rng.next_u64())
+}
+
+/// Network-model invariants on random topologies: bandwidth and latency
+/// are bitwise symmetric, self-transfer is free (infinite bandwidth,
+/// zero latency), and a rack-local link is never slower than any
+/// cross-rack link — in bandwidth or in latency.
+#[test]
+fn prop_network_symmetric_self_free_local_fastest() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(11_000 + case);
+        let cluster = random_net_cluster(&mut rng);
+        let net = &cluster.net;
+        let n = cluster.len();
+        for i in 0..n {
+            assert!(net.bandwidth(i, i).is_infinite(), "case {case}: self bw");
+            assert_eq!(net.latency(i, i), 0.0, "case {case}: self latency");
+            assert_eq!(net.transfer_time(64.0, i, i), 0.0, "case {case}");
+            for j in 0..n {
+                assert_eq!(
+                    net.bandwidth(i, j).to_bits(),
+                    net.bandwidth(j, i).to_bits(),
+                    "case {case}: bw({i},{j}) asymmetric"
+                );
+                assert_eq!(
+                    net.latency(i, j).to_bits(),
+                    net.latency(j, i).to_bits(),
+                    "case {case}: lat({i},{j}) asymmetric"
+                );
+            }
+        }
+        // Rack-local links dominate cross-rack ones in both coordinates.
+        let mut min_local_bw = f64::INFINITY;
+        let mut max_local_lat = 0.0f64;
+        let mut max_cross_bw = 0.0f64;
+        let mut min_cross_lat = f64::INFINITY;
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                if cluster.same_rack(i, j) {
+                    min_local_bw = min_local_bw.min(net.bandwidth(i, j));
+                    max_local_lat = max_local_lat.max(net.latency(i, j));
+                } else {
+                    max_cross_bw = max_cross_bw.max(net.bandwidth(i, j));
+                    min_cross_lat = min_cross_lat.min(net.latency(i, j));
+                }
+            }
+        }
+        if max_cross_bw > 0.0 && min_local_bw.is_finite() {
+            assert!(
+                min_local_bw >= max_cross_bw,
+                "case {case}: local bw {min_local_bw} < cross bw {max_cross_bw}"
+            );
+            assert!(
+                max_local_lat <= min_cross_lat,
+                "case {case}: local lat {max_local_lat} > cross lat {min_cross_lat}"
+            );
+        }
+        // c̄ stays a usable normalizer on every topology.
+        assert!(
+            cluster.c_avg().is_finite() && cluster.c_avg() > 0.0,
+            "case {case}: c_avg {}",
+            cluster.c_avg()
+        );
+    }
+}
+
+/// Every scheduler still produces `validate()`-clean schedules on
+/// rack-structured clusters, and flat transfer pricing stays bitwise the
+/// scalar formula on random inputs.
+#[test]
+fn prop_schedulers_valid_on_topologies() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(12_000 + case);
+        let w = random_workload(&mut rng, rng.range_u(1, 4), case % 2 == 0);
+        let cluster = random_net_cluster(&mut rng);
+        let comm = cluster.comm_mbps;
+        if cluster.net.is_flat() {
+            for _ in 0..8 {
+                let (d, i, j) = (
+                    rng.range_f(0.1, 500.0),
+                    rng.below(cluster.len()),
+                    rng.below(cluster.len()),
+                );
+                let want = if i == j { 0.0 } else { d / comm };
+                assert_eq!(
+                    cluster.transfer_time(d, i, j).to_bits(),
+                    want.to_bits(),
+                    "case {case}: flat pricing drifted"
+                );
+            }
+        }
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(HeftScheduler::new()),
+            Box::new(HighRankUpScheduler::new()),
+            Box::new(TdcaScheduler::new()),
+        ];
+        for sched in scheds.iter_mut() {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let report = sim
+                .run(sched.as_mut())
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", sched.name()));
+            assert!(report.makespan.is_finite() && report.makespan > 0.0);
+            sim.state
+                .validate()
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", sched.name()));
+        }
+    }
+}
+
 /// The CSR representation must round-trip to the dense adjacency and job
 /// membership matrices exactly (independently reconstructed from the DAG
 /// and the slot mapping).
