@@ -142,6 +142,61 @@ fn main() {
         });
     }
 
+    // Disabled-telemetry overhead: with the master switch off, every
+    // obs probe on the sim/policy hot path must collapse to a relaxed
+    // atomic load and a predictable branch. The probes cannot be
+    // compiled out at runtime, so no probe-free A/B build exists to
+    // time against; instead measure the per-decision probe cost
+    // directly — a bundle deliberately over-provisioned vs the real
+    // site count (6 disabled spans + 4 gate checks, where a HEFT
+    // decision executes 4 spans and 3 checks) — multiply by the
+    // decisions a run makes, and report
+    //   t_run / (t_run - n_decisions * t_bundle)
+    // i.e. run time relative to a hypothetical probe-free build. CI
+    // gates this below 1.03.
+    {
+        lachesis::obs::set_enabled(false);
+        let w = WorkloadGenerator::new(WorkloadConfig::large_batch(20), 7).generate();
+        let cluster = Cluster::heterogeneous(&cfg, 7);
+        let bundle = || {
+            for _ in 0..6 {
+                black_box(lachesis::obs::trace::span("bench", "probe"));
+            }
+            for _ in 0..4 {
+                black_box(lachesis::obs::enabled());
+            }
+        };
+        let probe_iters = 200_000usize;
+        let t0 = Instant::now();
+        for _ in 0..probe_iters {
+            bundle();
+        }
+        let t_bundle = t0.elapsed().as_secs_f64() / probe_iters as f64;
+        let t0 = Instant::now();
+        {
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            black_box(sim.run(&mut HeftScheduler::new()).unwrap());
+        }
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        // Hard CI gate on the ratio: enough runs that short-sample
+        // variance cannot dominate at tiny budgets.
+        let iters = ((b.budget_secs * 0.1 / once).ceil() as usize).clamp(20, 2_000);
+        let (mut t_run, mut decisions) = (0.0f64, 0u64);
+        for _ in 0..iters {
+            let t = Instant::now();
+            let mut sim = Simulator::new(cluster.clone(), w.clone());
+            let r = sim.run(&mut HeftScheduler::new()).unwrap();
+            t_run += t.elapsed().as_secs_f64();
+            decisions += r.n_tasks as u64;
+        }
+        let probe_cost = decisions as f64 * t_bundle;
+        // Clamp the denominator: if the probe estimate ever exceeded
+        // half the run (it is orders of magnitude below), report a
+        // loud 2.0 rather than a nonsense negative ratio.
+        let ratio = t_run / (t_run - probe_cost).max(t_run * 0.5);
+        b.note("obs_disabled_overhead_ratio", ratio);
+    }
+
     // Network-model overhead: under `flat` the matrix-backed
     // `transfer_time` must price exactly like the old scalar division,
     // and the CI gate holds its cost to < 5% over the inline formula.

@@ -446,6 +446,10 @@ pub struct TrainConfig {
     /// Worker threads for rollout actors and evaluation (0 = all cores).
     /// The training trajectory is identical for every value.
     pub threads: usize,
+    /// Append one JSON line of telemetry per episode (loss, entropy,
+    /// reward, rollout/update wall time) to this path. `None` disables.
+    /// Monitoring only — never read back, never affects the trajectory.
+    pub metrics_jsonl: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -462,6 +466,7 @@ impl Default for TrainConfig {
             imitation_epochs: 2,
             seed: 20210001,
             threads: 0,
+            metrics_jsonl: None,
         }
     }
 }
@@ -480,6 +485,13 @@ impl TrainConfig {
             ("imitation_epochs", Json::from(self.imitation_epochs)),
             ("seed", Json::from(self.seed)),
             ("threads", Json::from(self.threads)),
+            (
+                "metrics_jsonl",
+                match &self.metrics_jsonl {
+                    Some(p) => Json::from(p.as_str()),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -497,6 +509,11 @@ impl TrainConfig {
             seed: v.req("seed")?.as_u64().context("seed")?,
             // Absent in configs written before the threaded engine.
             threads: v.req_usize("threads").unwrap_or(0),
+            // Absent in configs written before the telemetry subsystem.
+            metrics_jsonl: v
+                .get("metrics_jsonl")
+                .and_then(Json::as_str)
+                .map(str::to_string),
         })
     }
 }

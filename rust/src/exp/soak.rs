@@ -8,15 +8,22 @@
 //! Each master walks its own simulated clock (`t += Exp(mean_interval)`),
 //! submits the next TPC-H job at that arrival, heartbeats the previous
 //! job, and asks for a schedule — recording wall-clock submit/decision
-//! latency per request. Every mutating request carries a `request_id`
-//! (exercising the dedup window at full load) and goes through the
-//! retrying client, so the soak measures the production request path.
-//! Dedicated monitor threads hammer `status` concurrently (the read
-//! path the batched engine serves lock-free). A third leg repeats the
-//! batched run with a write-ahead journal attached, yielding the
-//! journaling overhead ratio CI gates on. Results land in
-//! `results/soak.md` and a `BENCH_service.json` with the same shape as
-//! the other committed bench snapshots.
+//! latency per request into the obs registry's log-scale [`Histogram`]
+//! (fixed 274-bucket memory no matter how long the soak runs; a
+//! `Recorder` keeping every sample grows without bound under sustained
+//! arrivals and is kept only for short sweeps). Every mutating request
+//! carries a `request_id` (exercising the dedup window at full load)
+//! and goes through the retrying client, so the soak measures the
+//! production request path. Dedicated monitor threads hammer `status`
+//! concurrently (the read path the batched engine serves lock-free).
+//! A third leg repeats the batched run with a write-ahead journal
+//! attached, yielding the journaling overhead ratio CI gates on. Each
+//! leg also binds the same plain-HTTP Prometheus listener that
+//! `lachesis serve --metrics-addr` exposes and scrapes it once mid-run,
+//! so the soak doubles as an end-to-end check of the live metrics
+//! surface. Results land in `results/soak.md` and a
+//! `BENCH_service.json` with the same shape as the other committed
+//! bench snapshots.
 //!
 //! `lachesis soak --chaos` runs the [`chaos`] harness instead: a
 //! journaled child server process is SIGKILLed mid-stream, restarted
@@ -30,16 +37,16 @@
 use super::{build_send_scheduler, write_results, PolicySource};
 use crate::cluster::Cluster;
 use crate::config::ClusterConfig;
+use crate::obs::metrics::Histogram;
 use crate::service::{
     AgentCore, AgentServer, ClientConfig, Durability, Request, Response, ServiceClient,
     ServiceMode,
 };
 use crate::util::json::Json;
 use crate::util::rng::{Rng, STREAM_SOAK};
-use crate::util::stats::Recorder;
 use crate::workload::tpch;
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -98,12 +105,13 @@ pub struct SoakReport {
     /// Row label: the mode name, with `+journal` when a write-ahead
     /// journal was attached.
     pub label: String,
-    /// `schedule` round-trip latency, ms.
-    pub decision: Recorder,
+    /// `schedule` round-trip latency, ms — a bounded log-scale
+    /// histogram, so memory stays O(1) over arbitrarily long soaks.
+    pub decision: Histogram,
     /// `submit_job` round-trip latency, ms.
-    pub submit: Recorder,
+    pub submit: Histogram,
     /// `status` round-trip latency, ms (masters + monitors).
-    pub status: Recorder,
+    pub status: Histogram,
     pub jobs: usize,
     pub assignments: usize,
     pub wall_secs: f64,
@@ -118,13 +126,16 @@ pub struct SoakReport {
     pub shed: u64,
     /// Duplicate `request_id`s answered from the dedup window.
     pub deduped: usize,
+    /// The mid-run scrape of this leg's Prometheus listener parsed as
+    /// text exposition and carried `lachesis_requests_total`.
+    pub metrics_scrape_ok: bool,
 }
 
 #[derive(Default)]
 struct MasterStats {
-    submit: Recorder,
-    decision: Recorder,
-    status: Recorder,
+    submit: Histogram,
+    decision: Histogram,
+    status: Histogram,
     jobs: usize,
     assignments: usize,
 }
@@ -173,7 +184,7 @@ fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
                 edges,
             },
         )?;
-        stats.submit.push(ms_since(t0));
+        stats.submit.record(ms_since(t0));
         let job_id = match resp {
             Response::Ok { job_id: Some(id) } => id,
             other => bail!("master {m}: unexpected submit response {other:?}"),
@@ -194,7 +205,7 @@ fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
         let t0 = Instant::now();
         let resp =
             client.call_idempotent(&format!("m{m}-{k}-sched"), &Request::Schedule { time: sim_t })?;
-        stats.decision.push(ms_since(t0));
+        stats.decision.record(ms_since(t0));
         match resp {
             Response::Assignments(a) => stats.assignments += a.len(),
             other => bail!("master {m}: unexpected schedule response {other:?}"),
@@ -202,7 +213,7 @@ fn run_master(m: usize, addr: &str, cfg: &SoakConfig) -> Result<MasterStats> {
         if cfg.status_every > 0 && k % cfg.status_every == 0 {
             let t0 = Instant::now();
             client.call(&Request::Status)?;
-            stats.status.push(ms_since(t0));
+            stats.status.record(ms_since(t0));
         }
         stats.jobs += 1;
     }
@@ -248,9 +259,26 @@ pub fn run_soak_mode(
         .context("soak server did not bind")?
         .to_string();
 
+    // The same plain-HTTP Prometheus surface `lachesis serve
+    // --metrics-addr` exposes, on an ephemeral port; scraped once after
+    // the masters drain so the soak exercises the live metrics path.
+    let (mtx, mrx) = std::sync::mpsc::channel();
+    let msrv = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            server.serve_metrics_http("127.0.0.1:0", move |a| {
+                let _ = mtx.send(a);
+            })
+        })
+    };
+    let metrics_addr = mrx
+        .recv_timeout(Duration::from_secs(10))
+        .context("soak metrics listener did not bind")?
+        .to_string();
+
     let stop = AtomicBool::new(false);
     let mut master_results: Vec<std::thread::Result<Result<MasterStats>>> = Vec::new();
-    let mut status = Recorder::new();
+    let status = Histogram::new();
     let t_start = Instant::now();
     let mut wall_secs = 0.0;
     std::thread::scope(|s| {
@@ -258,13 +286,13 @@ pub fn run_soak_mode(
             .map(|_| {
                 let addr = addr.clone();
                 let stop = &stop;
-                s.spawn(move || -> Result<Recorder> {
+                s.spawn(move || -> Result<Histogram> {
                     let mut client = ServiceClient::connect(&addr)?;
-                    let mut rec = Recorder::new();
+                    let rec = Histogram::new();
                     while !stop.load(Ordering::SeqCst) {
                         let t0 = Instant::now();
                         match client.call(&Request::Status)? {
-                            Response::Status { .. } => rec.push(ms_since(t0)),
+                            Response::Status { .. } => rec.record(ms_since(t0)),
                             other => bail!("unexpected status response {other:?}"),
                         }
                         std::thread::sleep(Duration::from_millis(1));
@@ -288,12 +316,25 @@ pub fn run_soak_mode(
         stop.store(true, Ordering::SeqCst);
         for h in monitors {
             match h.join() {
-                Ok(Ok(rec)) => status.extend_from(&rec),
+                Ok(Ok(rec)) => status.merge_from(&rec),
                 Ok(Err(e)) => crate::log_warn!("status monitor failed: {e:#}"),
                 Err(_) => crate::log_warn!("status monitor panicked"),
             }
         }
     });
+
+    // Acceptance scrape: hit the leg's metrics listener the way a
+    // Prometheus agent would. A failed scrape is reported (and gated in
+    // CI via the bench note), not fatal to the latency measurement.
+    let metrics_scrape_ok = match scrape_metrics(&metrics_addr)
+        .and_then(|body| check_prometheus_payload(&body))
+    {
+        Ok(()) => true,
+        Err(e) => {
+            crate::log_warn!("metrics scrape failed: {e:#}");
+            false
+        }
+    };
 
     // Stop the server before surfacing any master error, so a failed run
     // never leaks a bound listener thread. The final status carries the
@@ -305,6 +346,8 @@ pub fn run_soak_mode(
     };
     client.call(&Request::Shutdown)?;
     srv.join().map_err(|_| anyhow!("server thread panicked"))??;
+    msrv.join()
+        .map_err(|_| anyhow!("metrics listener thread panicked"))??;
 
     let label = if cfg.journal.is_some() {
         format!("{}+journal", mode.name())
@@ -314,8 +357,8 @@ pub fn run_soak_mode(
     let mut report = SoakReport {
         mode,
         label,
-        decision: Recorder::new(),
-        submit: Recorder::new(),
+        decision: Histogram::new(),
+        submit: Histogram::new(),
         status,
         jobs: 0,
         assignments: 0,
@@ -326,12 +369,13 @@ pub fn run_soak_mode(
         coalesced_heartbeats: 0,
         shed,
         deduped,
+        metrics_scrape_ok,
     };
     for r in master_results {
         let stats = r.map_err(|_| anyhow!("master thread panicked"))??;
-        report.decision.extend_from(&stats.decision);
-        report.submit.extend_from(&stats.submit);
-        report.status.extend_from(&stats.status);
+        report.decision.merge_from(&stats.decision);
+        report.submit.merge_from(&stats.submit);
+        report.status.merge_from(&stats.status);
         report.jobs += stats.jobs;
         report.assignments += stats.assignments;
     }
@@ -353,11 +397,62 @@ pub fn run_soak_mode(
     Ok(report)
 }
 
-fn latency_row(name: &str, rec: &Recorder) -> String {
+/// GET a leg's Prometheus listener once over a plain TCP socket (the
+/// repo carries no HTTP client) and return the response body.
+fn scrape_metrics(addr: &str) -> Result<String> {
+    let mut s = std::net::TcpStream::connect(addr).context("connecting to the metrics listener")?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    s.set_write_timeout(Some(Duration::from_secs(5)))?;
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: lachesis\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).context("reading the scrape response")?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("scrape response has no header/body separator"))?;
+    if !head.starts_with("HTTP/1.1 200") {
+        bail!(
+            "metrics listener answered {:?}",
+            head.lines().next().unwrap_or("")
+        );
+    }
+    Ok(body.to_string())
+}
+
+/// Minimal exposition-format check: every non-comment, non-blank line
+/// must end in a finite numeric sample value, at least one sample must
+/// be present, and the payload must carry the request counter family —
+/// the invariant the CI soak smoke gates on.
+fn check_prometheus_payload(body: &str) -> Result<()> {
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (_series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| anyhow!("malformed exposition line {line:?}"))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|_| anyhow!("non-numeric sample value in {line:?}"))?;
+        if !v.is_finite() {
+            bail!("non-finite sample value in {line:?}");
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        bail!("scrape returned no samples");
+    }
+    if !body.contains("lachesis_requests_total") {
+        bail!("scrape is missing lachesis_requests_total");
+    }
+    Ok(())
+}
+
+fn latency_row(name: &str, rec: &Histogram) -> String {
     let ps = rec.percentiles(&[50.0, 95.0, 99.0]);
     format!(
         "| {name} | {} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
-        rec.len(),
+        rec.count(),
         rec.mean(),
         ps[0],
         ps[1],
@@ -365,14 +460,15 @@ fn latency_row(name: &str, rec: &Recorder) -> String {
     )
 }
 
-fn bench_case(name: &str, rec: &Recorder) -> Json {
-    // ms → ns, matching the other BENCH_*.json snapshots.
+fn bench_case(name: &str, rec: &Histogram) -> Json {
+    // ms → ns, matching the other BENCH_*.json snapshots. Percentiles
+    // are bucket upper edges (≤ 13% above exact by construction); the
+    // histogram carries no per-sample data, so no std_ns here.
     let ps = rec.percentiles(&[50.0, 95.0, 99.0]);
     Json::from_pairs(vec![
         ("name", Json::from(name)),
-        ("iters", Json::from(rec.len())),
+        ("iters", Json::from(rec.count() as usize)),
         ("mean_ns", Json::from(rec.mean() * 1e6)),
-        ("std_ns", Json::from(rec.std_dev() * 1e6)),
         ("p50_ns", Json::from(ps[0] * 1e6)),
         ("p95_ns", Json::from(ps[1] * 1e6)),
         ("p99_ns", Json::from(ps[2] * 1e6)),
@@ -497,6 +593,14 @@ pub fn soak(cfg: &SoakConfig, src: &PolicySource, out_json: &str) -> Result<Stri
                 (
                     "deduped_total",
                     Json::from(serial.deduped + batched.deduped + journaled.deduped),
+                ),
+                (
+                    "metrics_scrape_ok",
+                    Json::from(
+                        serial.metrics_scrape_ok
+                            && batched.metrics_scrape_ok
+                            && journaled.metrics_scrape_ok,
+                    ),
                 ),
             ]),
         ),
@@ -901,6 +1005,12 @@ mod tests {
         assert!(raw.contains("jobs_per_sec_serial"));
         assert!(raw.contains("jobs_per_sec_batched"));
         assert!(raw.contains("journal_overhead_ratio"));
+        let parsed = Json::parse(&raw).unwrap();
+        assert_eq!(
+            parsed.get("notes").and_then(|n| n.get("metrics_scrape_ok")).and_then(Json::as_bool),
+            Some(true),
+            "every soak leg must serve a parseable Prometheus scrape"
+        );
         std::fs::remove_file(&out_path).ok();
     }
 
@@ -925,13 +1035,17 @@ mod tests {
         };
         let rep = run_soak_mode(&cfg, &src, ServiceMode::Batched).unwrap();
         assert_eq!(rep.jobs, 7);
-        assert_eq!(rep.decision.len(), 7);
-        assert_eq!(rep.submit.len(), 7);
+        assert_eq!(rep.decision.count(), 7);
+        assert_eq!(rep.submit.count(), 7);
         assert!(rep.assignments > 0);
         assert!(rep.batches > 0);
         assert!(rep.jobs_per_sec > 0.0);
         assert_eq!(rep.label, "batched");
         assert_eq!(rep.deduped, 0, "unique ids must never count as duplicates");
+        assert!(
+            rep.metrics_scrape_ok,
+            "the in-run Prometheus scrape must parse and carry lachesis_requests_total"
+        );
     }
 
     /// The journaled leg lands every job through the write-ahead journal,

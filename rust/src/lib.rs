@@ -53,6 +53,7 @@ pub mod exp;
 pub mod fault;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod policy;
 pub mod rl;
 pub mod runtime;

@@ -17,6 +17,8 @@ USAGE:
   lachesis workload  --jobs N [--mode batch|continuous] [--seed S] [--out trace.json]
   lachesis schedule  --algo NAME [--jobs N] [--trace trace.json] [--seed S]
                      [--executors M] [--validate] [--backend pjrt|rust]
+                     [--trace-out spans.json]   (record telemetry spans,
+                      write a Chrome trace viewable in ui.perfetto.dev)
                      [--net flat|tree:RxW|fat-tree:K]   (network topology;
                       flat reproduces the paper's uniform comm model)
                      [--fault-rate R]   (inject crashes/stragglers at R per exec/s)
@@ -27,6 +29,9 @@ USAGE:
                      (uses the AOT train_step when built with --features
                       pjrt and artifacts exist; otherwise the native CPU
                       gradient backend — no artifacts needed)
+                     [--metrics-jsonl FILE]   (append one JSON line of
+                      training metrics per episode)
+                     [--trace-out spans.json]
   lachesis serve     [--addr 127.0.0.1:7654] [--algo NAME] [--executors M]
                      [--net flat|tree:RxW|fat-tree:K]
                      [--mode serial|batched]   (batched: mailbox core loop
@@ -36,11 +41,14 @@ USAGE:
                       rebuilds the core from disk before serving)
                      [--max-queue N] [--admission shed|block]
                      (bounded mailbox: refuse with `overloaded` or block)
+                     [--metrics-addr 127.0.0.1:9464]   (serve the live
+                      Prometheus text exposition over plain HTTP GET)
+                     [--trace-out spans.json]
   lachesis soak      [--masters N] [--jobs J] [--mean-interval S]
                      [--executors M] [--algo NAME] [--seed S]
                      [--status-every K] [--monitors N] [--max-queue N]
                      [--journal DIR] [--snapshot-every N]
-                     [--out BENCH_service.json]
+                     [--out BENCH_service.json] [--trace-out spans.json]
                      (sustained Poisson load over TCP: serial vs batched
                       vs batched+journal, with the journaling overhead
                       ratio CI gates on)
@@ -137,6 +145,27 @@ fn net_config(args: &Args) -> Result<lachesis::net::NetConfig> {
     lachesis::net::NetConfig::parse(args.opt_or("net", "flat"))
 }
 
+/// Honor `--trace-out FILE`: turn span tracing (and the metrics
+/// registry) on and return the path the caller must dump to on exit.
+/// (`--trace` was already taken by `schedule` for workload-trace
+/// replay, hence the distinct name.)
+fn trace_out_start(args: &Args) -> Option<String> {
+    let path = args.opt("trace-out")?.to_string();
+    lachesis::obs::trace::start_tracing();
+    Some(path)
+}
+
+/// Write the Chrome trace accumulated since [`trace_out_start`].
+fn trace_out_finish(path: Option<String>) -> Result<()> {
+    if let Some(path) = path {
+        lachesis::obs::trace::stop_tracing();
+        lachesis::obs::trace::dump_chrome_trace(&path)
+            .with_context(|| format!("writing chrome trace {path}"))?;
+        println!("chrome trace written to {path} — load it at ui.perfetto.dev");
+    }
+    Ok(())
+}
+
 fn cmd_schedule(args: &Args) -> Result<()> {
     let algo = args.opt_or("algo", "Lachesis");
     let seed = args.u64_opt("seed", 1)?;
@@ -179,7 +208,9 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         );
         sim.inject_faults(&plan);
     }
+    let tr = trace_out_start(args);
     let report = sim.run(sched.as_mut())?;
+    trace_out_finish(tr)?;
     if args.flag("gantt") {
         println!("{}", lachesis::metrics::gantt::render(&sim.state, 100));
     }
@@ -205,6 +236,13 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let tr = trace_out_start(args);
+    let res = cmd_train_inner(args);
+    trace_out_finish(tr)?;
+    res
+}
+
+fn cmd_train_inner(args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::default();
     cfg.episodes = args.usize_opt("episodes", cfg.episodes)?;
     cfg.agents = args.usize_opt("agents", cfg.agents)?;
@@ -213,6 +251,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.executors = args.usize_opt("executors", cfg.executors)?;
     cfg.imitation_epochs = args.usize_opt("imitation-epochs", cfg.imitation_epochs)?;
     cfg.threads = args.threads_opt(1)?;
+    cfg.metrics_jsonl = args.opt("metrics-jsonl").map(str::to_string);
     let artifacts = args.opt_or("artifacts", "artifacts");
     let default_out = if args.flag("decima") {
         "checkpoints/decima.bin"
@@ -348,7 +387,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "lachesis agent ({algo}, {} engine{durable}) listening on {addr} — ctrl-c to stop",
         mode.name()
     );
-    agent.serve(addr, |bound| println!("bound {bound}"))?;
+    let tr = trace_out_start(args);
+    let metrics_addr = args.opt("metrics-addr").map(str::to_string);
+    let agent = &agent;
+    std::thread::scope(|s| -> Result<()> {
+        // The side listener polls the same shutdown flag the agent sets,
+        // so the scope joins cleanly after a `shutdown` request.
+        if let Some(maddr) = metrics_addr.as_deref() {
+            s.spawn(move || {
+                if let Err(e) = agent.serve_metrics_http(maddr, |bound| {
+                    println!("metrics on http://{bound}/metrics")
+                }) {
+                    eprintln!("metrics listener failed: {e:#}");
+                }
+            });
+        }
+        agent.serve(addr, |bound| println!("bound {bound}"))
+    })?;
+    trace_out_finish(tr)?;
     Ok(())
 }
 
@@ -357,6 +413,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// batched+journal) and reported side by side (`results/soak.md` + a
 /// bench JSON). `--chaos` runs the kill-and-restore drill instead.
 fn cmd_soak(args: &Args) -> Result<()> {
+    let tr = trace_out_start(args);
+    let res = cmd_soak_inner(args);
+    trace_out_finish(tr)?;
+    res
+}
+
+fn cmd_soak_inner(args: &Args) -> Result<()> {
     let src = policy_source(args);
     if args.flag("chaos") {
         let mut cfg = lachesis::exp::soak::ChaosConfig::default();

@@ -1,0 +1,888 @@
+//! Global, lock-light metrics registry: atomic counters, f64 gauges,
+//! and fixed log-scale-bucket histograms that are deterministic and
+//! mergeable across threads. Snapshots export to Prometheus
+//! text-exposition format and to [`Json`].
+//!
+//! Registration (name + label set → instrument handle) takes a mutex;
+//! hot paths hold the returned `Arc` (or reach it through a `OnceLock`
+//! catalog like [`service_metrics`]) and touch only atomics. The same
+//! (name, labels, kind) key always returns the same instrument, so
+//! re-constructing a server or simulator keeps accumulating into the
+//! process-wide series — exactly what a `/metrics` scrape should see.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an `AtomicU64`).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// Histogram bucketing: each power-of-two octave is split into
+// 2^SUB_BITS sub-buckets by the top mantissa bits, so the bucket index
+// is read straight off the float's bit pattern — exact, monotone in the
+// value, and identical on every platform (no libm). Values are
+// milliseconds by convention; the range [2^-10, 2^24) ms spans ~1 µs to
+// ~4.7 h, with explicit underflow/overflow buckets outside it.
+const SUB_BITS: u64 = 3;
+const MIN_EXP: i32 = -10;
+const MAX_EXP: i32 = 24;
+const FIRST_KEY: u64 = ((1023 + MIN_EXP) as u64) << SUB_BITS;
+const LAST_KEY: u64 = ((1023 + MAX_EXP) as u64) << SUB_BITS;
+/// Total bucket count: underflow + log buckets + overflow.
+pub const NBUCKETS: usize = (LAST_KEY - FIRST_KEY) as usize + 2;
+/// Lower edge of the log range (values below land in the underflow bucket).
+pub const HIST_MIN: f64 = 0.0009765625; // 2^-10
+/// Upper edge of the log range (values at or above land in overflow).
+pub const HIST_MAX: f64 = 16777216.0; // 2^24
+
+/// Bucket index for a value. Deterministic pure bit arithmetic.
+#[inline]
+pub fn bucket_index(v: f64) -> usize {
+    if !(v >= HIST_MIN) {
+        // NaN, negatives, zero, subnormal-small: underflow bucket.
+        return 0;
+    }
+    if v >= HIST_MAX {
+        return NBUCKETS - 1;
+    }
+    let key = v.to_bits() >> (52 - SUB_BITS);
+    (key - FIRST_KEY) as usize + 1
+}
+
+/// Inclusive upper edge of bucket `i` (`le` in Prometheus terms).
+/// Underflow reports `HIST_MIN`, overflow `+Inf`.
+pub fn bucket_upper(i: usize) -> f64 {
+    if i == 0 {
+        HIST_MIN
+    } else if i >= NBUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        f64::from_bits((FIRST_KEY + i as u64) << (52 - SUB_BITS))
+    }
+}
+
+/// Lower edge of bucket `i`. Underflow reports 0, overflow `HIST_MAX`.
+pub fn bucket_lower(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else if i >= NBUCKETS - 1 {
+        HIST_MAX
+    } else {
+        f64::from_bits((FIRST_KEY + (i as u64 - 1)) << (52 - SUB_BITS))
+    }
+}
+
+/// Fixed log-scale-bucket histogram. Recording is two relaxed atomic
+/// ops (bucket count + running sum); memory is a fixed ~2.2 KiB however
+/// many samples arrive — the bounded replacement for hoarding every
+/// sample in a [`crate::util::stats::Recorder`]. Two histograms filled
+/// from interleaved streams merge into exactly the histogram of the
+/// combined stream, so per-thread instances are safe to aggregate.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    /// Running sum of recorded values, accumulated via CAS on f64 bits.
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: f64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() {
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + v).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of recorded values (merge order may perturb the last ulps).
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Raw per-bucket counts (index-aligned with [`bucket_upper`]).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold another histogram's counts into this one. Bucket counts are
+    /// integers, so `merge ≡ recording every sample into one histogram`
+    /// exactly (pinned by proptest in `tests/integration_obs.rs`).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter().zip(other.counts.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        let s = other.sum();
+        if s != 0.0 {
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + s).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    /// Percentile estimate: the upper edge of the bucket holding the
+    /// nearest-rank sample. The true sample lies inside that bucket, so
+    /// the estimate is within one bucket width (≤ 12.5% relative) of
+    /// exact. Empty histograms return 0.0, matching `Recorder`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let n: u64 = counts.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * ((n - 1) as f64)).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                // Overflow bucket has no finite upper edge; report its
+                // lower edge instead of +Inf.
+                if i == NBUCKETS - 1 {
+                    return HIST_MAX;
+                }
+                return bucket_upper(i);
+            }
+        }
+        HIST_MAX
+    }
+
+    /// Batch percentiles, mirroring `Recorder::percentiles`.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        ps.iter().map(|&p| self.percentile(p)).collect()
+    }
+
+    /// Mean of recorded values (0.0 when empty, matching `Recorder`).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Instrument {
+    C(Arc<Counter>),
+    G(Arc<Gauge>),
+    H(Arc<Histogram>),
+}
+
+impl Instrument {
+    fn kind(&self) -> &'static str {
+        match self {
+            Instrument::C(_) => "counter",
+            Instrument::G(_) => "gauge",
+            Instrument::H(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    instrument: Instrument,
+}
+
+static REGISTRY: OnceLock<Mutex<Vec<Entry>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Vec<Entry>> {
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn intern(
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    make: impl FnOnce() -> Instrument,
+) -> Instrument {
+    let labels: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    let mut entries = registry().lock().unwrap();
+    for e in entries.iter() {
+        if e.name == name && e.labels == labels {
+            return e.instrument.clone();
+        }
+    }
+    let instrument = make();
+    entries.push(Entry {
+        name: name.to_string(),
+        help: help.to_string(),
+        labels,
+        instrument: instrument.clone(),
+    });
+    instrument
+}
+
+/// Register (or fetch) a counter series.
+pub fn counter(name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+    match intern(name, help, labels, || Instrument::C(Arc::new(Counter::new()))) {
+        Instrument::C(c) => c,
+        other => panic!("metric {name} already registered as {}", other.kind()),
+    }
+}
+
+/// Register (or fetch) a gauge series.
+pub fn gauge(name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+    match intern(name, help, labels, || Instrument::G(Arc::new(Gauge::new()))) {
+        Instrument::G(g) => g,
+        other => panic!("metric {name} already registered as {}", other.kind()),
+    }
+}
+
+/// Register (or fetch) a histogram series.
+pub fn histogram(name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+    match intern(name, help, labels, || {
+        Instrument::H(Arc::new(Histogram::new()))
+    }) {
+        Instrument::H(h) => h,
+        other => panic!("metric {name} already registered as {}", other.kind()),
+    }
+}
+
+/// Escape a label value per the Prometheus text exposition format:
+/// backslash, double-quote and newline must be backslash-escaped.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, String)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render `le` edges the way Prometheus expects (finite decimals, +Inf).
+fn fmt_le(v: f64) -> String {
+    if v.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Snapshot the whole registry as Prometheus text exposition format.
+/// Histograms emit cumulative `_bucket{le=...}` lines for non-empty
+/// buckets (plus `+Inf`), `_sum`, and `_count`.
+pub fn prometheus_text() -> String {
+    let entries = registry().lock().unwrap();
+    // Group series of the same name so # HELP/# TYPE appear once.
+    let mut order: Vec<usize> = (0..entries.len()).collect();
+    order.sort_by(|&a, &b| {
+        (&entries[a].name, &entries[a].labels).cmp(&(&entries[b].name, &entries[b].labels))
+    });
+    let mut out = String::new();
+    let mut last_name = "";
+    for &i in &order {
+        let e = &entries[i];
+        if e.name != last_name {
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            out.push_str(&format!("# TYPE {} {}\n", e.name, e.instrument.kind()));
+            last_name = &e.name;
+        }
+        match &e.instrument {
+            Instrument::C(c) => {
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    e.name,
+                    label_block(&e.labels, None),
+                    c.get()
+                ));
+            }
+            Instrument::G(g) => {
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    e.name,
+                    label_block(&e.labels, None),
+                    g.get()
+                ));
+            }
+            Instrument::H(h) => {
+                let counts = h.bucket_counts();
+                let mut cum = 0u64;
+                for (b, &c) in counts.iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    cum += c;
+                    if b == NBUCKETS - 1 {
+                        continue; // +Inf line below carries the total
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        e.name,
+                        label_block(&e.labels, Some(("le", fmt_le(bucket_upper(b))))),
+                        cum
+                    ));
+                }
+                let total: u64 = counts.iter().sum();
+                out.push_str(&format!(
+                    "{}_bucket{} {}\n",
+                    e.name,
+                    label_block(&e.labels, Some(("le", "+Inf".to_string()))),
+                    total
+                ));
+                out.push_str(&format!(
+                    "{}_sum{} {}\n",
+                    e.name,
+                    label_block(&e.labels, None),
+                    h.sum()
+                ));
+                out.push_str(&format!(
+                    "{}_count{} {}\n",
+                    e.name,
+                    label_block(&e.labels, None),
+                    total
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Snapshot the whole registry as JSON: an array of series objects
+/// (`name`, `kind`, `labels`, and a kind-specific `value`). Histograms
+/// carry count/sum plus p50/p95/p99 estimates rather than raw buckets.
+pub fn snapshot_json() -> Json {
+    let entries = registry().lock().unwrap();
+    let mut series: Vec<Json> = Vec::with_capacity(entries.len());
+    let mut order: Vec<usize> = (0..entries.len()).collect();
+    order.sort_by(|&a, &b| {
+        (&entries[a].name, &entries[a].labels).cmp(&(&entries[b].name, &entries[b].labels))
+    });
+    for &i in &order {
+        let e = &entries[i];
+        let labels = Json::Obj(
+            e.labels
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        );
+        let value = match &e.instrument {
+            Instrument::C(c) => Json::from(c.get()),
+            Instrument::G(g) => Json::from(g.get()),
+            Instrument::H(h) => {
+                let ps = h.percentiles(&[50.0, 95.0, 99.0]);
+                Json::from_pairs(vec![
+                    ("count", Json::from(h.count())),
+                    ("sum", Json::from(h.sum())),
+                    ("p50", Json::from(ps[0])),
+                    ("p95", Json::from(ps[1])),
+                    ("p99", Json::from(ps[2])),
+                ])
+            }
+        };
+        series.push(Json::from_pairs(vec![
+            ("name", Json::from(e.name.clone())),
+            ("kind", Json::from(e.instrument.kind())),
+            ("labels", labels),
+            ("value", value),
+        ]));
+    }
+    Json::from_pairs(vec![("series", Json::Arr(series))])
+}
+
+// ---------------------------------------------------------------------------
+// Catalogs: one OnceLock per subsystem so hot paths pay a single atomic
+// load to reach their handles. Metric names are documented in
+// docs/observability.md — keep the two in sync.
+// ---------------------------------------------------------------------------
+
+/// Request-type label values, index-aligned with
+/// [`crate::service::Request::kind_index`].
+pub const REQUEST_KINDS: [&str; 7] = [
+    "submit_job",
+    "task_complete",
+    "schedule",
+    "report_failure",
+    "status",
+    "shutdown",
+    "metrics",
+];
+
+/// Service-side instruments (server core loop, mailbox, journal).
+pub struct ServiceMetrics {
+    /// `lachesis_requests_total{type=...}` — requests dispatched.
+    pub requests_total: [Arc<Counter>; 7],
+    /// `lachesis_request_latency_ms{type=...}` — dispatch wall time.
+    pub request_latency_ms: [Arc<Histogram>; 7],
+    /// `lachesis_batch_size` — requests drained per mailbox batch.
+    pub batch_size: Arc<Histogram>,
+    /// `lachesis_mailbox_depth` — queue depth after the last enqueue/drain.
+    pub mailbox_depth: Arc<Gauge>,
+    /// `lachesis_requests_shed_total` — requests refused under overload.
+    pub requests_shed_total: Arc<Counter>,
+    /// `lachesis_requests_deduped_total` — retries answered from the window.
+    pub requests_deduped_total: Arc<Counter>,
+    /// `lachesis_heartbeats_coalesced_total` — heartbeats merged per batch.
+    pub heartbeats_coalesced_total: Arc<Counter>,
+    /// `lachesis_journal_append_ms` — write-ahead append wall time.
+    pub journal_append_ms: Arc<Histogram>,
+    /// `lachesis_journal_fsync_ms` — per-batch fsync wall time.
+    pub journal_fsync_ms: Arc<Histogram>,
+    /// `lachesis_journal_fsyncs_total` — fsync barrier count.
+    pub journal_fsyncs_total: Arc<Counter>,
+    /// `lachesis_snapshot_writes_total` — checkpoint files written.
+    pub snapshot_writes_total: Arc<Counter>,
+    /// `lachesis_snapshot_write_ms` — checkpoint write wall time.
+    pub snapshot_write_ms: Arc<Histogram>,
+}
+
+/// Global service-metrics catalog.
+pub fn service_metrics() -> &'static ServiceMetrics {
+    static M: OnceLock<ServiceMetrics> = OnceLock::new();
+    M.get_or_init(|| ServiceMetrics {
+        requests_total: REQUEST_KINDS.map(|k| {
+            counter(
+                "lachesis_requests_total",
+                "Requests dispatched by the scheduling service, by type.",
+                &[("type", k)],
+            )
+        }),
+        request_latency_ms: REQUEST_KINDS.map(|k| {
+            histogram(
+                "lachesis_request_latency_ms",
+                "Service-side dispatch latency per request, by type (ms).",
+                &[("type", k)],
+            )
+        }),
+        batch_size: histogram(
+            "lachesis_batch_size",
+            "Requests drained from the mailbox per core-loop batch.",
+            &[],
+        ),
+        mailbox_depth: gauge(
+            "lachesis_mailbox_depth",
+            "Mailbox depth observed at the last enqueue or drain.",
+            &[],
+        ),
+        requests_shed_total: counter(
+            "lachesis_requests_shed_total",
+            "Mutating requests refused by the admission policy.",
+            &[],
+        ),
+        requests_deduped_total: counter(
+            "lachesis_requests_deduped_total",
+            "Retried requests answered from the dedup window.",
+            &[],
+        ),
+        heartbeats_coalesced_total: counter(
+            "lachesis_heartbeats_coalesced_total",
+            "Consecutive same-connection heartbeats merged inside a batch.",
+            &[],
+        ),
+        journal_append_ms: histogram(
+            "lachesis_journal_append_ms",
+            "Write-ahead journal append wall time (ms).",
+            &[],
+        ),
+        journal_fsync_ms: histogram(
+            "lachesis_journal_fsync_ms",
+            "Write-ahead journal fsync wall time per batch (ms).",
+            &[],
+        ),
+        journal_fsyncs_total: counter(
+            "lachesis_journal_fsyncs_total",
+            "Durability barriers (fsync) executed.",
+            &[],
+        ),
+        snapshot_writes_total: counter(
+            "lachesis_snapshot_writes_total",
+            "Periodic core snapshots written.",
+            &[],
+        ),
+        snapshot_write_ms: histogram(
+            "lachesis_snapshot_write_ms",
+            "Core snapshot write wall time (ms).",
+            &[],
+        ),
+    })
+}
+
+/// Simulator / policy decision-loop instruments.
+pub struct SimMetrics {
+    /// `lachesis_decisions_total` — scheduler decisions taken.
+    pub decisions_total: Arc<Counter>,
+    /// `lachesis_decision_ms` — whole `scheduler.step` wall time.
+    pub decision_ms: Arc<Histogram>,
+    /// `lachesis_apply_ms` — `SimState::apply` wall time.
+    pub apply_ms: Arc<Histogram>,
+    /// `lachesis_encode_ms` — graph encode (cache refresh) wall time.
+    pub encode_ms: Arc<Histogram>,
+    /// `lachesis_forward_ms` — sparse GNN forward wall time.
+    pub forward_ms: Arc<Histogram>,
+    /// `lachesis_allocate_ms` — phase-2 allocator wall time.
+    pub allocate_ms: Arc<Histogram>,
+    /// `lachesis_encoder_reuses_total` — incremental cache refreshes.
+    pub encoder_reuses_total: Arc<Counter>,
+    /// `lachesis_encoder_rebuilds_total` — full encode rebuilds.
+    pub encoder_rebuilds_total: Arc<Counter>,
+}
+
+/// Global simulator/policy-metrics catalog.
+pub fn sim_metrics() -> &'static SimMetrics {
+    static M: OnceLock<SimMetrics> = OnceLock::new();
+    M.get_or_init(|| SimMetrics {
+        decisions_total: counter(
+            "lachesis_decisions_total",
+            "Scheduler decisions taken across all runs.",
+            &[],
+        ),
+        decision_ms: histogram(
+            "lachesis_decision_ms",
+            "Wall time of one scheduler.step decision (ms).",
+            &[],
+        ),
+        apply_ms: histogram(
+            "lachesis_apply_ms",
+            "Wall time of SimState::apply per decision (ms).",
+            &[],
+        ),
+        encode_ms: histogram(
+            "lachesis_encode_ms",
+            "Wall time of graph encoding / encoder-cache refresh (ms).",
+            &[],
+        ),
+        forward_ms: histogram(
+            "lachesis_forward_ms",
+            "Wall time of the policy network forward pass (ms).",
+            &[],
+        ),
+        allocate_ms: histogram(
+            "lachesis_allocate_ms",
+            "Wall time of phase-2 executor allocation (ms).",
+            &[],
+        ),
+        encoder_reuses_total: counter(
+            "lachesis_encoder_reuses_total",
+            "Encoder-cache refreshes that reused the incremental cache.",
+            &[],
+        ),
+        encoder_rebuilds_total: counter(
+            "lachesis_encoder_rebuilds_total",
+            "Encoder-cache refreshes that rebuilt from scratch.",
+            &[],
+        ),
+    })
+}
+
+/// Trainer instruments (per-episode phases and learning signals).
+pub struct TrainMetrics {
+    /// `lachesis_train_episodes_total` — episodes completed.
+    pub episodes_total: Arc<Counter>,
+    /// `lachesis_train_rollout_ms` — parallel rollout wall time.
+    pub rollout_ms: Arc<Histogram>,
+    /// `lachesis_train_update_ms` — backward + Adam wall time.
+    pub update_ms: Arc<Histogram>,
+    /// `lachesis_train_episode` — last completed episode index.
+    pub episode: Arc<Gauge>,
+    /// `lachesis_train_reward` — mean episode return.
+    pub reward: Arc<Gauge>,
+    /// `lachesis_train_entropy` — policy entropy.
+    pub entropy: Arc<Gauge>,
+    /// `lachesis_train_grad_norm` — L2 norm of the episode's parameter
+    /// update (a gradient-scale proxy every backend can report).
+    pub grad_norm: Arc<Gauge>,
+}
+
+/// Global trainer-metrics catalog.
+pub fn train_metrics() -> &'static TrainMetrics {
+    static M: OnceLock<TrainMetrics> = OnceLock::new();
+    M.get_or_init(|| TrainMetrics {
+        episodes_total: counter(
+            "lachesis_train_episodes_total",
+            "Training episodes completed.",
+            &[],
+        ),
+        rollout_ms: histogram(
+            "lachesis_train_rollout_ms",
+            "Wall time of the parallel rollout phase per episode (ms).",
+            &[],
+        ),
+        update_ms: histogram(
+            "lachesis_train_update_ms",
+            "Wall time of backward + Adam updates per episode (ms).",
+            &[],
+        ),
+        episode: gauge(
+            "lachesis_train_episode",
+            "Index of the last completed training episode.",
+            &[],
+        ),
+        reward: gauge(
+            "lachesis_train_reward",
+            "Mean episode return of the last training episode.",
+            &[],
+        ),
+        entropy: gauge(
+            "lachesis_train_entropy",
+            "Policy entropy at the last update.",
+            &[],
+        ),
+        grad_norm: gauge(
+            "lachesis_train_grad_norm",
+            "L2 norm of the parameter update applied by the last episode \
+             (gradient-scale proxy).",
+            &[],
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_edges_are_exact() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(HIST_MIN / 2.0), 0);
+        assert_eq!(bucket_index(HIST_MIN), 1);
+        assert_eq!(bucket_index(HIST_MAX), NBUCKETS - 1);
+        assert_eq!(bucket_index(f64::INFINITY), NBUCKETS - 1);
+        let mut last = 0usize;
+        let mut v = HIST_MIN;
+        while v < HIST_MAX * 2.0 {
+            let i = bucket_index(v);
+            assert!(i >= last, "bucket index not monotone at {v}");
+            last = i;
+            v *= 1.037;
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_bracket_their_values() {
+        for &v in &[0.001, 0.01, 0.5, 1.0, 1.5, 7.0, 100.0, 12345.6] {
+            let i = bucket_index(v);
+            assert!(bucket_lower(i) <= v, "lower({i}) > {v}");
+            assert!(v <= bucket_upper(i), "{v} > upper({i})");
+            // Sub-bucket relative width is at most 2^-SUB_BITS.
+            assert!(bucket_upper(i) <= bucket_lower(i) * (1.0 + 1.0 / 8.0) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_track_recorder_within_one_bucket() {
+        use crate::util::stats::Recorder;
+        let h = Histogram::new();
+        let mut r = Recorder::new();
+        // Dense log-spaced samples: adjacent samples sit within one
+        // bucket width, so the histogram estimate must land within one
+        // bucket width of the interpolated exact percentile.
+        let mut v = 0.05f64;
+        for _ in 0..4000 {
+            h.record(v);
+            r.push(v);
+            v *= 1.002;
+        }
+        for &p in &[50.0, 95.0, 99.0] {
+            let est = h.percentile(p);
+            let exact = r.percentile(p);
+            assert!(est >= exact - 1e-12, "p{p}: est {est} < exact {exact}");
+            assert!(
+                est <= exact * (1.0 + 0.13),
+                "p{p}: est {est} beyond one bucket above exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_single() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for i in 0..1000 {
+            let v = 0.01 * (i as f64 + 1.0) * if i % 3 == 0 { 17.0 } else { 1.0 };
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.bucket_counts(), all.bucket_counts());
+        assert_eq!(a.count(), all.count());
+        assert!((a.sum() - all.sum()).abs() < 1e-6 * all.sum().abs().max(1.0));
+    }
+
+    #[test]
+    fn registry_interns_by_name_and_labels() {
+        let c1 = counter("lachesis_test_interned_total", "h", &[("k", "a")]);
+        let c2 = counter("lachesis_test_interned_total", "h", &[("k", "a")]);
+        let c3 = counter("lachesis_test_interned_total", "h", &[("k", "b")]);
+        c1.inc();
+        c2.inc();
+        c3.inc();
+        assert_eq!(c1.get(), 2);
+        assert_eq!(c3.get(), 1);
+        let text = prometheus_text();
+        assert!(text.contains("lachesis_test_interned_total{k=\"a\"} 2"));
+        assert!(text.contains("lachesis_test_interned_total{k=\"b\"} 1"));
+    }
+
+    #[test]
+    fn prometheus_escaping_handles_quotes_backslashes_newlines() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
+        let c = counter(
+            "lachesis_test_escape_total",
+            "h",
+            &[("path", "C:\\tmp\n\"x\"")],
+        );
+        c.inc();
+        let text = prometheus_text();
+        assert!(
+            text.contains("lachesis_test_escape_total{path=\"C:\\\\tmp\\n\\\"x\\\"\"} 1"),
+            "escaped series missing in:\n{text}"
+        );
+    }
+
+    #[test]
+    fn prometheus_histogram_lines_are_cumulative_and_close_with_inf() {
+        let h = histogram("lachesis_test_hist_ms", "h", &[("leg", "t")]);
+        for v in [0.5, 0.5, 2.0, 1e-9, 1e12] {
+            h.record(v);
+        }
+        let text = prometheus_text();
+        assert!(text.contains("# TYPE lachesis_test_hist_ms histogram"));
+        assert!(text.contains("lachesis_test_hist_ms_bucket{leg=\"t\",le=\"+Inf\"} 5"));
+        assert!(text.contains("lachesis_test_hist_ms_count{leg=\"t\"} 5"));
+        // Cumulative counts never decrease down the le ladder.
+        let mut last = 0u64;
+        for line in text.lines() {
+            if line.starts_with("lachesis_test_hist_ms_bucket{leg=\"t\"") {
+                let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(n >= last, "non-cumulative bucket line: {line}");
+                last = n;
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_json_parses_and_carries_series() {
+        let c = counter("lachesis_test_json_total", "h", &[]);
+        c.add(3);
+        let j = snapshot_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        let series = back.get("series").and_then(|s| s.as_arr()).unwrap();
+        assert!(series.iter().any(|s| {
+            s.get("name").and_then(|n| n.as_str()) == Some("lachesis_test_json_total")
+        }));
+    }
+}

@@ -1,0 +1,44 @@
+//! Observability: a lock-light metrics registry ([`metrics`]) and a
+//! span/event tracer with Chrome `trace_event` export ([`trace`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Telemetry never changes behavior.** Instrumentation only reads
+//!    clocks and bumps atomics — it must never touch an RNG stream,
+//!    event ordering, or any f64 that feeds a schedule. Golden tests
+//!    pin every scheduler's output bitwise identical with telemetry on
+//!    or off (`tests/integration_obs.rs`).
+//! 2. **Near-zero disabled cost.** Every hot-path site degrades to one
+//!    relaxed atomic load and a predictable branch when telemetry is
+//!    off. `bench_sim` measures this as `obs_disabled_overhead_ratio`
+//!    and CI gates it below 3%.
+//! 3. **No dependencies.** Prometheus text exposition and Chrome trace
+//!    JSON are both hand-rolled (the offline registry has no serde or
+//!    tracing crates), reusing [`crate::util::json`] where convenient.
+//!
+//! The master switch [`enabled`] gates metric recording on the
+//! simulator / policy / trainer hot paths; the service enables it at
+//! server construction (a TCP round-trip dwarfs an atomic increment).
+//! Span tracing has its own switch ([`trace::tracing`]) so `--trace-out`
+//! can be turned on independently of metrics.
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Master telemetry switch. Hot paths check this first; when false the
+/// entire site is one relaxed load + branch.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn metric recording on (service startup, `--trace-out`,
+/// `--metrics-*` flags). Never turned off implicitly: telemetry is
+/// process-global.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}

@@ -1,0 +1,366 @@
+//! Span/event tracer with per-thread ring buffers, exporting Chrome
+//! `trace_event` JSON (load the file at <https://ui.perfetto.dev> or
+//! `chrome://tracing`).
+//!
+//! Each thread records into its own fixed-capacity ring buffer behind a
+//! thread-private mutex (uncontended except while dumping), so tracing
+//! a hot loop never serializes threads against each other. When the
+//! ring fills, the oldest events are overwritten and counted — a trace
+//! is a bounded window onto the run, never an OOM.
+//!
+//! Disabled cost is one relaxed atomic load and a branch per site:
+//! [`span`] returns an inert guard without reading the clock, and
+//! [`instant`] returns immediately. Tracing never mutates anything the
+//! scheduler math can see, so schedules stay bit-identical with tracing
+//! on or off (pinned by `tests/integration_obs.rs`).
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events kept per thread before the ring starts overwriting.
+const RING_CAP: usize = 1 << 16;
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicUsize = AtomicUsize::new(1);
+static BUFS: OnceLock<Mutex<Vec<Arc<Mutex<ThreadBuf>>>>> = OnceLock::new();
+
+/// Is span recording on? Hot-path guard, intentionally `Relaxed`.
+#[inline]
+pub fn tracing() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on (also flips the [`crate::obs`] master switch
+/// so metric sites gated on it light up alongside the trace).
+pub fn start_tracing() {
+    EPOCH.get_or_init(Instant::now);
+    crate::obs::set_enabled(true);
+    TRACING.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording (buffers are kept for [`dump_chrome_trace`]).
+pub fn stop_tracing() {
+    TRACING.store(false, Ordering::Relaxed);
+}
+
+#[derive(Clone, Copy)]
+struct Ev {
+    /// Chrome phase: b'X' (complete span) or b'i' (instant event).
+    ph: u8,
+    name: &'static str,
+    cat: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    arg: Option<(&'static str, f64)>,
+}
+
+struct ThreadBuf {
+    tid: usize,
+    thread_name: String,
+    evs: Vec<Ev>,
+    /// Next overwrite position once `evs` reached `RING_CAP`.
+    head: usize,
+    dropped: u64,
+}
+
+impl ThreadBuf {
+    fn push(&mut self, ev: Ev) {
+        if self.evs.len() < RING_CAP {
+            self.evs.push(ev);
+        } else {
+            self.evs[self.head] = ev;
+            self.head = (self.head + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+}
+
+fn bufs() -> &'static Mutex<Vec<Arc<Mutex<ThreadBuf>>>> {
+    BUFS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<Mutex<ThreadBuf>>> = OnceCell::new();
+}
+
+fn register_thread() -> Arc<Mutex<ThreadBuf>> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let thread_name = std::thread::current()
+        .name()
+        .map(|n| n.to_string())
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let buf = Arc::new(Mutex::new(ThreadBuf {
+        tid,
+        thread_name,
+        evs: Vec::new(),
+        head: 0,
+        dropped: 0,
+    }));
+    bufs().lock().unwrap().push(buf.clone());
+    buf
+}
+
+fn now_us() -> u64 {
+    Instant::now()
+        .saturating_duration_since(*EPOCH.get_or_init(Instant::now))
+        .as_micros() as u64
+}
+
+fn push(ev: Ev) {
+    LOCAL.with(|cell| {
+        let buf = cell.get_or_init(register_thread);
+        buf.lock().unwrap().push(ev);
+    });
+}
+
+/// RAII span guard: records a complete (`ph:"X"`) event on drop. Inert
+/// (no clock read, no allocation) when tracing is off.
+pub struct Span {
+    start: Option<Instant>,
+    name: &'static str,
+    cat: &'static str,
+    arg: Option<(&'static str, f64)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start.take() {
+            let epoch = *EPOCH.get_or_init(Instant::now);
+            let ts_us = t0.saturating_duration_since(epoch).as_micros() as u64;
+            let dur_us = t0.elapsed().as_micros() as u64;
+            push(Ev {
+                ph: b'X',
+                name: self.name,
+                cat: self.cat,
+                ts_us,
+                dur_us,
+                arg: self.arg,
+            });
+        }
+    }
+}
+
+/// Open a span. `cat`/`name` must be static (they name code sites, not
+/// data) so the hot path never allocates.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    Span {
+        start: if tracing() { Some(Instant::now()) } else { None },
+        name,
+        cat,
+        arg: None,
+    }
+}
+
+/// Open a span carrying one numeric argument (e.g. a batch size).
+#[inline]
+pub fn span_with(cat: &'static str, name: &'static str, key: &'static str, val: f64) -> Span {
+    Span {
+        start: if tracing() { Some(Instant::now()) } else { None },
+        name,
+        cat,
+        arg: Some((key, val)),
+    }
+}
+
+/// Record an instant (`ph:"i"`) event, optionally with one argument.
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str, arg: Option<(&'static str, f64)>) {
+    if !tracing() {
+        return;
+    }
+    push(Ev {
+        ph: b'i',
+        name,
+        cat,
+        ts_us: now_us(),
+        dur_us: 0,
+        arg,
+    });
+}
+
+/// Number of events currently buffered across all threads.
+pub fn buffered_events() -> usize {
+    let bufs = bufs().lock().unwrap();
+    bufs.iter().map(|b| b.lock().unwrap().evs.len()).sum()
+}
+
+/// Discard all buffered events (tests; a fresh `--trace-out` run).
+pub fn clear() {
+    let bufs = bufs().lock().unwrap();
+    for b in bufs.iter() {
+        let mut b = b.lock().unwrap();
+        b.evs.clear();
+        b.head = 0;
+        b.dropped = 0;
+    }
+}
+
+fn quote(s: &str) -> String {
+    crate::util::json::Json::Str(s.to_string()).to_string()
+}
+
+/// Render every buffered event as Chrome `trace_event` JSON.
+pub fn chrome_trace_json() -> String {
+    let pid = std::process::id();
+    let bufs = bufs().lock().unwrap();
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut emit = |s: String, first: &mut bool| {
+        if !*first {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&s);
+        *first = false;
+    };
+    for b in bufs.iter() {
+        let b = b.lock().unwrap();
+        emit(
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":{}}}}}",
+                b.tid,
+                quote(&b.thread_name)
+            ),
+            &mut first,
+        );
+        if b.dropped > 0 {
+            emit(
+                format!(
+                    "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{},\"ts\":0,\"s\":\"t\",\
+                     \"cat\":\"obs\",\"name\":\"ring_dropped\",\
+                     \"args\":{{\"dropped\":{}}}}}",
+                    b.tid, b.dropped
+                ),
+                &mut first,
+            );
+        }
+        // Ring order: oldest first (head..end, then start..head).
+        let n = b.evs.len();
+        for k in 0..n {
+            let ev = &b.evs[(b.head + k) % n.max(1)];
+            let args = match ev.arg {
+                Some((k, v)) if v.is_finite() => format!(",\"args\":{{\"{k}\":{v}}}"),
+                _ => String::new(),
+            };
+            let line = match ev.ph {
+                b'X' => format!(
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"dur\":{},\
+                     \"cat\":\"{}\",\"name\":\"{}\"{args}}}",
+                    b.tid, ev.ts_us, ev.dur_us, ev.cat, ev.name
+                ),
+                _ => format!(
+                    "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"s\":\"t\",\
+                     \"cat\":\"{}\",\"name\":\"{}\"{args}}}",
+                    b.tid, ev.ts_us, ev.cat, ev.name
+                ),
+            };
+            emit(line, &mut first);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write the Chrome trace to `path` (the `--trace-out FILE` sink).
+pub fn dump_chrome_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    // The tracing switch is process-global; serialize the tests that
+    // toggle it so the parallel test harness can't interleave them.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        stop_tracing();
+        let before = buffered_events();
+        {
+            let _s = span("test", "disabled_span");
+        }
+        instant("test", "disabled_instant", None);
+        assert_eq!(buffered_events(), before);
+    }
+
+    #[test]
+    fn trace_json_is_valid_and_carries_spans() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        start_tracing();
+        {
+            let _s = span_with("test", "unit_span", "n", 3.0);
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        instant("test", "unit_instant", Some(("x", 1.0)));
+        let t = std::thread::Builder::new()
+            .name("obs-test-worker".into())
+            .spawn(|| {
+                let _s = span("test", "worker_span");
+            })
+            .unwrap();
+        t.join().unwrap();
+        stop_tracing();
+
+        let text = chrome_trace_json();
+        let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .expect("traceEvents array");
+        let has = |name: &str, ph: &str| {
+            events.iter().any(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some(name)
+                    && e.get("ph").and_then(|p| p.as_str()) == Some(ph)
+            })
+        };
+        assert!(has("unit_span", "X"), "missing complete span");
+        assert!(has("unit_instant", "i"), "missing instant event");
+        assert!(has("worker_span", "X"), "missing cross-thread span");
+        assert!(has("thread_name", "M"), "missing thread metadata");
+        // Complete spans carry ts + dur in microseconds.
+        let sp = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("unit_span"))
+            .unwrap();
+        assert!(sp.get("dur").and_then(|d| d.as_f64()).unwrap() >= 1.0);
+        assert!(sp.get("ts").is_some() && sp.get("pid").is_some() && sp.get("tid").is_some());
+        assert_eq!(
+            sp.get("args").and_then(|a| a.get("n")).and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let mut buf = ThreadBuf {
+            tid: 0,
+            thread_name: "t".into(),
+            evs: Vec::new(),
+            head: 0,
+            dropped: 0,
+        };
+        for i in 0..(RING_CAP + 10) {
+            buf.push(Ev {
+                ph: b'i',
+                name: "e",
+                cat: "t",
+                ts_us: i as u64,
+                dur_us: 0,
+                arg: None,
+            });
+        }
+        assert_eq!(buf.evs.len(), RING_CAP);
+        assert_eq!(buf.dropped, 10);
+        // Oldest surviving event is ts=10 at the head.
+        assert_eq!(buf.evs[buf.head].ts_us, 10);
+    }
+}

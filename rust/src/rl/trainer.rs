@@ -7,6 +7,7 @@
 
 use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, TrainConfig, WorkloadConfig};
+use crate::obs::trace;
 use crate::policy::encode::EncodedState;
 use crate::policy::features::FeatureMode;
 use crate::policy::RustPolicy;
@@ -25,6 +26,7 @@ use crate::workload::WorkloadGenerator;
 use anyhow::{bail, Context};
 use anyhow::Result;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// One batch row fed to train_step.
 pub struct Row {
@@ -375,6 +377,16 @@ impl<B: TrainBackend> Trainer<B> {
         let threads = par::effective_threads(self.cfg.threads);
         let mut rng = Rng::new(self.cfg.seed);
         let mut stats = Vec::with_capacity(self.cfg.episodes);
+        // Telemetry never touches the trajectory: it reads wall clocks
+        // and publishes gauges, while every RNG draw and update below is
+        // identical with it on or off (integration_obs pins trainer-side
+        // determinism indirectly through the shared sim/policy paths).
+        let obs = if crate::obs::enabled() {
+            Some(crate::obs::metrics::train_metrics())
+        } else {
+            None
+        };
+        let track_norm = obs.is_some() || self.cfg.metrics_jsonl.is_some();
         for ep in 0..self.cfg.episodes {
             let n_jobs = self.jobs_for_episode(ep);
             // All agents share the job sequence (paper Appendix C) and
@@ -391,17 +403,22 @@ impl<B: TrainBackend> Trainer<B> {
             let executors = self.cfg.executors;
             let temperature = self.cfg.temperature;
             let mode = self.feature_mode;
-            let rollouts = par::par_indexed(&seeds, threads, |&sample_seed| {
-                rollout_once(
-                    executors,
-                    temperature,
-                    mode,
-                    params.clone(),
-                    workload_seed,
-                    sample_seed,
-                    n_jobs,
-                )
-            })?;
+            let t_roll = Instant::now();
+            let rollouts = {
+                let _sp = trace::span("train", "rollout");
+                par::par_indexed(&seeds, threads, |&sample_seed| {
+                    rollout_once(
+                        executors,
+                        temperature,
+                        mode,
+                        params.clone(),
+                        workload_seed,
+                        sample_seed,
+                        n_jobs,
+                    )
+                })?
+            };
+            let rollout_ms = t_roll.elapsed().as_secs_f64() * 1e3;
             let mut all_rows: Vec<Row> = Vec::new();
             let mut makespans = Vec::new();
             let mut n_trans = 0;
@@ -411,8 +428,29 @@ impl<B: TrainBackend> Trainer<B> {
                 all_rows.extend(self.episode_rows(transitions, makespan));
             }
             let ep_return = -crate::util::stats::mean(&makespans);
-            let losses = self.update_batches(all_rows, &mut rng, batch, VALUE_W)?;
+            let params_before = if track_norm {
+                Some(self.backend.params().to_vec())
+            } else {
+                None
+            };
+            let t_upd = Instant::now();
+            let losses = {
+                let _sp = trace::span("train", "update");
+                self.update_batches(all_rows, &mut rng, batch, VALUE_W)?
+            };
+            let update_ms = t_upd.elapsed().as_secs_f64() * 1e3;
+            let update_norm = params_before.map(|p0| {
+                p0.iter()
+                    .zip(self.backend.params())
+                    .map(|(a, b)| {
+                        let d = (*b - *a) as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            });
             let eval_makespan = if ep % 5 == 0 || ep + 1 == self.cfg.episodes {
+                let _sp = trace::span("train", "eval");
                 self.eval_greedy(threads)?
             } else {
                 f64::NAN
@@ -429,6 +467,25 @@ impl<B: TrainBackend> Trainer<B> {
                 n_transitions: n_trans,
                 eval_makespan,
             });
+            if let Some(m) = &obs {
+                m.episodes_total.inc();
+                m.rollout_ms.record(rollout_ms);
+                m.update_ms.record(update_ms);
+                m.episode.set(ep as f64);
+                m.reward.set(ep_return);
+                m.entropy.set(losses[3]);
+                if let Some(n) = update_norm {
+                    m.grad_norm.set(n);
+                }
+            }
+            if let Some(path) = &self.cfg.metrics_jsonl {
+                let s = stats.last().expect("episode just pushed");
+                if let Err(e) =
+                    append_metrics_jsonl(path, s, rollout_ms, update_ms, update_norm)
+                {
+                    crate::log_warn!("metrics jsonl append to {path} failed: {e}");
+                }
+            }
             if ep % 10 == 0 {
                 crate::log_info!(
                     "episode {ep}: jobs={n_jobs} makespan={:.1}s loss={:.4} entropy={:.3}",
@@ -440,6 +497,46 @@ impl<B: TrainBackend> Trainer<B> {
         }
         Ok(stats)
     }
+}
+
+/// Append one episode's telemetry as a JSON line (the `--metrics-jsonl`
+/// monitoring stream). NaN fields (skipped evals) serialize as `null`.
+fn append_metrics_jsonl(
+    path: &str,
+    s: &EpisodeStat,
+    rollout_ms: f64,
+    update_ms: f64,
+    update_norm: Option<f64>,
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    use std::io::Write as _;
+    let line = Json::from_pairs(vec![
+        ("episode", Json::from(s.episode)),
+        ("makespan", Json::from(s.makespan)),
+        ("return", Json::from(s.ep_return)),
+        ("loss", Json::from(s.loss)),
+        ("pg_loss", Json::from(s.pg_loss)),
+        ("value_loss", Json::from(s.value_loss)),
+        ("entropy", Json::from(s.entropy)),
+        ("n_jobs", Json::from(s.n_jobs)),
+        ("n_transitions", Json::from(s.n_transitions)),
+        ("eval_makespan", Json::from(s.eval_makespan)),
+        ("rollout_ms", Json::from(rollout_ms)),
+        ("update_ms", Json::from(update_ms)),
+        (
+            "update_norm",
+            match update_norm {
+                Some(n) => Json::from(n),
+                None => Json::Null,
+            },
+        ),
+    ])
+    .to_string();
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{line}")
 }
 
 /// Workload used for training episodes and held-out evaluation: small

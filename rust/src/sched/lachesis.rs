@@ -11,6 +11,7 @@
 
 use super::{DeftAllocator, TaskSelector, TwoPhase};
 use crate::dag::TaskRef;
+use crate::obs::trace;
 use crate::policy::features::FeatureMode;
 use crate::policy::{EncodedState, EncoderCache, PolicyEval, PolicyNet};
 use crate::sim::SimState;
@@ -93,7 +94,24 @@ impl TaskSelector for PolicySelector {
         if state.executable().is_empty() {
             return Ok(None);
         }
-        let enc = self.cache.refresh(state);
+        let obs_on = crate::obs::enabled();
+        let rebuilds_before = self.cache.rebuilds;
+        // Clock reads only when telemetry is on (gated in CI by
+        // bench_sim's obs_disabled_overhead_ratio).
+        let t0 = obs_on.then(std::time::Instant::now);
+        let enc = {
+            let _sp = trace::span("policy", "encode");
+            self.cache.refresh(state)
+        };
+        if let Some(t0) = t0 {
+            let m = crate::obs::metrics::sim_metrics();
+            m.encode_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+            if self.cache.rebuilds > rebuilds_before {
+                m.encoder_rebuilds_total.inc();
+            } else {
+                m.encoder_reuses_total.inc();
+            }
+        }
         if enc.n_executable() == 0 {
             // All executable tasks were truncated out of the encoding —
             // fall back to the highest-rank_up executable task so the
@@ -109,6 +127,8 @@ impl TaskSelector for PolicySelector {
                 .unwrap();
             return Ok(Some(t));
         }
+        let t1 = obs_on.then(std::time::Instant::now);
+        let _fwd = trace::span("policy", "forward");
         let (slot, value) = match &mut self.mode {
             SelectMode::Greedy => {
                 let slot = self
@@ -126,6 +146,12 @@ impl TaskSelector for PolicySelector {
                 (slot, value)
             }
         };
+        drop(_fwd);
+        if let Some(t1) = t1 {
+            crate::obs::metrics::sim_metrics()
+                .forward_ms
+                .record(t1.elapsed().as_secs_f64() * 1e3);
+        }
         let task = enc
             .slot_task(slot)
             .ok_or_else(|| anyhow!("selected padding slot {slot}"))?;

@@ -119,10 +119,26 @@ impl<S: TaskSelector, A: Allocator> Scheduler for TwoPhase<S, A> {
         if !state.any_executor_available() {
             return Ok(None);
         }
-        match self.selector.select(state)? {
+        let selected = {
+            let _sp = crate::obs::trace::span("sched", "select");
+            self.selector.select(state)?
+        };
+        match selected {
             None => Ok(None),
             Some(task) => {
-                let (alloc, _eft) = self.allocator.allocate(state, task);
+                // Clock read only when telemetry is on: the disabled
+                // path pays one relaxed load and a branch, nothing more.
+                let t0 = crate::obs::enabled().then(std::time::Instant::now);
+                let alloc = {
+                    let _sp = crate::obs::trace::span("sched", "allocate");
+                    let (alloc, _eft) = self.allocator.allocate(state, task);
+                    alloc
+                };
+                if let Some(t0) = t0 {
+                    crate::obs::metrics::sim_metrics()
+                        .allocate_ms
+                        .record(t0.elapsed().as_secs_f64() * 1e3);
+                }
                 Ok(Some((task, alloc)))
             }
         }

@@ -17,6 +17,9 @@
 //!   next `schedule`). With `recovery` the executor rejoins once the
 //!   wall clock passes `tr`; without it the crash is permanent.
 //! * `{"type":"status"}` / `{"type":"shutdown"}`
+//! * `{"type":"metrics"}` — telemetry snapshot: Prometheus text plus
+//!   structured JSON series, answered off the lock-free path (never
+//!   touches the core lock or the mailbox).
 //!
 //! Responses mirror them with `"ok"` / `"assignments"` / `"status"`;
 //! `report_failure` answers `"recovery"` with the rollback counts
@@ -76,6 +79,9 @@ pub enum Request {
     },
     Status,
     Shutdown,
+    /// Fetch a telemetry snapshot (Prometheus text + JSON series).
+    /// Non-mutating: answered off the lock-free path like `status`.
+    Metrics,
 }
 
 /// One task assignment in a schedule response.
@@ -135,6 +141,12 @@ pub enum Response {
     Overloaded {
         queue: usize,
     },
+    /// Telemetry snapshot answering a `metrics` request: the Prometheus
+    /// text exposition plus the same registry as structured JSON series.
+    Metrics {
+        prometheus: String,
+        series: Json,
+    },
     Error(String),
 }
 
@@ -144,7 +156,30 @@ impl Request {
     /// from the lock-free snapshot and `shutdown` by the connection
     /// thread itself.
     pub fn is_mutating(&self) -> bool {
-        !matches!(self, Request::Status | Request::Shutdown)
+        !matches!(
+            self,
+            Request::Status | Request::Shutdown | Request::Metrics
+        )
+    }
+
+    /// Wire name of this request's type — the `type` label on service
+    /// metric series (index-aligned with
+    /// [`crate::obs::metrics::REQUEST_KINDS`]).
+    pub fn kind(&self) -> &'static str {
+        crate::obs::metrics::REQUEST_KINDS[self.kind_index()]
+    }
+
+    /// Dense index of this request's type, for per-type handle arrays.
+    pub fn kind_index(&self) -> usize {
+        match self {
+            Request::SubmitJob { .. } => 0,
+            Request::TaskComplete { .. } => 1,
+            Request::Schedule { .. } => 2,
+            Request::ReportFailure { .. } => 3,
+            Request::Status => 4,
+            Request::Shutdown => 5,
+            Request::Metrics => 6,
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -196,6 +231,7 @@ impl Request {
             }
             Request::Status => Json::from_pairs(vec![("type", Json::from("status"))]),
             Request::Shutdown => Json::from_pairs(vec![("type", Json::from("shutdown"))]),
+            Request::Metrics => Json::from_pairs(vec![("type", Json::from("metrics"))]),
         }
     }
 
@@ -261,6 +297,7 @@ impl Request {
             }
             "status" => Ok(Request::Status),
             "shutdown" => Ok(Request::Shutdown),
+            "metrics" => Ok(Request::Metrics),
             other => bail!("unknown request type '{other}'"),
         }
     }
@@ -351,6 +388,11 @@ impl Response {
                 ("type", Json::from("overloaded")),
                 ("queue", Json::from(*queue)),
             ]),
+            Response::Metrics { prometheus, series } => Json::from_pairs(vec![
+                ("type", Json::from("metrics")),
+                ("prometheus", Json::from(prometheus.clone())),
+                ("series", series.clone()),
+            ]),
             Response::Error(msg) => Json::from_pairs(vec![
                 ("type", Json::from("error")),
                 ("message", Json::from(msg.clone())),
@@ -404,6 +446,15 @@ impl Response {
             "overloaded" => Ok(Response::Overloaded {
                 // Absent from a terse peer: depth hint defaults to 0.
                 queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
+            }),
+            "metrics" => Ok(Response::Metrics {
+                prometheus: v
+                    .req_str("prometheus")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .to_string(),
+                // Structured series are optional on the wire (a terse
+                // peer may send only the text exposition).
+                series: v.get("series").cloned().unwrap_or(Json::Arr(Vec::new())),
             }),
             "recovery" => Ok(Response::Recovery {
                 cancelled: v.req_usize("cancelled").map_err(|e| anyhow!("{e}"))?,
@@ -496,6 +547,7 @@ mod tests {
             },
             Request::Status,
             Request::Shutdown,
+            Request::Metrics,
         ];
         for r in reqs {
             let j = r.to_json();
@@ -535,6 +587,10 @@ mod tests {
                 survived: 1,
             },
             Response::Overloaded { queue: 640 },
+            Response::Metrics {
+                prometheus: "# TYPE lachesis_requests_total counter\n".into(),
+                series: Json::parse(r#"[{"name":"lachesis_requests_total"}]"#).unwrap(),
+            },
             Response::Error("boom".into()),
         ];
         for r in resps {
@@ -594,6 +650,52 @@ mod tests {
             } => {
                 assert_eq!((queue, shed, deduped), (0, 0, 0));
                 assert_eq!(racks, 1, "pre-topology peer defaults to one rack");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_request_is_non_mutating_and_kinds_align() {
+        assert!(!Request::Metrics.is_mutating());
+        assert!(!Request::Status.is_mutating());
+        assert!(Request::Schedule { time: 0.0 }.is_mutating());
+        // kind()/kind_index() stay aligned with the metrics label table.
+        let reqs = [
+            Request::SubmitJob {
+                name: "j".into(),
+                arrival: 0.0,
+                computes: vec![1.0],
+                edges: vec![],
+            },
+            Request::TaskComplete {
+                job: 0,
+                node: 0,
+                time: 0.0,
+            },
+            Request::Schedule { time: 0.0 },
+            Request::ReportFailure {
+                exec: 0,
+                time: 0.0,
+                recovery: None,
+            },
+            Request::Status,
+            Request::Shutdown,
+            Request::Metrics,
+        ];
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.kind_index(), i);
+            assert_eq!(r.kind(), crate::obs::metrics::REQUEST_KINDS[i]);
+        }
+    }
+
+    #[test]
+    fn metrics_response_tolerates_missing_series() {
+        let terse = Json::parse(r#"{"type":"metrics","prometheus":"x 1\n"}"#).unwrap();
+        match Response::from_json(&terse).unwrap() {
+            Response::Metrics { prometheus, series } => {
+                assert_eq!(prometheus, "x 1\n");
+                assert_eq!(series, Json::Arr(Vec::new()));
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -50,7 +50,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How often the accept loop polls the shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
@@ -546,6 +546,9 @@ impl AgentCore {
     fn dedup_cached(&mut self, id: Option<&str>) -> Option<Response> {
         let cached = self.dedup.get(id?)?.clone();
         self.n_deduped += 1;
+        crate::obs::metrics::service_metrics()
+            .requests_deduped_total
+            .inc();
         Some(cached)
     }
 
@@ -561,7 +564,12 @@ impl AgentCore {
         let Some(d) = self.durability.as_mut() else {
             return Ok(());
         };
+        let _sp = crate::obs::trace::span("service", "journal_append");
+        let t0 = Instant::now();
         d.journal.append(id, req)?;
+        crate::obs::metrics::service_metrics()
+            .journal_append_ms
+            .record(t0.elapsed().as_secs_f64() * 1e3);
         d.since_snapshot += 1;
         Ok(())
     }
@@ -577,7 +585,16 @@ impl AgentCore {
     /// applied batch, before any of the batch's responses are released.
     pub fn sync_durability(&mut self) -> Result<()> {
         match self.durability.as_mut() {
-            Some(d) => d.journal.sync(),
+            Some(d) => {
+                let _sp = crate::obs::trace::span("service", "journal_fsync");
+                let t0 = Instant::now();
+                let res = d.journal.sync();
+                let m = crate::obs::metrics::service_metrics();
+                m.journal_fsync_ms
+                    .record(t0.elapsed().as_secs_f64() * 1e3);
+                m.journal_fsyncs_total.inc();
+                res
+            }
             None => Ok(()),
         }
     }
@@ -594,9 +611,15 @@ impl AgentCore {
             }
             _ => return,
         };
+        let _sp = crate::obs::trace::span("service", "snapshot_write");
+        let t0 = Instant::now();
         let doc = self.snapshot_json();
         match snapshot::write(&dir, seq, doc) {
             Ok(_path) => {
+                let m = crate::obs::metrics::service_metrics();
+                m.snapshot_write_ms
+                    .record(t0.elapsed().as_secs_f64() * 1e3);
+                m.snapshot_writes_total.inc();
                 if let Some(d) = self.durability.as_mut() {
                     d.since_snapshot = 0;
                 }
@@ -843,8 +866,68 @@ impl AgentCore {
             }
             Request::Status => self.status_snapshot().to_response(),
             Request::Shutdown => Response::Ok { job_id: None },
+            Request::Metrics => metrics_response(),
         }
     }
+}
+
+/// Build a `metrics` response from the global telemetry registry. Pure
+/// atomics — no core lock, so both engines answer it off the lock-free
+/// path (the batched connection loop resolves it like `status`).
+fn metrics_response() -> Response {
+    let snap = crate::obs::metrics::snapshot_json();
+    Response::Metrics {
+        prometheus: crate::obs::metrics::prometheus_text(),
+        series: snap
+            .get("series")
+            .cloned()
+            .unwrap_or(Json::Arr(Vec::new())),
+    }
+}
+
+/// Answer one HTTP scrape: consume the request head (any method, any
+/// path — there is only one resource), then write a `200` with the
+/// Prometheus text exposition and close. The head read is bounded by
+/// the write deadline and a line cap so a misbehaving peer cannot pin
+/// the listener.
+fn serve_metrics_conn(stream: TcpStream) -> Result<()> {
+    stream.set_nonblocking(false).context("blocking stream")?;
+    stream
+        .set_read_timeout(Some(WRITE_TIMEOUT))
+        .context("read timeout")?;
+    stream
+        .set_write_timeout(Some(WRITE_TIMEOUT))
+        .context("write timeout")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // Drain the request head: request line + headers up to a blank line.
+    // HTTP/1.0 pollers (curl --http1.0, busybox wget) still send one.
+    let mut line = String::new();
+    let mut head_bytes = 0usize;
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading scrape head")?;
+        head_bytes += n;
+        if n == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+        if head_bytes > 64 << 10 {
+            bail!("scrape request head exceeds 64 KiB");
+        }
+    }
+    let body = crate::obs::metrics::prometheus_text();
+    let mut writer = BufWriter::new(stream);
+    write!(
+        writer,
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\
+         \r\n",
+        body.len()
+    )?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()?;
+    Ok(())
 }
 
 /// The scheduling agent behind a TCP endpoint: a shared [`AgentCore`]
@@ -877,6 +960,10 @@ impl AgentServer {
         scheduler: Box<dyn Scheduler + Send>,
         mode: ServiceMode,
     ) -> AgentServer {
+        // A server is long-lived and network-bound: always collect
+        // telemetry (the registry is pure atomics; recording never
+        // changes scheduling behavior — integration_obs pins this).
+        crate::obs::set_enabled(true);
         AgentServer {
             core: Mutex::new(AgentCore::new(cluster, scheduler)),
             shutdown: AtomicBool::new(false),
@@ -1006,7 +1093,11 @@ impl AgentServer {
     /// though the request *was* applied — a client retry gets the real
     /// response back from the dedup window.
     pub fn handle_tagged(&self, id: Option<&str>, req: Request) -> Response {
-        match self.core.lock() {
+        let m = crate::obs::metrics::service_metrics();
+        let ki = req.kind_index();
+        m.requests_total[ki].inc();
+        let t0 = Instant::now();
+        let resp = match self.core.lock() {
             Ok(mut core) => {
                 let before = core.journal_next_seq();
                 let resp = core.handle_tagged(id, req);
@@ -1040,7 +1131,10 @@ impl AgentServer {
                     )
                 }
             }
-        }
+        };
+        m.request_latency_ms[ki]
+            .record(t0.elapsed().as_secs_f64() * 1e3);
+        resp
     }
 
     /// Run `f` with the core mutex held — the embedder's escape hatch
@@ -1125,6 +1219,51 @@ impl AgentServer {
         })
     }
 
+    /// Serve the Prometheus text exposition over plain HTTP GET on
+    /// `addr` until the agent shuts down (`lachesis serve
+    /// --metrics-addr`). Every scrape reads the global atomic registry —
+    /// no core lock, no mailbox — so a stalled scheduler never blocks
+    /// monitoring. Scrape traffic is expected to be light (one poller);
+    /// connections are handled one at a time, closed per response.
+    pub fn serve_metrics_http(
+        &self,
+        addr: &str,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> Result<()> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics {addr}"))?;
+        on_bound(listener.local_addr()?);
+        listener
+            .set_nonblocking(true)
+            .context("setting metrics listener non-blocking")?;
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if let Err(e) = serve_metrics_conn(stream) {
+                        crate::log_debug!("metrics scrape failed: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted
+                            | std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                    ) =>
+                {
+                    crate::log_debug!("transient metrics accept error: {e}");
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::from(e).context("accepting metrics connection"))
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// The batched engine's only consumer of the core lock: sleep until
     /// the mailbox holds work, drain *everything* queued, apply it in
     /// FIFO order under one lock acquisition, refresh the status
@@ -1169,6 +1308,9 @@ impl AgentServer {
                     .fetch_add(q.queue.len() as u64, Ordering::Relaxed);
                 let batch = q.queue.drain(..).collect();
                 drop(q);
+                crate::obs::metrics::service_metrics()
+                    .mailbox_depth
+                    .set(0.0);
                 // The drain freed the whole bound: wake producers the
                 // `Block` admission policy parked on the shared condvar.
                 self.mailbox.cv.notify_all();
@@ -1198,6 +1340,10 @@ impl AgentServer {
     /// are released, so a client that saw its mutation acknowledged
     /// reads a snapshot at least that fresh (read-your-writes).
     fn apply_batch(&self, batch: Vec<Envelope>) {
+        let m = crate::obs::metrics::service_metrics();
+        m.batch_size.record(batch.len() as f64);
+        let _sp =
+            crate::obs::trace::span_with("service", "apply_batch", "n", batch.len() as f64);
         // `(waiter, response, journaled-this-batch)` — the flag marks
         // which acknowledgements a failed batch fsync must degrade.
         let mut replies: Vec<(mpsc::Sender<Response>, Response, bool)> =
@@ -1223,6 +1369,7 @@ impl AgentServer {
                         let mut max_t: Option<f64> = None;
                         for env in run {
                             let Envelope { id, req, resp_tx } = env;
+                            m.requests_total[req.kind_index()].inc();
                             let Request::TaskComplete { time, .. } = req else {
                                 unreachable!("run holds only heartbeats");
                             };
@@ -1254,11 +1401,17 @@ impl AgentServer {
                         }
                         self.n_coalesced_heartbeats
                             .fetch_add(n_run as u64 - 1, Ordering::Relaxed);
+                        m.heartbeats_coalesced_total.add(n_run as u64 - 1);
                     } else {
                         let Envelope { id, req, resp_tx } = env;
+                        let ki = req.kind_index();
+                        m.requests_total[ki].inc();
+                        let t0 = Instant::now();
                         let before = core.journal_next_seq();
                         let resp = core.handle_tagged(id.as_deref(), req);
                         let journaled = core.journal_next_seq() != before;
+                        m.request_latency_ms[ki]
+                            .record(t0.elapsed().as_secs_f64() * 1e3);
                         replies.push((resp_tx, resp, journaled));
                     }
                 }
@@ -1323,7 +1476,11 @@ impl AgentServer {
                     req,
                     resp_tx: tx,
                 });
+                let depth = q.queue.len();
                 drop(q);
+                crate::obs::metrics::service_metrics()
+                    .mailbox_depth
+                    .set(depth as f64);
                 // notify_all: the condvar is shared with producers
                 // blocked on admission — a single wakeup could land on
                 // one of them instead of the core loop.
@@ -1335,6 +1492,9 @@ impl AgentServer {
                     let depth = q.queue.len();
                     drop(q);
                     self.n_shed.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::metrics::service_metrics()
+                        .requests_shed_total
+                        .inc();
                     return Enqueued::Overloaded(depth);
                 }
                 AdmissionPolicy::Block => {
@@ -1485,6 +1645,10 @@ impl AgentServer {
                 Ready(Response),
                 Waiting(mpsc::Receiver<Response>),
                 Snapshot,
+                /// Telemetry scrape: resolved from the global atomic
+                /// registry at write time — like `Snapshot`, it never
+                /// touches the core lock or the mailbox.
+                Metrics,
                 Shutdown,
             }
             let mut plan: Vec<Slot> = Vec::with_capacity(lines.len());
@@ -1499,6 +1663,7 @@ impl AgentServer {
                     {
                         Err(e) => Slot::Ready(Response::Error(format!("bad request: {e}"))),
                         Ok((_, Request::Status)) => Slot::Snapshot,
+                        Ok((_, Request::Metrics)) => Slot::Metrics,
                         Ok((_, Request::Shutdown)) => Slot::Shutdown,
                         Ok((id, req)) => {
                             debug_assert!(req.is_mutating());
@@ -1520,7 +1685,26 @@ impl AgentServer {
                 let (resp, is_shutdown) = match slot {
                     Slot::Ready(r) => (r, false),
                     Slot::Waiting(rx) => (self.await_response(&rx), false),
-                    Slot::Snapshot => (self.status.read().to_response(), false),
+                    Slot::Snapshot => {
+                        let m = crate::obs::metrics::service_metrics();
+                        let ki = Request::Status.kind_index();
+                        m.requests_total[ki].inc();
+                        let t0 = Instant::now();
+                        let resp = self.status.read().to_response();
+                        m.request_latency_ms[ki]
+                            .record(t0.elapsed().as_secs_f64() * 1e3);
+                        (resp, false)
+                    }
+                    Slot::Metrics => {
+                        let m = crate::obs::metrics::service_metrics();
+                        let ki = Request::Metrics.kind_index();
+                        m.requests_total[ki].inc();
+                        let t0 = Instant::now();
+                        let resp = metrics_response();
+                        m.request_latency_ms[ki]
+                            .record(t0.elapsed().as_secs_f64() * 1e3);
+                        (resp, false)
+                    }
                     Slot::Shutdown => (Response::Ok { job_id: None }, true),
                 };
                 writeln!(writer, "{}", resp.to_json().to_string())?;

@@ -7,6 +7,7 @@ use crate::cluster::Cluster;
 use crate::dag::TaskRef;
 use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::ScheduleReport;
+use crate::obs::trace;
 use crate::sched::Scheduler;
 use crate::util::stats::Recorder;
 use crate::workload::Workload;
@@ -140,6 +141,14 @@ impl Simulator {
     /// tasks unassigned after all events drain.
     pub fn run(&mut self, scheduler: &mut dyn Scheduler) -> Result<ScheduleReport> {
         scheduler.reset();
+        // Telemetry handles are resolved once per run; when telemetry is
+        // off the per-decision cost is a relaxed load + branch (gated in
+        // CI by bench_sim's obs_disabled_overhead_ratio).
+        let obs = if crate::obs::enabled() {
+            Some(crate::obs::metrics::sim_metrics())
+        } else {
+            None
+        };
         while let Some(ev) = self.events.pop() {
             // Advance wall time monotonically (events can tie).
             self.state.advance_wall(ev.time);
@@ -171,12 +180,29 @@ impl Simulator {
                     break;
                 }
                 let t0 = Instant::now();
-                let decision = scheduler.step(&self.state)?;
-                self.decision_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                let decision = {
+                    let _sp = trace::span("sim", "decision");
+                    scheduler.step(&self.state)?
+                };
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.decision_ms.push(ms);
+                if let Some(m) = &obs {
+                    m.decisions_total.inc();
+                    m.decision_ms.record(ms);
+                }
                 match decision {
                     None => break,
                     Some((task, alloc)) => {
-                        let finish = self.state.apply(task, alloc);
+                        // Clock reads only when telemetry wants them —
+                        // the disabled path must not pay for timing.
+                        let t1 = obs.is_some().then(Instant::now);
+                        let finish = {
+                            let _sp = trace::span("sim", "apply");
+                            self.state.apply(task, alloc)
+                        };
+                        if let (Some(m), Some(t1)) = (&obs, t1) {
+                            m.apply_ms.record(t1.elapsed().as_secs_f64() * 1e3);
+                        }
                         self.push_event(finish, EventKind::Completion(task));
                     }
                 }

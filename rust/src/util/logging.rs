@@ -24,14 +24,35 @@ fn level() -> u8 {
         return cur;
     }
     let parsed = match std::env::var("LACHESIS_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok(name) => match parse_level(name) {
+            Some(l) => l,
+            None => {
+                // A typo'd level (e.g. LACHESIS_LOG=inof) used to fall
+                // through silently to info; say so once instead.
+                eprintln!(
+                    "[lachesis] unrecognized LACHESIS_LOG value {name:?} \
+                     (expected error|warn|info|debug|trace); defaulting to info"
+                );
+                Level::Info
+            }
+        },
+        Err(_) => Level::Info,
     } as u8;
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
+}
+
+/// Parse a `LACHESIS_LOG` level name. `None` for unrecognized values so
+/// callers can distinguish a typo from an unset variable.
+pub fn parse_level(name: &str) -> Option<Level> {
+    match name {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
 }
 
 /// Override the level programmatically (tests, quiet benches).
@@ -82,6 +103,18 @@ macro_rules! log_debug {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_level_accepts_every_name_and_rejects_typos() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("inof"), None);
+        assert_eq!(parse_level("INFO"), None);
+        assert_eq!(parse_level(""), None);
+    }
 
     #[test]
     fn set_level_controls_enabled() {

@@ -1,0 +1,297 @@
+//! Telemetry integration: the golden on/off test pinning every
+//! scheduler's schedule bitwise identical with telemetry enabled or
+//! disabled, proptest-style histogram merge/thread-invariance checks,
+//! Recorder-vs-Histogram percentile agreement, and the `metrics`
+//! protocol request served end to end over TCP in both service modes.
+//!
+//! The telemetry switches are process-global, so the golden test runs
+//! its "off" leg first, flips tracing on, and re-runs — any divergence
+//! means instrumentation touched an RNG stream, event ordering, or a
+//! schedule float, which design rule #1 of [`lachesis::obs`] forbids.
+
+use lachesis::cluster::Cluster;
+use lachesis::config::{ClusterConfig, WorkloadConfig};
+use lachesis::dag::TaskRef;
+use lachesis::obs::metrics::{bucket_index, bucket_upper, Histogram};
+use lachesis::obs::trace;
+use lachesis::policy::RustPolicy;
+use lachesis::sched::{
+    CpopScheduler, DecimaScheduler, DlsScheduler, FifoScheduler, HeftScheduler,
+    HighRankUpScheduler, HrrnScheduler, LachesisScheduler, RandomScheduler, Scheduler,
+    SjfScheduler, TdcaScheduler,
+};
+use lachesis::service::{AgentServer, Request, Response, ServiceClient, ServiceMode};
+use lachesis::sim::Simulator;
+use lachesis::util::json::Json;
+use lachesis::util::rng::Rng;
+use lachesis::util::stats::Recorder;
+use lachesis::workload::WorkloadGenerator;
+
+fn zoo(seed: u64) -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(FifoScheduler::new()),
+        Box::new(SjfScheduler::new()),
+        Box::new(HrrnScheduler::new()),
+        Box::new(HighRankUpScheduler::new()),
+        Box::new(HeftScheduler::new()),
+        Box::new(CpopScheduler::new()),
+        Box::new(DlsScheduler::new()),
+        Box::new(TdcaScheduler::new()),
+        Box::new(RandomScheduler::new(seed)),
+        Box::new(DecimaScheduler::greedy_decima(Box::new(RustPolicy::random(
+            seed,
+        )))),
+        Box::new(LachesisScheduler::greedy(Box::new(RustPolicy::random(
+            seed ^ 1,
+        )))),
+    ]
+}
+
+/// One scheduler's full schedule, reduced to exact bits: per-executor
+/// booking logs as (task, start bits, finish bits, duplicate) plus the
+/// report makespan bits.
+type ScheduleKey = (String, Vec<Vec<(TaskRef, u64, u64, bool)>>, u64);
+
+fn capture_zoo(seed: u64) -> Vec<ScheduleKey> {
+    let cfg = ClusterConfig::with_executors(10);
+    let w = WorkloadGenerator::new(WorkloadConfig::small_batch(5), seed).generate();
+    zoo(seed)
+        .into_iter()
+        .map(|mut sched| {
+            let mut sim = Simulator::new(Cluster::heterogeneous(&cfg, seed), w.clone());
+            let report = sim
+                .run(sched.as_mut())
+                .unwrap_or_else(|e| panic!("{} failed: {e}", sched.name()));
+            let log = sim
+                .state
+                .exec_log
+                .iter()
+                .map(|l| {
+                    l.iter()
+                        .map(|(t, pl)| (*t, pl.start.to_bits(), pl.finish.to_bits(), pl.duplicate))
+                        .collect()
+                })
+                .collect();
+            (sched.name(), log, report.makespan.to_bits())
+        })
+        .collect()
+}
+
+/// The tentpole invariant: enabling metrics + span tracing must leave
+/// every schedule in the zoo bitwise unchanged — telemetry only reads
+/// clocks and bumps atomics. Also pins that the resulting Chrome trace
+/// is valid JSON carrying the decision-loop span taxonomy, so a
+/// `--trace-out` file loads in ui.perfetto.dev.
+#[test]
+fn telemetry_leaves_zoo_schedules_bitwise_unchanged() {
+    let seed = 42u64;
+    let off = capture_zoo(seed);
+
+    trace::clear();
+    trace::start_tracing(); // flips metrics on too
+    let on = capture_zoo(seed);
+    trace::stop_tracing();
+
+    assert_eq!(off.len(), on.len());
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.2, b.2, "{}: makespan bits changed with telemetry on", a.0);
+        assert_eq!(a.1, b.1, "{}: schedule changed with telemetry on", a.0);
+    }
+
+    let path = std::env::temp_dir().join(format!(
+        "lachesis_obs_trace_{}.json",
+        std::process::id()
+    ));
+    trace::dump_chrome_trace(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let has = |name: &str| {
+        events
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+    };
+    // The sim decision loop, the two-phase scheduler, and the policy
+    // forward all ran under tracing — their spans must be in the dump.
+    for name in ["decision", "apply", "select", "allocate", "encode", "forward"] {
+        assert!(has(name), "trace is missing span {name:?}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Log-uniform latencies spanning the histogram's full range — the
+/// distribution that stresses bucket boundaries hardest.
+fn random_latencies(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| 10f64.powf(-3.0 + 7.0 * rng.next_f64()))
+        .collect()
+}
+
+/// Proptest-style: across random sample sets, recording a stream split
+/// round-robin over k histograms and merging is *exactly* recording the
+/// whole stream into one histogram — bucket counts are integers, so no
+/// tolerance. k includes 1 (merge of a single part is the identity).
+#[test]
+fn histogram_merge_equals_single_histogram() {
+    for seed in [1u64, 7, 23, 99] {
+        let samples = random_latencies(seed, 503); // odd: uneven chunks
+        let single = Histogram::new();
+        for &v in &samples {
+            single.record(v);
+        }
+        for k in [1usize, 2, 4] {
+            let parts: Vec<Histogram> = (0..k).map(|_| Histogram::new()).collect();
+            for (i, &v) in samples.iter().enumerate() {
+                parts[i % k].record(v);
+            }
+            let merged = Histogram::new();
+            for p in &parts {
+                merged.merge_from(p);
+            }
+            assert_eq!(merged.count(), single.count(), "seed {seed} k {k}");
+            assert_eq!(
+                merged.bucket_counts(),
+                single.bucket_counts(),
+                "seed {seed} k {k}: merge must equal single-histogram recording"
+            );
+        }
+    }
+}
+
+/// Bucket counts are invariant to the number of recording threads: k
+/// threads hammering one shared histogram produce exactly the
+/// single-thread counts, so soak latencies don't depend on master count.
+#[test]
+fn histogram_bucket_counts_are_thread_count_invariant() {
+    let samples = random_latencies(42, 800);
+    let single = Histogram::new();
+    for &v in &samples {
+        single.record(v);
+    }
+    for k in [1usize, 2, 4] {
+        let shared = Histogram::new();
+        std::thread::scope(|s| {
+            for chunk in samples.chunks((samples.len() + k - 1) / k) {
+                let shared = &shared;
+                s.spawn(move || {
+                    for &v in chunk {
+                        shared.record(v);
+                    }
+                });
+            }
+        });
+        assert_eq!(shared.count(), single.count(), "k {k}");
+        assert_eq!(
+            shared.bucket_counts(),
+            single.bucket_counts(),
+            "k {k}: thread count must not change bucket counts"
+        );
+    }
+}
+
+/// The soak's percentile contract: the histogram estimate is the upper
+/// edge of the bucket holding the nearest-rank sample — deterministic,
+/// and within one bucket width (≤ 13%) of the exact `Recorder` value.
+#[test]
+fn histogram_percentiles_agree_with_recorder() {
+    for seed in [3u64, 11] {
+        let samples = random_latencies(seed, 1000);
+        let hist = Histogram::new();
+        let mut rec = Recorder::new();
+        for &v in &samples {
+            hist.record(v);
+            rec.push(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        for p in [50.0, 95.0, 99.0] {
+            // Exact pin of the convention documented on `percentile`.
+            let rank = ((p / 100.0) * ((n - 1) as f64)).ceil() as usize;
+            let expect = bucket_upper(bucket_index(sorted[rank]));
+            let got = hist.percentile(p);
+            assert_eq!(
+                got.to_bits(),
+                expect.to_bits(),
+                "seed {seed} p{p}: histogram percentile convention drifted"
+            );
+            // Agreement with the exact recorder: the recorder's
+            // interpolated value lies at or below the nearest-rank
+            // sample, which lies inside the reported bucket.
+            let exact = rec.percentile(p);
+            assert!(
+                got >= exact && got <= exact * 1.14,
+                "seed {seed} p{p}: histogram {got} vs exact {exact}"
+            );
+        }
+    }
+}
+
+/// `{"type":"metrics"}` over real TCP in both engines: answered without
+/// touching the core lock, with a parseable Prometheus payload carrying
+/// the request counters and a JSON series array.
+#[test]
+fn metrics_request_served_in_both_modes() {
+    for mode in [ServiceMode::Serial, ServiceMode::Batched] {
+        let cluster = Cluster::heterogeneous(&ClusterConfig::with_executors(6), 3);
+        let agent = AgentServer::with_mode(
+            cluster,
+            Box::new(HighRankUpScheduler::new()),
+            mode,
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            agent
+                .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                .unwrap();
+        });
+        let addr = rx.recv().unwrap().to_string();
+        let mut client = ServiceClient::connect(&addr).unwrap();
+
+        // Put some traffic on the wire so the counters are non-zero.
+        let w = WorkloadGenerator::new(WorkloadConfig::small_batch(2), 3).generate();
+        for job in &w.jobs {
+            let computes: Vec<f64> = job.tasks.iter().map(|t| t.compute).collect();
+            let edges: Vec<(usize, usize, f64)> = (0..job.n_tasks())
+                .flat_map(|u| {
+                    job.children[u]
+                        .iter()
+                        .map(move |e| (u, e.other, e.data))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            client
+                .call(&Request::SubmitJob {
+                    name: job.name.clone(),
+                    arrival: job.arrival,
+                    computes,
+                    edges,
+                })
+                .unwrap();
+        }
+        client.call(&Request::Schedule { time: 0.0 }).unwrap();
+
+        match client.call(&Request::Metrics).unwrap() {
+            Response::Metrics { prometheus, series } => {
+                assert!(
+                    prometheus.contains("lachesis_requests_total"),
+                    "{mode:?}: scrape missing the request counter family"
+                );
+                assert!(
+                    prometheus.contains("# TYPE"),
+                    "{mode:?}: scrape missing TYPE comments"
+                );
+                let arr = series.as_arr().expect("series must be a JSON array");
+                assert!(!arr.is_empty(), "{mode:?}: series must be non-empty");
+            }
+            other => panic!("{mode:?}: unexpected metrics response {other:?}"),
+        }
+        client.call(&Request::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+}
